@@ -1,0 +1,142 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. padding factor vs heads-per-GPU (why the 8-way head split hurts);
+//! 2. ETAP's §3.2 integration hypotheticals (ETAP-in-FA3/FlashInfer);
+//! 3. block size Bc sweep (SMEM staging vs fill);
+//! 4. cluster-level Amdahl: kernel speedup vs end-to-end step speedup;
+//! 5. GPU sweep: the same kernels on H20 / H100 / A100 atoms.
+//!
+//!     cargo run --release --example ablation_padding
+
+use flashmla_etap::bench::Table;
+use flashmla_etap::coordinator::{ClusterConfig, ClusterSim};
+use flashmla_etap::hardware::{padding_factor, GpuSpec};
+use flashmla_etap::sim::kernels::{all_models_extended, model_by_name};
+use flashmla_etap::sim::pipeline;
+use flashmla_etap::sim::DecodeWorkload;
+
+fn main() -> anyhow::Result<()> {
+    let gpu = GpuSpec::h20();
+
+    // 1. Padding vs head count (the §3.1 argument).
+    let mut t = Table::new(
+        "Ablation 1 — WGMMA padding vs heads/GPU (query-major mode)",
+        &["heads/GPU", "GPUs for 128 heads", "padding", "util ceiling"],
+    );
+    for gpus in [1usize, 2, 4, 8, 16] {
+        let heads = 128 / gpus;
+        let f = padding_factor(heads, &gpu.atom);
+        t.row(&[
+            heads.to_string(),
+            gpus.to_string(),
+            format!("{f:.1}x"),
+            format!("{:.0}%", 100.0 / f),
+        ]);
+    }
+    t.print();
+
+    // 2. §3.2 integration hypotheticals.
+    let mut t = Table::new(
+        "Ablation 2 — ETAP integrated into other frameworks (§3.2), 32K/BS16",
+        &["framework", "TFLOPS/s", "with ETAP", "gain"],
+    );
+    let w = DecodeWorkload::paper(16, 32768);
+    for (base, etap) in [("fa3", "etap-fa3"), ("flashinfer", "etap-flashinfer")] {
+        let b = model_by_name(base).unwrap().estimate(&w, &gpu).tflops_per_s;
+        let e = model_by_name(etap).unwrap().estimate(&w, &gpu).tflops_per_s;
+        t.row(&[
+            base.to_string(),
+            format!("{b:.1}"),
+            format!("{e:.1}"),
+            format!("{:.2}x", e / b),
+        ]);
+    }
+    t.print();
+
+    // 3. Block-size sweep: SMEM stages vs pipeline fill.
+    let mut t = Table::new(
+        "Ablation 3 — KV block size Bc on H20 (228 KiB SMEM)",
+        &["Bc", "stage KiB", "stages fit", "fill eff @512", "fill eff @64K"],
+    );
+    for bc in [32usize, 64, 128, 256] {
+        let stage = pipeline::stage_bytes(bc, 576, 2);
+        let stages = pipeline::max_stages(228 * 1024, stage, 64 * 1024);
+        let f512 = pipeline::fill_efficiency(pipeline::kv_blocks(512, bc), 16.0);
+        let f64k = pipeline::fill_efficiency(pipeline::kv_blocks(65536, bc), 16.0);
+        t.row(&[
+            bc.to_string(),
+            format!("{}", stage / 1024),
+            stages.to_string(),
+            format!("{f512:.2}"),
+            format!("{f64k:.2}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "Bc=64 is the sweet spot: ≥2 SMEM stages (double buffering, Algorithm 1's \
+         circular buffer) while keeping fill losses acceptable.\n"
+    );
+
+    // 4. Amdahl at the cluster level: MLA is ~30% of the forward pass.
+    let mut t = Table::new(
+        "Ablation 4 — kernel speedup vs end-to-end decode step (8×H20, BS16)",
+        &["context", "kernel speedup", "step speedup", "MLA share (base)"],
+    );
+    for ctx in [4096usize, 16384, 65536] {
+        let base = ClusterSim::new(
+            ClusterConfig {
+                kernel: "flashmla".into(),
+                ..Default::default()
+            },
+            gpu.clone(),
+        )?;
+        let etap = ClusterSim::new(
+            ClusterConfig {
+                kernel: "etap".into(),
+                ..Default::default()
+            },
+            gpu.clone(),
+        )?;
+        let kv = vec![ctx; 16];
+        let sb = base.step_time(&kv);
+        let se = etap.step_time(&kv);
+        let w = DecodeWorkload::paper(16, ctx);
+        let k = model_by_name("flashmla").unwrap().estimate(&w, &gpu).total_us
+            / model_by_name("etap").unwrap().estimate(&w, &gpu).total_us;
+        t.row(&[
+            ctx.to_string(),
+            format!("{k:.2}x"),
+            format!("{:.2}x", sb.total_us() / se.total_us()),
+            format!("{:.0}%", sb.attention_fraction() * 100.0),
+        ]);
+    }
+    t.print();
+
+    // 5. GPU sweep: where does ETAP matter?
+    let mut t = Table::new(
+        "Ablation 5 — ETAP gain by GPU (64K, BS16)",
+        &["gpu", "atom min-M", "FlashMLA", "ETAP", "gain"],
+    );
+    for g in [GpuSpec::h20(), GpuSpec::h100(), GpuSpec::a100()] {
+        let w = DecodeWorkload::paper(16, 65536);
+        let b = model_by_name("flashmla").unwrap().estimate(&w, &g).tflops_per_s;
+        let e = model_by_name("etap").unwrap().estimate(&w, &g).tflops_per_s;
+        t.row(&[
+            g.name.to_string(),
+            g.atom.min_m.to_string(),
+            format!("{b:.1}"),
+            format!("{e:.1}"),
+            format!("{:.2}x", e / b),
+        ]);
+    }
+    t.print();
+    println!(
+        "A100's m16 atom doesn't pad 16 heads — the pathology (and ETAP's gain) is \
+         Hopper-specific, as the paper's WGMMA framing implies.  On H100 the larger \
+         compute roof mutes the padding penalty at the same bandwidth."
+    );
+
+    // Keep the extended model list exercised.
+    assert_eq!(all_models_extended().len(), 6);
+    Ok(())
+}

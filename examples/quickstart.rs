@@ -1,0 +1,62 @@
+//! Quickstart: load an AOT attention artifact, run one ETAP decode-attention
+//! call from Rust, and cross-check it against the pure-Rust reference.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use flashmla_etap::attention::{etap_f32, AttnShape};
+use flashmla_etap::runtime::{AttentionRunner, Runtime};
+use flashmla_etap::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+
+    // 1. Bring up the PJRT CPU runtime over the artifact manifest.
+    let rt = Runtime::cpu(&dir)?;
+
+    // 2. Pick the smallest ETAP attention bucket that fits one request
+    //    with a 200-token context (paper geometry: 16 heads, d=576).
+    let attn = AttentionRunner::best(&rt, "etap", 1, 200)?;
+    println!(
+        "loaded {} (bucket: batch {}, kv {})",
+        attn.name(),
+        attn.batch,
+        attn.kv_bucket
+    );
+
+    // 3. Random decode query + latent cache.
+    let shape = AttnShape::paper(attn.kv_bucket);
+    let mut rng = Rng::new(0);
+    let q = rng.normal_vec(shape.q_len());
+    let mut cache = rng.normal_vec(shape.cache_len());
+    // Zero the padding beyond the real 200-token context.
+    for x in &mut cache[200 * shape.d..] {
+        *x = 0.0;
+    }
+
+    // 4. Execute the transposed-attention kernel (ETAP, Algorithm 1).
+    let (out, lse) = attn.run(&q, &cache, &[200])?;
+    println!(
+        "out[0..4] = {:?} …  lse[0..4] = {:?} …",
+        &out[..4],
+        &lse[..4]
+    );
+
+    // 5. Cross-check against the pure-Rust ETAP reference.
+    let scale = 1.0 / (192.0f32).sqrt();
+    let mut shape200 = shape;
+    shape200.n = 200;
+    let want = etap_f32(&shape200, &q, &cache[..200 * shape.d], scale, 64);
+    let max_err = out
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |artifact − rust reference| = {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-3, "numerics mismatch");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Reproduce Table 1: FP16 RMSE against an FP64 reference for the
+//! FA-3-style pipeline (FP16 rescale-chain accumulation) vs FlashMLA-ETAP
+//! (FP32 on-chip accumulator, single epilogue rounding).
+//!
+//!     cargo run --release --example rmse_table [kv_len]
+
+use flashmla_etap::attention::precision::table1_experiment;
+use flashmla_etap::attention::AttnShape;
+use flashmla_etap::bench::Table;
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4096);
+    // Paper geometry (16 heads, d 576, dv 512); scale over qk_head_dim 192.
+    let shape = AttnShape {
+        h: 16,
+        d: 576,
+        dv: 512,
+        n,
+    };
+    let scale = 1.0 / (192.0f32).sqrt();
+    eprintln!("running Table 1 experiment at n={n} (a minute or two in f32 emulation)...");
+    let results = table1_experiment(&shape, scale, 64, 2, 42);
+
+    let mut t = Table::new(
+        &format!("Table 1 — RMSE, FP16 vs FP64 reference (n={n})"),
+        &["Framework", "RMSE (model)", "RMSE (paper)"],
+    );
+    let paper = [1.9e-4, 1.25e-5];
+    for (r, p) in results.iter().zip(paper) {
+        t.row(&[
+            r.framework.to_string(),
+            format!("{:.3e}", r.rmse),
+            format!("{p:.3e}"),
+        ]);
+    }
+    t.print();
+    let ratio = results[0].rmse / results[1].rmse;
+    println!("ETAP is {ratio:.1}x more accurate (paper: 15.2x)");
+    println!(
+        "mechanism: the FA-3-style pipeline rounds its output accumulator to FP16 \
+         after every KV block (rescale chain), ETAP keeps O^T in FP32 and rounds once \
+         in the epilogue (Algorithm 1 line 30) — see DESIGN.md §2."
+    );
+}

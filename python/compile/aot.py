@@ -1,0 +1,322 @@
+"""AOT compile path: lower L2/L1 jax functions to HLO text artifacts.
+
+The Rust runtime (`rust/src/runtime/`) loads these with
+`HloModuleProto::from_text_file`, compiles them once on the PJRT CPU client,
+and executes them on the request path.  Python never runs at serving time.
+
+Interchange format is **HLO text**, not `lowered.compile().serialize()`:
+the image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Artifacts produced (``python -m compile.aot --out-dir ../artifacts``):
+
+  attn_{kernel}_b{B}_n{N}.hlo.txt     attention-core artifacts in the paper's
+                                      DeepSeek-R1 shard geometry (16 heads,
+                                      d=576, dv=512), kernel ∈ {etap, flashmla}
+  decode_{kernel}_b{B}_n{N}.hlo.txt   full decode step of the tiny MLA
+                                      transformer (weights as leading inputs)
+  weights_tiny.bin                    raw little-endian f32 parameter blob
+  testvec_attn.json                   input/output vectors for Rust
+  testvec_decode.json                   integration tests
+  manifest.json                       machine-readable index of all of the
+                                      above (shapes, dtypes, input order)
+
+All shapes are static (HLO requirement): (batch, kv-bucket) pairs form the
+bucket grid the serving engine routes onto.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import etap_decode, mla_decode
+
+ATTN_KERNELS = {"etap": etap_decode, "flashmla": mla_decode}
+
+# Bucket grids.  Attention artifacts use the paper geometry; kv buckets are
+# kept CPU-executable (the 64K points of Fig. 1 live in the Rust simulator).
+ATTN_BATCHES = (1, 4, 16)
+ATTN_KV_BUCKETS = (256, 512, 1024, 2048)
+DECODE_BATCHES = (1, 2, 4, 8)
+DECODE_KV_BUCKETS = (128, 256)
+ATTN_BLOCK_KV = 128
+# Perf (EXPERIMENTS.md §Perf L2): 128 over 64 halves the interpret-mode
+# grid steps per layer — measured 15.8 → 9.3 ms/step at (b8, n256).
+DECODE_BLOCK_KV = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+# ---------------------------------------------------------------------------
+# Attention-core artifacts (paper geometry)
+# ---------------------------------------------------------------------------
+
+def build_attention_artifacts(out_dir: str, quick: bool) -> list:
+    cfg = M.deepseek_r1_shard_config()
+    h, d, dv = cfg.n_heads, cfg.latent_dim, cfg.kv_lora_rank
+    scale = cfg.softmax_scale
+    batches = ATTN_BATCHES[:1] if quick else ATTN_BATCHES
+    buckets = ATTN_KV_BUCKETS[:1] if quick else ATTN_KV_BUCKETS
+    entries = []
+    for kernel_name, kernel in ATTN_KERNELS.items():
+        for b in batches:
+            for n in buckets:
+                def fn(q, cache, lengths, _k=kernel):
+                    out, lse = _k(
+                        q, cache, lengths,
+                        scale=scale, dv=dv, block_kv=ATTN_BLOCK_KV,
+                    )
+                    return (out, lse)
+
+                lowered = jax.jit(fn).lower(
+                    jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+                    jax.ShapeDtypeStruct((b, n, d), jnp.float32),
+                    jax.ShapeDtypeStruct((b,), jnp.int32),
+                )
+                name = f"attn_{kernel_name}_b{b}_n{n}"
+                path = os.path.join(out_dir, f"{name}.hlo.txt")
+                with open(path, "w") as f:
+                    f.write(to_hlo_text(lowered))
+                entries.append({
+                    "name": name,
+                    "file": f"{name}.hlo.txt",
+                    "kind": "attention",
+                    "kernel": kernel_name,
+                    "batch": b,
+                    "kv_bucket": n,
+                    "heads": h,
+                    "d": d,
+                    "dv": dv,
+                    "scale": scale,
+                    "block_kv": ATTN_BLOCK_KV,
+                    "inputs": [
+                        {"name": "q", **_spec((b, h, d))},
+                        {"name": "cache", **_spec((b, n, d))},
+                        {"name": "lengths", **_spec((b,), "s32")},
+                    ],
+                    "outputs": [
+                        {"name": "out", **_spec((b, h, dv))},
+                        {"name": "lse", **_spec((b, h))},
+                    ],
+                })
+                print(f"  wrote {name}")
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Tiny-model decode-step artifacts
+# ---------------------------------------------------------------------------
+
+def build_decode_artifacts(out_dir: str, quick: bool):
+    cfg = M.tiny_config()
+    params = M.init_params(cfg)
+    order = M.param_order(params)
+
+    # Dump the weight blob (raw LE f32, concatenated in canonical order).
+    blob_path = os.path.join(out_dir, "weights_tiny.bin")
+    with open(blob_path, "wb") as f:
+        for name in order:
+            f.write(np.asarray(params[name], np.float32).tobytes())
+    blob_sha = hashlib.sha256(open(blob_path, "rb").read()).hexdigest()
+
+    weights_manifest = [
+        {"name": n, "shape": list(params[n].shape), "dtype": "f32"} for n in order
+    ]
+
+    batches = DECODE_BATCHES[:1] if quick else DECODE_BATCHES
+    buckets = DECODE_KV_BUCKETS[:1] if quick else DECODE_KV_BUCKETS
+    entries = []
+    for kernel_name in ("etap", "flashmla") if not quick else ("etap",):
+        for b in batches:
+            for n in buckets:
+                def fn(tokens, cache, lengths, *weights, _k=kernel_name):
+                    p = dict(zip(order, weights))
+                    logits, new_cache = M.decode_step(
+                        p, cfg, tokens, cache, lengths,
+                        kernel=_k, block_kv=DECODE_BLOCK_KV,
+                    )
+                    return (logits, new_cache)
+
+                lowered = jax.jit(fn).lower(
+                    jax.ShapeDtypeStruct((b,), jnp.int32),
+                    jax.ShapeDtypeStruct(
+                        (cfg.n_layers, b, n, cfg.latent_dim), jnp.float32
+                    ),
+                    jax.ShapeDtypeStruct((b,), jnp.int32),
+                    *[
+                        jax.ShapeDtypeStruct(params[k].shape, jnp.float32)
+                        for k in order
+                    ],
+                )
+                name = f"decode_{kernel_name}_b{b}_n{n}"
+                path = os.path.join(out_dir, f"{name}.hlo.txt")
+                with open(path, "w") as f:
+                    f.write(to_hlo_text(lowered))
+                entries.append({
+                    "name": name,
+                    "file": f"{name}.hlo.txt",
+                    "kind": "decode_step",
+                    "kernel": kernel_name,
+                    "batch": b,
+                    "kv_bucket": n,
+                    "inputs": [
+                        {"name": "tokens", **_spec((b,), "s32")},
+                        {"name": "cache",
+                         **_spec((cfg.n_layers, b, n, cfg.latent_dim))},
+                        {"name": "lengths", **_spec((b,), "s32")},
+                    ] + [{"name": f"param:{k}", **_spec(params[k].shape)}
+                         for k in order],
+                    "outputs": [
+                        {"name": "logits", **_spec((b, cfg.vocab_size))},
+                        {"name": "cache",
+                         **_spec((cfg.n_layers, b, n, cfg.latent_dim))},
+                    ],
+                })
+                print(f"  wrote {name}")
+
+    model_manifest = {
+        "config": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "kv_lora_rank": cfg.kv_lora_rank,
+            "rope_dim": cfg.rope_dim,
+            "qk_nope_dim": cfg.qk_nope_dim,
+            "v_head_dim": cfg.v_head_dim,
+            "d_ff": cfg.d_ff,
+            "latent_dim": cfg.latent_dim,
+            "softmax_scale": cfg.softmax_scale,
+        },
+        "weights_file": "weights_tiny.bin",
+        "weights_sha256": blob_sha,
+        "weights": weights_manifest,
+    }
+    return entries, model_manifest, (cfg, params, order)
+
+
+# ---------------------------------------------------------------------------
+# Test vectors for the Rust integration tests
+# ---------------------------------------------------------------------------
+
+def build_test_vectors(out_dir: str, decode_ctx, quick: bool):
+    # Attention vector in the smallest attention bucket.
+    cfg = M.deepseek_r1_shard_config()
+    h, d, dv = cfg.n_heads, cfg.latent_dim, cfg.kv_lora_rank
+    b, n = 1, 256
+    key = jax.random.PRNGKey(7)
+    kq, kc = jax.random.split(key)
+    q = jax.random.normal(kq, (b, h, d), jnp.float32)
+    cache = jax.random.normal(kc, (b, n, d), jnp.float32)
+    lengths = jnp.asarray([173], jnp.int32)
+    out, lse = etap_decode(
+        q, cache, lengths, scale=cfg.softmax_scale, dv=dv, block_kv=ATTN_BLOCK_KV
+    )
+    attn_vec = {
+        "artifact": f"attn_etap_b{b}_n{n}",
+        "q": np.asarray(q).ravel().tolist(),
+        "cache_seed_note": "cache too large to inline; regenerated via prefix",
+        "cache_prefix": np.asarray(cache).ravel()[:64].tolist(),
+        "lengths": [173],
+        "out_prefix": np.asarray(out).ravel()[:64].tolist(),
+        "out_sum": float(jnp.sum(out)),
+        "lse": np.asarray(lse).ravel().tolist(),
+    }
+    # Inline the full cache too — 256*576 floats ≈ 1.2 MB of JSON; acceptable
+    # and makes the Rust test fully self-contained.
+    attn_vec["cache"] = np.asarray(cache).ravel().tolist()
+    with open(os.path.join(out_dir, "testvec_attn.json"), "w") as f:
+        json.dump(attn_vec, f)
+    print("  wrote testvec_attn.json")
+
+    if decode_ctx is None:
+        return
+    cfg_t, params, order = decode_ctx
+    b, n = 2, 128
+    tokens = jnp.asarray([3, 11], jnp.int32)
+    cache = M.empty_cache(cfg_t, b, n)
+    lengths = jnp.zeros((b,), jnp.int32)
+    toks = [[3, 11], [5, 7], [1, 2]]
+    logits = None
+    for step, t in enumerate(toks):
+        logits, cache = M.decode_step(
+            params, cfg_t, jnp.asarray(t, jnp.int32), cache, lengths,
+            kernel="etap", block_kv=DECODE_BLOCK_KV,
+        )
+        lengths = lengths + 1
+    decode_vec = {
+        "artifact": f"decode_etap_b{b}_n{n}",
+        "steps": toks,
+        "logits_prefix": np.asarray(logits).ravel()[:64].tolist(),
+        "logits_sum": float(jnp.sum(logits)),
+        "argmax": np.asarray(jnp.argmax(logits, axis=-1)).tolist(),
+    }
+    with open(os.path.join(out_dir, "testvec_decode.json"), "w") as f:
+        json.dump(decode_vec, f)
+    print("  wrote testvec_decode.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="smallest bucket only (used by python tests)",
+    )
+    ap.add_argument(
+        "--skip-decode", action="store_true",
+        help="attention artifacts only",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    print("building attention artifacts (paper geometry)...")
+    entries = build_attention_artifacts(args.out_dir, args.quick)
+
+    model_manifest = None
+    decode_ctx = None
+    if not args.skip_decode:
+        print("building tiny-model decode artifacts...")
+        dec_entries, model_manifest, decode_ctx = build_decode_artifacts(
+            args.out_dir, args.quick
+        )
+        entries += dec_entries
+
+    print("building test vectors...")
+    build_test_vectors(args.out_dir, decode_ctx, args.quick)
+
+    manifest = {
+        "format_version": 1,
+        "jax_version": jax.__version__,
+        "artifacts": entries,
+        "model": model_manifest,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(entries)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

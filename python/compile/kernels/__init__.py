@@ -1,0 +1,13 @@
+"""L1 Pallas kernels for FlashMLA-ETAP (interpret mode, CPU-PJRT runnable)."""
+
+from .etap_decode import etap_decode
+from .mla_decode import mla_decode
+from .ref import attention_ref, mla_attention_ref, mla_lse_ref
+
+__all__ = [
+    "etap_decode",
+    "mla_decode",
+    "attention_ref",
+    "mla_attention_ref",
+    "mla_lse_ref",
+]

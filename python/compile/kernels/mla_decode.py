@@ -1,0 +1,143 @@
+"""Baseline FlashMLA-style decode kernel (query-major), in Pallas.
+
+This is the computation mode the paper's §3.1 calls "Original MLA
+Computation Mode in Inference": heads sit on the row (M) axis of both GEMMs,
+
+    S = Q . K^T          [H, Bc]   per KV block
+    P = softmax(S)       online (rowmax / rowsum per head)
+    O += P . V           [H, DV]
+
+On Hopper this is the mode that pads M = H = 16 up to WGMMA's minimum of 64
+and burns 75 % of issued FLOPs; on TPU it underfills the 128-row MXU side the
+same way (DESIGN.md §8).  We keep it as (a) the numerical baseline the ETAP
+kernel must match and (b) the structural model the Rust simulator's
+`sim::kernels::flashmla` costs out.
+
+Kernel layout
+  grid = (B, T_c) with T_c = ceil(N / block_kv); the KV-block axis is the
+  innermost (sequential) grid dimension, so the running-softmax state can be
+  carried in output refs that map to the same block every step — the standard
+  Pallas flash-attention revisiting pattern, which is also exactly the HBM→
+  VMEM schedule a TPU would pipeline.
+
+Always `interpret=True`: real TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _kernel(
+    q_ref,        # [1, H, D]
+    cache_ref,    # [1, Bc, D]
+    len_ref,      # [1]
+    out_ref,      # [1, H, DV]
+    lse_ref,      # [1, H]
+    acc_ref,      # [1, H, DV]  f32 running numerator
+    m_ref,        # [1, H]      f32 running max
+    l_ref,        # [1, H]      f32 running denominator
+    *,
+    scale: float,
+    dv: int,
+    block_kv: int,
+):
+    j = pl.program_id(1)
+    t_c = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # [H, D]
+    kv = cache_ref[0].astype(jnp.float32)     # [Bc, D]
+    length = len_ref[0]
+
+    # S = Q . K^T, heads on the M axis (the padded dimension on WGMMA).
+    s = jax.lax.dot_general(
+        q, kv, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                  # [H, Bc]
+
+    # Mask out-of-range KV positions for this block.
+    pos = j * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < length
+    s = jnp.where(valid, s, NEG_INF)
+
+    # Online softmax update along the KV (row-local) axis, per head.
+    m_old = m_ref[0]                           # [H]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])            # [H, Bc]
+    p = jnp.where(valid, p, 0.0)
+    alpha = jnp.exp(m_old - m_new)             # [H]
+    l_ref[0] = alpha * l_ref[0] + jnp.sum(p, axis=1)
+    m_ref[0] = m_new
+
+    # O += P . V  (V = first dv dims of the latent block).
+    v = kv[:, :dv]                             # [Bc, DV]
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # [H, DV]
+    acc_ref[0] = acc_ref[0] * alpha[:, None] + pv
+
+    @pl.when(j == t_c - 1)
+    def _epilogue():
+        l = jnp.maximum(l_ref[0], 1e-38)
+        out_ref[0] = (acc_ref[0] / l[:, None]).astype(out_ref.dtype)
+        lse_ref[0] = (m_ref[0] + jnp.log(l)).astype(lse_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "dv", "block_kv", "out_dtype")
+)
+def mla_decode(
+    q: jnp.ndarray,       # [B, H, D]
+    cache: jnp.ndarray,   # [B, N, D]
+    lengths: jnp.ndarray, # [B] int32
+    *,
+    scale: float,
+    dv: int,
+    block_kv: int = 128,
+    out_dtype=jnp.float32,
+):
+    """Query-major MLA decode attention.  Returns (out [B,H,dv], lse [B,H])."""
+    b, h, d = q.shape
+    n = cache.shape[1]
+    if n % block_kv != 0:
+        raise ValueError(f"kv length {n} must be a multiple of block_kv {block_kv}")
+    t_c = n // block_kv
+
+    kernel = functools.partial(_kernel, scale=scale, dv=dv, block_kv=block_kv)
+    out, lse, _, _, _ = pl.pallas_call(
+        kernel,
+        grid=(b, t_c),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b_, j: (b_, 0, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b_, j: (b_, j, 0)),
+            pl.BlockSpec((1,), lambda b_, j: (b_,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, dv), lambda b_, j: (b_, 0, 0)),
+            pl.BlockSpec((1, h), lambda b_, j: (b_, 0)),
+            pl.BlockSpec((1, h, dv), lambda b_, j: (b_, 0, 0)),
+            pl.BlockSpec((1, h), lambda b_, j: (b_, 0)),
+            pl.BlockSpec((1, h), lambda b_, j: (b_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, dv), out_dtype),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, dv), jnp.float32),  # acc scratch
+            jax.ShapeDtypeStruct((b, h), jnp.float32),      # m scratch
+            jax.ShapeDtypeStruct((b, h), jnp.float32),      # l scratch
+        ],
+        interpret=True,
+    )(q, cache, lengths)
+    return out, lse

@@ -1,0 +1,94 @@
+"""Pure-jnp correctness oracles for the MLA decode kernels.
+
+These are the ground truth the Pallas kernels (`mla_decode.py`,
+`etap_decode.py`) are validated against.  Everything here is written in the
+most obvious way possible — full S matrix, full softmax — so that any
+disagreement points at the kernel, not the oracle.
+
+Geometry (DeepSeek-R1 decode shard, paper §4.1):
+  q      [B, H, D]      one decode token per request, H heads on this GPU
+  cache  [B, N, D]      latent KV cache; D = d_ckv + d_rope (512 + 64 = 576)
+  out    [B, H, DV]     DV = d_ckv (512): V is the first DV dims of the latent
+
+MLA's low-rank joint compression means K and V share the latent vector:
+K = cache (all D dims, rope included), V = cache[..., :DV].
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite stand-in for -inf; avoids (-inf) - (-inf) = nan
+
+
+def mla_attention_ref(
+    q: jnp.ndarray,
+    cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    scale: float,
+    dv: int,
+    compute_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Full-matrix MLA decode attention.
+
+    Args:
+      q:       [B, H, D] decode queries.
+      cache:   [B, N, D] latent cache (K = cache, V = cache[..., :dv]).
+      lengths: [B] int32 valid KV lengths; positions >= length are masked.
+      scale:   softmax scale (1/sqrt(D) for the paper geometry).
+      dv:      value dimension (first dv dims of the latent).
+      compute_dtype: dtype the matmuls/softmax run in (f32 or f64 oracle).
+
+    Returns:
+      [B, H, dv] attention output in compute_dtype.
+    """
+    q = q.astype(compute_dtype)
+    c = cache.astype(compute_dtype)
+    n = c.shape[1]
+    # S[b,h,n] = q . k * scale
+    s = jnp.einsum("bhd,bnd->bhn", q, c) * jnp.asarray(scale, compute_dtype)
+    mask = jnp.arange(n)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, jnp.asarray(NEG_INF, compute_dtype))
+    # Numerically stable softmax over n.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(l, jnp.asarray(1e-38, compute_dtype))
+    return jnp.einsum("bhn,bnd->bhd", p, c[..., :dv])
+
+
+def mla_lse_ref(
+    q: jnp.ndarray,
+    cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    scale: float,
+    compute_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Log-sum-exp of the attention scores, [B, H] (the paper's L_i)."""
+    q = q.astype(compute_dtype)
+    c = cache.astype(compute_dtype)
+    n = c.shape[1]
+    s = jnp.einsum("bhd,bnd->bhn", q, c) * jnp.asarray(scale, compute_dtype)
+    mask = jnp.arange(n)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, jnp.asarray(NEG_INF, compute_dtype))
+    m = jnp.max(s, axis=-1)
+    l = jnp.sum(jnp.exp(s - m[..., None]) * mask, axis=-1)
+    return m + jnp.log(jnp.maximum(l, jnp.asarray(1e-38, compute_dtype)))
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    scale: float,
+    compute_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Generic (non-MLA) attention oracle: q [B,H,D], k [B,N,D], v [B,N,DV]."""
+    q = q.astype(compute_dtype)
+    k = k.astype(compute_dtype)
+    v = v.astype(compute_dtype)
+    s = jnp.einsum("bhd,bnd->bhn", q, k) * jnp.asarray(scale, compute_dtype)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhn,bnd->bhd", p, v)

@@ -1,0 +1,340 @@
+"""L2: JAX MLA transformer (decode path), calling the L1 Pallas kernels.
+
+This is the build-time model definition.  `aot.py` lowers the functions here
+to HLO text; the Rust coordinator executes them via PJRT and never imports
+Python.
+
+Inference-time MLA with weight absorption (DeepSeek-V2 §2.1, as deployed):
+the per-head up-projections W_UK are folded into the query so that attention
+runs directly against the shared latent cache:
+
+    c_t      = [rmsnorm(W_DKV x), rope(W_KR x)]          latent + rope, cached
+    q_nope   = (W_UQ x)[:, :, :nope];  q_pe = rope((W_UQ x)[:, :, nope:])
+    q_latent = q_nope @ W_UK                             absorb: [H, d_ckv]
+    q_eff    = [q_latent, q_pe]                          [H, d_ckv + d_rope]
+    u        = Attention(q_eff, cache)                   L1 kernel, latent out
+    o        = (u @ W_UV) flattened @ W_O                value up-proj absorbed
+                                                          into the epilogue
+
+The attention core is either the ETAP kernel (default) or the query-major
+baseline — selectable so the AOT artifacts exist for both computation modes.
+
+Everything is functional: params are a flat dict[str, jnp.ndarray]; the
+decode step takes and returns the cache explicitly so the Rust runtime owns
+all state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import etap_decode, mla_decode
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Geometry of an MLA transformer (decode shard)."""
+
+    vocab_size: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    kv_lora_rank: int = 64     # d_ckv: latent dim shared by K and V
+    rope_dim: int = 32         # decoupled rope key/query dim
+    qk_nope_dim: int = 32      # per-head non-rope q/k dim
+    v_head_dim: int = 32       # per-head value dim after W_UV
+    d_ff: int = 512
+    max_seq_len: int = 256
+    rope_base: float = 10000.0
+
+    @property
+    def latent_dim(self) -> int:
+        """Cached per-token dim: compressed KV + rope key."""
+        return self.kv_lora_rank + self.rope_dim
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_dim + self.rope_dim
+
+    @property
+    def softmax_scale(self) -> float:
+        # Scale uses the *pre-absorption* head dim (nope + rope), because
+        # q_latent . c  ==  q_nope . k_nope exactly (absorption identity).
+        return 1.0 / math.sqrt(self.qk_head_dim)
+
+    def validate(self) -> "MLAConfig":
+        if self.kv_lora_rank % 2 != 0:
+            raise ValueError("kv_lora_rank must be even (ETAP split-V halves)")
+        if self.rope_dim % 2 != 0:
+            raise ValueError("rope_dim must be even (rotary pairs)")
+        return self
+
+
+def tiny_config() -> MLAConfig:
+    """CPU-friendly config for the end-to-end serving example."""
+    return MLAConfig().validate()
+
+
+def small_config() -> MLAConfig:
+    """~25M-param config; heavier e2e runs."""
+    return MLAConfig(
+        vocab_size=4096, d_model=512, n_layers=8, n_heads=8,
+        kv_lora_rank=128, rope_dim=32, qk_nope_dim=64, v_head_dim=64,
+        d_ff=1536, max_seq_len=512,
+    ).validate()
+
+
+def deepseek_r1_shard_config() -> MLAConfig:
+    """Geometry of one GPU's shard of DeepSeek-R1 (paper §4.1): 16 heads,
+    d_ckv=512, rope=64 → latent 576.  Used for kernel-level artifacts and the
+    simulator; far too large to *execute* on CPU at paper sequence lengths."""
+    return MLAConfig(
+        vocab_size=129280, d_model=7168, n_layers=61, n_heads=16,
+        kv_lora_rank=512, rope_dim=64, qk_nope_dim=128, v_head_dim=128,
+        d_ff=18432, max_seq_len=65536,
+    ).validate()
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: MLAConfig, seed: int = 42) -> Params:
+    """Deterministic random init; layout documented for the Rust loader.
+
+    Weight names are stable and sorted order defines the AOT input order.
+    """
+    key = jax.random.PRNGKey(seed)
+
+    def take(shape, scale=None):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        s = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+        return (jax.random.normal(sub, shape, jnp.float32) * s).astype(jnp.float32)
+
+    p: Params = {"embed": take((cfg.vocab_size, cfg.d_model), scale=0.02)}
+    for i in range(cfg.n_layers):
+        pre = f"layer{i:02d}."
+        p[pre + "attn_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[pre + "mlp_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[pre + "kv_norm"] = jnp.ones((cfg.kv_lora_rank,), jnp.float32)
+        # Query projection (full-rank; q-LoRA elided in this reproduction).
+        p[pre + "w_q"] = take((cfg.d_model, cfg.n_heads * cfg.qk_head_dim))
+        # Joint KV down-projection: latent c_kv plus the shared rope key.
+        p[pre + "w_kv_a"] = take((cfg.d_model, cfg.latent_dim))
+        # Per-head up-projections (absorbed at inference).
+        p[pre + "w_uk"] = take(
+            (cfg.n_heads, cfg.qk_nope_dim, cfg.kv_lora_rank),
+            scale=1.0 / math.sqrt(cfg.qk_nope_dim),
+        )
+        p[pre + "w_uv"] = take(
+            (cfg.n_heads, cfg.kv_lora_rank, cfg.v_head_dim),
+            scale=1.0 / math.sqrt(cfg.kv_lora_rank),
+        )
+        p[pre + "w_o"] = take((cfg.n_heads * cfg.v_head_dim, cfg.d_model))
+        p[pre + "w_gate"] = take((cfg.d_model, cfg.d_ff))
+        p[pre + "w_up"] = take((cfg.d_model, cfg.d_ff))
+        p[pre + "w_down"] = take((cfg.d_ff, cfg.d_model))
+    p["final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return p
+
+
+def param_order(params: Params) -> list:
+    """Canonical (sorted) parameter order used by the AOT interface."""
+    return sorted(params.keys())
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, base: float) -> jnp.ndarray:
+    """Rotary embedding.  x [..., B, ..., R], positions [B] broadcast on the
+    leading batch axis; rotates interleaved pairs (x[2i], x[2i+1])."""
+    r = x.shape[-1]
+    half = r // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) * 2.0 / r)
+    # positions broadcasts over the batch axis; x is [B, ..., R].
+    ang = positions.astype(jnp.float32).reshape((-1,) + (1,) * (x.ndim - 1)) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+ATTN_KERNELS: Dict[str, Callable] = {"etap": etap_decode, "flashmla": mla_decode}
+
+
+# ---------------------------------------------------------------------------
+# MLA decode layer + full decode step
+# ---------------------------------------------------------------------------
+
+def mla_layer_decode(
+    p: Params,
+    pre: str,
+    cfg: MLAConfig,
+    x: jnp.ndarray,         # [B, d_model] hidden state of the new token
+    cache_l: jnp.ndarray,   # [B, Nmax, latent_dim] this layer's cache
+    lengths: jnp.ndarray,   # [B] tokens already cached (before this one)
+    *,
+    kernel: str = "etap",
+    block_kv: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One MLA attention sublayer for one decode token.
+
+    Returns (attn output [B, d_model], updated cache_l)."""
+    b = x.shape[0]
+    h, nope, r = cfg.n_heads, cfg.qk_nope_dim, cfg.rope_dim
+
+    xq = x @ p[pre + "w_q"]                                  # [B, H*(nope+r)]
+    xq = xq.reshape(b, h, cfg.qk_head_dim)
+    q_nope, q_pe = xq[..., :nope], xq[..., nope:]
+    q_pe = rope(q_pe, lengths, cfg.rope_base)                # position = length
+    # Absorption: q_latent[b,h,c] = sum_n q_nope[b,h,n] W_UK[h,n,c]
+    q_latent = jnp.einsum("bhn,hnc->bhc", q_nope, p[pre + "w_uk"])
+    q_eff = jnp.concatenate([q_latent, q_pe], axis=-1)       # [B, H, latent]
+
+    kv_a = x @ p[pre + "w_kv_a"]                             # [B, latent]
+    c_kv = rmsnorm(kv_a[:, : cfg.kv_lora_rank], p[pre + "kv_norm"])
+    k_pe = rope(kv_a[:, cfg.kv_lora_rank :], lengths, cfg.rope_base)
+    c_t = jnp.concatenate([c_kv, k_pe], axis=-1)             # [B, latent]
+
+    # Append this token's latent at position `lengths[b]` (scatter per batch).
+    cache_l = jax.vmap(
+        lambda cb, tok, pos: jax.lax.dynamic_update_slice(cb, tok[None], (pos, 0))
+    )(cache_l, c_t, lengths)
+
+    out_latent, _ = ATTN_KERNELS[kernel](
+        q_eff,
+        cache_l,
+        lengths + 1,
+        scale=cfg.softmax_scale,
+        dv=cfg.kv_lora_rank,
+        block_kv=block_kv,
+    )                                                        # [B, H, d_ckv]
+
+    # Absorbed value up-projection, then output projection.
+    o = jnp.einsum("bhc,hcv->bhv", out_latent, p[pre + "w_uv"])
+    o = o.reshape(b, h * cfg.v_head_dim) @ p[pre + "w_o"]
+    return o, cache_l
+
+
+def decode_step(
+    p: Params,
+    cfg: MLAConfig,
+    tokens: jnp.ndarray,    # [B] int32 current token ids
+    cache: jnp.ndarray,     # [L, B, Nmax, latent_dim]
+    lengths: jnp.ndarray,   # [B] int32 tokens already cached
+    *,
+    kernel: str = "etap",
+    block_kv: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One autoregressive decode step for the whole model.
+
+    Returns (logits [B, vocab], new cache).  The caller advances `lengths`.
+    """
+    x = p["embed"][tokens]                                    # [B, d_model]
+    new_layers = []
+    for i in range(cfg.n_layers):
+        pre = f"layer{i:02d}."
+        attn_in = rmsnorm(x, p[pre + "attn_norm"])
+        attn_out, cache_l = mla_layer_decode(
+            p, pre, cfg, attn_in, cache[i], lengths,
+            kernel=kernel, block_kv=block_kv,
+        )
+        new_layers.append(cache_l)
+        x = x + attn_out
+        mlp_in = rmsnorm(x, p[pre + "mlp_norm"])
+        x = x + swiglu(mlp_in, p[pre + "w_gate"], p[pre + "w_up"], p[pre + "w_down"])
+    x = rmsnorm(x, p["final_norm"])
+    logits = x @ p["embed"].T                                 # tied unembedding
+    return logits, jnp.stack(new_layers)
+
+
+def decode_step_ref(p, cfg, tokens, cache, lengths):
+    """Oracle decode step: same math, full-matrix jnp attention (no Pallas).
+
+    Used by tests to validate `decode_step` end to end."""
+    from .kernels.ref import mla_attention_ref
+
+    x = p["embed"][tokens]
+    new_layers = []
+    b = tokens.shape[0]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i:02d}."
+        xa = rmsnorm(x, p[pre + "attn_norm"])
+        h, nope = cfg.n_heads, cfg.qk_nope_dim
+        xq = (xa @ p[pre + "w_q"]).reshape(b, h, cfg.qk_head_dim)
+        q_nope, q_pe = xq[..., :nope], xq[..., nope:]
+        q_pe = rope(q_pe, lengths, cfg.rope_base)
+        q_latent = jnp.einsum("bhn,hnc->bhc", q_nope, p[pre + "w_uk"])
+        q_eff = jnp.concatenate([q_latent, q_pe], axis=-1)
+        kv_a = xa @ p[pre + "w_kv_a"]
+        c_kv = rmsnorm(kv_a[:, : cfg.kv_lora_rank], p[pre + "kv_norm"])
+        k_pe = rope(kv_a[:, cfg.kv_lora_rank :], lengths, cfg.rope_base)
+        c_t = jnp.concatenate([c_kv, k_pe], axis=-1)
+        cache_l = jax.vmap(
+            lambda cb, tok, pos: jax.lax.dynamic_update_slice(cb, tok[None], (pos, 0))
+        )(cache[i], c_t, lengths)
+        new_layers.append(cache_l)
+        u = mla_attention_ref(
+            q_eff, cache_l, lengths + 1, cfg.softmax_scale, cfg.kv_lora_rank
+        )
+        o = jnp.einsum("bhc,hcv->bhv", u, p[pre + "w_uv"])
+        x = x + o.reshape(b, h * cfg.v_head_dim) @ p[pre + "w_o"]
+        xm = rmsnorm(x, p[pre + "mlp_norm"])
+        x = x + swiglu(xm, p[pre + "w_gate"], p[pre + "w_up"], p[pre + "w_down"])
+    x = rmsnorm(x, p["final_norm"])
+    return x @ p["embed"].T, jnp.stack(new_layers)
+
+
+def empty_cache(cfg: MLAConfig, batch: int, n_max: int) -> jnp.ndarray:
+    return jnp.zeros((cfg.n_layers, batch, n_max, cfg.latent_dim), jnp.float32)
+
+
+def greedy_decode(
+    p: Params,
+    cfg: MLAConfig,
+    prompts: jnp.ndarray,   # [B, T] int32, padded with 0 beyond prompt_lens
+    prompt_lens: jnp.ndarray,
+    n_new: int,
+    n_max: int,
+    *,
+    kernel: str = "etap",
+) -> jnp.ndarray:
+    """Reference greedy generation loop (python-side; the Rust coordinator
+    re-implements this loop against the AOT artifact).  Returns [B, n_new]."""
+    b, t = prompts.shape
+    cache = empty_cache(cfg, b, n_max)
+    lengths = jnp.zeros((b,), jnp.int32)
+    last = jnp.zeros((b,), jnp.int32)
+    # Token-by-token prefill (prefill-as-decode; see DESIGN.md).
+    for step in range(t):
+        tok = prompts[:, step]
+        logits, cache = decode_step(p, cfg, tok, cache, lengths, kernel=kernel)
+        active = step < prompt_lens
+        lengths = lengths + active.astype(jnp.int32)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        last = jnp.where(step + 1 == prompt_lens, nxt, last)
+    outs = []
+    for _ in range(n_new):
+        outs.append(last)
+        logits, cache = decode_step(p, cfg, last, cache, lengths, kernel=kernel)
+        lengths = lengths + 1
+        last = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(outs, axis=1)

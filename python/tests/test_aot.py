@@ -1,0 +1,99 @@
+"""AOT pipeline tests: HLO text emission, manifest schema, weight blob."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ART = None  # populated by the session fixture
+
+
+@pytest.fixture(scope="module")
+def quick_artifacts(tmp_path_factory):
+    """Run `compile.aot --quick` once into a temp dir."""
+    out = tmp_path_factory.mktemp("artifacts")
+    env = dict(os.environ)
+    repo_py = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--quick"],
+        cwd=repo_py, capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert r.returncode == 0, r.stderr
+    return out
+
+
+def test_manifest_schema(quick_artifacts):
+    m = json.load(open(quick_artifacts / "manifest.json"))
+    assert m["format_version"] == 1
+    assert len(m["artifacts"]) >= 3
+    for a in m["artifacts"]:
+        assert a["kind"] in ("attention", "decode_step")
+        assert (quick_artifacts / a["file"]).exists()
+        assert a["batch"] >= 1 and a["kv_bucket"] >= 128
+        for spec in a["inputs"] + a["outputs"]:
+            assert spec["dtype"] in ("f32", "s32")
+            assert all(s > 0 for s in spec["shape"])
+
+
+def test_hlo_text_is_parsable_hlo(quick_artifacts):
+    m = json.load(open(quick_artifacts / "manifest.json"))
+    for a in m["artifacts"]:
+        text = open(quick_artifacts / a["file"]).read()
+        assert text.startswith("HloModule"), a["file"]
+        assert "ENTRY" in text
+        # No Mosaic custom-calls — interpret=True must lower to plain HLO.
+        assert "tpu_custom_call" not in text, a["file"]
+        assert "mosaic" not in text.lower(), a["file"]
+
+
+def test_attention_io_shapes_in_hlo(quick_artifacts):
+    m = json.load(open(quick_artifacts / "manifest.json"))
+    attn = [a for a in m["artifacts"] if a["kind"] == "attention"]
+    assert attn
+    for a in attn:
+        text = open(quick_artifacts / a["file"]).read()
+        b, n, h, d = a["batch"], a["kv_bucket"], a["heads"], a["d"]
+        assert f"f32[{b},{h},{d}]" in text        # q input
+        assert f"f32[{b},{n},{d}]" in text        # cache input
+
+
+def test_weights_blob_size(quick_artifacts):
+    m = json.load(open(quick_artifacts / "manifest.json"))
+    model = m["model"]
+    blob = open(quick_artifacts / model["weights_file"], "rb").read()
+    n_floats = sum(int(np.prod(w["shape"])) for w in model["weights"])
+    assert len(blob) == 4 * n_floats
+    # Weight entries sorted == canonical AOT input order.
+    names = [w["name"] for w in model["weights"]]
+    assert names == sorted(names)
+
+
+def test_weights_sha_matches(quick_artifacts):
+    import hashlib
+    m = json.load(open(quick_artifacts / "manifest.json"))
+    blob = open(quick_artifacts / m["model"]["weights_file"], "rb").read()
+    assert hashlib.sha256(blob).hexdigest() == m["model"]["weights_sha256"]
+
+
+def test_testvec_attn_consistent(quick_artifacts):
+    """The dumped test vector must reproduce under the in-process kernel."""
+    import jax.numpy as jnp
+    from compile import model as M
+    from compile.kernels import etap_decode
+
+    v = json.load(open(quick_artifacts / "testvec_attn.json"))
+    cfg = M.deepseek_r1_shard_config()
+    h, d, dv = cfg.n_heads, cfg.latent_dim, cfg.kv_lora_rank
+    q = jnp.asarray(v["q"], jnp.float32).reshape(1, h, d)
+    cache = jnp.asarray(v["cache"], jnp.float32).reshape(1, 256, d)
+    out, lse = etap_decode(
+        q, cache, jnp.asarray(v["lengths"], jnp.int32),
+        scale=cfg.softmax_scale, dv=dv, block_kv=128,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out).ravel()[:64], v["out_prefix"], atol=1e-5
+    )
+    assert float(np.sum(np.asarray(out))) == pytest.approx(v["out_sum"], rel=1e-4)

@@ -1,0 +1,134 @@
+"""ETAP-specific properties beyond kernel-vs-oracle equality: the
+structural claims Algorithm 1 makes (transposed statistics, split-V
+accumulation, LSE correctness) and behaviour at numerical extremes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import etap_decode, mla_decode, mla_attention_ref, mla_lse_ref
+
+
+def _case(seed, b, h, d, n, dtype=jnp.float32):
+    kq, kc = jax.random.split(jax.random.PRNGKey(seed))
+    q = jax.random.normal(kq, (b, h, d), dtype)
+    c = jax.random.normal(kc, (b, n, d), dtype)
+    return q, c
+
+
+class TestLse:
+    """The L_i = m + log(l) output (Algorithm 1 line 29) is what split-KV
+    flash-decoding combination would consume — it must be exact."""
+
+    def test_lse_matches_reference(self):
+        q, c = _case(0, 2, 8, 64, 128)
+        lens = jnp.asarray([128, 60], jnp.int32)
+        _, lse = etap_decode(q, c, lens, scale=0.125, dv=32, block_kv=32)
+        ref = mla_lse_ref(q, c, lens, 0.125)
+        np.testing.assert_allclose(lse, ref, atol=2e-5, rtol=2e-5)
+
+    def test_lse_enables_split_merge(self):
+        """Softmax over [0,N) == LSE-weighted merge of [0,N/2) and [N/2,N):
+        the flash-decoding identity, using only kernel outputs."""
+        q, c = _case(1, 1, 4, 32, 128)
+        full_len = jnp.asarray([128], jnp.int32)
+        out_full, _ = etap_decode(q, c, full_len, scale=0.2, dv=16, block_kv=32)
+
+        # Half 1: positions [0, 64); half 2: positions [64, 128).
+        half1_len = jnp.asarray([64], jnp.int32)
+        o1, l1 = etap_decode(q, c, half1_len, scale=0.2, dv=16, block_kv=32)
+        c2 = c[:, 64:, :]
+        o2, l2 = etap_decode(q, c2, half1_len, scale=0.2, dv=16, block_kv=32)
+
+        w1 = jnp.exp(l1 - jnp.logaddexp(l1, l2))[..., None]
+        merged = o1 * w1 + o2 * (1.0 - w1)
+        np.testing.assert_allclose(merged, out_full, atol=1e-4, rtol=1e-4)
+
+
+class TestExtremes:
+    def test_large_scores_no_overflow(self):
+        """exp of unnormalized scores would overflow f32; the online max
+        (column-wise in ETAP) must keep everything finite."""
+        q, c = _case(2, 1, 4, 16, 64)
+        q = q * 100.0
+        out, lse = etap_decode(
+            q, c, jnp.asarray([64], jnp.int32), scale=1.0, dv=8, block_kv=32
+        )
+        assert bool(jnp.all(jnp.isfinite(out)))
+        assert bool(jnp.all(jnp.isfinite(lse)))
+
+    def test_one_hot_attention(self):
+        """A huge score on one position makes attention pick that row."""
+        q, c = _case(3, 1, 2, 8, 64)
+        target = 37
+        c = c.at[0, target, :].set(0.0)
+        c = c.at[0, target, 0].set(50.0)
+        q = q.at[0, :, :].set(0.0)
+        q = q.at[0, :, 0].set(50.0)
+        out, _ = etap_decode(
+            q, c, jnp.asarray([64], jnp.int32), scale=1.0, dv=8, block_kv=32
+        )
+        want = c[0, target, :8]
+        np.testing.assert_allclose(out[0, 0], want, atol=1e-3)
+
+    def test_negative_and_tiny_values(self):
+        q, c = _case(4, 1, 2, 8, 32)
+        out, _ = etap_decode(
+            q * 1e-20, c * 1e-20, jnp.asarray([32], jnp.int32),
+            scale=1.0, dv=8, block_kv=32,
+        )
+        # Uniform softmax → mean of values.
+        want = jnp.mean(c[0, :, :8] * 1e-20, axis=0)
+        np.testing.assert_allclose(out[0, 0], want, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    h=st.sampled_from([1, 3, 16]),
+    n_blocks=st.integers(1, 3),
+)
+def test_block_boundary_invariance(seed, h, n_blocks):
+    """Output must not depend on how the KV axis is blocked — the defining
+    invariant of the streaming (online) formulation."""
+    d, dv = 32, 16
+    n = 64 * n_blocks
+    q, c = _case(seed, 1, h, d, n)
+    lens = jnp.asarray([n - 7], jnp.int32)
+    outs = []
+    for blk in (32, 64, n):
+        o, l = etap_decode(q, c, lens, scale=0.15, dv=dv, block_kv=blk)
+        outs.append((np.asarray(o), np.asarray(l)))
+    for o, l in outs[1:]:
+        np.testing.assert_allclose(o, outs[0][0], atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(l, outs[0][1], atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), perm_seed=st.integers(0, 100))
+def test_kv_permutation_invariance(seed, perm_seed):
+    """Decode attention (no causal mask within the context) is invariant to
+    permuting KV positions — rope is applied before caching, so the kernel
+    itself must be order-free.  Catches any positional leakage in the
+    transposed pipeline."""
+    q, c = _case(seed, 1, 4, 16, 64)
+    lens = jnp.asarray([64], jnp.int32)
+    perm = np.random.RandomState(perm_seed).permutation(64)
+    c_perm = c[:, perm, :]
+    a, _ = etap_decode(q, c, lens, scale=0.3, dv=8, block_kv=32)
+    b, _ = etap_decode(q, c_perm, lens, scale=0.3, dv=8, block_kv=32)
+    np.testing.assert_allclose(a, b, atol=3e-5, rtol=3e-5)
+
+
+def test_both_kernels_same_lse_and_out_at_512_blocks():
+    """Long-ish context smoke: 512 tokens, 8 blocks, both modes agree."""
+    q, c = _case(9, 2, 16, 128, 512)
+    lens = jnp.asarray([512, 300], jnp.int32)
+    oe, le = etap_decode(q, c, lens, scale=0.09, dv=64, block_kv=64)
+    ob, lb = mla_decode(q, c, lens, scale=0.09, dv=64, block_kv=64)
+    ref = mla_attention_ref(q, c, lens, 0.09, 64)
+    np.testing.assert_allclose(oe, ref, atol=3e-5, rtol=3e-5)
+    np.testing.assert_allclose(ob, ref, atol=3e-5, rtol=3e-5)
+    np.testing.assert_allclose(le, lb, atol=3e-5, rtol=3e-5)

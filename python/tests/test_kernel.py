@@ -1,0 +1,178 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal for L1.
+
+Covers the query-major baseline (`mla_decode`) and the transposed ETAP
+kernel (`etap_decode`) against the pure-jnp oracle, plus hypothesis sweeps
+over shapes, block sizes, lengths and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import etap_decode, mla_decode, mla_attention_ref, mla_lse_ref
+
+KERNELS = {"flashmla": mla_decode, "etap": etap_decode}
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+def _case(b, h, d, dv, n, lens, kernel, block_kv=64, dtype=jnp.float32):
+    q = _rand(0, (b, h, d)).astype(dtype)
+    c = _rand(1, (b, n, d)).astype(dtype)
+    lengths = jnp.asarray(lens, jnp.int32)
+    scale = 1.0 / np.sqrt(d)
+    out, lse = kernel(q, c, lengths, scale=scale, dv=dv, block_kv=block_kv)
+    ref = mla_attention_ref(q, c, lengths, scale, dv)
+    lse_ref = mla_lse_ref(q, c, lengths, scale)
+    return out, lse, ref, lse_ref
+
+
+@pytest.mark.parametrize("name,kernel", KERNELS.items())
+class TestAgainstOracle:
+    def test_paper_geometry(self, name, kernel):
+        """DeepSeek-R1 per-GPU shard: 16 heads, d=576, dv=512."""
+        out, lse, ref, lse_ref = _case(2, 16, 576, 512, 256, [256, 100], kernel)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(lse, lse_ref, atol=2e-5, rtol=2e-5)
+
+    def test_full_lengths(self, name, kernel):
+        out, _, ref, _ = _case(3, 8, 64, 32, 128, [128, 128, 128], kernel)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_single_batch_single_block(self, name, kernel):
+        out, _, ref, _ = _case(1, 4, 32, 16, 64, [64], kernel)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_length_one(self, name, kernel):
+        """Degenerate context: softmax over a single position is identity."""
+        out, _, ref, _ = _case(2, 4, 32, 16, 64, [1, 1], kernel)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_ragged_lengths(self, name, kernel):
+        out, _, ref, _ = _case(4, 4, 32, 16, 192, [5, 64, 65, 192], kernel)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_length_not_block_aligned(self, name, kernel):
+        """Mask must clip inside a partially-valid KV block."""
+        out, _, ref, _ = _case(1, 4, 32, 16, 128, [97], kernel)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_block_kv_variants(self, name, kernel):
+        for block_kv in (32, 64, 128, 256):
+            out, _, ref, _ = _case(1, 8, 64, 32, 256, [200], kernel, block_kv=block_kv)
+            np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_bf16_inputs(self, name, kernel):
+        """bf16 storage, f32 accumulation — the TPU deployment dtype."""
+        out, _, ref, _ = _case(2, 8, 64, 32, 128, [128, 77], kernel, dtype=jnp.bfloat16)
+        np.testing.assert_allclose(out, ref, atol=3e-2, rtol=3e-2)
+
+    def test_bf16_output_dtype(self, name, kernel):
+        q = _rand(0, (1, 4, 32))
+        c = _rand(1, (1, 64, 32))
+        lengths = jnp.asarray([64], jnp.int32)
+        out, _ = kernel(
+            q, c, lengths, scale=0.17, dv=16, block_kv=64, out_dtype=jnp.bfloat16
+        )
+        assert out.dtype == jnp.bfloat16
+
+    def test_rejects_unaligned_n(self, name, kernel):
+        q = _rand(0, (1, 4, 32))
+        c = _rand(1, (1, 100, 32))
+        with pytest.raises(ValueError, match="multiple of block_kv"):
+            kernel(q, c, jnp.asarray([100], jnp.int32), scale=0.1, dv=16, block_kv=64)
+
+    def test_scale_applied(self, name, kernel):
+        """Different scales must give different outputs (scale not dropped)."""
+        q = _rand(0, (1, 4, 32))
+        c = _rand(1, (1, 64, 32))
+        lengths = jnp.asarray([64], jnp.int32)
+        a, _ = kernel(q, c, lengths, scale=0.1, dv=16, block_kv=64)
+        b, _ = kernel(q, c, lengths, scale=1.0, dv=16, block_kv=64)
+        assert not np.allclose(a, b)
+
+    def test_invariant_to_padding_contents(self, name, kernel):
+        """Garbage beyond `length` must not leak into the output."""
+        q = _rand(0, (1, 4, 32))
+        c = _rand(1, (1, 128, 32))
+        c_poisoned = c.at[:, 64:, :].set(1e4)
+        lengths = jnp.asarray([64], jnp.int32)
+        a, _ = kernel(q, c, lengths, scale=0.2, dv=16, block_kv=64)
+        b, _ = kernel(q, c_poisoned, lengths, scale=0.2, dv=16, block_kv=64)
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_etap_equals_baseline_paper_geometry():
+    """The two computation modes are the same attention (paper §3.1)."""
+    q = _rand(0, (2, 16, 576))
+    c = _rand(1, (2, 512, 576))
+    lengths = jnp.asarray([512, 300], jnp.int32)
+    scale = 1.0 / np.sqrt(576)
+    o_base, l_base = mla_decode(q, c, lengths, scale=scale, dv=512, block_kv=128)
+    o_etap, l_etap = etap_decode(q, c, lengths, scale=scale, dv=512, block_kv=128)
+    np.testing.assert_allclose(o_base, o_etap, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(l_base, l_etap, atol=2e-5, rtol=2e-5)
+
+
+def test_etap_rejects_odd_dv():
+    q = _rand(0, (1, 4, 32))
+    c = _rand(1, (1, 64, 32))
+    with pytest.raises(ValueError, match="must be even"):
+        etap_decode(q, c, jnp.asarray([64], jnp.int32), scale=0.1, dv=15, block_kv=64)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4, 8, 16]),
+    d_pow=st.integers(4, 6),          # d in {16, 32, 64}
+    blocks=st.integers(1, 4),
+    block_kv=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_hypothesis_sweep_both_kernels(b, h, d_pow, blocks, block_kv, seed, data):
+    """Property: for any shape/length draw, both kernels match the oracle."""
+    d = 2**d_pow
+    dv = d // 2
+    n = blocks * block_kv
+    lens = data.draw(
+        st.lists(st.integers(1, n), min_size=b, max_size=b), label="lengths"
+    )
+    key = jax.random.PRNGKey(seed)
+    kq, kc = jax.random.split(key)
+    q = jax.random.normal(kq, (b, h, d), jnp.float32)
+    c = jax.random.normal(kc, (b, n, d), jnp.float32)
+    lengths = jnp.asarray(lens, jnp.int32)
+    scale = 1.0 / np.sqrt(d)
+    ref = mla_attention_ref(q, c, lengths, scale, dv)
+    for kernel in (mla_decode, etap_decode):
+        out, _ = kernel(q, c, lengths, scale=scale, dv=dv, block_kv=block_kv)
+        np.testing.assert_allclose(out, ref, atol=5e-5, rtol=5e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(shift=st.floats(-50.0, 50.0), seed=st.integers(0, 1000))
+def test_softmax_shift_invariance(shift, seed):
+    """Property: a uniform score shift (appended constant feature) leaves the
+    attention output unchanged — exercises online max-tracking at offsets.
+
+    Both runs use d=33: the last K column is all-ones; the query's last
+    feature is 0 in the base run and `shift` in the other, which moves every
+    score by shift*scale uniformly.  V = first 32 dims, identical in both.
+    """
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, 4, 32), jnp.float32)
+    c = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 64, 32), jnp.float32)
+    lengths = jnp.asarray([64], jnp.int32)
+    c1 = jnp.concatenate([c, jnp.ones((1, 64, 1), jnp.float32)], axis=-1)
+    q0 = jnp.concatenate([q, jnp.zeros((1, 4, 1), jnp.float32)], axis=-1)
+    qs = jnp.concatenate([q, jnp.full((1, 4, 1), shift, jnp.float32)], axis=-1)
+    for kernel in (mla_decode, etap_decode):
+        base, _ = kernel(q0, c1, lengths, scale=0.3, dv=32, block_kv=32)
+        shifted, _ = kernel(qs, c1, lengths, scale=0.3, dv=32, block_kv=32)
+        np.testing.assert_allclose(base, shifted, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,208 @@
+"""L2 model tests: decode step vs full-matrix oracle, cache semantics,
+rope/rmsnorm properties, greedy decode determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = M.tiny_config()
+    return cfg, M.init_params(cfg)
+
+
+class TestConfig:
+    def test_tiny_valid(self):
+        cfg = M.tiny_config()
+        assert cfg.latent_dim == cfg.kv_lora_rank + cfg.rope_dim
+        assert cfg.softmax_scale == pytest.approx(
+            1.0 / np.sqrt(cfg.qk_nope_dim + cfg.rope_dim)
+        )
+
+    def test_paper_shard_geometry(self):
+        cfg = M.deepseek_r1_shard_config()
+        assert cfg.n_heads == 16          # 128 heads / 8 GPUs (paper §1)
+        assert cfg.latent_dim == 576      # 512 latent + 64 rope (paper §4.1)
+        assert cfg.kv_lora_rank == 512
+
+    def test_validate_rejects_odd_latent(self):
+        with pytest.raises(ValueError):
+            M.MLAConfig(kv_lora_rank=63).validate()
+
+    def test_param_order_stable(self, tiny):
+        cfg, p = tiny
+        order = M.param_order(p)
+        assert order == sorted(order)
+        assert "embed" in order and "final_norm" in order
+        assert len(order) == 2 + cfg.n_layers * 11
+
+    def test_init_deterministic(self):
+        cfg = M.tiny_config()
+        a = M.init_params(cfg, seed=42)
+        b = M.init_params(cfg, seed=42)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+class TestBlocks:
+    def test_rmsnorm_unit_scale(self):
+        x = jnp.asarray([[3.0, 4.0]])
+        g = jnp.ones((2,))
+        out = M.rmsnorm(x, g)
+        # rms of [3,4] is sqrt(12.5); normalized vector has rms ~1
+        rms = float(jnp.sqrt(jnp.mean(out**2)))
+        assert rms == pytest.approx(1.0, abs=1e-4)
+
+    def test_rope_position_zero_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 8))
+        out = M.rope(x, jnp.zeros((2,), jnp.int32), 10000.0)
+        np.testing.assert_allclose(out, x, atol=1e-6)
+
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 8))
+        out = M.rope(x, jnp.asarray([5, 99], jnp.int32), 10000.0)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(out, axis=-1), jnp.linalg.norm(x, axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_rope_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n (2-dim case)."""
+        q = jnp.asarray([[1.0, 2.0]])
+        k = jnp.asarray([[0.5, -1.0]])
+        def dot(m, n):
+            qm = M.rope(q, jnp.asarray([m], jnp.int32), 10000.0)
+            kn = M.rope(k, jnp.asarray([n], jnp.int32), 10000.0)
+            return float(jnp.sum(qm * kn))
+        assert dot(3, 1) == pytest.approx(dot(7, 5), abs=1e-5)
+        assert dot(0, 0) == pytest.approx(dot(9, 9), abs=1e-5)
+
+
+class TestDecodeStep:
+    def test_matches_oracle_first_step(self, tiny):
+        cfg, p = tiny
+        b, n = 2, 128
+        cache = M.empty_cache(cfg, b, n)
+        lengths = jnp.zeros((b,), jnp.int32)
+        tok = jnp.asarray([3, 11], jnp.int32)
+        lg, c = M.decode_step(p, cfg, tok, cache, lengths)
+        lgr, cr = M.decode_step_ref(p, cfg, tok, cache, lengths)
+        np.testing.assert_allclose(lg, lgr, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(c, cr, atol=1e-5)
+
+    @pytest.mark.parametrize("kernel", ["etap", "flashmla"])
+    def test_matches_oracle_multi_step(self, tiny, kernel):
+        cfg, p = tiny
+        b, n = 2, 128
+        cache = M.empty_cache(cfg, b, n)
+        lengths = jnp.zeros((b,), jnp.int32)
+        for toks in [[3, 11], [5, 7], [1, 2], [9, 0]]:
+            tok = jnp.asarray(toks, jnp.int32)
+            lg, cache = M.decode_step(p, cfg, tok, cache, lengths, kernel=kernel)
+            lengths = lengths + 1
+        # Validate the final step against the oracle run from scratch.
+        cache_r = M.empty_cache(cfg, b, n)
+        lengths_r = jnp.zeros((b,), jnp.int32)
+        for toks in [[3, 11], [5, 7], [1, 2], [9, 0]]:
+            lgr, cache_r = M.decode_step_ref(
+                p, cfg, jnp.asarray(toks, jnp.int32), cache_r, lengths_r
+            )
+            lengths_r = lengths_r + 1
+        np.testing.assert_allclose(lg, lgr, atol=1e-3, rtol=1e-3)
+
+    def test_cache_written_at_length_position(self, tiny):
+        cfg, p = tiny
+        b, n = 1, 128
+        cache = M.empty_cache(cfg, b, n)
+        lengths = jnp.asarray([5], jnp.int32)
+        _, c = M.decode_step(p, cfg, jnp.asarray([1], jnp.int32), cache, lengths)
+        c = np.array(c, copy=True)
+        # Position 5 written in every layer, everything else untouched (0).
+        assert np.abs(c[:, 0, 5, :]).sum() > 0
+        c[:, 0, 5, :] = 0
+        assert np.abs(c).sum() == 0
+
+    def test_batch_elements_independent(self, tiny):
+        """Request isolation: batch slot 0's output must not depend on what
+        sits in slot 1 — the property continuous batching relies on."""
+        cfg, p = tiny
+        n = 128
+        cache = M.empty_cache(cfg, 2, n)
+        lengths = jnp.zeros((2,), jnp.int32)
+        lg_a, _ = M.decode_step(p, cfg, jnp.asarray([3, 11], jnp.int32), cache, lengths)
+        lg_b, _ = M.decode_step(p, cfg, jnp.asarray([3, 200], jnp.int32), cache, lengths)
+        np.testing.assert_allclose(lg_a[0], lg_b[0], atol=1e-5)
+        assert not np.allclose(lg_a[1], lg_b[1])
+
+    def test_logits_shape_and_finite(self, tiny):
+        cfg, p = tiny
+        cache = M.empty_cache(cfg, 4, 128)
+        lg, _ = M.decode_step(
+            p, cfg, jnp.asarray([0, 1, 2, 3], jnp.int32), cache,
+            jnp.zeros((4,), jnp.int32),
+        )
+        assert lg.shape == (4, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+class TestGreedyDecode:
+    def test_deterministic(self, tiny):
+        cfg, p = tiny
+        prompts = jnp.asarray([[3, 5, 7, 0], [11, 2, 0, 0]], jnp.int32)
+        plens = jnp.asarray([3, 2], jnp.int32)
+        a = M.greedy_decode(p, cfg, prompts, plens, n_new=4, n_max=64)
+        b = M.greedy_decode(p, cfg, prompts, plens, n_new=4, n_max=64)
+        np.testing.assert_array_equal(a, b)
+        assert a.shape == (2, 4)
+
+    def test_kernel_choice_agrees(self, tiny):
+        """Greedy argmax path must be identical across computation modes."""
+        cfg, p = tiny
+        prompts = jnp.asarray([[3, 5, 7, 0]], jnp.int32)
+        plens = jnp.asarray([3], jnp.int32)
+        a = M.greedy_decode(p, cfg, prompts, plens, 4, 64, kernel="etap")
+        b = M.greedy_decode(p, cfg, prompts, plens, 4, 64, kernel="flashmla")
+        np.testing.assert_array_equal(a, b)
+
+    def test_prompt_isolation(self, tiny):
+        """Changing one prompt must not change the other's generation."""
+        cfg, p = tiny
+        pa = jnp.asarray([[3, 5, 0], [7, 9, 0]], jnp.int32)
+        pb = jnp.asarray([[3, 5, 0], [100, 42, 0]], jnp.int32)
+        plens = jnp.asarray([2, 2], jnp.int32)
+        a = M.greedy_decode(p, cfg, pa, plens, 3, 64)
+        b = M.greedy_decode(p, cfg, pb, plens, 3, 64)
+        np.testing.assert_array_equal(a[0], b[0])
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    seed=st.integers(0, 100),
+    b=st.integers(1, 3),
+    steps=st.integers(1, 3),
+)
+def test_hypothesis_decode_matches_oracle(seed, b, steps):
+    """Property: for random tiny geometries, pallas decode == oracle decode."""
+    cfg = M.MLAConfig(
+        vocab_size=64, d_model=32, n_layers=2, n_heads=2,
+        kv_lora_rank=16, rope_dim=8, qk_nope_dim=8, v_head_dim=8,
+        d_ff=64, max_seq_len=64,
+    ).validate()
+    p = M.init_params(cfg, seed=seed)
+    n = 64
+    rng = np.random.RandomState(seed)
+    cache = M.empty_cache(cfg, b, n)
+    cache_r = cache
+    lengths = jnp.zeros((b,), jnp.int32)
+    for _ in range(steps):
+        tok = jnp.asarray(rng.randint(0, 64, size=b), jnp.int32)
+        lg, cache = M.decode_step(p, cfg, tok, cache, lengths, block_kv=32)
+        lgr, cache_r = M.decode_step_ref(p, cfg, tok, cache_r, lengths)
+        lengths = lengths + 1
+    np.testing.assert_allclose(lg, lgr, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(cache, cache_r, atol=1e-5)

@@ -1,0 +1,60 @@
+//! Bench: the pure-Rust attention kernels (the coordinator's fallback path
+//! and the numerics substrate).  Compares naive vs online vs ETAP order
+//! and block-size sensitivity — the CPU mirror of the paper's L1 tuning.
+//!
+//!     cargo bench --bench attention_cpu
+
+use flashmla_etap::attention::{etap_f32, naive_f32, online_f32, AttnShape};
+use flashmla_etap::bench::Bencher;
+use flashmla_etap::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // Paper geometry at a CPU-feasible context.
+    let shape = AttnShape::paper(1024);
+    let mut rng = Rng::new(3);
+    let q = rng.normal_vec(shape.q_len());
+    let c = rng.normal_vec(shape.cache_len());
+    let scale = 1.0 / (192.0f32).sqrt();
+
+    println!("paper geometry (16 heads, d=576, dv=512, n=1024):");
+    let naive = b.bench("naive_f32", || naive_f32(&shape, &q, &c, scale)).mean_us;
+    let online = b
+        .bench("online_f32 (Bc=64)", || online_f32(&shape, &q, &c, scale, 64))
+        .mean_us;
+    let etap = b
+        .bench("etap_f32   (Bc=64)", || etap_f32(&shape, &q, &c, scale, 64))
+        .mean_us;
+    println!(
+        "  online/naive {:.2}x, etap/naive {:.2}x (CPU has no WGMMA: parity expected, \
+         the GPU-side gap lives in the simulator)\n",
+        naive / online,
+        naive / etap
+    );
+
+    println!("block-size sweep (etap_f32, n=2048):");
+    let shape2 = AttnShape::paper(2048);
+    let q2 = rng.normal_vec(shape2.q_len());
+    let c2 = rng.normal_vec(shape2.cache_len());
+    for bc in [32usize, 64, 128, 256] {
+        b.bench(&format!("etap_f32 Bc={bc}"), || {
+            etap_f32(&shape2, &q2, &c2, scale, bc)
+        });
+    }
+
+    println!("\ncontext scaling (etap_f32, Bc=64):");
+    for n in [256usize, 512, 1024, 2048] {
+        let s = AttnShape::paper(n);
+        let qq = rng.normal_vec(s.q_len());
+        let cc = rng.normal_vec(s.cache_len());
+        let r = b.bench(&format!("etap_f32 n={n}"), || {
+            etap_f32(&s, &qq, &cc, scale, 64)
+        });
+        let flops = 2.0 * 16.0 * n as f64 * (576.0 + 512.0);
+        println!(
+            "    → {:.2} GFLOP/s effective",
+            flops / r.mean_us / 1e3
+        );
+    }
+}

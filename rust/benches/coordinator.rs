@@ -1,0 +1,116 @@
+//! Bench: coordinator hot paths — batcher decisions, paged-KV operations,
+//! cluster-sim step planning, trace serving — plus the end-to-end PJRT
+//! engine when artifacts are present.
+//!
+//!     cargo bench --bench coordinator
+
+use std::path::PathBuf;
+
+use flashmla_etap::coordinator::{
+    Batcher, BatcherConfig, ClusterConfig, ClusterSim, Engine, EngineConfig, Request,
+    TraceRequest,
+};
+use flashmla_etap::bench::Bencher;
+use flashmla_etap::hardware::GpuSpec;
+use flashmla_etap::kvcache::{CacheConfig, PagedLatentCache};
+use flashmla_etap::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+
+    // --- Batcher decision costs (run every engine step). ---
+    println!("batcher:");
+    b.bench("admit+reap cycle (8 slots, 64 queued)", || {
+        let mut batcher = Batcher::new(BatcherConfig {
+            max_slots: 8,
+            batch_buckets: vec![1, 2, 4, 8],
+            kv_buckets: vec![128, 256],
+        })
+        .unwrap();
+        for i in 0..64 {
+            batcher.submit(Request::new(i, vec![1, 2, 3], 4));
+        }
+        let mut admitted = 0;
+        while batcher.has_work() && admitted < 64 {
+            admitted += batcher.admit(|_| true);
+            for r in batcher.active_mut() {
+                r.finish(flashmla_etap::coordinator::FinishReason::Aborted);
+            }
+            batcher.reap();
+        }
+        admitted
+    });
+
+    // --- Paged KV store ops (recomposition path). ---
+    println!("\npaged latent store (tiny-model geometry: 4×96 super-latent):");
+    let cfg = CacheConfig {
+        block_size: 16,
+        latent_dim: 4 * 96,
+        num_blocks: 512,
+    };
+    let mut rng = Rng::new(5);
+    let latent = rng.normal_vec(cfg.latent_dim);
+    b.bench("append 128 tokens + free", || {
+        let mut store = PagedLatentCache::new(cfg);
+        let s = store.new_seq();
+        for _ in 0..128 {
+            store.append(s, &latent).unwrap();
+        }
+        store.free_seq(s);
+    });
+    let mut store = PagedLatentCache::new(cfg);
+    let s = store.new_seq();
+    for _ in 0..128 {
+        store.append(s, &latent).unwrap();
+    }
+    let mut out = vec![0.0f32; 256 * cfg.latent_dim];
+    b.bench("gather_padded 128→256", || store.gather_padded(s, 256, &mut out));
+
+    // --- Cluster sim (planning + paper-scale serving). ---
+    println!("\ncluster sim:");
+    let sim = ClusterSim::new(ClusterConfig::default(), GpuSpec::h20())?;
+    let kv = vec![16384usize; 16];
+    b.bench("step_time (BS16 @16K)", || sim.step_time(&kv));
+    let trace: Vec<TraceRequest> = (0..64)
+        .map(|i| TraceRequest {
+            arrival_us: i as f64 * 500.0,
+            context_len: 8192,
+            gen_len: 16,
+        })
+        .collect();
+    let r = b.bench("serve_trace (64 req × 16 tok)", || sim.serve_trace(&trace, 16));
+    println!(
+        "    → {:.0} simulated tokens/s per real ms",
+        1024.0 / (r.mean_us / 1e3)
+    );
+
+    // --- End-to-end PJRT engine (needs artifacts). ---
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        println!("\nPJRT engine (tiny model, etap artifacts):");
+        for (slots, reqs) in [(1usize, 2usize), (4, 8), (8, 8)] {
+            let r = b.bench(&format!("serve {reqs} req / {slots} slots"), || {
+                let mut e = Engine::new(
+                    &dir,
+                    EngineConfig {
+                        kernel: "etap".into(),
+                        max_slots: slots,
+                        kv_blocks: 512,
+                        block_size: 16,
+                        eos_token: None,
+                    },
+                )
+                .unwrap();
+                for i in 0..reqs {
+                    e.submit(vec![(i as i32 % 500) + 1, 7, 9], 6);
+                }
+                e.run_to_completion().unwrap().metrics.tokens_generated
+            });
+            let tokens = reqs * 6;
+            println!("    → {:.1} tokens/s end-to-end", r.per_second(tokens as f64));
+        }
+    } else {
+        println!("\n(skipping PJRT engine bench: run `make artifacts`)");
+    }
+    Ok(())
+}

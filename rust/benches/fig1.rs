@@ -1,0 +1,43 @@
+//! Bench: regenerate Figure 1(a) and 1(b) — the paper's main result —
+//! and time the simulator itself.
+//!
+//!     cargo bench --bench fig1
+
+use flashmla_etap::bench::Bencher;
+use flashmla_etap::hardware::GpuSpec;
+use flashmla_etap::sim::figures;
+use flashmla_etap::sim::kernels::all_models;
+use flashmla_etap::sim::DecodeWorkload;
+
+fn main() {
+    let gpu = GpuSpec::h20();
+
+    for batch in [16usize, 32] {
+        figures::figure1_table(batch, &gpu).print();
+        let r = figures::headline_ratios(batch, &gpu);
+        println!(
+            "headline @BS{batch}: {:.2}x vs FlashMLA @64K ({:.2}x @512), {:.2}x vs FA-3, \
+             {:.2}x vs FlashInfer | paper @BS16: 2.78x (1.44x), 5.24x, 4.94x",
+            r.speedup_vs_flashmla_64k,
+            r.speedup_vs_flashmla_512,
+            r.speedup_vs_fa3_64k,
+            r.speedup_vs_flashinfer_64k
+        );
+        println!(
+            "mean |model - paper| / paper over all bars: {:.1}%\n",
+            figures::model_fidelity(batch, &gpu) * 100.0
+        );
+    }
+
+    // Time the simulator — it sits on the coordinator's planning path
+    // (bucket/kernel selection), so it must be microsecond-cheap.
+    println!("simulator cost:");
+    let mut b = Bencher::new();
+    let models = all_models();
+    b.bench("sim: one estimate (etap @64K BS16)", || {
+        models[0].estimate(&DecodeWorkload::paper(16, 65536), &gpu)
+    });
+    b.bench("sim: full figure 1(a) (32 points)", || {
+        figures::figure1(16, &gpu)
+    });
+}

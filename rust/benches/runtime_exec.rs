@@ -1,0 +1,60 @@
+//! Bench: PJRT artifact execution wallclock across buckets — the raw L1/L2
+//! cost the engine pays per step (interpret-mode Pallas on CPU; real-TPU
+//! perf is estimated structurally in DESIGN.md §8).
+//!
+//!     make artifacts && cargo bench --bench runtime_exec
+
+use std::path::PathBuf;
+
+use flashmla_etap::bench::Bencher;
+use flashmla_etap::runtime::{AttentionRunner, DecodeRunner, Runtime};
+use flashmla_etap::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("skipping: artifacts/ not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let rt = Runtime::cpu(&dir)?;
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(11);
+
+    println!("attention artifacts (paper geometry, ETAP vs query-major):");
+    for kernel in ["etap", "flashmla"] {
+        for (batch, n) in [(1usize, 256usize), (1, 1024), (4, 512), (16, 512)] {
+            let name = format!("attn_{kernel}_b{batch}_n{n}");
+            let Ok(runner) = AttentionRunner::new(&rt, &name) else {
+                continue;
+            };
+            let q = rng.normal_vec(batch * runner.heads * runner.d);
+            let cache = rng.normal_vec(batch * n * runner.d);
+            let lengths: Vec<i32> = vec![n as i32; batch];
+            let r = b.bench(&name, || runner.run(&q, &cache, &lengths).unwrap());
+            let flops = 2.0
+                * batch as f64
+                * runner.heads as f64
+                * n as f64
+                * (runner.d + runner.dv) as f64;
+            println!("    → {:.2} GFLOP/s (CPU interpret)", flops / r.mean_us / 1e3);
+        }
+    }
+
+    println!("\ndecode-step artifacts (tiny model):");
+    for (batch, n) in [(1usize, 128usize), (4, 128), (8, 256)] {
+        let name = format!("decode_etap_b{batch}_n{n}");
+        let Ok(runner) = DecodeRunner::new(&rt, &name) else {
+            continue;
+        };
+        let cache = runner.fresh_cache()?;
+        let tokens: Vec<i32> = (0..batch as i32).collect();
+        let lengths = vec![0i32; batch];
+        let r = b.bench(&name, || runner.step(&tokens, &cache, &lengths).unwrap());
+        println!(
+            "    → {:.1} decode steps/s, {:.1} tok/s at this bucket",
+            1e6 / r.mean_us,
+            batch as f64 * 1e6 / r.mean_us
+        );
+    }
+    Ok(())
+}

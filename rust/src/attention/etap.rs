@@ -1,0 +1,161 @@
+//! ETAP-ordered (KV-major / transposed) attention in f32 — the CPU mirror
+//! of the L1 Pallas kernel `etap_decode.py` and of Algorithm 1:
+//!
+//! * the KV block is the outer ("M") loop, heads the inner column axis;
+//! * softmax statistics are tracked per *column* of `S^T`;
+//! * the output accumulator lives transposed (`O^T`, `[dv × h]`) with the
+//!   split-V halves updated separately (Algorithm 1 lines 14/26);
+//! * one final transpose at the end (eq. 4).
+
+use super::AttnShape;
+
+/// Blockwise ETAP decode attention for one request.
+pub fn etap_f32(
+    shape: &AttnShape,
+    q: &[f32],
+    cache: &[f32],
+    scale: f32,
+    block_kv: usize,
+) -> Vec<f32> {
+    shape.validate(q, cache);
+    assert!(block_kv >= 1);
+    let (h, d, dv, n) = (shape.h, shape.d, shape.dv, shape.n);
+    let half = dv / 2;
+
+    // O^T accumulator [dv × h] and per-column (per-head) stats.
+    let mut acc_t = vec![0.0f32; dv * h];
+    let mut m = vec![f32::NEG_INFINITY; h];
+    let mut l = vec![0.0f32; h];
+    let mut s_t = vec![0.0f32; block_kv * h]; // S^T block [bc × h]
+    let mut r = vec![0.0f32; h];
+
+    let mut j0 = 0;
+    while j0 < n {
+        let bc = block_kv.min(n - j0);
+        // S^T = K · Q^T for this block (eq. 1).
+        let mut blk_max = vec![f32::NEG_INFINITY; h];
+        for jj in 0..bc {
+            let krow = &cache[(j0 + jj) * d..(j0 + jj) * d + d];
+            for hi in 0..h {
+                let qrow = &q[hi * d..(hi + 1) * d];
+                let mut dot = 0.0f32;
+                for k in 0..d {
+                    dot += krow[k] * qrow[k];
+                }
+                let s = dot * scale;
+                s_t[jj * h + hi] = s;
+                blk_max[hi] = blk_max[hi].max(s);
+            }
+        }
+        // Column-wise online softmax (eq. 2): R_i = exp(m_old - m_new).
+        for hi in 0..h {
+            let m_new = m[hi].max(blk_max[hi]);
+            r[hi] = (m[hi] - m_new).exp();
+            m[hi] = m_new;
+        }
+        // P^T and column sums.
+        for jj in 0..bc {
+            for hi in 0..h {
+                let p = (s_t[jj * h + hi] - m[hi]).exp();
+                s_t[jj * h + hi] = p;
+            }
+        }
+        for hi in 0..h {
+            let mut col = 0.0f32;
+            for jj in 0..bc {
+                col += s_t[jj * h + hi];
+            }
+            l[hi] = l[hi] * r[hi] + col;
+        }
+        // O^T += V^T · P^T, split into the two V halves (lines 14/26):
+        // rescale each accumulator row by R, then add the block product.
+        for (lo, hi_end) in [(0usize, half), (half, dv)] {
+            for vd in lo..hi_end {
+                let arow = &mut acc_t[vd * h..(vd + 1) * h];
+                for (a, rr) in arow.iter_mut().zip(&r) {
+                    *a *= rr;
+                }
+                for jj in 0..bc {
+                    let v = cache[(j0 + jj) * d + vd];
+                    let prow = &s_t[jj * h..jj * h + h];
+                    for (a, &p) in arow.iter_mut().zip(prow) {
+                        *a += v * p;
+                    }
+                }
+            }
+        }
+        j0 += bc;
+    }
+
+    // Epilogue: normalize (line 29) and the single transpose (line 30).
+    let mut out = vec![0.0f32; h * dv];
+    for hi in 0..h {
+        let inv = 1.0 / l[hi].max(1e-38);
+        for vd in 0..dv {
+            out[hi * dv + vd] = acc_t[vd * h + hi] * inv;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::naive::{naive_f32, naive_f64};
+    use crate::attention::online::online_f32;
+    use crate::util::rng::Rng;
+
+    fn case(h: usize, d: usize, dv: usize, n: usize, seed: u64) -> (AttnShape, Vec<f32>, Vec<f32>) {
+        let shape = AttnShape { h, d, dv, n };
+        let mut rng = Rng::new(seed);
+        let q = rng.normal_vec(shape.q_len());
+        let cache = rng.normal_vec(shape.cache_len());
+        (shape, q, cache)
+    }
+
+    #[test]
+    fn matches_naive() {
+        let (shape, q, cache) = case(4, 32, 16, 150, 11);
+        let want = naive_f32(&shape, &q, &cache, 0.2);
+        for block in [1, 32, 64, 150, 512] {
+            let got = etap_f32(&shape, &q, &cache, 0.2, block);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "block {block}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_query_major_order() {
+        // The paper's §3.1 equivalence: same attention, different order.
+        let (shape, q, cache) = case(16, 64, 32, 256, 12);
+        let a = etap_f32(&shape, &q, &cache, 0.125, 64);
+        let b = online_f32(&shape, &q, &cache, 0.125, 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn paper_geometry_against_f64() {
+        let (shape, q, cache) = case(16, 576, 512, 512, 13);
+        let scale = 1.0 / (576.0f32).sqrt();
+        let got = etap_f32(&shape, &q, &cache, scale, 64);
+        let want = naive_f64(&shape, &q, &cache, scale as f64);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((*a as f64 - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn odd_dv_split_handled() {
+        // dv not divisible by 2 → halves (0, dv/2) and (dv/2, dv) still
+        // cover everything.
+        let (shape, q, cache) = case(2, 8, 5, 32, 14);
+        let got = etap_f32(&shape, &q, &cache, 0.3, 16);
+        let want = naive_f32(&shape, &q, &cache, 0.3);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! CPU attention numerics substrate.
+//!
+//! Exact implementations of the decode-attention pipelines in f64/f32 plus
+//! precision-emulated FP16 variants.  These serve three purposes:
+//!
+//! 1. ground truth for property tests (online softmax == naive softmax;
+//!    ETAP order == query-major order),
+//! 2. the Table 1 RMSE experiment (`precision`), and
+//! 3. a pure-Rust fallback attention used by the coordinator when PJRT
+//!    artifacts are not available (tests, simulation-only runs).
+//!
+//! Layout conventions: row-major flat slices.  One *request* is
+//! `q [h × d]`, `cache [n × d]` (latent: K = full row, V = first dv dims),
+//! output `[h × dv]`.
+
+pub mod etap;
+pub mod naive;
+pub mod online;
+pub mod precision;
+
+pub use etap::etap_f32;
+pub use naive::{naive_f32, naive_f64};
+pub use online::online_f32;
+
+/// Shape of one decode-attention request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AttnShape {
+    /// Heads.
+    pub h: usize,
+    /// Query/key (latent) dim.
+    pub d: usize,
+    /// Value dim (first `dv` latent dims).
+    pub dv: usize,
+    /// KV context length.
+    pub n: usize,
+}
+
+impl AttnShape {
+    /// DeepSeek-R1 per-GPU shard geometry (paper §4.1).
+    pub fn paper(n: usize) -> Self {
+        AttnShape {
+            h: 16,
+            d: 576,
+            dv: 512,
+            n,
+        }
+    }
+
+    pub fn q_len(&self) -> usize {
+        self.h * self.d
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.n * self.d
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.h * self.dv
+    }
+
+    pub fn validate(&self, q: &[f32], cache: &[f32]) {
+        assert_eq!(q.len(), self.q_len(), "q length");
+        assert_eq!(cache.len(), self.cache_len(), "cache length");
+        assert!(self.dv <= self.d, "dv must fit in the latent");
+        assert!(self.n > 0 && self.h > 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape() {
+        let s = AttnShape::paper(1024);
+        assert_eq!(s.q_len(), 16 * 576);
+        assert_eq!(s.out_len(), 16 * 512);
+        assert_eq!(s.cache_len(), 1024 * 576);
+    }
+}

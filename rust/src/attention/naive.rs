@@ -1,0 +1,168 @@
+//! Naive full-matrix attention references (f64 and f32).
+//!
+//! The f64 version is the oracle everything else is measured against —
+//! including the Table 1 RMSE experiment, matching the paper's §4.3
+//! methodology ("RMSE between the FP16 outputs … and a double-precision
+//! (FP64) reference implementation").
+
+use super::AttnShape;
+
+/// Full-precision f64 MLA decode attention for one request.
+pub fn naive_f64(shape: &AttnShape, q: &[f32], cache: &[f32], scale: f64) -> Vec<f64> {
+    shape.validate(q, cache);
+    let (h, d, dv, n) = (shape.h, shape.d, shape.dv, shape.n);
+    let mut out = vec![0.0f64; h * dv];
+    let mut scores = vec![0.0f64; n];
+    for hi in 0..h {
+        let qrow = &q[hi * d..(hi + 1) * d];
+        let mut m = f64::NEG_INFINITY;
+        for (j, s) in scores.iter_mut().enumerate() {
+            let krow = &cache[j * d..(j + 1) * d];
+            let mut acc = 0.0f64;
+            for k in 0..d {
+                acc += qrow[k] as f64 * krow[k] as f64;
+            }
+            *s = acc * scale;
+            m = m.max(*s);
+        }
+        let mut l = 0.0f64;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            l += *s;
+        }
+        let orow = &mut out[hi * dv..(hi + 1) * dv];
+        for (j, &p) in scores.iter().enumerate() {
+            let w = p / l;
+            let vrow = &cache[j * d..j * d + dv];
+            for (o, &v) in orow.iter_mut().zip(vrow) {
+                *o += w * v as f64;
+            }
+        }
+    }
+    out
+}
+
+/// Full-matrix f32 attention (same math, f32 arithmetic).
+pub fn naive_f32(shape: &AttnShape, q: &[f32], cache: &[f32], scale: f32) -> Vec<f32> {
+    shape.validate(q, cache);
+    let (h, d, dv, n) = (shape.h, shape.d, shape.dv, shape.n);
+    let mut out = vec![0.0f32; h * dv];
+    let mut scores = vec![0.0f32; n];
+    for hi in 0..h {
+        let qrow = &q[hi * d..(hi + 1) * d];
+        let mut m = f32::NEG_INFINITY;
+        for (j, s) in scores.iter_mut().enumerate() {
+            let krow = &cache[j * d..(j + 1) * d];
+            let mut acc = 0.0f32;
+            for k in 0..d {
+                acc += qrow[k] * krow[k];
+            }
+            *s = acc * scale;
+            m = m.max(*s);
+        }
+        let mut l = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            l += *s;
+        }
+        let orow = &mut out[hi * dv..(hi + 1) * dv];
+        for (j, &p) in scores.iter().enumerate() {
+            let w = p / l;
+            let vrow = &cache[j * d..j * d + dv];
+            for (o, &v) in orow.iter_mut().zip(vrow) {
+                *o += w * v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_position_is_identity() {
+        // n=1: softmax over one score is 1 → output == V row.
+        let shape = AttnShape {
+            h: 2,
+            d: 4,
+            dv: 3,
+            n: 1,
+        };
+        let mut rng = Rng::new(1);
+        let q = rng.normal_vec(shape.q_len());
+        let cache = rng.normal_vec(shape.cache_len());
+        let out = naive_f64(&shape, &q, &cache, 0.5);
+        for hi in 0..2 {
+            for k in 0..3 {
+                assert!((out[hi * 3 + k] - cache[k] as f64).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_scores_average_values() {
+        // q = 0 → all scores equal → output = mean of V rows.
+        let shape = AttnShape {
+            h: 1,
+            d: 4,
+            dv: 2,
+            n: 8,
+        };
+        let mut rng = Rng::new(2);
+        let q = vec![0.0f32; shape.q_len()];
+        let cache = rng.normal_vec(shape.cache_len());
+        let out = naive_f64(&shape, &q, &cache, 1.0);
+        for k in 0..2 {
+            let mean: f64 = (0..8).map(|j| cache[j * 4 + k] as f64).sum::<f64>() / 8.0;
+            assert!((out[k] - mean).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn f32_close_to_f64() {
+        let shape = AttnShape {
+            h: 4,
+            d: 32,
+            dv: 16,
+            n: 128,
+        };
+        let mut rng = Rng::new(3);
+        let q = rng.normal_vec(shape.q_len());
+        let cache = rng.normal_vec(shape.cache_len());
+        let o64 = naive_f64(&shape, &q, &cache, 0.17);
+        let o32 = naive_f32(&shape, &q, &cache, 0.17);
+        for (a, b) in o32.iter().zip(&o64) {
+            assert!((*a as f64 - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn output_in_value_convex_hull() {
+        // Attention output is a convex combination of V rows.
+        let shape = AttnShape {
+            h: 2,
+            d: 8,
+            dv: 4,
+            n: 16,
+        };
+        let mut rng = Rng::new(4);
+        let q = rng.normal_vec(shape.q_len());
+        let cache = rng.normal_vec(shape.cache_len());
+        let out = naive_f64(&shape, &q, &cache, 1.0);
+        for k in 0..4 {
+            let lo = (0..16)
+                .map(|j| cache[j * 8 + k] as f64)
+                .fold(f64::INFINITY, f64::min);
+            let hi = (0..16)
+                .map(|j| cache[j * 8 + k] as f64)
+                .fold(f64::NEG_INFINITY, f64::max);
+            for hh in 0..2 {
+                let v = out[hh * 4 + k];
+                assert!(v >= lo - 1e-12 && v <= hi + 1e-12);
+            }
+        }
+    }
+}

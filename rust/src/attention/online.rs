@@ -1,0 +1,124 @@
+//! Query-major online-softmax attention (the FlashMLA baseline order) in
+//! f32 — blockwise over KV with running (m, l) per head, matching the L1
+//! Pallas kernel `mla_decode.py` operation for operation.
+
+use super::AttnShape;
+
+/// Blockwise online-softmax decode attention for one request.
+pub fn online_f32(
+    shape: &AttnShape,
+    q: &[f32],
+    cache: &[f32],
+    scale: f32,
+    block_kv: usize,
+) -> Vec<f32> {
+    shape.validate(q, cache);
+    assert!(block_kv >= 1);
+    let (h, d, dv, n) = (shape.h, shape.d, shape.dv, shape.n);
+
+    let mut acc = vec![0.0f32; h * dv];
+    let mut m = vec![f32::NEG_INFINITY; h];
+    let mut l = vec![0.0f32; h];
+    let mut s_blk = vec![0.0f32; block_kv];
+
+    let mut j0 = 0;
+    while j0 < n {
+        let bc = block_kv.min(n - j0);
+        for hi in 0..h {
+            let qrow = &q[hi * d..(hi + 1) * d];
+            // S block for this head.
+            let mut blk_max = f32::NEG_INFINITY;
+            for (jj, s) in s_blk[..bc].iter_mut().enumerate() {
+                let krow = &cache[(j0 + jj) * d..(j0 + jj) * d + d];
+                let mut dot = 0.0f32;
+                for k in 0..d {
+                    dot += qrow[k] * krow[k];
+                }
+                *s = dot * scale;
+                blk_max = blk_max.max(*s);
+            }
+            // Online rescale.
+            let m_new = m[hi].max(blk_max);
+            let alpha = (m[hi] - m_new).exp();
+            let orow = &mut acc[hi * dv..(hi + 1) * dv];
+            if alpha != 1.0 {
+                for o in orow.iter_mut() {
+                    *o *= alpha;
+                }
+            }
+            let mut block_l = 0.0f32;
+            for (jj, &s) in s_blk[..bc].iter().enumerate() {
+                let p = (s - m_new).exp();
+                block_l += p;
+                let vrow = &cache[(j0 + jj) * d..(j0 + jj) * d + dv];
+                for (o, &v) in orow.iter_mut().zip(vrow) {
+                    *o += p * v;
+                }
+            }
+            l[hi] = l[hi] * alpha + block_l;
+            m[hi] = m_new;
+        }
+        j0 += bc;
+    }
+
+    for hi in 0..h {
+        let inv = 1.0 / l[hi].max(1e-38);
+        for o in &mut acc[hi * dv..(hi + 1) * dv] {
+            *o *= inv;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::naive::naive_f32;
+    use crate::util::rng::Rng;
+
+    fn case(h: usize, d: usize, dv: usize, n: usize, seed: u64) -> (AttnShape, Vec<f32>, Vec<f32>) {
+        let shape = AttnShape { h, d, dv, n };
+        let mut rng = Rng::new(seed);
+        let q = rng.normal_vec(shape.q_len());
+        let cache = rng.normal_vec(shape.cache_len());
+        (shape, q, cache)
+    }
+
+    #[test]
+    fn matches_naive_various_blocks() {
+        let (shape, q, cache) = case(4, 32, 16, 200, 7);
+        let want = naive_f32(&shape, &q, &cache, 0.2);
+        for block in [1, 3, 64, 200, 256] {
+            let got = online_f32(&shape, &q, &cache, 0.2, block);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "block {block}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_block_equals_naive_exactly_shaped() {
+        let (shape, q, cache) = case(2, 16, 8, 64, 8);
+        let a = online_f32(&shape, &q, &cache, 0.3, 64);
+        let b = naive_f32(&shape, &q, &cache, 0.3);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn extreme_scores_stay_finite() {
+        // Large-magnitude q would overflow a non-online softmax in f32.
+        let shape = AttnShape {
+            h: 1,
+            d: 8,
+            dv: 4,
+            n: 96,
+        };
+        let q = vec![40.0f32; shape.q_len()];
+        let mut rng = Rng::new(9);
+        let cache = rng.normal_vec(shape.cache_len());
+        let out = online_f32(&shape, &q, &cache, 1.0, 32);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+}

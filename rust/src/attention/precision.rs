@@ -1,0 +1,284 @@
+//! FP16 precision emulation — the Table 1 experiment (§4.3).
+//!
+//! The paper reports RMSE of each kernel's FP16 output against an FP64
+//! reference: FlashAttention-3 1.9e-4, FlashMLA-ETAP 1.25e-5 (15.2× lower).
+//!
+//! Mechanism reproduced here (DESIGN.md §2 substitution table): the error
+//! gap is an *accumulation-precision and rescale-chain* effect.
+//!
+//! * `fa3_fp16` — models a kernel that keeps the growing output block in
+//!   FP16 registers: every per-block rescale (`O *= α`) and every MAC of
+//!   `P̃·V` rounds through FP16.  Over `T_c` blocks the rounding errors of
+//!   the rescale chain compound.
+//! * `etap_fp16` — models Algorithm 1: the `O^T` accumulator stays in FP32
+//!   on-chip for the whole context (split halves, lines 14/26); only the
+//!   epilogue (line 30) rounds to FP16, once.
+//!
+//! In both models the *inputs* (q, cache) and the S/P̃ operands are FP16 —
+//! that part is identical, as both kernels feed FP16 tiles to the MMA unit.
+
+use crate::util::half::{mac_f16_acc, round_f16};
+use crate::util::rng::Rng;
+use crate::util::stats::rmse_f32_vs_f64;
+
+use super::naive::naive_f64;
+use super::AttnShape;
+
+/// Quantize a slice to FP16 precision (round-to-nearest-even).
+pub fn quantize_f16(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| round_f16(x)).collect()
+}
+
+/// FA-3-style FP16 pipeline: online softmax with the output accumulator,
+/// rescale chain, and MACs all rounding through FP16.
+pub fn fa3_fp16(
+    shape: &AttnShape,
+    q: &[f32],
+    cache: &[f32],
+    scale: f32,
+    block_kv: usize,
+) -> Vec<f32> {
+    shape.validate(q, cache);
+    let (h, d, dv, n) = (shape.h, shape.d, shape.dv, shape.n);
+    let mut acc = vec![0.0f32; h * dv]; // values always f16-rounded
+    let mut m = vec![f32::NEG_INFINITY; h];
+    let mut l = vec![0.0f32; h]; // softmax stats stay f32 (both kernels do)
+    let mut s_blk = vec![0.0f32; block_kv];
+
+    let mut j0 = 0;
+    while j0 < n {
+        let bc = block_kv.min(n - j0);
+        for hi in 0..h {
+            let qrow = &q[hi * d..(hi + 1) * d];
+            let mut blk_max = f32::NEG_INFINITY;
+            for (jj, s) in s_blk[..bc].iter_mut().enumerate() {
+                let krow = &cache[(j0 + jj) * d..(j0 + jj) * d + d];
+                // QK^T accumulates in f32 (tensor cores do f32 accumulate
+                // for S in both kernels).
+                let mut dot = 0.0f32;
+                for k in 0..d {
+                    dot += qrow[k] * krow[k];
+                }
+                *s = dot * scale;
+                blk_max = blk_max.max(*s);
+            }
+            let m_new = m[hi].max(blk_max);
+            let alpha = round_f16((m[hi] - m_new).exp());
+            let orow = &mut acc[hi * dv..(hi + 1) * dv];
+            if alpha != 1.0 {
+                for o in orow.iter_mut() {
+                    *o = round_f16(*o * alpha); // FP16 rescale chain
+                }
+            }
+            let mut block_l = 0.0f32;
+            for (jj, &s) in s_blk[..bc].iter().enumerate() {
+                let p = round_f16((s - m_new).exp()); // P̃ as FP16 operand
+                block_l += p;
+                let vrow = &cache[(j0 + jj) * d..(j0 + jj) * d + dv];
+                for (o, &v) in orow.iter_mut().zip(vrow) {
+                    *o = mac_f16_acc(p, v, *o); // FP16 accumulate
+                }
+            }
+            l[hi] = l[hi] * alpha + block_l;
+            m[hi] = m_new;
+        }
+        j0 += bc;
+    }
+    for hi in 0..h {
+        let inv = 1.0 / l[hi].max(1e-38);
+        for o in &mut acc[hi * dv..(hi + 1) * dv] {
+            *o = round_f16(*o * inv);
+        }
+    }
+    acc
+}
+
+/// ETAP FP16 pipeline: FP16 operands (P̃, V), FP32 `O^T` accumulator and
+/// rescale, single FP16 rounding in the epilogue (Algorithm 1).
+pub fn etap_fp16(
+    shape: &AttnShape,
+    q: &[f32],
+    cache: &[f32],
+    scale: f32,
+    block_kv: usize,
+) -> Vec<f32> {
+    shape.validate(q, cache);
+    let (h, d, dv, n) = (shape.h, shape.d, shape.dv, shape.n);
+    let half = dv / 2;
+    let mut acc_t = vec![0.0f32; dv * h]; // FP32 on-chip accumulator
+    let mut m = vec![f32::NEG_INFINITY; h];
+    let mut l = vec![0.0f32; h];
+    let mut p_t = vec![0.0f32; block_kv * h];
+    let mut r = vec![0.0f32; h];
+
+    let mut j0 = 0;
+    while j0 < n {
+        let bc = block_kv.min(n - j0);
+        let mut blk_max = vec![f32::NEG_INFINITY; h];
+        for jj in 0..bc {
+            let krow = &cache[(j0 + jj) * d..(j0 + jj) * d + d];
+            for hi in 0..h {
+                let qrow = &q[hi * d..(hi + 1) * d];
+                let mut dot = 0.0f32;
+                for k in 0..d {
+                    dot += krow[k] * qrow[k];
+                }
+                let s = dot * scale;
+                p_t[jj * h + hi] = s;
+                blk_max[hi] = blk_max[hi].max(s);
+            }
+        }
+        for hi in 0..h {
+            let m_new = m[hi].max(blk_max[hi]);
+            r[hi] = (m[hi] - m_new).exp(); // R_i in f32 (line 12)
+            m[hi] = m_new;
+        }
+        for jj in 0..bc {
+            for hi in 0..h {
+                // P̃^T is an FP16 MMA operand in ETAP too.
+                p_t[jj * h + hi] = round_f16((p_t[jj * h + hi] - m[hi]).exp());
+            }
+        }
+        for hi in 0..h {
+            let mut col = 0.0f32;
+            for jj in 0..bc {
+                col += p_t[jj * h + hi];
+            }
+            l[hi] = l[hi] * r[hi] + col;
+        }
+        for (lo, hi_end) in [(0usize, half), (half, dv)] {
+            for vd in lo..hi_end {
+                let arow = &mut acc_t[vd * h..(vd + 1) * h];
+                for (a, rr) in arow.iter_mut().zip(&r) {
+                    *a *= rr; // FP32 rescale — no rounding
+                }
+                for jj in 0..bc {
+                    let v = round_f16(cache[(j0 + jj) * d + vd]); // FP16 operand
+                    let prow = &p_t[jj * h..jj * h + h];
+                    for (a, &p) in arow.iter_mut().zip(prow) {
+                        *a += v * p; // FP32 accumulate
+                    }
+                }
+            }
+        }
+        j0 += bc;
+    }
+
+    let mut out = vec![0.0f32; h * dv];
+    for hi in 0..h {
+        let inv = 1.0 / l[hi].max(1e-38);
+        for vd in 0..dv {
+            // Single epilogue rounding (line 30).
+            out[hi * dv + vd] = round_f16(acc_t[vd * h + hi] * inv);
+        }
+    }
+    out
+}
+
+/// Result of one Table 1 measurement.
+#[derive(Clone, Debug)]
+pub struct RmseResult {
+    pub framework: &'static str,
+    pub rmse: f64,
+}
+
+/// Run the Table 1 experiment: FP16 inputs, FP64 reference, RMSE per
+/// framework, averaged over `reps` random workloads.
+pub fn table1_experiment(
+    shape: &AttnShape,
+    scale: f32,
+    block_kv: usize,
+    reps: usize,
+    seed: u64,
+) -> Vec<RmseResult> {
+    let mut rng = Rng::new(seed);
+    let mut se_fa3 = 0.0f64;
+    let mut se_etap = 0.0f64;
+    let mut count = 0usize;
+    for _ in 0..reps {
+        let q = quantize_f16(&rng.normal_vec(shape.q_len()));
+        let cache = quantize_f16(&rng.normal_vec(shape.cache_len()));
+        let reference = naive_f64(shape, &q, &cache, scale as f64);
+        let fa3 = fa3_fp16(shape, &q, &cache, scale, block_kv);
+        let etap = etap_fp16(shape, &q, &cache, scale, block_kv);
+        let r_fa3 = rmse_f32_vs_f64(&fa3, &reference);
+        let r_etap = rmse_f32_vs_f64(&etap, &reference);
+        se_fa3 += r_fa3 * r_fa3;
+        se_etap += r_etap * r_etap;
+        count += 1;
+    }
+    vec![
+        RmseResult {
+            framework: "FlashAttention-3",
+            rmse: (se_fa3 / count as f64).sqrt(),
+        },
+        RmseResult {
+            framework: "FlashMLA-ETAP",
+            rmse: (se_etap / count as f64).sqrt(),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_pipelines_approximate_reference() {
+        let shape = AttnShape {
+            h: 4,
+            d: 64,
+            dv: 32,
+            n: 256,
+        };
+        let mut rng = Rng::new(21);
+        let q = quantize_f16(&rng.normal_vec(shape.q_len()));
+        let cache = quantize_f16(&rng.normal_vec(shape.cache_len()));
+        let reference = naive_f64(&shape, &q, &cache, 0.125);
+        for out in [
+            fa3_fp16(&shape, &q, &cache, 0.125, 64),
+            etap_fp16(&shape, &q, &cache, 0.125, 64),
+        ] {
+            let r = rmse_f32_vs_f64(&out, &reference);
+            assert!(r < 1e-2, "rmse {r} too large — broken pipeline");
+            assert!(r > 0.0, "exact match is suspicious for fp16");
+        }
+    }
+
+    #[test]
+    fn etap_beats_fa3_rmse() {
+        // Table 1's shape: the FP32-accumulator pipeline is much more
+        // accurate than the FP16 rescale-chain pipeline.
+        let shape = AttnShape {
+            h: 8,
+            d: 64,
+            dv: 64,
+            n: 2048,
+        };
+        let res = table1_experiment(&shape, 0.125, 64, 2, 42);
+        let fa3 = res[0].rmse;
+        let etap = res[1].rmse;
+        assert!(
+            etap * 4.0 < fa3,
+            "expected ≥4× gap at n=2048: fa3 {fa3:e} etap {etap:e}"
+        );
+    }
+
+    #[test]
+    fn fa3_error_grows_with_context() {
+        // More blocks → longer rescale chain → more FP16 roundings.
+        let scale = 0.125;
+        let mk = |n| AttnShape {
+            h: 4,
+            d: 64,
+            dv: 32,
+            n,
+        };
+        let short = table1_experiment(&mk(256), scale, 64, 2, 7)[0].rmse;
+        let long = table1_experiment(&mk(4096), scale, 64, 2, 7)[0].rmse;
+        assert!(
+            long > short,
+            "fa3 rmse should grow with context: {short:e} → {long:e}"
+        );
+    }
+}

@@ -1,0 +1,146 @@
+//! Micro-benchmark runner: warmup, then timed iterations until both a
+//! minimum count and a minimum wall budget are met; reports robust stats.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{mean, median, percentile, stddev};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub p99_us: f64,
+    pub stddev_us: f64,
+    pub min_us: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<42} {:>10.2} µs/iter (median {:>9.2}, p99 {:>9.2}, σ {:>8.2}, n={})",
+            self.name, self.mean_us, self.median_us, self.p99_us, self.stddev_us, self.iters
+        )
+    }
+
+    /// Throughput helper: items per second given items per iteration.
+    pub fn per_second(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_us / 1e6)
+    }
+}
+
+/// Bench configuration.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    min_iters: usize,
+    max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Honor a quick mode for CI: FLASHMLA_BENCH_QUICK=1.
+        let quick = std::env::var("FLASHMLA_BENCH_QUICK").is_ok();
+        Bencher {
+            warmup: if quick {
+                Duration::from_millis(10)
+            } else {
+                Duration::from_millis(200)
+            },
+            budget: if quick {
+                Duration::from_millis(100)
+            } else {
+                Duration::from_secs(2)
+            },
+            min_iters: 5,
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Run one case.  `f` should perform exactly one unit of work; use the
+    /// return value to keep the optimizer honest.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Timed.
+        let mut samples_us: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed() < self.budget || samples_us.len() < self.min_iters)
+            && samples_us.len() < self.max_iters
+        {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples_us.push(s.elapsed().as_secs_f64() * 1e6);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples_us.len(),
+            mean_us: mean(&samples_us),
+            median_us: median(&samples_us),
+            p99_us: percentile(&samples_us, 99.0),
+            stddev_us: stddev(&samples_us),
+            min_us: samples_us.iter().cloned().fold(f64::INFINITY, f64::min),
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("FLASHMLA_BENCH_QUICK", "1");
+        let mut b = Bencher::new().with_budget(Duration::from_millis(20));
+        let r = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_us > 0.0);
+        assert!(r.median_us <= r.p99_us + 1e-9);
+        assert!(r.min_us <= r.mean_us + 1e-9);
+    }
+
+    #[test]
+    fn per_second_inverts_mean() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_us: 1000.0, // 1 ms
+            median_us: 0.0,
+            p99_us: 0.0,
+            stddev_us: 0.0,
+            min_us: 0.0,
+        };
+        assert!((r.per_second(10.0) - 10_000.0).abs() < 1e-9);
+    }
+}

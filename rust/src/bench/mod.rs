@@ -1,0 +1,9 @@
+//! Bench harness (criterion substitute): warmup, adaptive iteration count,
+//! robust summary stats, and table output for the paper-reproduction
+//! benches under `rust/benches/`.
+
+pub mod harness;
+pub mod table;
+
+pub use harness::{BenchResult, Bencher};
+pub use table::Table;

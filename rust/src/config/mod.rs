@@ -1,0 +1,175 @@
+//! Config system: one typed root config loadable from TOML or JSON, with
+//! CLI overrides layered on top.  Used by `main.rs` and the examples.
+
+use std::path::Path;
+
+use crate::coordinator::{ClusterConfig, EngineConfig};
+use crate::hardware::GpuSpec;
+use crate::util::json::Json;
+use crate::util::{json, toml};
+
+/// Root configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Artifacts directory (manifest.json, *.hlo.txt, weights).
+    pub artifacts_dir: String,
+    pub engine: EngineConfig,
+    pub cluster: ClusterConfig,
+    /// GPU spec name for the simulator ("h20", "h100", …).
+    pub gpu: String,
+    /// Default RNG seed for workload generation.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: "artifacts".into(),
+            engine: EngineConfig::default(),
+            cluster: ClusterConfig::default(),
+            gpu: "h20".into(),
+            seed: 42,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a `.toml` or `.json` file.
+    pub fn from_file(path: &Path) -> anyhow::Result<Self> {
+        let tree = match path.extension().and_then(|e| e.to_str()) {
+            Some("toml") => toml::parse_file(path)?,
+            Some("json") => json::parse_file(path)?,
+            other => anyhow::bail!("unsupported config extension {other:?}"),
+        };
+        Self::from_tree(&tree)
+    }
+
+    /// Build from a parsed tree, filling gaps with defaults.
+    pub fn from_tree(t: &Json) -> anyhow::Result<Self> {
+        let mut c = Config::default();
+        if let Some(s) = t.get("artifacts_dir").as_str() {
+            c.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = t.get("gpu").as_str() {
+            c.gpu = s.to_string();
+            anyhow::ensure!(
+                GpuSpec::by_name(&c.gpu).is_some(),
+                "unknown gpu `{}`",
+                c.gpu
+            );
+        }
+        if let Some(n) = t.get("seed").as_usize() {
+            c.seed = n as u64;
+        }
+        let e = t.get("engine");
+        if let Some(s) = e.get("kernel").as_str() {
+            anyhow::ensure!(
+                s == "etap" || s == "flashmla",
+                "engine.kernel must be etap|flashmla, got `{s}`"
+            );
+            c.engine.kernel = s.to_string();
+        }
+        if let Some(n) = e.get("max_slots").as_usize() {
+            c.engine.max_slots = n;
+        }
+        if let Some(n) = e.get("kv_blocks").as_usize() {
+            c.engine.kv_blocks = n;
+        }
+        if let Some(n) = e.get("block_size").as_usize() {
+            anyhow::ensure!(n >= 1, "block_size must be ≥ 1");
+            c.engine.block_size = n;
+        }
+        if let Some(n) = e.get("eos_token").as_i64() {
+            c.engine.eos_token = Some(n as i32);
+        }
+        let cl = t.get("cluster");
+        if let Some(n) = cl.get("gpus").as_usize() {
+            c.cluster.gpus = n;
+        }
+        if let Some(n) = cl.get("total_heads").as_usize() {
+            c.cluster.total_heads = n;
+        }
+        if let Some(n) = cl.get("n_layers").as_usize() {
+            c.cluster.n_layers = n;
+        }
+        if let Some(s) = cl.get("kernel").as_str() {
+            c.cluster.kernel = s.to_string();
+        }
+        if let Some(f) = cl.get("other_us_per_req_layer").as_f64() {
+            c.cluster.other_us_per_req_layer = f;
+        }
+        anyhow::ensure!(
+            c.cluster.total_heads % c.cluster.gpus == 0,
+            "cluster.total_heads must divide evenly across gpus"
+        );
+        Ok(c)
+    }
+
+    pub fn gpu_spec(&self) -> GpuSpec {
+        GpuSpec::by_name(&self.gpu).expect("validated at load")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert_eq!(c.engine.kernel, "etap");
+        assert_eq!(c.cluster.gpus, 8);
+        assert_eq!(c.gpu_spec().name, "H20");
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let doc = r#"
+artifacts_dir = "art"
+gpu = "h100"
+seed = 7
+
+[engine]
+kernel = "flashmla"
+max_slots = 8
+kv_blocks = 512
+
+[cluster]
+gpus = 4
+total_heads = 128
+kernel = "fa3"
+"#;
+        let tree = crate::util::toml::parse(doc).unwrap();
+        let c = Config::from_tree(&tree).unwrap();
+        assert_eq!(c.artifacts_dir, "art");
+        assert_eq!(c.gpu, "h100");
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.engine.kernel, "flashmla");
+        assert_eq!(c.engine.max_slots, 8);
+        assert_eq!(c.engine.kv_blocks, 512);
+        assert_eq!(c.cluster.gpus, 4);
+        assert_eq!(c.cluster.kernel, "fa3");
+        // Untouched defaults survive.
+        assert_eq!(c.engine.block_size, 16);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let bad_kernel = crate::util::toml::parse("[engine]\nkernel = \"x\"").unwrap();
+        assert!(Config::from_tree(&bad_kernel).is_err());
+        let bad_gpu = crate::util::toml::parse("gpu = \"b200\"").unwrap();
+        assert!(Config::from_tree(&bad_gpu).is_err());
+        let bad_split =
+            crate::util::toml::parse("[cluster]\ngpus = 7\ntotal_heads = 128").unwrap();
+        assert!(Config::from_tree(&bad_split).is_err());
+    }
+
+    #[test]
+    fn json_config_accepted() {
+        let tree =
+            crate::util::json::parse(r#"{"engine": {"max_slots": 2}, "seed": 9}"#).unwrap();
+        let c = Config::from_tree(&tree).unwrap();
+        assert_eq!(c.engine.max_slots, 2);
+        assert_eq!(c.seed, 9);
+    }
+}

@@ -1,0 +1,303 @@
+//! Continuous batcher: slot management and bucket selection.
+//!
+//! The engine runs fixed-shape AOT artifacts, so "batch size" is a bucket
+//! (1, 2, 4, 8, …) rather than arbitrary.  The batcher:
+//!
+//! * keeps a FIFO admission queue;
+//! * fills free slots from the queue every step (continuous batching —
+//!   requests join/leave without draining the batch, the Orca insight);
+//! * picks the smallest (batch-bucket, kv-bucket) artifact that covers the
+//!   active set, so short-context batches run on cheap artifacts;
+//! * never reorders tokens within a request (FIFO per request is the
+//!   correctness property tested below).
+
+use std::collections::VecDeque;
+
+use super::request::{Request, RequestId, RequestState};
+
+/// Batcher policy knobs.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Hard cap on concurrent slots (≤ largest batch bucket).
+    pub max_slots: usize,
+    /// Available batch-size buckets (sorted ascending), from the manifest.
+    pub batch_buckets: Vec<usize>,
+    /// Available KV-length buckets (sorted ascending).
+    pub kv_buckets: Vec<usize>,
+}
+
+impl BatcherConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.max_slots >= 1, "need at least one slot");
+        anyhow::ensure!(!self.batch_buckets.is_empty(), "no batch buckets");
+        anyhow::ensure!(!self.kv_buckets.is_empty(), "no kv buckets");
+        anyhow::ensure!(
+            self.batch_buckets.windows(2).all(|w| w[0] < w[1]),
+            "batch buckets must be sorted ascending"
+        );
+        anyhow::ensure!(
+            self.kv_buckets.windows(2).all(|w| w[0] < w[1]),
+            "kv buckets must be sorted ascending"
+        );
+        anyhow::ensure!(
+            self.max_slots <= *self.batch_buckets.last().unwrap(),
+            "max_slots exceeds the largest batch bucket"
+        );
+        Ok(())
+    }
+}
+
+/// The continuous batcher.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+    /// Active requests, one per occupied slot (order = slot order).
+    active: Vec<Request>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        Ok(Batcher {
+            cfg,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+        })
+    }
+
+    /// Enqueue an admitted request.
+    pub fn submit(&mut self, r: Request) {
+        self.queue.push_back(r);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active(&self) -> &[Request] {
+        &self.active
+    }
+
+    pub fn active_mut(&mut self) -> &mut [Request] {
+        &mut self.active
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.active.is_empty()
+    }
+
+    /// Remove finished requests, returning them.
+    pub fn reap(&mut self) -> Vec<Request> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].is_finished() {
+                done.push(self.active.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    /// Fill free slots from the queue (FIFO).  Returns the number admitted.
+    /// `kv_capacity_ok` lets the engine veto admissions that would exceed
+    /// the paged-cache budget.
+    pub fn admit(&mut self, mut kv_capacity_ok: impl FnMut(&Request) -> bool) -> usize {
+        let mut admitted = 0;
+        while self.active.len() < self.cfg.max_slots {
+            match self.queue.front() {
+                Some(front) if kv_capacity_ok(front) => {
+                    let mut r = self.queue.pop_front().unwrap();
+                    r.state = RequestState::Prefilling;
+                    self.active.push(r);
+                    admitted += 1;
+                }
+                _ => break,
+            }
+        }
+        admitted
+    }
+
+    /// Smallest batch bucket covering the active set.
+    pub fn batch_bucket(&self) -> usize {
+        let need = self.active.len().max(1);
+        *self
+            .cfg
+            .batch_buckets
+            .iter()
+            .find(|&&b| b >= need)
+            .unwrap_or(self.cfg.batch_buckets.last().unwrap())
+    }
+
+    /// Smallest KV bucket covering every active context *after* this step
+    /// (each active request writes one more position).
+    pub fn kv_bucket(&self) -> usize {
+        let need = self
+            .active
+            .iter()
+            .map(|r| r.context_len() + 1)
+            .max()
+            .unwrap_or(1);
+        *self
+            .cfg
+            .kv_buckets
+            .iter()
+            .find(|&&n| n >= need)
+            .unwrap_or(self.cfg.kv_buckets.last().unwrap())
+    }
+
+    /// Abort everything still queued (drain shutdown).
+    pub fn abort_queued(&mut self) -> Vec<RequestId> {
+        self.queue.drain(..).map(|r| r.id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::{forall, Config};
+
+    fn cfg() -> BatcherConfig {
+        BatcherConfig {
+            max_slots: 4,
+            batch_buckets: vec![1, 2, 4, 8],
+            kv_buckets: vec![128, 256],
+        }
+    }
+
+    fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
+        Request::new(id, (0..prompt_len as i32).collect(), max_new)
+    }
+
+    #[test]
+    fn admits_fifo_up_to_slots() {
+        let mut b = Batcher::new(cfg()).unwrap();
+        for i in 0..6 {
+            b.submit(req(i, 3, 2));
+        }
+        assert_eq!(b.admit(|_| true), 4);
+        assert_eq!(b.active().len(), 4);
+        assert_eq!(b.queued(), 2);
+        let ids: Vec<_> = b.active().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "FIFO admission order");
+    }
+
+    #[test]
+    fn capacity_veto_blocks_head_of_line() {
+        let mut b = Batcher::new(cfg()).unwrap();
+        b.submit(req(1, 3, 2));
+        b.submit(req(2, 3, 2));
+        assert_eq!(b.admit(|r| r.id != 1), 0, "HOL blocking is intentional");
+        assert_eq!(b.queued(), 2);
+    }
+
+    #[test]
+    fn reap_frees_slots_for_admission() {
+        let mut b = Batcher::new(cfg()).unwrap();
+        for i in 0..5 {
+            b.submit(req(i, 2, 1));
+        }
+        b.admit(|_| true);
+        b.active_mut()[1].finish(super::super::request::FinishReason::Aborted);
+        let done = b.reap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(b.admit(|_| true), 1);
+        assert_eq!(b.active().len(), 4);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let mut b = Batcher::new(cfg()).unwrap();
+        assert_eq!(b.batch_bucket(), 1); // empty → smallest
+        for i in 0..3 {
+            b.submit(req(i, 100, 50));
+        }
+        b.admit(|_| true);
+        assert_eq!(b.batch_bucket(), 4); // 3 active → bucket 4
+        assert_eq!(b.kv_bucket(), 128); // contexts start at 0
+        // Simulate long contexts.
+        for r in b.active_mut() {
+            r.prefill_pos = 90;
+            r.state = RequestState::Prefilling;
+        }
+        assert_eq!(b.kv_bucket(), 128); // 91 ≤ 128
+        b.active_mut()[0].prefill_pos = 100;
+        b.active_mut()[0].generated = (0..40).collect();
+        assert_eq!(b.kv_bucket(), 256); // 141 > 128
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        assert!(Batcher::new(BatcherConfig {
+            max_slots: 0,
+            batch_buckets: vec![1],
+            kv_buckets: vec![128],
+        })
+        .is_err());
+        assert!(Batcher::new(BatcherConfig {
+            max_slots: 9,
+            batch_buckets: vec![1, 8],
+            kv_buckets: vec![128],
+        })
+        .is_err());
+        assert!(Batcher::new(BatcherConfig {
+            max_slots: 1,
+            batch_buckets: vec![2, 1],
+            kv_buckets: vec![128],
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn property_slots_never_exceed_max_and_fifo_holds() {
+        forall(Config::default().cases(150), |g| {
+            let max_slots = g.usize(1..8);
+            let mut b = Batcher::new(BatcherConfig {
+                max_slots,
+                batch_buckets: vec![1, 2, 4, 8],
+                kv_buckets: vec![64, 128],
+            })
+            .unwrap();
+            let mut next_id = 0u64;
+            let mut admitted_order: Vec<u64> = Vec::new();
+            for _ in 0..g.usize(1..40) {
+                match g.usize(0..3) {
+                    0 => {
+                        b.submit(req(next_id, 2, 1));
+                        next_id += 1;
+                    }
+                    1 => {
+                        let before: Vec<u64> =
+                            b.active().iter().map(|r| r.id).collect();
+                        b.admit(|_| true);
+                        for r in b.active().iter().skip(before.len()) {
+                            admitted_order.push(r.id);
+                        }
+                    }
+                    _ => {
+                        if !b.active().is_empty() {
+                            let idx = g.usize(0..b.active().len());
+                            b.active_mut()[idx]
+                                .finish(super::super::request::FinishReason::Aborted);
+                            b.reap();
+                        }
+                    }
+                }
+                prop_assert!(
+                    b.active().len() <= max_slots,
+                    "{} slots used of {max_slots}",
+                    b.active().len()
+                );
+            }
+            // FIFO: admitted ids are strictly increasing.
+            prop_assert!(
+                admitted_order.windows(2).all(|w| w[0] < w[1]),
+                "admission order violated FIFO: {admitted_order:?}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,392 @@
+//! The decode engine: continuous batching over fixed-shape PJRT artifacts.
+//!
+//! Hot-path design (see also EXPERIMENTS.md §Perf):
+//!
+//! * While batch composition and buckets are stable, the engine feeds the
+//!   decode artifact its own returned cache literal — zero bookkeeping per
+//!   step, the artifact writes each request's new latent in place.
+//! * On *recomposition* (request finished / admitted / bucket growth) the
+//!   engine syncs the survivors' latents from the live cache literal into
+//!   the paged latent store, then rebuilds the dense cache for the new
+//!   (batch-bucket, kv-bucket) shape by gathering from the store.
+//! * Admission control consults the paged store's block budget, so a
+//!   request is only admitted when its full context provably fits.
+//!
+//! The paged store holds one "super-latent" per token — the concatenation
+//! of all layers' latent vectors — so request state survives slot moves
+//! and bucket changes without any model re-execution (prefix re-use).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::kvcache::{CacheConfig, PagedLatentCache, SeqId};
+use crate::log_info;
+use crate::runtime::{DecodeRunner, Runtime};
+use crate::util::stats::Welford;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::ServingMetrics;
+use super::request::{Request, RequestId, RequestState};
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Attention computation mode: "etap" (default) or "flashmla".
+    pub kernel: String,
+    /// Concurrent batch slots (≤ largest decode batch bucket).
+    pub max_slots: usize,
+    /// Paged-store capacity in blocks.
+    pub kv_blocks: usize,
+    /// Tokens per paged block.
+    pub block_size: usize,
+    /// EOS token id (None = length-only stopping).
+    pub eos_token: Option<i32>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            kernel: "etap".into(),
+            max_slots: 4,
+            kv_blocks: 256,
+            block_size: 16,
+            eos_token: None,
+        }
+    }
+}
+
+/// Final report of a serving run.
+pub struct EngineReport {
+    pub outputs: HashMap<RequestId, Vec<i32>>,
+    pub metrics: ServingMetrics,
+    pub recompositions: u64,
+    pub steps: u64,
+}
+
+struct LiveBatch {
+    batch_bucket: usize,
+    kv_bucket: usize,
+    /// RequestId per slot (None = padded slot).
+    slots: Vec<Option<RequestId>>,
+    cache: xla::Literal,
+}
+
+/// The serving engine.
+pub struct Engine {
+    rt: Runtime,
+    cfg: EngineConfig,
+    batcher: Batcher,
+    store: PagedLatentCache,
+    seq_of: HashMap<RequestId, SeqId>,
+    /// Tokens already synced into the paged store, per request.
+    synced: HashMap<RequestId, usize>,
+    runners: HashMap<(usize, usize), DecodeRunner>,
+    live: Option<LiveBatch>,
+    metrics: ServingMetrics,
+    outputs: HashMap<RequestId, Vec<i32>>,
+    next_id: RequestId,
+    recompositions: u64,
+    n_layers: usize,
+    latent_dim: usize,
+    pub sync_cost: Welford,
+}
+
+impl Engine {
+    /// Build an engine over an artifacts directory.
+    pub fn new(artifacts_dir: &Path, cfg: EngineConfig) -> anyhow::Result<Self> {
+        let rt = Runtime::cpu(artifacts_dir)?;
+        let model = rt
+            .manifest()
+            .model
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("artifacts have no decode model"))?;
+        let buckets = rt.manifest().buckets("decode_step", &cfg.kernel);
+        anyhow::ensure!(
+            !buckets.is_empty(),
+            "no decode artifacts for kernel `{}`",
+            cfg.kernel
+        );
+        let mut batch_buckets: Vec<usize> = buckets.iter().map(|&(b, _)| b).collect();
+        batch_buckets.sort();
+        batch_buckets.dedup();
+        let mut kv_buckets: Vec<usize> = buckets.iter().map(|&(_, n)| n).collect();
+        kv_buckets.sort();
+        kv_buckets.dedup();
+
+        let batcher = Batcher::new(BatcherConfig {
+            max_slots: cfg.max_slots.min(*batch_buckets.last().unwrap()),
+            batch_buckets,
+            kv_buckets,
+        })?;
+        let store = PagedLatentCache::new(CacheConfig {
+            block_size: cfg.block_size,
+            latent_dim: model.n_layers * model.latent_dim,
+            num_blocks: cfg.kv_blocks,
+        });
+        Ok(Engine {
+            rt,
+            batcher,
+            store,
+            seq_of: HashMap::new(),
+            synced: HashMap::new(),
+            runners: HashMap::new(),
+            live: None,
+            metrics: ServingMetrics::new(),
+            outputs: HashMap::new(),
+            next_id: 1,
+            recompositions: 0,
+            n_layers: model.n_layers,
+            latent_dim: model.latent_dim,
+            sync_cost: Welford::new(),
+            cfg,
+        })
+    }
+
+    /// Largest admissible context (biggest kv bucket, minus the write slot).
+    pub fn max_context(&self) -> usize {
+        self.rt
+            .manifest()
+            .buckets("decode_step", &self.cfg.kernel)
+            .iter()
+            .map(|&(_, n)| n)
+            .max()
+            .unwrap_or(0)
+            - 1
+    }
+
+    /// Submit a request; returns its id.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut r = Request::new(id, prompt, max_new_tokens);
+        if let Some(eos) = self.cfg.eos_token {
+            r = r.with_eos(eos);
+        }
+        self.batcher.submit(r);
+        id
+    }
+
+    /// Run until all submitted work completes; returns the report.
+    pub fn run_to_completion(mut self) -> anyhow::Result<EngineReport> {
+        while self.batcher.has_work() {
+            self.step()?;
+        }
+        let steps = self.metrics.steps;
+        Ok(EngineReport {
+            outputs: self.outputs,
+            metrics: self.metrics,
+            recompositions: self.recompositions,
+            steps,
+        })
+    }
+
+    pub fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+
+    /// One engine step: reap, admit, (maybe) recompose, execute, advance.
+    pub fn step(&mut self) -> anyhow::Result<bool> {
+        let t0 = Instant::now();
+
+        // 1. Reap finished requests.
+        let finished = self.batcher.reap();
+        let mut composition_changed = !finished.is_empty();
+        for r in finished {
+            self.metrics.on_finish(&r);
+            if let Some(seq) = self.seq_of.remove(&r.id) {
+                self.store.free_seq(seq);
+            }
+            self.synced.remove(&r.id);
+            self.outputs.insert(r.id, r.generated.clone());
+        }
+
+        // 2. Admit from the queue under the block budget.
+        let store = &self.store;
+        let block_size = self.cfg.block_size;
+        let admitted = self.batcher.admit(|r| {
+            let blocks_needed = r.max_context().div_ceil(block_size);
+            blocks_needed <= store.free_blocks()
+        });
+        if admitted > 0 {
+            composition_changed = true;
+        }
+
+        if self.batcher.active().is_empty() {
+            return Ok(false); // idle (queue blocked on capacity or empty)
+        }
+
+        // 3. Determine buckets; recompose if needed.
+        let batch_bucket = self.batcher.batch_bucket();
+        let kv_bucket = self.batcher.kv_bucket();
+        let needs_rebuild = composition_changed
+            || match &self.live {
+                None => true,
+                Some(l) => l.batch_bucket != batch_bucket || l.kv_bucket != kv_bucket,
+            };
+        if needs_rebuild {
+            self.recompose(batch_bucket, kv_bucket)?;
+        }
+
+        // 4. Build step inputs.
+        let live = self.live.as_ref().unwrap();
+        let b = live.batch_bucket;
+        let mut tokens = vec![0i32; b];
+        let mut lengths = vec![0i32; b];
+        let mut by_id: HashMap<RequestId, usize> = HashMap::new();
+        for (slot, rid) in live.slots.iter().enumerate() {
+            if let Some(rid) = rid {
+                by_id.insert(*rid, slot);
+            }
+        }
+        for r in self.batcher.active() {
+            let slot = by_id[&r.id];
+            tokens[slot] = r.next_input_token().expect("active request has input");
+            lengths[slot] = r.context_len() as i32;
+        }
+
+        // 5. Execute.
+        let runner = self
+            .runners
+            .get(&(b, kv_bucket))
+            .expect("runner loaded at recompose");
+        let (logits, new_cache) = runner.step(&tokens, &live.cache, &lengths)?;
+        let vocab = runner.vocab();
+
+        // 6. Advance request state machines.
+        let mut new_tokens = 0usize;
+        let mut prefill_tokens = 0usize;
+        for r in self.batcher.active_mut() {
+            let slot = by_id[&r.id];
+            let sampled = DecodeRunner::argmax_row(&logits, vocab, slot);
+            let was_prefill = r.state == RequestState::Prefilling;
+            r.advance(sampled);
+            if was_prefill {
+                prefill_tokens += 1;
+                if r.state != RequestState::Prefilling {
+                    // transition emitted the first generated token
+                    new_tokens += 1;
+                }
+            } else {
+                new_tokens += 1;
+            }
+        }
+        self.live.as_mut().unwrap().cache = new_cache;
+
+        let active = self.batcher.active().len();
+        self.metrics.on_step(
+            t0.elapsed(),
+            active,
+            self.cfg.max_slots,
+            new_tokens,
+            prefill_tokens,
+        );
+        Ok(true)
+    }
+
+    /// Sync survivors into the paged store, then rebuild the dense cache
+    /// for the new bucket shape.
+    fn recompose(&mut self, batch_bucket: usize, kv_bucket: usize) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        self.recompositions += 1;
+
+        // (a) Sync: pull the live literal once and append unsynced tokens.
+        if let Some(live) = self.live.take() {
+            let host: Vec<f32> = live
+                .cache
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("cache to_vec: {e:?}"))?;
+            let (l, n, ld) = (self.n_layers, live.kv_bucket, self.latent_dim);
+            let b = live.batch_bucket;
+            let mut active_len: HashMap<RequestId, usize> = HashMap::new();
+            for r in self.batcher.active() {
+                active_len.insert(r.id, r.context_len());
+            }
+            for (slot, rid) in live.slots.iter().enumerate() {
+                let Some(rid) = rid else { continue };
+                let Some(&ctx) = active_len.get(rid) else { continue };
+                let seq = self.seq_of[rid];
+                let synced = self.synced.get(rid).copied().unwrap_or(0);
+                let mut latent = vec![0.0f32; l * ld];
+                for pos in synced..ctx {
+                    for layer in 0..l {
+                        let off = ((layer * b + slot) * n + pos) * ld;
+                        latent[layer * ld..(layer + 1) * ld]
+                            .copy_from_slice(&host[off..off + ld]);
+                    }
+                    self.store
+                        .append(seq, &latent)
+                        .map_err(|e| anyhow::anyhow!("store append: {e}"))?;
+                }
+                self.synced.insert(*rid, ctx);
+            }
+        }
+
+        // (b) Assign slots (stable order = batcher order) and create
+        // sequences for newly admitted requests.
+        let mut slots: Vec<Option<RequestId>> = vec![None; batch_bucket];
+        for (i, r) in self.batcher.active().iter().enumerate() {
+            slots[i] = Some(r.id);
+        }
+        let ids: Vec<RequestId> = self.batcher.active().iter().map(|r| r.id).collect();
+        for rid in &ids {
+            if !self.seq_of.contains_key(rid) {
+                let seq = self.store.new_seq();
+                self.seq_of.insert(*rid, seq);
+                self.synced.insert(*rid, 0);
+            }
+        }
+
+        // (c) Load (cached) the runner for this bucket pair.
+        if !self.runners.contains_key(&(batch_bucket, kv_bucket)) {
+            let runner = DecodeRunner::best(&self.rt, &self.cfg.kernel, batch_bucket, kv_bucket)?;
+            log_info!(
+                "engine",
+                "loaded decode runner {} for bucket (b{batch_bucket}, n{kv_bucket})",
+                runner.name()
+            );
+            self.runners.insert((batch_bucket, kv_bucket), runner);
+        }
+
+        // (d) Rebuild the dense cache from the paged store.
+        let (l, ld) = (self.n_layers, self.latent_dim);
+        let mut dense = vec![0.0f32; l * batch_bucket * kv_bucket * ld];
+        let mut scratch = vec![0.0f32; kv_bucket * l * ld];
+        for (slot, rid) in slots.iter().enumerate() {
+            let Some(rid) = rid else { continue };
+            let seq = self.seq_of[rid];
+            let len = self.store.gather_padded(seq, kv_bucket, &mut scratch);
+            for pos in 0..len {
+                for layer in 0..l {
+                    let src = pos * (l * ld) + layer * ld;
+                    let dst = ((layer * batch_bucket + slot) * kv_bucket + pos) * ld;
+                    dense[dst..dst + ld].copy_from_slice(&scratch[src..src + ld]);
+                }
+            }
+        }
+        let dims = [
+            l as i64,
+            batch_bucket as i64,
+            kv_bucket as i64,
+            ld as i64,
+        ];
+        let cache = crate::runtime::client::literal_from_f32(&dense, &dims)?;
+        self.live = Some(LiveBatch {
+            batch_bucket,
+            kv_bucket,
+            slots,
+            cache,
+        });
+        self.sync_cost.push(t0.elapsed().as_secs_f64() * 1e3);
+        Ok(())
+    }
+
+    /// Paged-store utilization (for dashboards/tests).
+    pub fn kv_usage(&self) -> f64 {
+        self.store.usage()
+    }
+
+    pub fn recompositions(&self) -> u64 {
+        self.recompositions
+    }
+}

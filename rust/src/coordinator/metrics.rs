@@ -1,0 +1,136 @@
+//! Serving metrics: TTFT, per-token latency, throughput, engine step
+//! timing, KV utilization.
+
+use std::time::Duration;
+
+use crate::util::stats::{LatencyHistogram, Welford};
+
+use super::request::Request;
+
+/// Aggregated serving metrics.
+#[derive(Default)]
+pub struct ServingMetrics {
+    /// Time to first token.
+    pub ttft: LatencyHistogram,
+    /// Per-output-token latency (decode cadence).
+    pub tpot: LatencyHistogram,
+    /// End-to-end request latency.
+    pub e2e: LatencyHistogram,
+    /// Engine step wall time.
+    pub step: LatencyHistogram,
+    /// Batch occupancy per step (requests in flight / slots).
+    pub occupancy: Welford,
+    pub requests_finished: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub steps: u64,
+    elapsed: Duration,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_step(&mut self, wall: Duration, active: usize, slots: usize, new_tokens: usize, prefill_tokens: usize) {
+        self.step.record(wall);
+        self.occupancy
+            .push(active as f64 / slots.max(1) as f64);
+        self.tokens_generated += new_tokens as u64;
+        self.prefill_tokens += prefill_tokens as u64;
+        self.steps += 1;
+        self.elapsed += wall;
+    }
+
+    pub fn on_finish(&mut self, r: &Request) {
+        self.requests_finished += 1;
+        if let (Some(first), Some(done)) = (r.first_token_at, r.finished_at) {
+            self.ttft
+                .record(first.duration_since(r.arrived_at));
+            self.e2e.record(done.duration_since(r.arrived_at));
+            let n = r.generated.len();
+            if n > 1 {
+                let per = done.duration_since(first).as_secs_f64() / (n - 1) as f64;
+                self.tpot.record_us(per * 1e6);
+            }
+        }
+    }
+
+    /// Decode throughput over engine-busy time (tokens/s).
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        if self.elapsed.is_zero() {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.elapsed.as_secs_f64()
+    }
+
+    /// Total token throughput (prefill + decode).
+    pub fn total_tokens_per_s(&self) -> f64 {
+        if self.elapsed.is_zero() {
+            return 0.0;
+        }
+        (self.tokens_generated + self.prefill_tokens) as f64 / self.elapsed.as_secs_f64()
+    }
+
+    /// Human-readable dump.
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} (prefill {}) steps={} | decode {:.1} tok/s, total {:.1} tok/s | \
+             ttft p50 {:.1} ms p99 {:.1} ms | tpot p50 {:.2} ms p99 {:.2} ms | \
+             e2e p50 {:.1} ms | step mean {:.2} ms | occupancy {:.0}%",
+            self.requests_finished,
+            self.tokens_generated,
+            self.prefill_tokens,
+            self.steps,
+            self.decode_tokens_per_s(),
+            self.total_tokens_per_s(),
+            self.ttft.percentile_us(50.0) / 1e3,
+            self.ttft.percentile_us(99.0) / 1e3,
+            self.tpot.percentile_us(50.0) / 1e3,
+            self.tpot.percentile_us(99.0) / 1e3,
+            self.e2e.percentile_us(50.0) / 1e3,
+            self.step.mean_us() / 1e3,
+            self.occupancy.mean() * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_accounting() {
+        let mut m = ServingMetrics::new();
+        m.on_step(Duration::from_millis(10), 3, 4, 3, 1);
+        m.on_step(Duration::from_millis(10), 4, 4, 4, 0);
+        assert_eq!(m.steps, 2);
+        assert_eq!(m.tokens_generated, 7);
+        assert_eq!(m.prefill_tokens, 1);
+        let tps = m.decode_tokens_per_s();
+        assert!((tps - 350.0).abs() < 1.0, "tps {tps}");
+        assert!((m.occupancy.mean() - 0.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn finish_records_latencies() {
+        let mut m = ServingMetrics::new();
+        let mut r = Request::new(1, vec![1], 2);
+        r.state = super::super::request::RequestState::Prefilling;
+        r.advance(5);
+        std::thread::sleep(Duration::from_millis(2));
+        r.advance(6);
+        m.on_finish(&r);
+        assert_eq!(m.requests_finished, 1);
+        assert!(m.e2e.count() == 1);
+        assert!(m.tpot.count() == 1);
+        assert!(m.tpot.mean_us() >= 1000.0, "tpot {}", m.tpot.mean_us());
+    }
+
+    #[test]
+    fn report_formats() {
+        let m = ServingMetrics::new();
+        let s = m.report();
+        assert!(s.contains("tok/s"));
+    }
+}

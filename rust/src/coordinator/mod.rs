@@ -1,0 +1,31 @@
+//! L3 serving coordinator — the system the paper's kernel lives inside.
+//!
+//! FlashMLA-ETAP is a decode-attention kernel for *single-instance serving
+//! of DeepSeek-R1 on one 8×H20 server* (paper §1).  This module is that
+//! server's control plane, in the style of vLLM's engine:
+//!
+//! * [`request`] — request lifecycle state machine;
+//! * [`router`] — admission control + validation against artifact buckets
+//!   and KV-cache capacity;
+//! * [`batcher`] — continuous batching: slot management, bucket selection;
+//! * [`engine`] — the decode loop over the PJRT artifacts (prefill-as-
+//!   decode, greedy sampling, KV bookkeeping via the paged latent store);
+//! * [`cluster`] — the simulated 8-GPU head-split topology driving the
+//!   `sim` kernel models at paper scale (64K contexts the CPU cannot run);
+//! * [`metrics`] — TTFT/TPOT/throughput accounting.
+//!
+//! Python never appears here; the engine executes AOT artifacts only.
+
+pub mod batcher;
+pub mod cluster;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use cluster::{ClusterConfig, ClusterSim, StepBreakdown, TraceReport, TraceRequest};
+pub use engine::{Engine, EngineConfig, EngineReport};
+pub use metrics::ServingMetrics;
+pub use request::{FinishReason, Request, RequestId, RequestState};
+pub use router::{AdmitError, Router};

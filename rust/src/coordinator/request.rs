@@ -1,0 +1,205 @@
+//! Request lifecycle: the state machine every request moves through.
+
+use std::time::Instant;
+
+/// Unique request handle.
+pub type RequestId = u64;
+
+/// Why a request stopped generating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit its `max_new_tokens` budget.
+    Length,
+    /// Produced the EOS token.
+    Eos,
+    /// Rejected or evicted by the server.
+    Aborted,
+}
+
+/// Lifecycle states (monotone forward).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestState {
+    /// Admitted, waiting for a batch slot.
+    Queued,
+    /// In a slot, consuming prompt tokens (prefill-as-decode).
+    Prefilling,
+    /// In a slot, generating.
+    Decoding,
+    /// Done (see `finish_reason`).
+    Finished,
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub eos_token: Option<i32>,
+    pub state: RequestState,
+    pub generated: Vec<i32>,
+    /// Prompt tokens already consumed (prefill cursor).
+    pub prefill_pos: usize,
+    pub finish_reason: Option<FinishReason>,
+    pub arrived_at: Instant,
+    pub first_token_at: Option<Instant>,
+    pub finished_at: Option<Instant>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(max_new_tokens > 0, "must request at least one token");
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            eos_token: None,
+            state: RequestState::Queued,
+            generated: Vec::new(),
+            prefill_pos: 0,
+            finish_reason: None,
+            arrived_at: Instant::now(),
+            first_token_at: None,
+            finished_at: None,
+        }
+    }
+
+    pub fn with_eos(mut self, eos: i32) -> Self {
+        self.eos_token = Some(eos);
+        self
+    }
+
+    /// Total KV positions this request needs at peak.
+    pub fn max_context(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
+    }
+
+    /// Current KV length (tokens cached so far).
+    pub fn context_len(&self) -> usize {
+        self.prefill_pos + self.generated.len()
+    }
+
+    /// The token to feed the model this step, or None if waiting on state.
+    pub fn next_input_token(&self) -> Option<i32> {
+        match self.state {
+            RequestState::Prefilling => self.prompt.get(self.prefill_pos).copied(),
+            RequestState::Decoding => self
+                .generated
+                .last()
+                .copied()
+                .or_else(|| self.prompt.last().copied()),
+            _ => None,
+        }
+    }
+
+    /// Advance after one engine step in which this request consumed a slot.
+    /// `sampled` is the token sampled from this step's logits.
+    pub fn advance(&mut self, sampled: i32) {
+        match self.state {
+            RequestState::Prefilling => {
+                self.prefill_pos += 1;
+                if self.prefill_pos == self.prompt.len() {
+                    // The logits of the last prompt token ARE the first
+                    // generated token (standard decode semantics).
+                    self.push_generated(sampled);
+                    if self.state != RequestState::Finished {
+                        self.state = RequestState::Decoding;
+                    }
+                }
+            }
+            RequestState::Decoding => self.push_generated(sampled),
+            ref s => panic!("advance() in state {s:?}"),
+        }
+    }
+
+    fn push_generated(&mut self, tok: i32) {
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(Instant::now());
+        }
+        self.generated.push(tok);
+        if Some(tok) == self.eos_token {
+            self.finish(FinishReason::Eos);
+        } else if self.generated.len() >= self.max_new_tokens {
+            self.finish(FinishReason::Length);
+        }
+    }
+
+    pub fn finish(&mut self, reason: FinishReason) {
+        self.state = RequestState::Finished;
+        self.finish_reason = Some(reason);
+        self.finished_at = Some(Instant::now());
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.state == RequestState::Finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_then_decode_flow() {
+        let mut r = Request::new(1, vec![10, 11, 12], 2);
+        r.state = RequestState::Prefilling;
+        assert_eq!(r.next_input_token(), Some(10));
+        r.advance(99);
+        assert_eq!(r.state, RequestState::Prefilling);
+        assert_eq!(r.next_input_token(), Some(11));
+        r.advance(99);
+        r.advance(42); // last prompt token → first generated token is 42
+        assert_eq!(r.state, RequestState::Decoding);
+        assert_eq!(r.generated, vec![42]);
+        assert_eq!(r.next_input_token(), Some(42));
+        r.advance(43);
+        assert!(r.is_finished());
+        assert_eq!(r.finish_reason, Some(FinishReason::Length));
+        assert_eq!(r.generated, vec![42, 43]);
+    }
+
+    #[test]
+    fn eos_stops_early() {
+        let mut r = Request::new(1, vec![5], 10).with_eos(0);
+        r.state = RequestState::Prefilling;
+        r.advance(7);
+        assert_eq!(r.state, RequestState::Decoding);
+        r.advance(0); // EOS
+        assert!(r.is_finished());
+        assert_eq!(r.finish_reason, Some(FinishReason::Eos));
+        assert_eq!(r.generated, vec![7, 0]);
+    }
+
+    #[test]
+    fn eos_as_first_generated_token() {
+        let mut r = Request::new(1, vec![5, 6], 10).with_eos(0);
+        r.state = RequestState::Prefilling;
+        r.advance(99);
+        r.advance(0); // first sampled token is EOS
+        assert!(r.is_finished());
+        assert_eq!(r.finish_reason, Some(FinishReason::Eos));
+    }
+
+    #[test]
+    fn max_context_accounts_prompt_and_budget() {
+        let r = Request::new(1, vec![1, 2, 3], 5);
+        assert_eq!(r.max_context(), 8);
+        assert_eq!(r.context_len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn empty_prompt_rejected() {
+        Request::new(1, vec![], 1);
+    }
+
+    #[test]
+    fn single_token_budget() {
+        let mut r = Request::new(1, vec![3], 1);
+        r.state = RequestState::Prefilling;
+        r.advance(8);
+        assert!(r.is_finished());
+        assert_eq!(r.generated, vec![8]);
+    }
+}

@@ -1,0 +1,150 @@
+//! Admission router: validates requests against artifact buckets and cache
+//! capacity before they reach the batcher.
+
+use super::request::{Request, RequestId};
+
+/// Why a request was rejected at the door.
+#[derive(Debug, PartialEq, thiserror::Error)]
+pub enum AdmitError {
+    #[error("prompt is empty")]
+    EmptyPrompt,
+    #[error("max_new_tokens must be ≥ 1")]
+    ZeroBudget,
+    #[error("context {needed} exceeds the largest bucket {limit}")]
+    ContextTooLong { needed: usize, limit: usize },
+    #[error("token id {tok} outside vocab {vocab}")]
+    BadToken { tok: i32, vocab: usize },
+    #[error("queue full ({limit} waiting)")]
+    QueueFull { limit: usize },
+}
+
+/// Stateless admission validator + id allocator.
+pub struct Router {
+    max_context: usize,
+    vocab: usize,
+    max_queue: usize,
+    next_id: RequestId,
+    pub admitted: u64,
+    pub rejected: u64,
+}
+
+impl Router {
+    pub fn new(max_context: usize, vocab: usize, max_queue: usize) -> Self {
+        Router {
+            max_context,
+            vocab,
+            max_queue,
+            next_id: 1,
+            admitted: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Validate and wrap a raw request.
+    pub fn admit(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        queued_now: usize,
+    ) -> Result<Request, AdmitError> {
+        let reject = |e: AdmitError, me: &mut Self| {
+            me.rejected += 1;
+            Err(e)
+        };
+        if prompt.is_empty() {
+            return reject(AdmitError::EmptyPrompt, self);
+        }
+        if max_new_tokens == 0 {
+            return reject(AdmitError::ZeroBudget, self);
+        }
+        if queued_now >= self.max_queue {
+            return reject(AdmitError::QueueFull { limit: self.max_queue }, self);
+        }
+        let needed = prompt.len() + max_new_tokens;
+        if needed > self.max_context {
+            return reject(
+                AdmitError::ContextTooLong {
+                    needed,
+                    limit: self.max_context,
+                },
+                self,
+            );
+        }
+        if let Some(&tok) = prompt.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
+            return reject(
+                AdmitError::BadToken {
+                    tok,
+                    vocab: self.vocab,
+                },
+                self,
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.admitted += 1;
+        Ok(Request::new(id, prompt, max_new_tokens))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        Router::new(255, 512, 8)
+    }
+
+    #[test]
+    fn admits_valid() {
+        let mut r = router();
+        let req = r.admit(vec![1, 2, 3], 10, 0).unwrap();
+        assert_eq!(req.id, 1);
+        let req2 = r.admit(vec![4], 1, 0).unwrap();
+        assert_eq!(req2.id, 2, "ids increase");
+        assert_eq!(r.admitted, 2);
+    }
+
+    #[test]
+    fn rejects_empty_and_zero() {
+        let mut r = router();
+        assert_eq!(r.admit(vec![], 5, 0).unwrap_err(), AdmitError::EmptyPrompt);
+        assert_eq!(r.admit(vec![1], 0, 0).unwrap_err(), AdmitError::ZeroBudget);
+        assert_eq!(r.rejected, 2);
+    }
+
+    #[test]
+    fn rejects_oversize_context() {
+        let mut r = router();
+        let err = r.admit(vec![0; 200], 100, 0).unwrap_err();
+        assert_eq!(
+            err,
+            AdmitError::ContextTooLong {
+                needed: 300,
+                limit: 255
+            }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_tokens() {
+        let mut r = router();
+        assert!(matches!(
+            r.admit(vec![1, 512], 1, 0),
+            Err(AdmitError::BadToken { tok: 512, .. })
+        ));
+        assert!(matches!(
+            r.admit(vec![-1], 1, 0),
+            Err(AdmitError::BadToken { tok: -1, .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_when_queue_full() {
+        let mut r = router();
+        assert!(matches!(
+            r.admit(vec![1], 1, 8),
+            Err(AdmitError::QueueFull { limit: 8 })
+        ));
+        assert!(r.admit(vec![1], 1, 7).is_ok());
+    }
+}

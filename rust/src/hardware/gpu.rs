@@ -1,0 +1,205 @@
+//! GPU specification database.
+//!
+//! Numbers are published datasheet values.  The H20 entry is the paper's
+//! testbed (§4.1): 148 TFLOPS dense FP16/BF16, 96 GB HBM3 at 4.0 TB/s.
+
+/// The native matmul instruction atom of an architecture.
+///
+/// On Hopper this is WGMMA (`m64 nN k16`, M fixed at 64); on a TPU the
+/// analogue is the 128×128 MXU systolic tile (DESIGN.md §8).  `min_m` is
+/// the dimension whose underfill creates the paper's padding pathology.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MatmulAtom {
+    /// Minimum/granule M (rows of the accumulator tile).
+    pub min_m: usize,
+    /// N granularity (Hopper WGMMA: multiples of 8 up to 256).
+    pub n_step: usize,
+    pub max_n: usize,
+    /// K depth per instruction at 16-bit input.
+    pub k: usize,
+}
+
+impl MatmulAtom {
+    /// Hopper WGMMA for FP16/BF16 inputs.
+    pub const fn wgmma() -> Self {
+        MatmulAtom {
+            min_m: 64,
+            n_step: 8,
+            max_n: 256,
+            k: 16,
+        }
+    }
+
+    /// TPU MXU systolic array tile (the repo's deployment target analogue).
+    /// The moving operand streams through in 8-row sublane groups, so the
+    /// N side has granularity 8 while the stationary M side is the full
+    /// 128-row systolic dimension — the same wide-M/narrow-N asymmetry as
+    /// WGMMA, which is why ETAP transfers (DESIGN.md §8).
+    pub const fn mxu() -> Self {
+        MatmulAtom {
+            min_m: 128,
+            n_step: 8,
+            max_n: 128,
+            k: 128,
+        }
+    }
+}
+
+/// Published per-GPU specification.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Dense (non-sparsity) FP16/BF16 tensor-core TFLOPS.
+    pub fp16_tflops: f64,
+    /// HBM capacity in GiB.
+    pub hbm_gib: f64,
+    /// HBM bandwidth in TB/s.
+    pub hbm_tbps: f64,
+    /// Streaming multiprocessors.
+    pub sm_count: usize,
+    /// Shared memory per SM in KiB (Hopper: 228 usable).
+    pub smem_kib: usize,
+    pub atom: MatmulAtom,
+}
+
+impl GpuSpec {
+    /// NVIDIA H20 — the paper's testbed (§4.1).
+    pub fn h20() -> Self {
+        GpuSpec {
+            name: "H20",
+            fp16_tflops: 148.0,
+            hbm_gib: 96.0,
+            hbm_tbps: 4.0,
+            sm_count: 78,
+            smem_kib: 228,
+            atom: MatmulAtom::wgmma(),
+        }
+    }
+
+    /// NVIDIA H100 SXM (for the "optimized for high-end" contrast).
+    pub fn h100() -> Self {
+        GpuSpec {
+            name: "H100",
+            fp16_tflops: 989.0,
+            hbm_gib: 80.0,
+            hbm_tbps: 3.35,
+            sm_count: 132,
+            smem_kib: 228,
+            atom: MatmulAtom::wgmma(),
+        }
+    }
+
+    /// NVIDIA H800 (export-variant H100: same compute, clipped interconnect).
+    pub fn h800() -> Self {
+        GpuSpec {
+            name: "H800",
+            fp16_tflops: 989.0,
+            hbm_gib: 80.0,
+            hbm_tbps: 3.35,
+            sm_count: 132,
+            smem_kib: 228,
+            atom: MatmulAtom::wgmma(),
+        }
+    }
+
+    /// NVIDIA A100 SXM (pre-Hopper: mma.sync, min M effectively 16).
+    pub fn a100() -> Self {
+        GpuSpec {
+            name: "A100",
+            fp16_tflops: 312.0,
+            hbm_gib: 80.0,
+            hbm_tbps: 2.04,
+            sm_count: 108,
+            smem_kib: 164,
+            atom: MatmulAtom {
+                min_m: 16,
+                n_step: 8,
+                max_n: 16,
+                k: 16,
+            },
+        }
+    }
+
+    /// TPU-like spec used for the hardware-adaptation analysis (DESIGN.md
+    /// §8): one TensorCore of a v5p-class part.
+    pub fn tpu_like() -> Self {
+        GpuSpec {
+            name: "TPU-like",
+            fp16_tflops: 229.0,
+            hbm_gib: 95.0,
+            hbm_tbps: 2.76,
+            sm_count: 1,
+            smem_kib: 16 * 1024, // 16 MiB VMEM plays the SMEM role
+            atom: MatmulAtom::mxu(),
+        }
+    }
+
+    /// Look up by name (CLI convenience).
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "h20" => Some(Self::h20()),
+            "h100" => Some(Self::h100()),
+            "h800" => Some(Self::h800()),
+            "a100" => Some(Self::a100()),
+            "tpu" | "tpu-like" => Some(Self::tpu_like()),
+            _ => None,
+        }
+    }
+
+    /// HBM bandwidth in bytes/µs.
+    pub fn bytes_per_us(&self) -> f64 {
+        self.hbm_tbps * 1e12 / 1e6
+    }
+
+    /// Peak FLOPs/µs at FP16.
+    pub fn flops_per_us(&self) -> f64 {
+        self.fp16_tflops * 1e12 / 1e6
+    }
+
+    /// The compute intensity (FLOPs/byte) at which compute and memory time
+    /// are equal — the roofline ridge point.
+    pub fn ridge_flops_per_byte(&self) -> f64 {
+        self.flops_per_us() / self.bytes_per_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h20_matches_paper() {
+        let g = GpuSpec::h20();
+        assert_eq!(g.fp16_tflops, 148.0); // paper §1, §4.1
+        assert_eq!(g.hbm_tbps, 4.0);
+        assert_eq!(g.hbm_gib, 96.0);
+        assert_eq!(g.atom.min_m, 64); // the WGMMA constraint (§3.1)
+    }
+
+    #[test]
+    fn h20_vs_h100_compute_gap() {
+        // The paper motivates with "148 vs 1979 (with sparsity)"; dense
+        // H100 is 989 — either way the H20 is compute-starved per byte.
+        let h20 = GpuSpec::h20();
+        let h100 = GpuSpec::h100();
+        assert!(h100.fp16_tflops / h20.fp16_tflops > 6.0);
+        // And the H20's ridge point is far LOWER: it becomes compute-bound
+        // at much lower intensity, so padding waste hurts more.
+        assert!(h20.ridge_flops_per_byte() < h100.ridge_flops_per_byte());
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(GpuSpec::by_name("h20").unwrap().name, "H20");
+        assert_eq!(GpuSpec::by_name("H100").unwrap().name, "H100");
+        assert!(GpuSpec::by_name("b200").is_none());
+    }
+
+    #[test]
+    fn unit_conversions() {
+        let g = GpuSpec::h20();
+        assert!((g.bytes_per_us() - 4.0e6).abs() < 1.0);
+        assert!((g.flops_per_us() - 148.0e6).abs() < 1.0);
+        assert!((g.ridge_flops_per_byte() - 37.0).abs() < 1e-9);
+    }
+}

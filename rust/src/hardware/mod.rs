@@ -1,0 +1,13 @@
+//! GPU hardware substrate: published specs for the H20 and its relatives,
+//! plus the matmul-atom (WGMMA / MXU) shape algebra the paper's argument
+//! rests on.
+//!
+//! We have no H20 (repro band 0/5); these specs parameterize the analytic
+//! performance simulator in `crate::sim` (see DESIGN.md §2 for why this
+//! substitution preserves the paper's effect).
+
+pub mod gpu;
+pub mod wgmma;
+
+pub use gpu::{GpuSpec, MatmulAtom};
+pub use wgmma::{padded_rows, padding_factor, WGMMA_K_FP16, WGMMA_MIN_M, WGMMA_N_STEP};

@@ -1,0 +1,125 @@
+//! WGMMA instruction-shape algebra — the arithmetic core of the paper.
+//!
+//! Hopper's warpgroup MMA computes a `m64 × nN × k16` tile per instruction:
+//! the M side is fixed at 64 rows.  A decode workload that puts the 16
+//! per-GPU query heads on M must issue 64-row instructions with 48 rows of
+//! garbage — `padding_factor(16) == 4.0`, i.e. 75 % of issued FLOPs are
+//! thrown away, capping utilization at 25 % (paper §1, §3.1).  ETAP's whole
+//! contribution is choosing operand orientation so M is the KV length.
+
+use super::gpu::MatmulAtom;
+
+/// Hopper WGMMA minimum/only M.
+pub const WGMMA_MIN_M: usize = 64;
+/// WGMMA N granularity.
+pub const WGMMA_N_STEP: usize = 8;
+/// WGMMA K depth for 16-bit inputs.
+pub const WGMMA_K_FP16: usize = 16;
+
+/// Rows actually issued for a logical row count (padded up to the atom).
+pub fn padded_rows(rows: usize, atom: &MatmulAtom) -> usize {
+    assert!(rows > 0, "empty M");
+    rows.div_ceil(atom.min_m) * atom.min_m
+}
+
+/// Issued-FLOPs multiplier from M-padding: `padded / logical ≥ 1`.
+pub fn padding_factor(rows: usize, atom: &MatmulAtom) -> f64 {
+    padded_rows(rows, atom) as f64 / rows as f64
+}
+
+/// Columns issued for a logical column count (padded to `n_step`, capped
+/// tiles of `max_n`).
+pub fn padded_cols(cols: usize, atom: &MatmulAtom) -> usize {
+    assert!(cols > 0, "empty N");
+    cols.div_ceil(atom.n_step) * atom.n_step
+}
+
+/// Number of WGMMA instructions for a (M × N × K) GEMM.
+pub fn instruction_count(m: usize, n: usize, k: usize, atom: &MatmulAtom) -> usize {
+    let m_tiles = m.div_ceil(atom.min_m);
+    let n_tiles = padded_cols(n, atom).div_ceil(atom.max_n.min(padded_cols(n, atom)));
+    let k_tiles = k.div_ceil(atom.k);
+    m_tiles * n_tiles.max(1) * k_tiles
+}
+
+/// Compute utilization ceiling from M-padding alone (the paper's "<25 %").
+pub fn utilization_ceiling(rows: usize, atom: &MatmulAtom) -> f64 {
+    1.0 / padding_factor(rows, atom)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::gpu::MatmulAtom;
+
+    #[test]
+    fn paper_headline_padding() {
+        let wgmma = MatmulAtom::wgmma();
+        // 16 heads per GPU (128 heads / 8 GPUs) → 4× padding, ≤25 % util.
+        assert_eq!(padded_rows(16, &wgmma), 64);
+        assert_eq!(padding_factor(16, &wgmma), 4.0);
+        assert!(utilization_ceiling(16, &wgmma) <= 0.25);
+    }
+
+    #[test]
+    fn no_padding_when_kv_major() {
+        let wgmma = MatmulAtom::wgmma();
+        // ETAP's M = KV block (multiples of 64) → factor exactly 1.
+        for bc in [64, 128, 256, 65536] {
+            assert_eq!(padding_factor(bc, &wgmma), 1.0);
+        }
+        // Non-aligned long KV still ~1 (amortized over many tiles).
+        assert!(padding_factor(65537, &wgmma) < 1.001);
+    }
+
+    #[test]
+    fn padding_monotone_decreasing_in_rows() {
+        let wgmma = MatmulAtom::wgmma();
+        let mut prev = f64::INFINITY;
+        for rows in [1, 2, 4, 8, 16, 32, 64] {
+            let f = padding_factor(rows, &wgmma);
+            assert!(f <= prev);
+            prev = f;
+        }
+        assert_eq!(padding_factor(1, &wgmma), 64.0);
+    }
+
+    #[test]
+    fn mxu_underfill_analogue() {
+        // The TPU adaptation: 16 rows into a 128-row systolic array → 8×.
+        let mxu = MatmulAtom::mxu();
+        assert_eq!(padding_factor(16, &mxu), 8.0);
+        assert_eq!(padding_factor(128, &mxu), 1.0);
+    }
+
+    #[test]
+    fn a100_does_not_suffer() {
+        // Pre-Hopper mma.sync m16: 16 heads fit exactly — the pathology is
+        // Hopper-specific, which is why the paper targets WGMMA.
+        let a100 = MatmulAtom {
+            min_m: 16,
+            n_step: 8,
+            max_n: 16,
+            k: 16,
+        };
+        assert_eq!(padding_factor(16, &a100), 1.0);
+    }
+
+    #[test]
+    fn instruction_counts() {
+        let wgmma = MatmulAtom::wgmma();
+        // 64×64×576 GEMM: 1 M-tile × 1 N-tile(64≤256 → padded 64) × 36 K.
+        assert_eq!(instruction_count(64, 64, 576, &wgmma), 36);
+        // 16 rows cost the same as 64.
+        assert_eq!(
+            instruction_count(16, 64, 576, &wgmma),
+            instruction_count(64, 64, 576, &wgmma)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "empty M")]
+    fn zero_rows_panics() {
+        padded_rows(0, &MatmulAtom::wgmma());
+    }
+}

@@ -1,0 +1,186 @@
+//! Reference-counted block allocator (free list).
+
+/// Index of a physical cache block.
+pub type BlockId = u32;
+
+/// Allocation failure.
+#[derive(Debug, PartialEq, thiserror::Error)]
+pub enum AllocError {
+    #[error("out of cache blocks ({capacity} total, all in use)")]
+    OutOfBlocks { capacity: usize },
+}
+
+/// Free-list allocator with per-block refcounts.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    refcounts: Vec<u32>,
+    free: Vec<BlockId>,
+}
+
+impl BlockAllocator {
+    pub fn new(capacity: usize) -> Self {
+        BlockAllocator {
+            refcounts: vec![0; capacity],
+            // LIFO free list: most-recently-freed first (cache-warm reuse).
+            free: (0..capacity as BlockId).rev().collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.refcounts.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.capacity() - self.free_blocks()
+    }
+
+    /// Allocate one block with refcount 1.
+    pub fn alloc(&mut self) -> Result<BlockId, AllocError> {
+        let id = self.free.pop().ok_or(AllocError::OutOfBlocks {
+            capacity: self.capacity(),
+        })?;
+        debug_assert_eq!(self.refcounts[id as usize], 0);
+        self.refcounts[id as usize] = 1;
+        Ok(id)
+    }
+
+    /// Increment the refcount (prefix sharing).
+    pub fn retain(&mut self, id: BlockId) {
+        let rc = &mut self.refcounts[id as usize];
+        assert!(*rc > 0, "retain of free block {id}");
+        *rc += 1;
+    }
+
+    /// Decrement; returns the block to the free list at zero.
+    pub fn release(&mut self, id: BlockId) {
+        let rc = &mut self.refcounts[id as usize];
+        assert!(*rc > 0, "release of free block {id}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(id);
+        }
+    }
+
+    /// Current refcount (0 = free).
+    pub fn refcount(&self, id: BlockId) -> u32 {
+        self.refcounts[id as usize]
+    }
+
+    /// Is the block exclusively owned? (copy-on-write test)
+    pub fn is_exclusive(&self, id: BlockId) -> bool {
+        self.refcounts[id as usize] == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Config};
+    use crate::prop_assert;
+
+    #[test]
+    fn alloc_until_exhaustion() {
+        let mut a = BlockAllocator::new(4);
+        let ids: Vec<_> = (0..4).map(|_| a.alloc().unwrap()).collect();
+        assert_eq!(a.alloc(), Err(AllocError::OutOfBlocks { capacity: 4 }));
+        // All distinct.
+        let mut sorted = ids.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4);
+    }
+
+    #[test]
+    fn release_recycles() {
+        let mut a = BlockAllocator::new(2);
+        let x = a.alloc().unwrap();
+        let _y = a.alloc().unwrap();
+        a.release(x);
+        let z = a.alloc().unwrap();
+        assert_eq!(z, x, "LIFO reuse");
+    }
+
+    #[test]
+    fn refcounting_delays_free() {
+        let mut a = BlockAllocator::new(1);
+        let x = a.alloc().unwrap();
+        a.retain(x);
+        a.release(x);
+        assert!(a.alloc().is_err(), "still retained");
+        a.release(x);
+        assert_eq!(a.alloc().unwrap(), x);
+    }
+
+    #[test]
+    #[should_panic(expected = "release of free block")]
+    fn double_release_panics() {
+        let mut a = BlockAllocator::new(1);
+        let x = a.alloc().unwrap();
+        a.release(x);
+        a.release(x);
+    }
+
+    #[test]
+    fn property_never_double_allocates_and_conserves() {
+        forall(Config::default().cases(200), |g| {
+            let cap = g.usize(1..64);
+            let mut a = BlockAllocator::new(cap);
+            let mut live: Vec<BlockId> = Vec::new();
+            for _ in 0..g.usize(1..200) {
+                if g.bool() || live.is_empty() {
+                    match a.alloc() {
+                        Ok(id) => {
+                            prop_assert!(
+                                !live.contains(&id),
+                                "double allocation of {id}"
+                            );
+                            live.push(id);
+                        }
+                        Err(_) => {
+                            prop_assert!(
+                                live.len() == cap,
+                                "OOM with {} live of {cap}",
+                                live.len()
+                            );
+                        }
+                    }
+                } else {
+                    let idx = g.usize(0..live.len());
+                    let id = live.swap_remove(idx);
+                    a.release(id);
+                }
+                prop_assert!(
+                    a.used_blocks() == live.len(),
+                    "conservation: used {} vs live {}",
+                    a.used_blocks(),
+                    live.len()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_refcount_sharing() {
+        forall(Config::default().cases(100), |g| {
+            let mut a = BlockAllocator::new(8);
+            let id = a.alloc().unwrap();
+            let extra = g.usize(1..10);
+            for _ in 0..extra {
+                a.retain(id);
+            }
+            prop_assert!(a.refcount(id) == extra as u32 + 1);
+            for i in 0..extra {
+                a.release(id);
+                prop_assert!(a.free_blocks() == 7, "freed too early at {i}");
+            }
+            a.release(id);
+            prop_assert!(a.free_blocks() == 8);
+            Ok(())
+        });
+    }
+}

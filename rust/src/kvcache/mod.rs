@@ -1,0 +1,22 @@
+//! Paged latent-KV cache manager.
+//!
+//! MLA's low-rank joint compression means the per-token cache entry is one
+//! `latent_dim`-vector (512 c_kv + 64 rope = 576 for DeepSeek-R1) shared
+//! by K and V — this is what makes single-server deployment of a 671B
+//! model feasible at all, and what the coordinator manages here.
+//!
+//! Design follows vLLM's PagedAttention bookkeeping, specialized to the
+//! latent layout:
+//!
+//! * fixed-size blocks of `block_size` token latents, owned by a free-list
+//!   allocator with per-block reference counts;
+//! * sequences hold block tables; forking a sequence (prefix sharing for
+//!   beam/parallel sampling) bumps refcounts — copy-on-write on append;
+//! * `gather_padded` materializes the contiguous `[n_bucket × latent]`
+//!   tensor the AOT attention artifacts consume.
+
+pub mod allocator;
+pub mod paged;
+
+pub use allocator::{AllocError, BlockAllocator, BlockId};
+pub use paged::{CacheConfig, PagedLatentCache, SeqId};

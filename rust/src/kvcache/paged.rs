@@ -1,0 +1,382 @@
+//! Paged latent cache: block tables + the physical latent pool.
+
+use std::collections::HashMap;
+
+use super::allocator::{AllocError, BlockAllocator, BlockId};
+
+/// Sequence handle.
+pub type SeqId = u64;
+
+/// Cache geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Tokens per block (vLLM default 16).
+    pub block_size: usize,
+    /// Latent dim per token (576 for DeepSeek-R1; d_ckv + rope).
+    pub latent_dim: usize,
+    /// Physical blocks in the pool.
+    pub num_blocks: usize,
+}
+
+impl CacheConfig {
+    pub fn total_tokens(&self) -> usize {
+        self.block_size * self.num_blocks
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.total_tokens() * self.latent_dim * std::mem::size_of::<f32>()
+    }
+}
+
+#[derive(Debug, Clone)]
+struct SeqState {
+    blocks: Vec<BlockId>,
+    len: usize,
+}
+
+/// The paged latent-KV cache.
+pub struct PagedLatentCache {
+    cfg: CacheConfig,
+    pool: Vec<f32>,
+    allocator: BlockAllocator,
+    seqs: HashMap<SeqId, SeqState>,
+    next_id: SeqId,
+}
+
+impl PagedLatentCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        assert!(cfg.block_size > 0 && cfg.latent_dim > 0 && cfg.num_blocks > 0);
+        PagedLatentCache {
+            pool: vec![0.0; cfg.total_tokens() * cfg.latent_dim],
+            allocator: BlockAllocator::new(cfg.num_blocks),
+            seqs: HashMap::new(),
+            cfg,
+            next_id: 1,
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// Create an empty sequence.
+    pub fn new_seq(&mut self) -> SeqId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.seqs.insert(
+            id,
+            SeqState {
+                blocks: Vec::new(),
+                len: 0,
+            },
+        );
+        id
+    }
+
+    /// Drop a sequence, releasing its blocks.
+    pub fn free_seq(&mut self, id: SeqId) {
+        if let Some(state) = self.seqs.remove(&id) {
+            for b in state.blocks {
+                self.allocator.release(b);
+            }
+        }
+    }
+
+    /// Tokens cached for a sequence.
+    pub fn len(&self, id: SeqId) -> usize {
+        self.seqs.get(&id).map(|s| s.len).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self, id: SeqId) -> bool {
+        self.len(id) == 0
+    }
+
+    /// Can `tokens` more tokens be appended without running out of blocks?
+    /// (Conservative: ignores possibly shared last blocks.)
+    pub fn can_append(&self, id: SeqId, tokens: usize) -> bool {
+        let state = match self.seqs.get(&id) {
+            Some(s) => s,
+            None => return false,
+        };
+        let have = state.blocks.len() * self.cfg.block_size;
+        let need = state.len + tokens;
+        if need <= have {
+            return true;
+        }
+        let extra = (need - have).div_ceil(self.cfg.block_size);
+        extra <= self.allocator.free_blocks()
+    }
+
+    /// Append one token's latent vector.  Copy-on-write if the tail block
+    /// is shared.
+    pub fn append(&mut self, id: SeqId, latent: &[f32]) -> Result<(), AllocError> {
+        assert_eq!(latent.len(), self.cfg.latent_dim, "latent dim mismatch");
+        let bs = self.cfg.block_size;
+        let ld = self.cfg.latent_dim;
+
+        let state = self.seqs.get(&id).expect("unknown sequence").clone();
+        let slot = state.len % bs;
+        let mut blocks = state.blocks;
+
+        if state.len == blocks.len() * bs {
+            // Need a fresh block.
+            let b = self.allocator.alloc()?;
+            blocks.push(b);
+        } else {
+            // Writing into the tail block: copy-on-write if shared.
+            let tail = *blocks.last().unwrap();
+            if !self.allocator.is_exclusive(tail) {
+                let fresh = self.allocator.alloc()?;
+                let (src, dst) = (self.block_range(tail), self.block_range(fresh));
+                self.pool.copy_within(src, dst.start);
+                self.allocator.release(tail);
+                *blocks.last_mut().unwrap() = fresh;
+            }
+        }
+
+        let tail = *blocks.last().unwrap();
+        let off = self.block_range(tail).start + slot * ld;
+        self.pool[off..off + ld].copy_from_slice(latent);
+
+        let state = self.seqs.get_mut(&id).unwrap();
+        state.blocks = blocks;
+        state.len += 1;
+        Ok(())
+    }
+
+    /// Fork a sequence: shares all blocks (refcount++), O(blocks).
+    pub fn fork(&mut self, parent: SeqId) -> SeqId {
+        let state = self.seqs.get(&parent).expect("unknown sequence").clone();
+        for &b in &state.blocks {
+            self.allocator.retain(b);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.seqs.insert(id, state);
+        id
+    }
+
+    /// Materialize the contiguous padded `[n_bucket × latent]` tensor the
+    /// AOT attention artifact consumes.  Returns the valid length.
+    pub fn gather_padded(&self, id: SeqId, n_bucket: usize, out: &mut [f32]) -> usize {
+        let ld = self.cfg.latent_dim;
+        assert_eq!(out.len(), n_bucket * ld, "output buffer size");
+        let state = self.seqs.get(&id).expect("unknown sequence");
+        assert!(state.len <= n_bucket, "sequence longer than bucket");
+        let bs = self.cfg.block_size;
+        let mut written = 0usize;
+        for (bi, &b) in state.blocks.iter().enumerate() {
+            let tokens = (state.len - bi * bs).min(bs);
+            if tokens == 0 {
+                break;
+            }
+            let src = self.block_range(b).start;
+            out[written * ld..(written + tokens) * ld]
+                .copy_from_slice(&self.pool[src..src + tokens * ld]);
+            written += tokens;
+        }
+        // Zero the padding region (defence in depth: the kernels mask by
+        // length, but deterministic padding makes outputs reproducible).
+        out[written * ld..].fill(0.0);
+        state.len
+    }
+
+    /// Read back one token's latent (tests / debugging).
+    pub fn token_latent(&self, id: SeqId, pos: usize) -> &[f32] {
+        let state = self.seqs.get(&id).expect("unknown sequence");
+        assert!(pos < state.len);
+        let bs = self.cfg.block_size;
+        let ld = self.cfg.latent_dim;
+        let b = state.blocks[pos / bs];
+        let off = self.block_range(b).start + (pos % bs) * ld;
+        &self.pool[off..off + ld]
+    }
+
+    /// Pool usage as a fraction.
+    pub fn usage(&self) -> f64 {
+        self.allocator.used_blocks() as f64 / self.cfg.num_blocks as f64
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.allocator.free_blocks()
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn block_range(&self, b: BlockId) -> std::ops::Range<usize> {
+        let stride = self.cfg.block_size * self.cfg.latent_dim;
+        let start = b as usize * stride;
+        start..start + stride
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::{forall, Config};
+
+    fn cfg(blocks: usize) -> CacheConfig {
+        CacheConfig {
+            block_size: 4,
+            latent_dim: 3,
+            num_blocks: blocks,
+        }
+    }
+
+    fn latent(tag: f32, dim: usize) -> Vec<f32> {
+        (0..dim).map(|i| tag + i as f32 * 0.01).collect()
+    }
+
+    #[test]
+    fn append_and_gather_round_trip() {
+        let mut c = PagedLatentCache::new(cfg(4));
+        let s = c.new_seq();
+        for t in 0..10 {
+            c.append(s, &latent(t as f32, 3)).unwrap();
+        }
+        assert_eq!(c.len(s), 10);
+        let mut out = vec![0.0; 16 * 3];
+        let n = c.gather_padded(s, 16, &mut out);
+        assert_eq!(n, 10);
+        for t in 0..10 {
+            assert_eq!(&out[t * 3..t * 3 + 3], latent(t as f32, 3).as_slice());
+        }
+        assert!(out[30..].iter().all(|&x| x == 0.0), "padding zeroed");
+    }
+
+    #[test]
+    fn out_of_blocks_reported() {
+        let mut c = PagedLatentCache::new(cfg(2)); // 8 tokens max
+        let s = c.new_seq();
+        for t in 0..8 {
+            c.append(s, &latent(t as f32, 3)).unwrap();
+        }
+        assert!(matches!(
+            c.append(s, &latent(9.0, 3)),
+            Err(AllocError::OutOfBlocks { .. })
+        ));
+    }
+
+    #[test]
+    fn free_seq_releases_blocks() {
+        let mut c = PagedLatentCache::new(cfg(2));
+        let s = c.new_seq();
+        for t in 0..8 {
+            c.append(s, &latent(t as f32, 3)).unwrap();
+        }
+        assert_eq!(c.free_blocks(), 0);
+        c.free_seq(s);
+        assert_eq!(c.free_blocks(), 2);
+    }
+
+    #[test]
+    fn can_append_accounts_for_partial_blocks() {
+        let mut c = PagedLatentCache::new(cfg(2));
+        let s = c.new_seq();
+        c.append(s, &latent(0.0, 3)).unwrap(); // 1 of 4 slots in block 0
+        assert!(c.can_append(s, 3)); // fits in the same block
+        assert!(c.can_append(s, 7)); // needs 1 more block — available
+        assert!(!c.can_append(s, 8)); // would need 2 more — only 1 free
+    }
+
+    #[test]
+    fn fork_shares_then_copy_on_write() {
+        let mut c = PagedLatentCache::new(cfg(4));
+        let a = c.new_seq();
+        for t in 0..6 {
+            c.append(a, &latent(t as f32, 3)).unwrap();
+        }
+        let used_before = 4 - c.free_blocks();
+        let b = c.fork(a);
+        assert_eq!(c.len(b), 6);
+        assert_eq!(4 - c.free_blocks(), used_before, "fork allocates nothing");
+        // Divergent appends: b's tail block must COW, a's data unchanged.
+        c.append(b, &latent(100.0, 3)).unwrap();
+        c.append(a, &latent(200.0, 3)).unwrap();
+        assert_eq!(c.token_latent(a, 6), latent(200.0, 3).as_slice());
+        assert_eq!(c.token_latent(b, 6), latent(100.0, 3).as_slice());
+        // Shared prefix identical.
+        for t in 0..6 {
+            assert_eq!(c.token_latent(a, t), c.token_latent(b, t));
+        }
+    }
+
+    #[test]
+    fn gather_empty_sequence() {
+        let mut c = PagedLatentCache::new(cfg(1));
+        let s = c.new_seq();
+        let mut out = vec![7.0; 4 * 3];
+        assert_eq!(c.gather_padded(s, 4, &mut out), 0);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn property_gather_matches_appends() {
+        forall(Config::default().cases(100), |g| {
+            let bs = g.usize(1..8);
+            let nb = g.usize(1..16);
+            let ld = g.usize(1..6);
+            let mut c = PagedLatentCache::new(CacheConfig {
+                block_size: bs,
+                latent_dim: ld,
+                num_blocks: nb,
+            });
+            let s = c.new_seq();
+            let n_tokens = g.usize(0..bs * nb + 1);
+            let mut expect = Vec::new();
+            for t in 0..n_tokens {
+                let v: Vec<f32> = (0..ld).map(|k| (t * 31 + k) as f32).collect();
+                if c.append(s, &v).is_ok() {
+                    expect.push(v);
+                }
+            }
+            let bucket = bs * nb;
+            let mut out = vec![0.0; bucket * ld];
+            let n = c.gather_padded(s, bucket, &mut out);
+            prop_assert!(n == expect.len(), "length {n} vs {}", expect.len());
+            for (t, v) in expect.iter().enumerate() {
+                prop_assert!(
+                    &out[t * ld..(t + 1) * ld] == v.as_slice(),
+                    "mismatch at token {t}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_forks_never_corrupt_parent() {
+        forall(Config::default().cases(60), |g| {
+            let mut c = PagedLatentCache::new(CacheConfig {
+                block_size: 4,
+                latent_dim: 2,
+                num_blocks: 32,
+            });
+            let a = c.new_seq();
+            let prefix = g.usize(1..24);
+            for t in 0..prefix {
+                c.append(a, &[t as f32, -(t as f32)]).unwrap();
+            }
+            let b = c.fork(a);
+            // Interleave divergent appends.
+            for i in 0..g.usize(1..12) {
+                let tgt = if g.bool() { a } else { b };
+                let _ = c.append(tgt, &[1000.0 + i as f32, 0.0]);
+            }
+            for t in 0..prefix {
+                prop_assert!(
+                    c.token_latent(a, t) == [t as f32, -(t as f32)],
+                    "parent corrupted at {t}"
+                );
+                prop_assert!(
+                    c.token_latent(b, t) == [t as f32, -(t as f32)],
+                    "fork prefix corrupted at {t}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,34 @@
+//! # FlashMLA-ETAP
+//!
+//! Rust + JAX + Pallas reproduction of *FlashMLA-ETAP: Efficient Transpose
+//! Attention Pipeline for Accelerating MLA Inference on NVIDIA H20 GPUs*
+//! (CS.DC 2025).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): query-major
+//!   FlashMLA baseline and the transposed ETAP pipeline, lowered AOT.
+//! * **L2** — JAX MLA model (`python/compile/model.py`), lowered to HLO
+//!   text artifacts at build time.
+//! * **L3** — this crate: the serving coordinator (router, continuous
+//!   batcher, paged latent-KV cache, scheduler, workers), the PJRT runtime
+//!   that executes the artifacts, and the H20/WGMMA performance simulator
+//!   that reproduces the paper's evaluation (Fig. 1, Table 1) on hardware
+//!   we do not have.
+//!
+//! Python never runs on the request path: `make artifacts` runs once, the
+//! `flashmla-etap` binary is self-contained afterwards.
+
+pub mod attention;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod hardware;
+pub mod kvcache;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,319 @@
+//! `flashmla-etap` — leader CLI.
+//!
+//! Subcommands:
+//!   sweep     reproduce Fig. 1 (TFLOPS/s per framework per seq len)
+//!   rmse      reproduce Table 1 (FP16 RMSE vs FP64 reference)
+//!   serve     end-to-end serving demo on the AOT artifacts (PJRT CPU)
+//!   simulate  paper-scale 8×H20 cluster serving simulation
+//!   padding   WGMMA padding / utilization analysis (§3.1)
+//!   info      artifact manifest summary
+//!
+//! Run `flashmla-etap <cmd> --help` for the per-command flags.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use flashmla_etap::attention::precision::table1_experiment;
+use flashmla_etap::attention::AttnShape;
+use flashmla_etap::bench::Table;
+use flashmla_etap::config::Config;
+use flashmla_etap::coordinator::{ClusterSim, Engine, TraceRequest};
+use flashmla_etap::hardware::{padding_factor, GpuSpec};
+use flashmla_etap::sim::figures;
+use flashmla_etap::util::argparse::ArgParser;
+use flashmla_etap::util::rng::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, rest)) if !c.starts_with('-') => (c.clone(), rest.to_vec()),
+        _ => {
+            eprintln!(
+                "usage: flashmla-etap <sweep|rmse|serve|simulate|padding|info> [flags]\n\
+                 run a subcommand with --help for details"
+            );
+            std::process::exit(2);
+        }
+    };
+    let code = match cmd.as_str() {
+        "sweep" => cmd_sweep(&rest),
+        "rmse" => cmd_rmse(&rest),
+        "serve" => cmd_serve(&rest),
+        "simulate" => cmd_simulate(&rest),
+        "padding" => cmd_padding(&rest),
+        "info" => cmd_info(&rest),
+        other => {
+            eprintln!("unknown command `{other}`");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_or_exit(p: &ArgParser, argv: &[String]) -> flashmla_etap::util::argparse::Args {
+    match p.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_sweep(argv: &[String]) -> i32 {
+    let p = ArgParser::new("flashmla-etap sweep", "reproduce Fig. 1")
+        .opt("batch", Some("16"), "batch size (16 or 32; 0 = both)")
+        .opt("gpu", Some("h20"), "gpu spec (h20|h100|h800|a100)")
+        .flag("csv", "emit CSV instead of a table");
+    let a = parse_or_exit(&p, argv);
+    let gpu = match GpuSpec::by_name(a.get("gpu").unwrap()) {
+        Some(g) => g,
+        None => {
+            eprintln!("unknown gpu");
+            return 2;
+        }
+    };
+    let batches: Vec<usize> = match a.get("batch").unwrap() {
+        "0" => vec![16, 32],
+        s => vec![s.parse().unwrap_or(16)],
+    };
+    for b in batches {
+        let t = figures::figure1_table(b, &gpu);
+        if a.has("csv") {
+            print!("{}", t.csv());
+        } else {
+            t.print();
+            let r = figures::headline_ratios(b, &gpu);
+            println!(
+                "headline (batch {b}): ETAP vs FlashMLA {:.2}x @64K ({:.2}x @512), \
+                 vs FA-3 {:.2}x, vs FlashInfer {:.2}x | paper: 2.78x (1.44x), 5.24x, 4.94x @BS16\n",
+                r.speedup_vs_flashmla_64k,
+                r.speedup_vs_flashmla_512,
+                r.speedup_vs_fa3_64k,
+                r.speedup_vs_flashinfer_64k
+            );
+        }
+    }
+    0
+}
+
+fn cmd_rmse(argv: &[String]) -> i32 {
+    let p = ArgParser::new("flashmla-etap rmse", "reproduce Table 1")
+        .opt("kv-len", Some("4096"), "context length")
+        .opt("heads", Some("16"), "attention heads")
+        .opt("reps", Some("3"), "random workloads to average")
+        .opt("seed", Some("42"), "rng seed");
+    let a = parse_or_exit(&p, argv);
+    let n = a.get_usize("kv-len").unwrap();
+    let h = a.get_usize("heads").unwrap();
+    let shape = AttnShape {
+        h,
+        d: 576,
+        dv: 512,
+        n,
+    };
+    let scale = 1.0 / (192.0f32).sqrt();
+    println!(
+        "Table 1 — FP16 RMSE vs FP64 reference (h={h}, d=576, dv=512, n={n})"
+    );
+    let t0 = Instant::now();
+    let results = table1_experiment(
+        &shape,
+        scale,
+        64,
+        a.get_usize("reps").unwrap(),
+        a.get_u64("seed").unwrap(),
+    );
+    let mut t = Table::new("Table 1", &["Framework", "RMSE (model)", "RMSE (paper)"]);
+    let paper = [1.9e-4, 1.25e-5];
+    for (r, p) in results.iter().zip(paper) {
+        t.row(&[
+            r.framework.to_string(),
+            format!("{:.3e}", r.rmse),
+            format!("{p:.3e}"),
+        ]);
+    }
+    t.print();
+    let ratio = results[0].rmse / results[1].rmse;
+    println!(
+        "ratio: {ratio:.1}x lower for ETAP (paper: 15.2x) [{:.1}s]",
+        t0.elapsed().as_secs_f64()
+    );
+    0
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    let p = ArgParser::new(
+        "flashmla-etap serve",
+        "serve synthetic requests end-to-end on the PJRT artifacts",
+    )
+    .opt("artifacts", Some("artifacts"), "artifacts directory")
+    .opt("config", None, "optional TOML/JSON config file")
+    .opt("kernel", Some("etap"), "attention mode (etap|flashmla)")
+    .opt("requests", Some("12"), "number of synthetic requests")
+    .opt("slots", Some("4"), "batch slots")
+    .opt("max-new", Some("16"), "max new tokens per request")
+    .opt("seed", Some("42"), "rng seed");
+    let a = parse_or_exit(&p, argv);
+
+    let mut cfg = match a.get("config") {
+        Some(path) => match Config::from_file(&PathBuf::from(path)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config: {e}");
+                return 2;
+            }
+        },
+        None => Config::default(),
+    };
+    cfg.engine.kernel = a.get("kernel").unwrap().to_string();
+    cfg.engine.max_slots = a.get_usize("slots").unwrap();
+    let dir = PathBuf::from(a.get("artifacts").unwrap());
+
+    let mut engine = match Engine::new(&dir, cfg.engine.clone()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine: {e} (did you run `make artifacts`?)");
+            return 1;
+        }
+    };
+    let mut rng = Rng::new(a.get_u64("seed").unwrap());
+    let n_req = a.get_usize("requests").unwrap();
+    let max_new = a.get_usize("max-new").unwrap();
+    for _ in 0..n_req {
+        let plen = rng.range(1, 12) as usize;
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.range(1, 500) as i32).collect();
+        let budget = rng.range(2, max_new as u64 + 1) as usize;
+        engine.submit(prompt, budget);
+    }
+    let t0 = Instant::now();
+    let report = match engine.run_to_completion() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "served {n_req} requests in {:.2}s ({} recompositions)",
+        t0.elapsed().as_secs_f64(),
+        report.recompositions
+    );
+    println!("{}", report.metrics.report());
+    0
+}
+
+fn cmd_simulate(argv: &[String]) -> i32 {
+    let p = ArgParser::new(
+        "flashmla-etap simulate",
+        "paper-scale 8xH20 serving simulation",
+    )
+    .opt("kernel", Some("etap"), "kernel model (etap|flashmla|fa3|flashinfer)")
+    .opt("requests", Some("64"), "trace length")
+    .opt("context", Some("16384"), "KV context per request at arrival")
+    .opt("gen", Some("64"), "tokens generated per request")
+    .opt("batch", Some("16"), "max batch")
+    .opt("rate", Some("4.0"), "arrival rate (requests/s)")
+    .opt("seed", Some("42"), "rng seed");
+    let a = parse_or_exit(&p, argv);
+    let mut cfg = flashmla_etap::coordinator::ClusterConfig::default();
+    cfg.kernel = a.get("kernel").unwrap().to_string();
+    let sim = match ClusterSim::new(cfg, GpuSpec::h20()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut rng = Rng::new(a.get_u64("seed").unwrap());
+    let rate = a.get_f64("rate").unwrap();
+    let mut t = 0.0f64;
+    let trace: Vec<TraceRequest> = (0..a.get_usize("requests").unwrap())
+        .map(|_| {
+            t += rng.exponential(rate) * 1e6;
+            TraceRequest {
+                arrival_us: t,
+                context_len: a.get_usize("context").unwrap(),
+                gen_len: a.get_usize("gen").unwrap(),
+            }
+        })
+        .collect();
+    let rep = sim.serve_trace(&trace, a.get_usize("batch").unwrap());
+    println!(
+        "kernel={} | {:.1} tok/s over {:.2} simulated s | mean batch {:.1} | \
+         TPOT p50 {:.1} ms p99 {:.1} ms | mean queue wait {:.1} ms",
+        a.get("kernel").unwrap(),
+        rep.tokens_per_s,
+        rep.simulated_s,
+        rep.mean_batch,
+        rep.tpot_p50_ms,
+        rep.tpot_p99_ms,
+        rep.mean_wait_ms
+    );
+    0
+}
+
+fn cmd_padding(argv: &[String]) -> i32 {
+    let p = ArgParser::new(
+        "flashmla-etap padding",
+        "WGMMA padding / utilization analysis (paper s3.1)",
+    )
+    .opt("gpu", Some("h20"), "gpu spec");
+    let a = parse_or_exit(&p, argv);
+    let gpu = GpuSpec::by_name(a.get("gpu").unwrap()).unwrap_or_else(GpuSpec::h20);
+    let mut t = Table::new(
+        &format!("M-dimension padding on {} ({}xM atom)", gpu.name, gpu.atom.min_m),
+        &["heads/GPU", "padding factor", "utilization ceiling"],
+    );
+    for heads in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+        let f = padding_factor(heads, &gpu.atom);
+        t.row(&[
+            heads.to_string(),
+            format!("{f:.2}x"),
+            format!("{:.1}%", 100.0 / f),
+        ]);
+    }
+    t.print();
+    println!(
+        "DeepSeek-R1 on 8 GPUs -> 16 heads/GPU -> {:.0}x padding, <={:.0}% utilization \
+         (paper: \"often reducing compute utilization to below 25%\")",
+        padding_factor(16, &gpu.atom),
+        100.0 / padding_factor(16, &gpu.atom)
+    );
+    0
+}
+
+fn cmd_info(argv: &[String]) -> i32 {
+    let p = ArgParser::new("flashmla-etap info", "artifact manifest summary")
+        .opt("artifacts", Some("artifacts"), "artifacts directory");
+    let a = parse_or_exit(&p, argv);
+    let dir = PathBuf::from(a.get("artifacts").unwrap());
+    match flashmla_etap::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("{} artifacts in {}", m.artifacts.len(), dir.display());
+            for kind in ["attention", "decode_step"] {
+                for kernel in ["etap", "flashmla"] {
+                    let buckets = m.buckets(kind, kernel);
+                    if !buckets.is_empty() {
+                        println!("  {kind}/{kernel}: {buckets:?}");
+                    }
+                }
+            }
+            if let Some(model) = &m.model {
+                println!(
+                    "  model: {} layers, d_model {}, vocab {}, latent {} ({} weights)",
+                    model.n_layers,
+                    model.d_model,
+                    model.vocab_size,
+                    model.latent_dim,
+                    model.weights.len()
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("info: {e} (run `make artifacts`)");
+            1
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Artifact manifest: the machine-readable index `aot.py` writes next to
+//! the HLO text files.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Element type of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" => Ok(Dtype::S32),
+            other => anyhow::bail!("unsupported dtype `{other}`"),
+        }
+    }
+}
+
+/// One named tensor in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Json) -> anyhow::Result<Self> {
+        let shape = v
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|s| s.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: v.str_of("name")?.to_string(),
+            shape,
+            dtype: Dtype::parse(v.str_of("dtype")?)?,
+        })
+    }
+}
+
+/// One AOT artifact (attention core or full decode step).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,   // "attention" | "decode_step"
+    pub kernel: String, // "etap" | "flashmla"
+    pub batch: usize,
+    pub kv_bucket: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    // Attention-only geometry (0 when absent).
+    pub heads: usize,
+    pub d: usize,
+    pub dv: usize,
+    pub scale: f64,
+}
+
+impl ArtifactMeta {
+    fn parse(v: &Json) -> anyhow::Result<Self> {
+        let specs = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+            v.get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("missing {key}"))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect()
+        };
+        Ok(ArtifactMeta {
+            name: v.str_of("name")?.to_string(),
+            file: v.str_of("file")?.to_string(),
+            kind: v.str_of("kind")?.to_string(),
+            kernel: v.str_of("kernel")?.to_string(),
+            batch: v.usize_of("batch")?,
+            kv_bucket: v.usize_of("kv_bucket")?,
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            heads: v.get("heads").as_usize().unwrap_or(0),
+            d: v.get("d").as_usize().unwrap_or(0),
+            dv: v.get("dv").as_usize().unwrap_or(0),
+            scale: v.get("scale").as_f64().unwrap_or(0.0),
+        })
+    }
+}
+
+/// Tiny-model metadata (weights blob + geometry).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub kv_lora_rank: usize,
+    pub rope_dim: usize,
+    pub latent_dim: usize,
+    pub weights_file: String,
+    pub weights_sha256: String,
+    /// (name, shape) in canonical (sorted) order == AOT input order.
+    pub weights: Vec<(String, Vec<usize>)>,
+}
+
+impl ModelMeta {
+    fn parse(v: &Json) -> anyhow::Result<Self> {
+        let cfg = v.get("config");
+        let weights = v
+            .get("weights")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing model.weights"))?
+            .iter()
+            .map(|w| {
+                let shape = w
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("bad weight shape"))?
+                    .iter()
+                    .map(|s| s.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                Ok((w.str_of("name")?.to_string(), shape))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(ModelMeta {
+            vocab_size: cfg.usize_of("vocab_size")?,
+            d_model: cfg.usize_of("d_model")?,
+            n_layers: cfg.usize_of("n_layers")?,
+            n_heads: cfg.usize_of("n_heads")?,
+            kv_lora_rank: cfg.usize_of("kv_lora_rank")?,
+            rope_dim: cfg.usize_of("rope_dim")?,
+            latent_dim: cfg.usize_of("latent_dim")?,
+            weights_file: v.str_of("weights_file")?.to_string(),
+            weights_sha256: v.str_of("weights_sha256")?.to_string(),
+            weights,
+        })
+    }
+
+    /// Total f32 elements in the weights blob.
+    pub fn total_weight_elems(&self) -> usize {
+        self.weights.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub model: Option<ModelMeta>,
+}
+
+impl Manifest {
+    /// Load from an artifacts directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let v = json::parse_file(&dir.join("manifest.json"))?;
+        let artifacts = v
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(ArtifactMeta::parse)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let model = match v.get("model") {
+            Json::Null => None,
+            m => Some(ModelMeta::parse(m)?),
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            model,
+        })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Smallest bucket artifact that fits (kind, kernel, batch ≥ b, n ≥ len).
+    pub fn best_bucket(
+        &self,
+        kind: &str,
+        kernel: &str,
+        batch: usize,
+        kv_len: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == kind && a.kernel == kernel && a.batch >= batch && a.kv_bucket >= kv_len
+            })
+            .min_by_key(|a| (a.batch, a.kv_bucket))
+    }
+
+    /// All (batch, kv_bucket) pairs available for a (kind, kernel).
+    pub fn buckets(&self, kind: &str, kernel: &str) -> Vec<(usize, usize)> {
+        let mut v: Vec<_> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.kernel == kernel)
+            .map(|a| (a.batch, a.kv_bucket))
+            .collect();
+        v.sort();
+        v
+    }
+
+    pub fn artifact_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+/// Load the raw little-endian f32 weights blob described by `model`.
+pub fn load_weights(dir: &Path, model: &ModelMeta) -> anyhow::Result<Vec<(String, Vec<usize>, Vec<f32>)>> {
+    let blob = std::fs::read(dir.join(&model.weights_file))?;
+    let expected = model.total_weight_elems() * 4;
+    anyhow::ensure!(
+        blob.len() == expected,
+        "weights blob {} bytes, expected {expected}",
+        blob.len()
+    );
+    let mut out = Vec::with_capacity(model.weights.len());
+    let mut off = 0usize;
+    for (name, shape) in &model.weights {
+        let n: usize = shape.iter().product();
+        let mut vals = Vec::with_capacity(n);
+        for i in 0..n {
+            let b = &blob[off + i * 4..off + i * 4 + 4];
+            vals.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        off += n * 4;
+        out.push((name.clone(), shape.clone(), vals));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn sample() -> &'static str {
+        r#"{
+          "format_version": 1,
+          "artifacts": [
+            {"name": "attn_etap_b1_n256", "file": "a.hlo.txt", "kind": "attention",
+             "kernel": "etap", "batch": 1, "kv_bucket": 256,
+             "heads": 16, "d": 576, "dv": 512, "scale": 0.07,
+             "inputs": [{"name": "q", "shape": [1, 16, 576], "dtype": "f32"}],
+             "outputs": [{"name": "out", "shape": [1, 16, 512], "dtype": "f32"}]},
+            {"name": "attn_etap_b4_n512", "file": "b.hlo.txt", "kind": "attention",
+             "kernel": "etap", "batch": 4, "kv_bucket": 512,
+             "inputs": [], "outputs": []},
+            {"name": "attn_flashmla_b1_n256", "file": "c.hlo.txt", "kind": "attention",
+             "kernel": "flashmla", "batch": 1, "kv_bucket": 256,
+             "inputs": [], "outputs": []}
+          ],
+          "model": null
+        }"#
+    }
+
+    #[test]
+    fn parse_and_lookup() {
+        let dir = std::env::temp_dir().join(format!("manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, sample());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert!(m.model.is_none());
+        let a = m.by_name("attn_etap_b1_n256").unwrap();
+        assert_eq!(a.heads, 16);
+        assert_eq!(a.inputs[0].shape, vec![1, 16, 576]);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bucket_selection_picks_smallest_fit() {
+        let dir = std::env::temp_dir().join(format!("manifest_test2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, sample());
+        let m = Manifest::load(&dir).unwrap();
+        // 1 request, 100 tokens → the b1/n256 artifact, not b4/n512.
+        let a = m.best_bucket("attention", "etap", 1, 100).unwrap();
+        assert_eq!(a.name, "attn_etap_b1_n256");
+        // 2 requests → must take b4.
+        let a = m.best_bucket("attention", "etap", 2, 100).unwrap();
+        assert_eq!(a.name, "attn_etap_b4_n512");
+        // 600 tokens → nothing fits.
+        assert!(m.best_bucket("attention", "etap", 1, 600).is_none());
+        // kernel filter respected.
+        let a = m.best_bucket("attention", "flashmla", 1, 256).unwrap();
+        assert_eq!(a.name, "attn_flashmla_b1_n256");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn buckets_listing_sorted() {
+        let dir = std::env::temp_dir().join(format!("manifest_test3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, sample());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.buckets("attention", "etap"), vec![(1, 256), (4, 512)]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

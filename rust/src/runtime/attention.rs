@@ -1,0 +1,81 @@
+//! Typed runner for the attention-core artifacts (paper geometry).
+
+use std::sync::Arc;
+
+use super::client::{literal_f32, literal_from_f32, literal_from_i32, LoadedExec, Runtime};
+
+/// Executes `attn_{kernel}_b{B}_n{N}` artifacts.
+pub struct AttentionRunner {
+    exec: Arc<LoadedExec>,
+    pub batch: usize,
+    pub heads: usize,
+    pub d: usize,
+    pub dv: usize,
+    pub kv_bucket: usize,
+}
+
+impl AttentionRunner {
+    /// Load the named attention artifact.
+    pub fn new(rt: &Runtime, name: &str) -> anyhow::Result<Self> {
+        let exec = rt.load(name)?;
+        let m = &exec.meta;
+        anyhow::ensure!(m.kind == "attention", "{name} is not an attention artifact");
+        Ok(AttentionRunner {
+            batch: m.batch,
+            heads: m.heads,
+            d: m.d,
+            dv: m.dv,
+            kv_bucket: m.kv_bucket,
+            exec,
+        })
+    }
+
+    /// Pick the best bucket for (kernel, batch, kv_len) and load it.
+    pub fn best(rt: &Runtime, kernel: &str, batch: usize, kv_len: usize) -> anyhow::Result<Self> {
+        let meta = rt
+            .manifest()
+            .best_bucket("attention", kernel, batch, kv_len)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no attention bucket for kernel={kernel} b={batch} n={kv_len}")
+            })?
+            .clone();
+        Self::new(rt, &meta.name)
+    }
+
+    /// Run one decode-attention pass.
+    ///
+    /// `q` is `[batch × heads × d]`, `cache` is `[batch × kv_bucket × d]`
+    /// (padded), `lengths` the valid lengths.  Returns
+    /// `(out [batch × heads × dv], lse [batch × heads])`.
+    pub fn run(
+        &self,
+        q: &[f32],
+        cache: &[f32],
+        lengths: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (b, h, d, n) = (self.batch, self.heads, self.d, self.kv_bucket);
+        anyhow::ensure!(q.len() == b * h * d, "q: {} != {}", q.len(), b * h * d);
+        anyhow::ensure!(
+            cache.len() == b * n * d,
+            "cache: {} != {}",
+            cache.len(),
+            b * n * d
+        );
+        anyhow::ensure!(lengths.len() == b, "lengths: {} != {b}", lengths.len());
+        for &l in lengths {
+            anyhow::ensure!(l >= 0 && l as usize <= n, "length {l} out of bucket {n}");
+        }
+
+        let lits = self.exec.run(&[
+            literal_from_f32(q, &[b as i64, h as i64, d as i64])?,
+            literal_from_f32(cache, &[b as i64, n as i64, d as i64])?,
+            literal_from_i32(lengths, &[b as i64])?,
+        ])?;
+        anyhow::ensure!(lits.len() == 2, "expected (out, lse), got {}", lits.len());
+        Ok((literal_f32(&lits[0])?, literal_f32(&lits[1])?))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.exec.meta.name
+    }
+}

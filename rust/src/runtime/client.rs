@@ -1,0 +1,161 @@
+//! The PJRT client wrapper: compile-once executable cache over the
+//! artifact manifest.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::artifact::{ArtifactMeta, Manifest};
+use crate::log_info;
+
+/// A compiled artifact ready to execute.
+pub struct LoadedExec {
+    pub meta: ArtifactMeta,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedExec {
+    /// Execute with literal inputs; returns the un-tupled output literals.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<L>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.meta.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal {}: {e:?}", self.meta.name))?;
+        // aot.py lowers with return_tuple=True → always a tuple.
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e:?}", self.meta.name))
+    }
+
+    /// Execute with device-buffer inputs (hot path: weights/cache stay on
+    /// device); returns raw output buffers.
+    pub fn run_buffers(
+        &self,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<Vec<xla::PjRtBuffer>> {
+        let mut bufs = self
+            .exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow::anyhow!("execute_b {}: {e:?}", self.meta.name))?;
+        Ok(bufs.remove(0))
+    }
+}
+
+/// PJRT CPU runtime over an artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<LoadedExec>>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime and load the manifest.
+    pub fn cpu(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        log_info!(
+            "runtime",
+            "PJRT {} with {} artifact(s) from {}",
+            client.platform_name(),
+            manifest.artifacts.len(),
+            artifacts_dir.display()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&self, name: &str) -> anyhow::Result<Arc<LoadedExec>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let meta = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact named `{name}`"))?
+            .clone();
+        let path = self.manifest.artifact_path(&meta);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        log_info!(
+            "runtime",
+            "compiled {name} in {:.1} ms",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        let loaded = Arc::new(LoadedExec { meta, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&loaded));
+        Ok(loaded)
+    }
+
+    /// Upload a host f32 tensor as a device buffer.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    /// Upload a host i32 tensor as a device buffer.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Literal → Vec<f32> with error context.
+pub fn literal_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to f32: {e:?}"))
+}
+
+/// Literal → Vec<i32>.
+pub fn literal_i32(lit: &xla::Literal) -> anyhow::Result<Vec<i32>> {
+    lit.to_vec::<i32>()
+        .map_err(|e| anyhow::anyhow!("literal to i32: {e:?}"))
+}
+
+/// Build an f32 literal with the given logical dims.
+pub fn literal_from_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape f32 literal to {dims:?}: {e:?}"))
+}
+
+/// Build an i32 literal with the given logical dims.
+pub fn literal_from_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape i32 literal to {dims:?}: {e:?}"))
+}

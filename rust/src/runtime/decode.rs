@@ -1,0 +1,163 @@
+//! Typed runner for the tiny-model decode-step artifacts.
+//!
+//! Input order (fixed by `aot.py`): `tokens, cache, lengths, *weights`
+//! with weights in canonical (sorted-name) order.
+//!
+//! Perf note (EXPERIMENTS.md §Perf): weights are uploaded to the PJRT
+//! device **once** at load and the step path uses `execute_b` over device
+//! buffers.  The naive literal path re-marshals the full 10.9 MB weight
+//! blob host→device on every step; keeping weights resident removes that
+//! entirely (the dominant per-step overhead outside the computation).
+
+use std::sync::Arc;
+
+use super::artifact::{load_weights, ModelMeta};
+use super::client::{literal_f32, literal_from_f32, literal_from_i32, LoadedExec, Runtime};
+
+/// Executes `decode_{kernel}_b{B}_n{N}` artifacts.
+pub struct DecodeRunner {
+    exec: Arc<LoadedExec>,
+    /// Device-resident weight buffers (canonical order).
+    weights: Vec<xla::PjRtBuffer>,
+    pub model: ModelMeta,
+    pub batch: usize,
+    pub kv_bucket: usize,
+}
+
+impl DecodeRunner {
+    /// Load the named decode artifact plus the weights blob.
+    pub fn new(rt: &Runtime, name: &str) -> anyhow::Result<Self> {
+        let exec = rt.load(name)?;
+        anyhow::ensure!(
+            exec.meta.kind == "decode_step",
+            "{name} is not a decode_step artifact"
+        );
+        let model = rt
+            .manifest()
+            .model
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("manifest has no model section"))?;
+        let raw = load_weights(&rt.manifest().dir, &model)?;
+        let mut weights = Vec::with_capacity(raw.len());
+        for (_name, shape, vals) in &raw {
+            // Upload once; stays on the PJRT device for the runner's life.
+            weights.push(rt.upload_f32(vals, shape)?);
+        }
+        Ok(DecodeRunner {
+            batch: exec.meta.batch,
+            kv_bucket: exec.meta.kv_bucket,
+            exec,
+            weights,
+            model,
+        })
+    }
+
+    /// Pick the smallest bucket fitting (kernel, batch, kv_len).
+    pub fn best(rt: &Runtime, kernel: &str, batch: usize, kv_len: usize) -> anyhow::Result<Self> {
+        let meta = rt
+            .manifest()
+            .best_bucket("decode_step", kernel, batch, kv_len)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no decode bucket for kernel={kernel} b={batch} n={kv_len}")
+            })?
+            .clone();
+        Self::new(rt, &meta.name)
+    }
+
+    /// A zeroed cache literal `[L × B × N × latent]`.
+    pub fn fresh_cache(&self) -> anyhow::Result<xla::Literal> {
+        let dims = [
+            self.model.n_layers as i64,
+            self.batch as i64,
+            self.kv_bucket as i64,
+            self.model.latent_dim as i64,
+        ];
+        let n: usize = dims.iter().map(|&d| d as usize).product();
+        literal_from_f32(&vec![0.0; n], &dims)
+    }
+
+    /// One decode step.  `lengths[b]` is the tokens already cached for
+    /// request b (positions are written at `lengths[b]`); the caller
+    /// advances lengths for active requests.
+    ///
+    /// Returns `(logits [batch × vocab], new_cache)`.
+    pub fn step(
+        &self,
+        tokens: &[i32],
+        cache: &xla::Literal,
+        lengths: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, xla::Literal)> {
+        anyhow::ensure!(tokens.len() == self.batch, "tokens len");
+        anyhow::ensure!(lengths.len() == self.batch, "lengths len");
+        for &l in lengths {
+            anyhow::ensure!(
+                (l as usize) < self.kv_bucket,
+                "length {l} overflows bucket {} (no room for this token)",
+                self.kv_bucket
+            );
+        }
+        let client = self.exec.exe.client();
+        // Small per-step uploads; weights stay device-resident.
+        let tok = client
+            .buffer_from_host_buffer(tokens, &[self.batch], None)
+            .map_err(|e| anyhow::anyhow!("upload tokens: {e:?}"))?;
+        let len = client
+            .buffer_from_host_buffer(lengths, &[self.batch], None)
+            .map_err(|e| anyhow::anyhow!("upload lengths: {e:?}"))?;
+        let cache_buf = client
+            .buffer_from_host_literal(None, cache)
+            .map_err(|e| anyhow::anyhow!("upload cache: {e:?}"))?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(3 + self.weights.len());
+        inputs.push(&tok);
+        inputs.push(&cache_buf);
+        inputs.push(&len);
+        for w in &self.weights {
+            inputs.push(w);
+        }
+        let out = self.exec.run_buffers(&inputs)?;
+        let lit = out[0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let mut lits = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        anyhow::ensure!(lits.len() == 2, "expected (logits, cache)");
+        let cache_out = lits.pop().unwrap();
+        let logits = literal_f32(&lits[0])?;
+        Ok((logits, cache_out))
+    }
+
+    /// Greedy argmax over one request's logits row.
+    pub fn argmax_row(logits: &[f32], vocab: usize, row: usize) -> i32 {
+        let slice = &logits[row * vocab..(row + 1) * vocab];
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &v) in slice.iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        best as i32
+    }
+
+    pub fn name(&self) -> &str {
+        &self.exec.meta.name
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.model.vocab_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_row_picks_max_per_row() {
+        let logits = vec![0.1, 0.9, 0.5, /* row 1 */ 7.0, -1.0, 2.0];
+        assert_eq!(DecodeRunner::argmax_row(&logits, 3, 0), 1);
+        assert_eq!(DecodeRunner::argmax_row(&logits, 3, 1), 0);
+    }
+}

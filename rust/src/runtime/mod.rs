@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! request path.
+//!
+//! This is the only place the `xla` crate is touched.  Flow (see
+//! /opt/xla-example/load_hlo/): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` (once per artifact, cached) → `execute`/`execute_b`.
+//!
+//! Python never runs here: artifacts are produced by `make artifacts`
+//! (`python/compile/aot.py`) and described by `artifacts/manifest.json`.
+
+pub mod artifact;
+pub mod attention;
+pub mod client;
+pub mod decode;
+
+pub use artifact::{ArtifactMeta, Dtype, Manifest, ModelMeta, TensorSpec};
+pub use attention::AttentionRunner;
+pub use client::Runtime;
+pub use decode::DecodeRunner;

@@ -1,0 +1,124 @@
+//! GEMM tile algebra: maps the two attention GEMMs of each computation
+//! mode onto the hardware matmul atom and counts issued vs useful FLOPs.
+
+use crate::hardware::gpu::MatmulAtom;
+use crate::hardware::wgmma;
+
+/// Logical dimensions of one GEMM.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GemmDims {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmDims {
+    pub fn new(m: usize, n: usize, k: usize) -> Self {
+        GemmDims { m, n, k }
+    }
+
+    /// Useful FLOPs (2·M·N·K).
+    pub fn useful_flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// FLOPs actually issued once M/N are padded to the atom.
+    pub fn issued_flops(&self, atom: &MatmulAtom) -> f64 {
+        let m = wgmma::padded_rows(self.m, atom) as f64;
+        let n = wgmma::padded_cols(self.n, atom) as f64;
+        2.0 * m * n * self.k as f64
+    }
+
+    /// Issued / useful ≥ 1.
+    pub fn waste_factor(&self, atom: &MatmulAtom) -> f64 {
+        self.issued_flops(atom) / self.useful_flops()
+    }
+}
+
+/// The two GEMMs of one KV block in *query-major* (original FlashMLA) mode:
+/// `S = Q·K^T` is (H × Bc × d_qk); `O += P·V` is (H × d_v × Bc).
+/// Heads sit on M in both — the padded dimension.
+pub fn query_major_gemms(heads: usize, block_kv: usize, d_qk: usize, d_v: usize) -> [GemmDims; 2] {
+    [
+        GemmDims::new(heads, block_kv, d_qk),
+        GemmDims::new(heads, d_v, block_kv),
+    ]
+}
+
+/// The two GEMMs of one KV block in *ETAP (KV-major)* mode (paper eq. 1–3):
+/// `S^T = K·Q^T` is (Bc × H × d_qk); `O^T += V^T·P^T` is (d_v × H × Bc).
+/// M is the KV block (64-aligned) resp. d_v (512) — no padding.
+pub fn etap_gemms(heads: usize, block_kv: usize, d_qk: usize, d_v: usize) -> [GemmDims; 2] {
+    [
+        GemmDims::new(block_kv, heads, d_qk),
+        GemmDims::new(d_v, heads, block_kv),
+    ]
+}
+
+/// Aggregate waste factor over a full decode pass (all KV blocks have the
+/// same shape, so the per-block factor is the pass factor).
+pub fn mode_waste_factor(gemms: &[GemmDims; 2], atom: &MatmulAtom) -> f64 {
+    let useful: f64 = gemms.iter().map(|g| g.useful_flops()).sum();
+    let issued: f64 = gemms.iter().map(|g| g.issued_flops(atom)).sum();
+    issued / useful
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::gpu::MatmulAtom;
+
+    const WGMMA: MatmulAtom = MatmulAtom::wgmma();
+
+    #[test]
+    fn query_major_waste_is_4x_at_16_heads() {
+        // The paper's central claim: both GEMMs pad 16 → 64 on M.
+        let g = query_major_gemms(16, 64, 576, 512);
+        assert!((mode_waste_factor(&g, &WGMMA) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn etap_waste_is_1x() {
+        let g = etap_gemms(16, 64, 576, 512);
+        // N = 16 heads pads to 16 (n_step 8) — exactly representable.
+        assert!((mode_waste_factor(&g, &WGMMA) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn etap_advantage_shrinks_with_more_heads() {
+        // With 64 heads per GPU (no head split) query-major wouldn't pad:
+        // the paper's pathology is specific to the sharded deployment.
+        let q64 = query_major_gemms(64, 64, 576, 512);
+        assert!((mode_waste_factor(&q64, &WGMMA) - 1.0).abs() < 1e-12);
+        let q8 = query_major_gemms(8, 64, 576, 512);
+        assert!((mode_waste_factor(&q8, &WGMMA) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn issued_flops_counts_padding() {
+        let g = GemmDims::new(16, 64, 576);
+        assert_eq!(g.useful_flops(), 2.0 * 16.0 * 64.0 * 576.0);
+        assert_eq!(g.issued_flops(&WGMMA), 2.0 * 64.0 * 64.0 * 576.0);
+        assert_eq!(g.waste_factor(&WGMMA), 4.0);
+    }
+
+    #[test]
+    fn n_padding_counted_too() {
+        // N=12 pads to 16 under n_step 8 → ×(16/12) on that axis.
+        let g = GemmDims::new(64, 12, 64);
+        assert!((g.waste_factor(&WGMMA) - 16.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn waste_factor_on_mxu_analogue() {
+        // TPU adaptation numbers used in DESIGN.md §8.
+        let mxu = MatmulAtom::mxu();
+        let g = query_major_gemms(16, 128, 576, 512);
+        let w = mode_waste_factor(&g, &mxu);
+        assert!(w >= 8.0, "MXU underfill should be ≥8×, got {w}");
+        let e = etap_gemms(16, 128, 576, 512);
+        // ETAP on MXU still pads N=16→128 on the *narrow* axis, but M is
+        // full: overall waste far below query-major.
+        assert!(mode_waste_factor(&e, &mxu) < w);
+    }
+}

@@ -1,0 +1,87 @@
+//! FlashInfer kernel model (paper §2, §4).
+//!
+//! Algorithm-derived structure: like FA-3 it runs the generic
+//! `S = Q·K^T / softmax / P·V` pattern on decompressed K/V (no latent
+//! absorption), query-major → 4× padding.  Differences from FA-3 in the
+//! model: FlashInfer's paged layout and fused decode kernels are tuned for
+//! serving, so it sustains a bit more bandwidth (`mem_eff 0.85`) and a
+//! slightly better decode pipeline (`pipe_eff 0.49`) at the cost of a
+//! larger launch path through its plan/run split (`launch 16 µs`).
+//!
+//! Calibrated against Fig. 1's FlashInfer bars (~8→18 TFLOPS/s at BS=16,
+//! up to 23 at BS=32).
+
+use crate::hardware::GpuSpec;
+use crate::sim::engine::{estimate, Estimate, PipelineParams};
+use crate::sim::gemm::query_major_gemms;
+use crate::sim::memory::split_kv_traffic;
+use crate::sim::workload::DecodeWorkload;
+
+use super::KernelModel;
+
+pub struct FlashInfer {
+    params: PipelineParams,
+}
+
+impl FlashInfer {
+    pub fn new() -> Self {
+        FlashInfer {
+            params: PipelineParams {
+                name: "FlashInfer",
+                block_kv: 64,
+                pipe_eff: 0.53,
+                fill_blocks: 4.0,
+                mem_eff: 0.85,
+                launch_us: 16.0,
+                persistent: false, // plan/run split grid
+                ctas: |w| w.batch * w.heads.div_ceil(64).max(1) * 8,
+            },
+        }
+    }
+}
+
+impl Default for FlashInfer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KernelModel for FlashInfer {
+    fn name(&self) -> &'static str {
+        "FlashInfer"
+    }
+
+    fn estimate(&self, w: &DecodeWorkload, gpu: &GpuSpec) -> Estimate {
+        let gemms = query_major_gemms(w.heads, self.params.block_kv, w.d_qk, w.d_v);
+        let traffic = split_kv_traffic(w, 1, 0.0);
+        estimate(&self.params, &gemms, &traffic, w, gpu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::kernels::FlashAttention3;
+
+    #[test]
+    fn near_paper_value_at_64k() {
+        // Paper: 18 TFLOPS/s at 64K BS=16.
+        let e = FlashInfer::new()
+            .estimate(&DecodeWorkload::paper(16, 65536), &GpuSpec::h20());
+        assert!(
+            (e.tflops_per_s - 18.0).abs() / 18.0 < 0.2,
+            "model {} vs paper 18",
+            e.tflops_per_s
+        );
+    }
+
+    #[test]
+    fn slightly_ahead_of_fa3_at_long_context() {
+        // Fig. 1: FlashInfer edges out FA-3 at 64K (18 vs 17; 23 vs 21).
+        let gpu = GpuSpec::h20();
+        let w = DecodeWorkload::paper(16, 65536);
+        let fi = FlashInfer::new().estimate(&w, &gpu).tflops_per_s;
+        let fa = FlashAttention3::new().estimate(&w, &gpu).tflops_per_s;
+        assert!(fi > fa, "FlashInfer {fi} should beat FA-3 {fa} at 64K");
+    }
+}

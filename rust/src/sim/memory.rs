@@ -1,0 +1,102 @@
+//! HBM traffic accounting for one decode-attention forward pass.
+
+use super::workload::DecodeWorkload;
+
+/// Byte-level traffic breakdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Traffic {
+    /// KV cache reads (the dominant term at long context).
+    pub kv_bytes: f64,
+    /// Query reads + output/LSE writes.
+    pub qo_bytes: f64,
+    /// Extra passes (e.g. ETAP's final transpose staging, split-KV
+    /// partial-result combines).
+    pub extra_bytes: f64,
+}
+
+impl Traffic {
+    pub fn total(&self) -> f64 {
+        self.kv_bytes + self.qo_bytes + self.extra_bytes
+    }
+
+    /// Time in µs at `bytes_per_us` sustained bandwidth.
+    pub fn time_us(&self, bytes_per_us: f64, mem_eff: f64) -> f64 {
+        assert!(mem_eff > 0.0 && mem_eff <= 1.0);
+        self.total() / (bytes_per_us * mem_eff)
+    }
+}
+
+/// Traffic for a framework that shares the MLA latent across heads
+/// (FlashMLA, FlashMLA-ETAP): each token's 576-dim latent is read once.
+pub fn latent_traffic(w: &DecodeWorkload, extra_bytes: f64) -> Traffic {
+    Traffic {
+        kv_bytes: w.batch as f64 * w.kv_len as f64 * w.latent_bytes_per_token(),
+        qo_bytes: w.qo_bytes(),
+        extra_bytes,
+    }
+}
+
+/// Traffic for a framework on decompressed K/V (FA-3, FlashInfer run the
+/// generic attention pattern: K and V are distinct tensors).  `kv_heads`
+/// is the number of distinct KV heads materialized (1 = MQA-style layout,
+/// which is the best case for these baselines on MLA models).
+pub fn split_kv_traffic(w: &DecodeWorkload, kv_heads: usize, extra_bytes: f64) -> Traffic {
+    Traffic {
+        kv_bytes: w.batch as f64
+            * w.kv_len as f64
+            * kv_heads as f64
+            * w.split_kv_bytes_per_token(),
+        qo_bytes: w.qo_bytes(),
+        extra_bytes,
+    }
+}
+
+/// Compute intensity (useful FLOPs per byte moved).
+pub fn intensity(w: &DecodeWorkload, t: &Traffic) -> f64 {
+    w.useful_flops() / t.total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latent_traffic_dominated_by_kv() {
+        let w = DecodeWorkload::paper(16, 65536);
+        let t = latent_traffic(&w, 0.0);
+        // 16·65536·1152 B ≈ 1.208 GB.
+        assert!((t.kv_bytes - 1.2079e9).abs() / 1.2079e9 < 1e-3);
+        assert!(t.qo_bytes / t.kv_bytes < 1e-3);
+    }
+
+    #[test]
+    fn split_kv_costs_more() {
+        let w = DecodeWorkload::paper(16, 16384);
+        let lat = latent_traffic(&w, 0.0);
+        let split = split_kv_traffic(&w, 1, 0.0);
+        let amp = split.kv_bytes / lat.kv_bytes;
+        assert!((amp - 1088.0 / 576.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mla_is_memory_bound_on_h20_even_without_padding() {
+        use crate::hardware::GpuSpec;
+        // Intensity of latent MLA decode: 2·H·(dqk+dv) / (dqk·2) ≈ 30
+        // FLOPs/B < H20 ridge 37 → ETAP ends up bandwidth-limited, which is
+        // exactly why its curve saturates near 90 rather than 148 TFLOPS/s.
+        let w = DecodeWorkload::paper(16, 65536);
+        let t = latent_traffic(&w, 0.0);
+        let i = intensity(&w, &t);
+        assert!(i > 29.0 && i < 31.0, "intensity {i}");
+        assert!(i < GpuSpec::h20().ridge_flops_per_byte());
+    }
+
+    #[test]
+    fn time_scales_with_efficiency() {
+        let w = DecodeWorkload::paper(16, 4096);
+        let t = latent_traffic(&w, 0.0);
+        let fast = t.time_us(4e6, 1.0);
+        let slow = t.time_us(4e6, 0.5);
+        assert!((slow / fast - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,23 @@
+//! H20 performance simulator — the testbed substitute (DESIGN.md §2).
+//!
+//! The paper's evaluation ran CUDA kernels on a physical H20; we have CPUs.
+//! This module reproduces Fig. 1 / the §4 analysis from first principles:
+//! WGMMA tile algebra (`gemm`), producer/consumer pipeline fill
+//! (`pipeline`), HBM traffic (`memory`), and the roofline composition
+//! (`engine`).  Each evaluated framework is a `KernelModel` whose
+//! parameters are derived from its documented algorithm; a small set of
+//! efficiency constants is calibrated against the paper's published bar
+//! heights (see `kernels/` and EXPERIMENTS.md for paper-vs-model tables).
+
+pub mod engine;
+pub mod figures;
+pub mod gemm;
+pub mod kernels;
+pub mod memory;
+pub mod pipeline;
+pub mod roofline;
+pub mod workload;
+
+pub use engine::{Estimate, PipelineParams};
+pub use kernels::{all_models, model_by_name, KernelModel};
+pub use workload::DecodeWorkload;

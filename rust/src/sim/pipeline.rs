@@ -1,0 +1,97 @@
+//! Producer/consumer pipeline fill model.
+//!
+//! FlashMLA-style kernels stream KV blocks through an s-stage circular SMEM
+//! buffer (Algorithm 1 line 1): the warpgroup pipeline reaches steady state
+//! only after a prologue of loads, and drains at the end.  With `T_c`
+//! blocks and an effective fill cost of `fill_blocks` block-times, the
+//! fraction of time in steady state is `T_c / (T_c + fill)` — the standard
+//! throughput expression for a linear pipeline.
+//!
+//! Wave quantization: a grid of `ctas` CTAs on `sm_count` SMs runs in
+//! `ceil(ctas/sm)` waves but only fills `ctas/sm` of them.
+
+/// Steady-state fraction of a block pipeline.
+pub fn fill_efficiency(t_c: usize, fill_blocks: f64) -> f64 {
+    assert!(t_c >= 1);
+    assert!(fill_blocks >= 0.0);
+    t_c as f64 / (t_c as f64 + fill_blocks)
+}
+
+/// Occupancy of the last (partial) wave amortized over the grid.
+pub fn wave_efficiency(ctas: usize, sm_count: usize) -> f64 {
+    assert!(ctas >= 1 && sm_count >= 1);
+    let waves = ctas.div_ceil(sm_count) as f64;
+    ctas as f64 / (waves * sm_count as f64).max(ctas as f64)
+}
+
+/// Number of KV blocks for a context length.
+pub fn kv_blocks(kv_len: usize, block_kv: usize) -> usize {
+    assert!(block_kv >= 1);
+    kv_len.div_ceil(block_kv).max(1)
+}
+
+/// SMEM footprint (bytes) of one pipeline stage holding a K/V block of
+/// `block_kv × d` halfs — used to check how many stages fit.
+pub fn stage_bytes(block_kv: usize, d: usize, dtype_bytes: usize) -> usize {
+    block_kv * d * dtype_bytes
+}
+
+/// Maximum circular-buffer stages that fit in SMEM after reserving
+/// `reserved` bytes for Q, accumulators and barriers.
+pub fn max_stages(smem_bytes: usize, stage: usize, reserved: usize) -> usize {
+    if smem_bytes <= reserved || stage == 0 {
+        return 0;
+    }
+    (smem_bytes - reserved) / stage
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_efficiency_limits() {
+        assert!((fill_efficiency(1, 0.0) - 1.0).abs() < 1e-12);
+        // Long contexts approach 1.
+        assert!(fill_efficiency(1024, 16.0) > 0.98);
+        // Short contexts pay heavily.
+        assert!(fill_efficiency(8, 16.0) < 0.34);
+    }
+
+    #[test]
+    fn fill_efficiency_monotone_in_t_c() {
+        let mut prev = 0.0;
+        for t in [1, 2, 4, 8, 64, 1024] {
+            let e = fill_efficiency(t, 8.0);
+            assert!(e > prev);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn wave_efficiency_exact_fit() {
+        assert_eq!(wave_efficiency(78, 78), 1.0);
+        assert_eq!(wave_efficiency(156, 78), 1.0);
+        // 79 CTAs on 78 SMs: second wave nearly empty.
+        let e = wave_efficiency(79, 78);
+        assert!(e > 0.5 && e < 0.51);
+    }
+
+    #[test]
+    fn kv_blocks_rounding() {
+        assert_eq!(kv_blocks(512, 64), 8);
+        assert_eq!(kv_blocks(513, 64), 9);
+        assert_eq!(kv_blocks(1, 64), 1);
+    }
+
+    #[test]
+    fn smem_budget_h20() {
+        // Paper kernel: Bc=64, d=576 f16 → 72 KiB per stage; H20 has
+        // 228 KiB → 2 stages fit with ~64 KiB reserved (double buffering,
+        // matching Algorithm 1's s-stage circular buffer with s=2).
+        let stage = stage_bytes(64, 576, 2);
+        assert_eq!(stage, 73_728);
+        let stages = max_stages(228 * 1024, stage, 64 * 1024);
+        assert_eq!(stages, 2);
+    }
+}

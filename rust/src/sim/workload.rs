@@ -1,0 +1,101 @@
+//! Decode-attention workload description (the paper's §4.1 setup).
+
+/// One MLA decode-attention forward pass: every request contributes one
+/// query token against its KV context.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecodeWorkload {
+    /// Requests in the batch (paper: 16 and 32).
+    pub batch: usize,
+    /// Attention heads on this GPU (paper: 128/8 = 16).
+    pub heads: usize,
+    /// Query/key dim per head — for MLA this is the latent dim 512 + 64
+    /// rope = 576 (paper §4.1 "head dimension 576").
+    pub d_qk: usize,
+    /// Value dim (first 512 latent dims).
+    pub d_v: usize,
+    /// KV context length (paper sweeps 512 … 64K).
+    pub kv_len: usize,
+    /// Bytes per stored element (FP16/BF16 = 2).
+    pub dtype_bytes: usize,
+}
+
+impl DecodeWorkload {
+    /// Paper-standard workload at a given (batch, kv_len).
+    pub fn paper(batch: usize, kv_len: usize) -> Self {
+        DecodeWorkload {
+            batch,
+            heads: 16,
+            d_qk: 576,
+            d_v: 512,
+            kv_len,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Useful (algorithmic) FLOPs: 2·B·H·N·(d_qk + d_v) — one MAC each for
+    /// the S and PV contractions per (head, kv position).
+    pub fn useful_flops(&self) -> f64 {
+        2.0 * self.batch as f64
+            * self.heads as f64
+            * self.kv_len as f64
+            * (self.d_qk + self.d_v) as f64
+    }
+
+    /// Bytes of latent KV cache per token (shared across heads under MLA).
+    pub fn latent_bytes_per_token(&self) -> f64 {
+        (self.d_qk * self.dtype_bytes) as f64
+    }
+
+    /// Bytes of K + V per token for a framework that does NOT share the
+    /// latent (FA-3 / FlashInfer operating on decompressed K and V).
+    pub fn split_kv_bytes_per_token(&self) -> f64 {
+        ((self.d_qk + self.d_v) * self.dtype_bytes) as f64
+    }
+
+    /// Query + output traffic (read q, write out + lse); small next to KV.
+    pub fn qo_bytes(&self) -> f64 {
+        (self.batch * self.heads * (self.d_qk + self.d_v + 1) * self.dtype_bytes) as f64
+    }
+
+    /// The paper's sequence-length sweep.
+    pub fn paper_seq_lens() -> &'static [usize] {
+        &[512, 1024, 2048, 4096, 8192, 16384, 32768, 65536]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn useful_flops_match_hand_count() {
+        // BS=16, 64K: 2·16·16·65536·1088 = 36.507 GFLOP.
+        let w = DecodeWorkload::paper(16, 65536);
+        assert!((w.useful_flops() - 36.507e9).abs() / 36.507e9 < 1e-3);
+    }
+
+    #[test]
+    fn latent_vs_split_amplification() {
+        let w = DecodeWorkload::paper(16, 4096);
+        // Split K/V costs (576+512)/576 ≈ 1.89× the latent bytes.
+        let amp = w.split_kv_bytes_per_token() / w.latent_bytes_per_token();
+        assert!((amp - 1088.0 / 576.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flops_linear_in_batch_and_len() {
+        let a = DecodeWorkload::paper(16, 1024).useful_flops();
+        let b = DecodeWorkload::paper(32, 1024).useful_flops();
+        let c = DecodeWorkload::paper(16, 2048).useful_flops();
+        assert!((b / a - 2.0).abs() < 1e-12);
+        assert!((c / a - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_sweep_is_512_to_64k() {
+        let lens = DecodeWorkload::paper_seq_lens();
+        assert_eq!(lens.first(), Some(&512));
+        assert_eq!(lens.last(), Some(&65536));
+        assert_eq!(lens.len(), 8);
+    }
+}

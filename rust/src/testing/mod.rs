@@ -1,0 +1,5 @@
+//! Property-testing mini-framework (proptest substitute).
+
+pub mod prop;
+
+pub use prop::{forall, Config, Gen};

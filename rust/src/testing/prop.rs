@@ -1,0 +1,232 @@
+//! Seeded property testing: generators over `util::rng::Rng`, a `forall`
+//! runner with shrinking-lite (retry with smaller size parameter), and
+//! failure reports that print the reproducing seed.
+//!
+//! Usage:
+//! ```no_run
+//! use flashmla_etap::prop_assert;
+//! use flashmla_etap::testing::{forall, Config};
+//! forall(Config::default().cases(200), |g| {
+//!     let xs = g.vec_f64(1..100, -1e3..1e3);
+//!     let sum: f64 = xs.iter().sum();
+//!     let rev: f64 = xs.iter().rev().sum();
+//!     prop_assert!((sum - rev).abs() < 1e-3, "sum order: {sum} vs {rev}");
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::ops::Range;
+
+/// Runner configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Size scaling in [0,1] ramps up over the run (small cases first).
+    pub max_size: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed override via env for CI reproduction.
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xF1A5_4313);
+        Config {
+            cases: 100,
+            seed,
+            max_size: 1.0,
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Per-case generator handle: draws values from the case's RNG, scaled by
+/// the ramp-up `size` so early cases are small (shrinking-lite).
+pub struct Gen {
+    rng: Rng,
+    size: f64,
+    pub case_index: usize,
+}
+
+impl Gen {
+    /// Integer in `range`, biased toward the low end early in the run.
+    pub fn usize(&mut self, range: Range<usize>) -> usize {
+        assert!(range.start < range.end);
+        let span = range.end - range.start;
+        let scaled = ((span as f64 - 1.0) * self.size).floor() as usize + 1;
+        range.start + self.rng.below(scaled.max(1))
+    }
+
+    pub fn u64(&mut self, range: Range<u64>) -> u64 {
+        self.usize(range.start as usize..range.end as usize) as u64
+    }
+
+    pub fn f64(&mut self, range: Range<f64>) -> f64 {
+        range.start + self.rng.f64() * (range.end - range.start)
+    }
+
+    pub fn f32(&mut self, range: Range<f32>) -> f32 {
+        self.f64(range.start as f64..range.end as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.rng.normal_f32()
+    }
+
+    /// Vector with length drawn from `len` and normal(0,1) f32 entries.
+    pub fn normal_vec(&mut self, len: Range<usize>) -> Vec<f32> {
+        let n = self.usize(len);
+        self.rng.normal_vec(n)
+    }
+
+    /// Vector with uniform f64 entries.
+    pub fn vec_f64(&mut self, len: Range<usize>, vals: Range<f64>) -> Vec<f64> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.f64(vals.clone())).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    /// Raw RNG access for custom generators.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `body` over `cfg.cases` generated cases; panics with the seed and
+/// case index on the first failure.
+pub fn forall<F>(cfg: Config, body: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        // Ramp size: the first ~25% of cases use small inputs, making the
+        // first failure likely to be near-minimal (shrinking-lite).
+        let ramp = ((case + 1) as f64 / (cfg.cases as f64 * 0.25)).min(1.0);
+        let mut gen = Gen {
+            rng: root.fork(case as u64),
+            size: ramp * cfg.max_size,
+            case_index: case,
+        };
+        if let Err(msg) = body(&mut gen) {
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}, PROP_SEED={} to reproduce):\n  {msg}",
+                cfg.cases, cfg.seed, cfg.seed
+            );
+        }
+    }
+}
+
+/// `assert!` for property bodies: returns Err(String) instead of panicking
+/// so `forall` can attach the seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+/// Approximate-equality prop assert.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b, tol) = ($a as f64, $b as f64, $tol as f64);
+        if (a - b).abs() > tol {
+            return Err(format!(
+                "{} ≉ {} (|Δ| = {:e} > tol {:e})",
+                a, b, (a - b).abs(), tol
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        // Count via a cell captured by the closure.
+        let counter = std::cell::Cell::new(0usize);
+        forall(Config::default().cases(50), |g| {
+            counter.set(counter.get() + 1);
+            let v = g.vec_f64(1..20, -1.0..1.0);
+            prop_assert!(!v.is_empty());
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        forall(Config::default().cases(50).seed(1), |g| {
+            let n = g.usize(1..100);
+            prop_assert!(n < 90, "n was {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let maxes = std::cell::Cell::new((usize::MAX, 0usize));
+        forall(Config::default().cases(100), |g| {
+            let n = g.usize(1..1000);
+            let (lo, hi) = maxes.get();
+            if g.case_index < 5 {
+                maxes.set((lo.min(n), hi));
+            }
+            if g.case_index > 90 {
+                maxes.set((lo, hi.max(n)));
+            }
+            Ok(())
+        });
+        let (early_min, late_max) = maxes.get();
+        assert!(early_min < 200, "early cases should be small: {early_min}");
+        assert!(late_max > 200, "late cases should reach larger sizes: {late_max}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let v = std::cell::RefCell::new(Vec::new());
+            forall(Config::default().cases(10).seed(seed), |g| {
+                v.borrow_mut().push(g.usize(0..1000));
+                Ok(())
+            });
+            v.into_inner()
+        };
+        assert_eq!(collect(5), collect(5));
+        assert_ne!(collect(5), collect(6));
+    }
+}

@@ -1,0 +1,252 @@
+//! Tiny declarative CLI parser (clap substitute) used by `main.rs`, the
+//! examples and the bench harness.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative argument parser: `--name value`, `--flag`, positionals.
+pub struct ArgParser {
+    program: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+    positional: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl ArgParser {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        ArgParser {
+            program,
+            about,
+            opts: Vec::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: default.map(|s| s.to_string()),
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Declare a positional argument (documentation only; not enforced).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positional.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positional {
+                s.push_str(&format!("  <{p:<14}> {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let left = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let default = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {left:<20} {}{default}\n", o.help));
+        }
+        s.push_str("  --help               print this help\n");
+        s
+    }
+
+    /// Parse; returns Err with a usage message on bad input or `--help`.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                out.values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                // Support --name=value too.
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let v = if let Some(v) = inline {
+                        v
+                    } else {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| format!("--{name} needs a value"))?
+                    };
+                    out.values.insert(name.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]); exits on error/help.
+    pub fn parse_or_exit(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.starts_with(self.program) { 0 } else { 2 });
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> ArgParser {
+        ArgParser::new("prog", "test program")
+            .opt("batch", Some("16"), "batch size")
+            .opt("name", None, "a name")
+            .flag("verbose", "talk more")
+            .positional("cmd", "subcommand")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = parser().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("batch"), Some("16"));
+        assert_eq!(a.get("name"), None);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let a = parser()
+            .parse(&argv(&["run", "--batch", "32", "--verbose", "--name=x"]))
+            .unwrap();
+        assert_eq!(a.get_usize("batch").unwrap(), 32);
+        assert_eq!(a.get("name"), Some("x"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positionals(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parser().parse(&argv(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parser().parse(&argv(&["--name"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = parser().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("USAGE"));
+        assert!(err.contains("--batch"));
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parser().parse(&argv(&["--verbose=1"])).is_err());
+    }
+}

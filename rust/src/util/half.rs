@@ -1,0 +1,274 @@
+//! Software IEEE-754 binary16 (`f16`) and bfloat16 (`bf16`) (half-crate
+//! substitute).
+//!
+//! Conversions use round-to-nearest-even, matching GPU tensor-core and TPU
+//! behaviour — this is what makes the Table 1 RMSE experiment meaningful:
+//! the FA-3-style kernel model accumulates through repeated f16 roundings
+//! while the ETAP model keeps f32 accumulators and rounds once.
+
+#![allow(non_camel_case_types)]
+
+/// IEEE-754 binary16: 1 sign, 5 exponent, 10 mantissa bits.
+#[derive(Clone, Copy, PartialEq, Debug, Default)]
+pub struct f16(pub u16);
+
+/// bfloat16: 1 sign, 8 exponent, 7 mantissa bits (truncated f32).
+#[derive(Clone, Copy, PartialEq, Debug, Default)]
+pub struct bf16(pub u16);
+
+impl f16 {
+    pub const ZERO: f16 = f16(0);
+    pub const ONE: f16 = f16(0x3C00);
+    pub const INFINITY: f16 = f16(0x7C00);
+    pub const NEG_INFINITY: f16 = f16(0xFC00);
+    pub const MAX: f16 = f16(0x7BFF); // 65504
+    /// Smallest positive normal (2^-14).
+    pub const MIN_POSITIVE: f16 = f16(0x0400);
+    /// Machine epsilon (2^-10).
+    pub const EPSILON: f16 = f16(0x1400);
+
+    /// Convert from f32 with round-to-nearest-even (IEEE default).
+    pub fn from_f32(x: f32) -> f16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let man = bits & 0x007F_FFFF;
+
+        if exp == 0xFF {
+            // Inf / NaN: preserve a quiet NaN payload bit.
+            return if man == 0 {
+                f16(sign | 0x7C00)
+            } else {
+                f16(sign | 0x7E00)
+            };
+        }
+        // Rebias: f32 bias 127 → f16 bias 15.
+        let unbiased = exp - 127;
+        if unbiased >= 16 {
+            return f16(sign | 0x7C00); // overflow → inf
+        }
+        if unbiased >= -14 {
+            // Normal range. 23→10 mantissa bits: round off 13 bits RNE.
+            let half_exp = ((unbiased + 15) as u32) << 10;
+            let half_man = man >> 13;
+            let round_bits = man & 0x1FFF;
+            let mut h = sign as u32 | half_exp | half_man;
+            if round_bits > 0x1000 || (round_bits == 0x1000 && (half_man & 1) == 1) {
+                h += 1; // carries correctly into the exponent
+            }
+            return f16(h as u16);
+        }
+        if unbiased >= -25 {
+            // Subnormal f16.
+            let full_man = man | 0x0080_0000; // implicit leading 1
+            let shift = (-14 - unbiased + 13) as u32;
+            let half_man = full_man >> shift;
+            let rem = full_man & ((1u32 << shift) - 1);
+            let halfway = 1u32 << (shift - 1);
+            let mut h = sign as u32 | half_man;
+            if rem > halfway || (rem == halfway && (half_man & 1) == 1) {
+                h += 1;
+            }
+            return f16(h as u16);
+        }
+        f16(sign) // underflow → signed zero
+    }
+
+    /// Convert to f32 (exact).
+    pub fn to_f32(self) -> f32 {
+        let h = self.0 as u32;
+        let sign = (h & 0x8000) << 16;
+        let exp = (h >> 10) & 0x1F;
+        let man = h & 0x03FF;
+        let bits = if exp == 0 {
+            if man == 0 {
+                sign // signed zero
+            } else {
+                // Subnormal: normalize.
+                let lead = man.leading_zeros() - 22; // zeros within 10-bit field
+                let man_norm = (man << (lead + 1)) & 0x03FF;
+                let exp32 = 127 - 15 - lead;
+                sign | (exp32 << 23) | (man_norm << 13)
+            }
+        } else if exp == 0x1F {
+            sign | 0x7F80_0000 | (man << 13) // inf / nan
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (man << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x03FF) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+}
+
+impl bf16 {
+    pub const ZERO: bf16 = bf16(0);
+    pub const ONE: bf16 = bf16(0x3F80);
+
+    /// Convert from f32 with round-to-nearest-even.
+    pub fn from_f32(x: f32) -> bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            return bf16(((bits >> 16) as u16) | 0x0040); // quiet
+        }
+        let lower = bits & 0xFFFF;
+        let upper = bits >> 16;
+        let rounded = if lower > 0x8000 || (lower == 0x8000 && (upper & 1) == 1) {
+            upper + 1
+        } else {
+            upper
+        };
+        bf16(rounded as u16)
+    }
+
+    /// Convert to f32 (exact: bf16 is truncated f32).
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7F80) == 0x7F80 && (self.0 & 0x007F) != 0
+    }
+}
+
+/// Round an f32 through f16 precision (the "store to f16 register" op).
+#[inline]
+pub fn round_f16(x: f32) -> f32 {
+    f16::from_f32(x).to_f32()
+}
+
+/// Round an f32 through bf16 precision.
+#[inline]
+pub fn round_bf16(x: f32) -> f32 {
+    bf16::from_f32(x).to_f32()
+}
+
+/// f16-precision fused a*b+c as a tensor-core-style MAC: the product is
+/// exact in f32, the accumulate result is rounded back to f16 (models
+/// WGMMA with an f16 accumulator — the low-precision mode the paper's
+/// Table 1 baseline suffers from).
+#[inline]
+pub fn mac_f16_acc(a: f32, b: f32, c: f32) -> f32 {
+    round_f16(round_f16(a) * round_f16(b) + c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f16::from_f32(0.0).0, 0x0000);
+        assert_eq!(f16::from_f32(-0.0).0, 0x8000);
+        assert_eq!(f16::from_f32(1.0).0, 0x3C00);
+        assert_eq!(f16::from_f32(-2.0).0, 0xC000);
+        assert_eq!(f16::from_f32(65504.0).0, 0x7BFF); // f16::MAX
+        assert_eq!(f16::from_f32(0.5).0, 0x3800);
+        assert_eq!(f16::from_f32(0.099976).0, 0x2E66); // ≈0.1 in f16
+    }
+
+    #[test]
+    fn f16_round_trip_exact_for_representables() {
+        // All 2^16 bit patterns that are finite numbers round-trip exactly.
+        let mut checked = 0u32;
+        for bits in 0u16..=0xFFFF {
+            let h = f16(bits);
+            if h.is_nan() {
+                assert!(f16::from_f32(h.to_f32()).is_nan());
+                continue;
+            }
+            let back = f16::from_f32(h.to_f32());
+            assert_eq!(back.0, h.0, "bits {bits:#06x}");
+            checked += 1;
+        }
+        assert!(checked > 63000);
+    }
+
+    #[test]
+    fn f16_overflow_to_inf() {
+        assert_eq!(f16::from_f32(1e6), f16::INFINITY);
+        assert_eq!(f16::from_f32(-1e6), f16::NEG_INFINITY);
+        assert_eq!(f16::from_f32(65520.0), f16::INFINITY); // just past MAX+ulp/2
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 2.0f32.powi(-24); // smallest positive subnormal
+        assert_eq!(f16::from_f32(tiny).0, 0x0001);
+        assert_eq!(f16(0x0001).to_f32(), tiny);
+        let below = 2.0f32.powi(-26);
+        assert_eq!(f16::from_f32(below).0, 0x0000); // underflow
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 → ties to even (1.0).
+        let halfway = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f16::from_f32(halfway).0, f16::ONE.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9 → even is 1+2^-9... no:
+        // mantissa 1 (odd) vs 2 (even) → rounds up to 2.
+        let halfway2 = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f16::from_f32(halfway2).0, 0x3C02);
+    }
+
+    #[test]
+    fn f16_nan_propagates() {
+        assert!(f16::from_f32(f32::NAN).is_nan());
+        assert!(f16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn bf16_known_values() {
+        assert_eq!(bf16::from_f32(1.0).0, 0x3F80);
+        assert_eq!(bf16::from_f32(-1.0).0, 0xBF80);
+        assert_eq!(bf16::from_f32(0.0).0, 0x0000);
+        // 3.140625 is exactly representable (0x4049).
+        assert_eq!(bf16::from_f32(3.140625).0, 0x4049);
+    }
+
+    #[test]
+    fn bf16_round_trip() {
+        for bits in [0x0000u16, 0x3F80, 0xC000, 0x7F00, 0x0080, 0x4049] {
+            let b = bf16(bits);
+            assert_eq!(bf16::from_f32(b.to_f32()).0, bits);
+        }
+    }
+
+    #[test]
+    fn bf16_rne() {
+        // f32 1.0 + 2^-8 is halfway between bf16 1.0 (0x3F80) and 0x3F81 → even.
+        let x = f32::from_bits(0x3F80_8000);
+        assert_eq!(bf16::from_f32(x).0, 0x3F80);
+        let y = f32::from_bits(0x3F81_8000); // halfway, odd → up
+        assert_eq!(bf16::from_f32(y).0, 0x3F82);
+    }
+
+    #[test]
+    fn f16_monotone_on_grid() {
+        let mut prev = f32::NEG_INFINITY;
+        for i in -1000..1000 {
+            let x = i as f32 * 0.37;
+            let r = round_f16(x.clamp(-60000.0, 60000.0));
+            if x > prev {
+                // rounding is monotone
+                assert!(r >= round_f16(prev.clamp(-60000.0, 60000.0)));
+            }
+            prev = x;
+        }
+    }
+
+    #[test]
+    fn mac_f16_loses_small_addends() {
+        // 2048 + 1 == 2048 in f16 (ulp at 2048 is 2) — the accumulation
+        // pathology Table 1's baseline exhibits.
+        assert_eq!(mac_f16_acc(1.0, 1.0, 2048.0), 2048.0);
+        // While f32 accumulation keeps it.
+        assert_eq!(1.0f32 * 1.0 + 2048.0, 2049.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Build-everything substrates: the crates.io closure available offline is
+//! limited to the `xla` dependency tree, so the usual ecosystem pieces
+//! (rand, half, serde_json, clap, criterion's stats) are implemented here.
+
+pub mod argparse;
+pub mod half;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod toml;
+
+pub use half::{bf16, f16};
+pub use rng::Rng;

@@ -1,0 +1,208 @@
+//! Fixed-size worker thread pool (rayon/tokio substitute) used by the
+//! coordinator's worker topology and the bench harness.
+//!
+//! Jobs are `FnOnce` closures dispatched over an MPMC channel built from
+//! `std::sync::mpsc` + a mutexed receiver; completion is tracked with a
+//! `WaitGroup`-style counter so callers can block on a batch of jobs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A simple fixed-size thread pool.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "thread pool needs at least one worker");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                std::thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cv) = &*pending;
+                                let mut p = lock.lock().unwrap();
+                                *p -= 1;
+                                if *p == 0 {
+                                    cv.notify_all();
+                                }
+                            }
+                            Err(_) => return, // channel closed
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            pending,
+        }
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Map a function over items in parallel, preserving order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> = Arc::new(Mutex::new(
+            items.iter().map(|_| None).collect(),
+        ));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.wait();
+        Arc::try_unwrap(results)
+            .ok()
+            .expect("all jobs done")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("job completed"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel → workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Atomic counter handy for cross-thread metrics.
+#[derive(Default)]
+pub struct Counter(AtomicUsize);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicUsize::new(0))
+    }
+
+    pub fn add(&self, n: usize) -> usize {
+        self.0.fetch_add(n, Ordering::Relaxed) + n
+    }
+
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(Counter::new());
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.add(1);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.get(), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<u64>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn wait_with_no_jobs_returns() {
+        let pool = ThreadPool::new(1);
+        pool.wait();
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(Counter::new());
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.add(1);
+            });
+        }
+        drop(pool); // must not hang; jobs may or may not all run before close
+    }
+
+    #[test]
+    fn parallel_speedup_structure() {
+        // Not a timing assert — just that concurrent jobs interleave.
+        let pool = ThreadPool::new(4);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..8 {
+            let order = Arc::clone(&order);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis((8 - i) * 2));
+                order.lock().unwrap().push(i);
+            });
+        }
+        pool.wait();
+        assert_eq!(order.lock().unwrap().len(), 8);
+    }
+}

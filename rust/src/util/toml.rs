@@ -1,0 +1,253 @@
+//! Minimal TOML reader (config-file substrate).
+//!
+//! Supports the subset used by this project's config files: `[table]` and
+//! `[table.sub]` headers, `key = value` with strings, integers, floats,
+//! booleans, and flat arrays.  Values land in a `Json` tree so `config/`
+//! can consume TOML and JSON uniformly.
+
+use super::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse TOML text into a JSON object tree.
+pub fn parse(input: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError {
+            line: lineno + 1,
+            msg: msg.to_string(),
+        };
+        if let Some(header) = line.strip_prefix('[') {
+            let header = header
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated table header"))?;
+            if header.is_empty() || header.starts_with('[') {
+                return Err(err("array-of-tables not supported"));
+            }
+            current_path = header.split('.').map(|s| s.trim().to_string()).collect();
+            ensure_table(&mut root, &current_path).map_err(|m| err(&m))?;
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| err("expected `key = value`"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let value = parse_value(value.trim()).map_err(|m| err(&m))?;
+        let table = navigate(&mut root, &current_path).map_err(|m| err(&m))?;
+        if table.insert(key.to_string(), value).is_some() {
+            return Err(err(&format!("duplicate key `{key}`")));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<(), String> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(o) => cur = o,
+            _ => return Err(format!("`{part}` is not a table")),
+        }
+    }
+    Ok(())
+}
+
+fn navigate<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for part in path {
+        match cur.get_mut(part) {
+            Some(Json::Obj(_)) => {
+                cur = match cur.get_mut(part) {
+                    Some(Json::Obj(o)) => o,
+                    _ => unreachable!(),
+                };
+            }
+            _ => return Err(format!("missing table `{part}`")),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str) -> Result<Json, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape \\{other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Json::Str(out));
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Json::Arr(vec![]));
+        }
+        // Split on commas outside strings.
+        let mut items = Vec::new();
+        let mut depth_str = false;
+        let mut start = 0usize;
+        for (i, c) in inner.char_indices() {
+            match c {
+                '"' => depth_str = !depth_str,
+                ',' if !depth_str => {
+                    items.push(parse_value(inner[start..i].trim())?);
+                    start = i + 1;
+                }
+                _ => {}
+            }
+        }
+        items.push(parse_value(inner[start..].trim())?);
+        return Ok(Json::Arr(items));
+    }
+    // Numbers (allow underscores).
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(n) = cleaned.parse::<i64>() {
+        return Ok(Json::Num(n as f64));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Json::Num(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+/// Parse a TOML file into the JSON tree.
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_tables_and_types() {
+        let doc = r#"
+# top comment
+name = "flashmla"   # trailing comment
+threads = 8
+ratio = 0.25
+big = 1_000_000
+on = true
+
+[serving]
+max_batch = 32
+buckets = [256, 512, 1024]
+
+[serving.timeouts]
+admit_ms = 5.5
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").as_str(), Some("flashmla"));
+        assert_eq!(v.get("threads").as_usize(), Some(8));
+        assert_eq!(v.get("ratio").as_f64(), Some(0.25));
+        assert_eq!(v.get("big").as_usize(), Some(1_000_000));
+        assert_eq!(v.get("on").as_bool(), Some(true));
+        assert_eq!(v.get("serving").get("max_batch").as_usize(), Some(32));
+        assert_eq!(
+            v.get("serving").get("buckets").at(1).as_usize(),
+            Some(512)
+        );
+        assert_eq!(
+            v.get("serving").get("timeouts").get("admit_ms").as_f64(),
+            Some(5.5)
+        );
+    }
+
+    #[test]
+    fn string_escapes_and_hash_in_string() {
+        let v = parse("s = \"a#b\\nc\"").unwrap();
+        assert_eq!(v.get("s").as_str(), Some("a#b\nc"));
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let e = parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn array_of_strings() {
+        let v = parse(r#"xs = ["a", "b,c", "d"]"#).unwrap();
+        assert_eq!(v.get("xs").at(1).as_str(), Some("b,c"));
+        assert_eq!(v.get("xs").as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn nested_header_creates_path() {
+        let v = parse("[a.b.c]\nx = 1").unwrap();
+        assert_eq!(v.get("a").get("b").get("c").get("x").as_usize(), Some(1));
+    }
+}

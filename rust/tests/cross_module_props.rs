@@ -1,0 +1,156 @@
+//! Cross-module property tests: equivalences that span the attention
+//! numerics, kv-cache, and coordinator layers under random inputs.
+
+use flashmla_etap::attention::{etap_f32, naive_f32, naive_f64, online_f32, AttnShape};
+use flashmla_etap::kvcache::{CacheConfig, PagedLatentCache};
+use flashmla_etap::prop_assert;
+use flashmla_etap::sim::gemm::{etap_gemms, query_major_gemms, mode_waste_factor};
+use flashmla_etap::hardware::gpu::MatmulAtom;
+use flashmla_etap::testing::{forall, Config};
+use flashmla_etap::util::half::{bf16, f16, round_f16};
+
+#[test]
+fn prop_three_attention_orders_agree() {
+    // naive == online(query-major) == etap(kv-major) for random shapes,
+    // blocks, and data: the paper's §3.1 equivalence at f32.
+    forall(Config::default().cases(60), |g| {
+        let h = g.usize(1..9);
+        let d = g.usize(4..48);
+        let dv = g.usize(1..d + 1);
+        let n = g.usize(1..200);
+        let block = *g.choose(&[1usize, 7, 32, 64, 256]);
+        let shape = AttnShape { h, d, dv, n };
+        let q = g.normal_vec(shape.q_len()..shape.q_len() + 1);
+        let c = g.normal_vec(shape.cache_len()..shape.cache_len() + 1);
+        let scale = g.f32(0.05..1.0);
+        let a = naive_f32(&shape, &q, &c, scale);
+        let b = online_f32(&shape, &q, &c, scale, block);
+        let e = etap_f32(&shape, &q, &c, scale, block);
+        for i in 0..a.len() {
+            prop_assert!(
+                (a[i] - b[i]).abs() < 2e-4,
+                "online diverged at {i}: {} vs {}",
+                a[i],
+                b[i]
+            );
+            prop_assert!(
+                (a[i] - e[i]).abs() < 2e-4,
+                "etap diverged at {i}: {} vs {}",
+                a[i],
+                e[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f32_attention_tracks_f64() {
+    forall(Config::default().cases(30), |g| {
+        let shape = AttnShape {
+            h: g.usize(1..5),
+            d: g.usize(8..32),
+            dv: 8,
+            n: g.usize(8..128),
+        };
+        let q = g.normal_vec(shape.q_len()..shape.q_len() + 1);
+        let c = g.normal_vec(shape.cache_len()..shape.cache_len() + 1);
+        let got = etap_f32(&shape, &q, &c, 0.2, 32);
+        let want = naive_f64(&shape, &q, &c, 0.2);
+        for (x, y) in got.iter().zip(&want) {
+            prop_assert!(
+                (*x as f64 - y).abs() < 1e-4,
+                "f32 drifted: {x} vs {y}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_half_round_trip_monotone_and_bounded() {
+    forall(Config::default().cases(300), |g| {
+        let x = g.f32(-60000.0..60000.0);
+        let r = round_f16(x);
+        // Relative error bounded by f16 epsilon for normal range.
+        if x.abs() > 6.2e-5 {
+            prop_assert!(
+                ((r - x) / x).abs() <= 1.0 / 1024.0 + 1e-7,
+                "rounding error too large: {x} → {r}"
+            );
+        }
+        // bf16 round trip is coarser but bounded too.
+        let b = bf16::from_f32(x).to_f32();
+        if x.abs() > 1e-30 {
+            prop_assert!(((b - x) / x).abs() <= 1.0 / 128.0, "bf16 {x} → {b}");
+        }
+        // f16 bits round-trip stability (idempotence).
+        prop_assert!(f16::from_f32(r).to_f32() == r, "not idempotent at {x}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_paged_cache_equals_flat_reference() {
+    // The paged store must behave exactly like an ever-growing Vec.
+    forall(Config::default().cases(80), |g| {
+        let ld = g.usize(1..8);
+        let bs = g.usize(1..6);
+        let mut store = PagedLatentCache::new(CacheConfig {
+            block_size: bs,
+            latent_dim: ld,
+            num_blocks: 64,
+        });
+        let mut flat: Vec<Vec<Vec<f32>>> = Vec::new(); // per seq, per token
+        let mut seqs = Vec::new();
+        for _ in 0..g.usize(1..40) {
+            if seqs.is_empty() || g.bool() {
+                seqs.push(store.new_seq());
+                flat.push(Vec::new());
+            }
+            let i = g.usize(0..seqs.len());
+            let v = g.normal_vec(ld..ld + 1);
+            if store.append(seqs[i], &v).is_ok() {
+                flat[i].push(v);
+            }
+        }
+        for (i, &s) in seqs.iter().enumerate() {
+            let bucket = (flat[i].len() + bs).div_ceil(bs) * bs;
+            let mut out = vec![0.0; bucket * ld];
+            let n = store.gather_padded(s, bucket, &mut out);
+            prop_assert!(n == flat[i].len(), "len {n} vs {}", flat[i].len());
+            for (t, v) in flat[i].iter().enumerate() {
+                prop_assert!(
+                    out[t * ld..(t + 1) * ld] == v[..],
+                    "token {t} of seq {i} corrupted"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_waste_factor_algebra() {
+    // ETAP never wastes more than query-major; query-major waste equals
+    // the closed-form padding factor for any head count and 64-multiple Bc.
+    forall(Config::default().cases(200), |g| {
+        let atom = MatmulAtom::wgmma();
+        let heads = g.usize(1..129);
+        let bc = 64 * g.usize(1..5);
+        let d = 64 * g.usize(1..10);
+        let dv = 64 * g.usize(1..9);
+        let qm = mode_waste_factor(&query_major_gemms(heads, bc, d, dv), &atom);
+        let et = mode_waste_factor(&etap_gemms(heads, bc, d, dv), &atom);
+        prop_assert!(et <= qm + 1e-12, "etap {et} > query-major {qm}");
+        let expect = (heads.div_ceil(64) * 64) as f64 / heads as f64;
+        prop_assert!(
+            (qm - expect).abs() < 1e-9,
+            "closed form mismatch: {qm} vs {expect} at h={heads}"
+        );
+        // ETAP wastes only on the head (N) axis: ≤ padded_cols factor.
+        let n_pad = (heads.div_ceil(8) * 8) as f64 / heads as f64;
+        prop_assert!(et <= n_pad + 1e-9, "etap waste {et} > n-pad {n_pad}");
+        Ok(())
+    });
+}

@@ -1,0 +1,160 @@
+//! End-to-end engine test: continuous batching over the real tiny-model
+//! decode artifacts, checked for determinism, cross-kernel agreement, and
+//! correct request lifecycle.  Skips cleanly when artifacts are missing.
+
+use std::path::PathBuf;
+
+use flashmla_etap::coordinator::{Engine, EngineConfig};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn engine(dir: &PathBuf, kernel: &str, slots: usize) -> Engine {
+    Engine::new(
+        dir,
+        EngineConfig {
+            kernel: kernel.into(),
+            max_slots: slots,
+            kv_blocks: 256,
+            block_size: 16,
+            eos_token: None,
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn single_request_generates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut e = engine(&dir, "etap", 1);
+    let id = e.submit(vec![3, 5, 7], 8);
+    let report = e.run_to_completion().unwrap();
+    let out = &report.outputs[&id];
+    assert_eq!(out.len(), 8);
+    assert!(out.iter().all(|&t| (0..512).contains(&t)));
+    assert_eq!(report.metrics.requests_finished, 1);
+    // 3 prompt tokens + 7 more decode steps (first token comes with the
+    // last prefill step).
+    assert_eq!(report.steps, 10);
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let run = || {
+        let mut e = engine(&dir, "etap", 2);
+        let a = e.submit(vec![3, 5, 7], 6);
+        let b = e.submit(vec![11, 2], 6);
+        let r = e.run_to_completion().unwrap();
+        (r.outputs[&a].clone(), r.outputs[&b].clone())
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn kernels_agree_end_to_end() {
+    // The paper's core numerical claim at system level: swapping the
+    // attention computation mode must not change greedy outputs.
+    let Some(dir) = artifacts_dir() else { return };
+    let run = |kernel: &str| {
+        let mut e = engine(&dir, kernel, 2);
+        let a = e.submit(vec![3, 5, 7], 6);
+        let b = e.submit(vec![100, 42], 6);
+        let r = e.run_to_completion().unwrap();
+        (r.outputs[&a].clone(), r.outputs[&b].clone())
+    };
+    assert_eq!(run("etap"), run("flashmla"));
+}
+
+#[test]
+fn batched_equals_solo_outputs() {
+    // Request isolation through the whole engine: batching must not change
+    // any request's greedy output.
+    let Some(dir) = artifacts_dir() else { return };
+    let solo = |prompt: Vec<i32>| {
+        let mut e = engine(&dir, "etap", 1);
+        let id = e.submit(prompt, 5);
+        e.run_to_completion().unwrap().outputs[&id].clone()
+    };
+    let s1 = solo(vec![3, 5, 7]);
+    let s2 = solo(vec![11, 2]);
+    let mut e = engine(&dir, "etap", 2);
+    let a = e.submit(vec![3, 5, 7], 5);
+    let b = e.submit(vec![11, 2], 5);
+    let r = e.run_to_completion().unwrap();
+    assert_eq!(r.outputs[&a], s1);
+    assert_eq!(r.outputs[&b], s2);
+}
+
+#[test]
+fn continuous_batching_joins_and_leaves() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut e = engine(&dir, "etap", 4);
+    // Staggered lengths force slot churn: short requests finish while long
+    // ones continue; queued ones join mid-flight.
+    let ids: Vec<_> = vec![
+        e.submit(vec![1, 2], 2),
+        e.submit(vec![3, 4, 5], 10),
+        e.submit(vec![6], 4),
+        e.submit(vec![7, 8], 3),
+        e.submit(vec![9], 6),
+        e.submit(vec![10, 11, 12], 2),
+    ];
+    let report = e.run_to_completion().unwrap();
+    for (i, id) in ids.iter().enumerate() {
+        let want = [2usize, 10, 4, 3, 6, 2][i];
+        assert_eq!(report.outputs[id].len(), want, "request {i}");
+    }
+    assert_eq!(report.metrics.requests_finished, 6);
+    assert!(report.recompositions >= 2, "slot churn must recompose");
+}
+
+#[test]
+fn kv_capacity_blocks_admission_until_space() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Tiny block budget: 4 layers × 96 latent = 384 floats per token
+    // super-latent; with block_size 16 and only 8 blocks we fit ~128
+    // tokens total.
+    let mut e = Engine::new(
+        &dir,
+        EngineConfig {
+            kernel: "etap".into(),
+            max_slots: 2,
+            kv_blocks: 8,
+            block_size: 16,
+            eos_token: None,
+        },
+    )
+    .unwrap();
+    let a = e.submit(vec![1; 10], 40); // 50 ctx → 4 blocks
+    let b = e.submit(vec![2; 10], 40); // 4 blocks
+    let c = e.submit(vec![3; 10], 30); // must wait for a/b to finish
+    let report = e.run_to_completion().unwrap();
+    assert_eq!(report.outputs[&a].len(), 40);
+    assert_eq!(report.outputs[&b].len(), 40);
+    assert_eq!(report.outputs[&c].len(), 30);
+}
+
+#[test]
+fn metrics_populated() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut e = engine(&dir, "etap", 2);
+    e.submit(vec![3, 5], 4);
+    e.submit(vec![7], 4);
+    let report = e.run_to_completion().unwrap();
+    let m = &report.metrics;
+    assert_eq!(m.requests_finished, 2);
+    assert_eq!(m.tokens_generated, 8);
+    assert!(m.decode_tokens_per_s() > 0.0);
+    assert!(m.step.count() > 0);
+    assert!(m.ttft.count() == 2);
+    let text = m.report();
+    assert!(text.contains("requests=2"));
+}

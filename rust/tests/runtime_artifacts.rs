@@ -1,0 +1,161 @@
+//! Integration: load real AOT artifacts, execute on PJRT CPU, check the
+//! numbers against the python-dumped test vectors and the Rust CPU
+//! attention reference.
+//!
+//! Skipped (cleanly) when `artifacts/` has not been built — run
+//! `make artifacts` first.
+
+use std::path::PathBuf;
+
+use flashmla_etap::attention::{etap_f32, AttnShape};
+use flashmla_etap::runtime::{AttentionRunner, DecodeRunner, Runtime};
+use flashmla_etap::util::json;
+use flashmla_etap::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn attention_artifact_matches_python_testvec() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).unwrap();
+    let v = json::parse_file(&dir.join("testvec_attn.json")).unwrap();
+
+    let runner = AttentionRunner::new(&rt, v.str_of("artifact").unwrap()).unwrap();
+    assert_eq!((runner.heads, runner.d, runner.dv), (16, 576, 512));
+
+    let q = v.get("q").f32_vec().unwrap();
+    let cache = v.get("cache").f32_vec().unwrap();
+    let lengths: Vec<i32> = v
+        .get("lengths")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i32)
+        .collect();
+    let (out, lse) = runner.run(&q, &cache, &lengths).unwrap();
+
+    let want_prefix = v.get("out_prefix").f32_vec().unwrap();
+    for (i, (a, b)) in out.iter().zip(&want_prefix).enumerate() {
+        assert!((a - b).abs() < 1e-5, "out[{i}]: {a} vs {b}");
+    }
+    let want_sum = v.get("out_sum").as_f64().unwrap();
+    let got_sum: f64 = out.iter().map(|&x| x as f64).sum();
+    assert!(
+        (got_sum - want_sum).abs() / want_sum.abs().max(1.0) < 1e-4,
+        "sum {got_sum} vs {want_sum}"
+    );
+    let want_lse = v.get("lse").f32_vec().unwrap();
+    for (a, b) in lse.iter().zip(&want_lse) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn attention_artifact_matches_rust_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).unwrap();
+    let runner = AttentionRunner::best(&rt, "etap", 1, 256).unwrap();
+    let shape = AttnShape::paper(runner.kv_bucket);
+    let mut rng = Rng::new(99);
+    let q = rng.normal_vec(shape.q_len());
+    let cache = rng.normal_vec(shape.cache_len());
+    let scale = 1.0 / (192f32).sqrt(); // qk_head_dim = 128 + 64
+
+    let (out, _) = runner.run(&q, &cache, &[shape.n as i32]).unwrap();
+    // Rust CPU ETAP on the same data.  The artifact's scale is baked at
+    // AOT time (deepseek_r1_shard_config().softmax_scale) — same value.
+    let want = etap_f32(&shape, &q, &cache, scale, 128);
+    let mut max_err = 0f32;
+    for (a, b) in out.iter().zip(&want) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-3, "max err {max_err}");
+}
+
+#[test]
+fn etap_and_flashmla_artifacts_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).unwrap();
+    let etap = AttentionRunner::best(&rt, "etap", 1, 256).unwrap();
+    let flashmla = AttentionRunner::best(&rt, "flashmla", 1, 256).unwrap();
+    let shape = AttnShape::paper(etap.kv_bucket);
+    let mut rng = Rng::new(7);
+    let q = rng.normal_vec(shape.q_len());
+    let cache = rng.normal_vec(shape.cache_len());
+    let lengths = [173i32];
+    let (a, lse_a) = etap.run(&q, &cache, &lengths).unwrap();
+    let (b, lse_b) = flashmla.run(&q, &cache, &lengths).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-4, "computation modes disagree");
+    }
+    for (x, y) in lse_a.iter().zip(&lse_b) {
+        assert!((x - y).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn decode_artifact_matches_python_testvec() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).unwrap();
+    let v = json::parse_file(&dir.join("testvec_decode.json")).unwrap();
+    let runner = DecodeRunner::new(&rt, v.str_of("artifact").unwrap()).unwrap();
+
+    let steps = v.get("steps").as_arr().unwrap();
+    let mut cache = runner.fresh_cache().unwrap();
+    let mut lengths = vec![0i32; runner.batch];
+    let mut logits = Vec::new();
+    for step in steps {
+        let tokens: Vec<i32> = step
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_i64().unwrap() as i32)
+            .collect();
+        let (lg, c) = runner.step(&tokens, &cache, &lengths).unwrap();
+        logits = lg;
+        cache = c;
+        for l in &mut lengths {
+            *l += 1;
+        }
+    }
+
+    let want_prefix = v.get("logits_prefix").f32_vec().unwrap();
+    for (i, (a, b)) in logits.iter().zip(&want_prefix).enumerate() {
+        assert!((a - b).abs() < 1e-3, "logits[{i}]: {a} vs {b}");
+    }
+    let want_sum = v.get("logits_sum").as_f64().unwrap();
+    let got_sum: f64 = logits.iter().map(|&x| x as f64).sum();
+    assert!(
+        (got_sum - want_sum).abs() / want_sum.abs().max(1.0) < 1e-3,
+        "sum {got_sum} vs {want_sum}"
+    );
+    // Greedy argmax agrees with python.
+    let vocab = runner.vocab();
+    let want_argmax: Vec<i64> = v
+        .get("argmax")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap())
+        .collect();
+    for (row, want) in want_argmax.iter().enumerate() {
+        assert_eq!(DecodeRunner::argmax_row(&logits, vocab, row) as i64, *want);
+    }
+}
+
+#[test]
+fn compile_cache_hits() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).unwrap();
+    let _a = rt.load("attn_etap_b1_n256").unwrap();
+    let _b = rt.load("attn_etap_b1_n256").unwrap();
+    assert_eq!(rt.compiled_count(), 1, "second load must hit the cache");
+}
