@@ -1,20 +1,29 @@
-//! End-to-end serving driver (the prompt-mandated workload): load the tiny
-//! MLA transformer artifacts, serve a batch of synthetic requests through
-//! the full coordinator stack — router → continuous batcher → PJRT decode
-//! engine → paged latent KV store — and report latency/throughput.
+//! End-to-end serving driver (the prompt-mandated workload): serve a batch
+//! of synthetic requests through the full coordinator stack — router →
+//! continuous batcher → decode engine → paged latent KV store — and report
+//! latency/throughput.
 //!
-//! Also runs the same workload under the query-major FlashMLA artifacts to
-//! demonstrate that the computation mode changes performance bookkeeping
-//! but not a single output token (paper §3.1 equivalence).
+//! With AOT artifacts present (`make artifacts`), the workload runs on the
+//! PJRT backend under both attention modes to demonstrate that the
+//! computation mode changes performance bookkeeping but not a single
+//! output token (paper §3.1 equivalence).  Without artifacts it falls back
+//! to the deterministic pure-Rust reference backend, comparing prefix
+//! sharing on/off instead.
 //!
-//!     make artifacts && cargo run --release --example serve_decode
+//! `--shared-prefix <len>` prepends a common `len`-token system prefix to
+//! every synthetic prompt, so the prefix-cache hit path is exercised
+//! directly from this example.
+//!
+//!     cargo run --release --example serve_decode -- --shared-prefix 32
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
 use std::path::PathBuf;
 use std::time::Instant;
 
-use flashmla_etap::coordinator::{Engine, EngineConfig, Router};
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport, Router};
+use flashmla_etap::runtime::ReferenceModelConfig;
+use flashmla_etap::util::argparse::ArgParser;
 use flashmla_etap::util::rng::Rng;
 
 struct Workload {
@@ -22,29 +31,51 @@ struct Workload {
     budgets: Vec<usize>,
 }
 
-fn synth_workload(n: usize, seed: u64, vocab: usize) -> Workload {
+fn synth_workload(n: usize, shared_prefix: usize, seed: u64, vocab: usize) -> Workload {
     let mut rng = Rng::new(seed);
+    let prefix: Vec<i32> = (0..shared_prefix)
+        .map(|_| rng.range(1, vocab as u64) as i32)
+        .collect();
     let mut prompts = Vec::new();
     let mut budgets = Vec::new();
     for _ in 0..n {
         let plen = rng.range(2, 16) as usize;
-        prompts.push((0..plen).map(|_| rng.range(1, vocab as u64) as i32).collect());
+        let mut p = prefix.clone();
+        p.extend((0..plen).map(|_| rng.range(1, vocab as u64) as i32));
+        prompts.push(p);
         budgets.push(rng.range(4, 24) as usize);
     }
     Workload { prompts, budgets }
 }
 
-fn run(kernel: &str, w: &Workload, dir: &PathBuf) -> anyhow::Result<(Vec<Vec<i32>>, f64, String)> {
-    let mut engine = Engine::new(
-        dir,
-        EngineConfig {
-            kernel: kernel.into(),
-            max_slots: 8,
-            kv_blocks: 512,
-            block_size: 16,
-            eos_token: None,
-        },
-    )?;
+enum Backend<'a> {
+    Pjrt { dir: &'a PathBuf, kernel: String },
+    Reference { prefix_cache: bool },
+}
+
+fn run(backend: Backend, w: &Workload) -> anyhow::Result<(Vec<Vec<i32>>, f64, String)> {
+    let mut engine = match backend {
+        Backend::Pjrt { dir, kernel } => Engine::new(
+            dir,
+            EngineConfig {
+                kernel,
+                max_slots: 8,
+                kv_blocks: 512,
+                block_size: 16,
+                ..EngineConfig::default()
+            },
+        )?,
+        Backend::Reference { prefix_cache } => Engine::reference(
+            ReferenceModelConfig::default(),
+            EngineConfig {
+                max_slots: 8,
+                kv_blocks: 512,
+                block_size: 16,
+                prefix_cache,
+                ..EngineConfig::default()
+            },
+        )?,
+    };
     // Admission through the router (validation + ids).
     let mut router = Router::new(engine.max_context(), 512, 1024);
     let mut ids = Vec::new();
@@ -55,44 +86,87 @@ fn run(kernel: &str, w: &Workload, dir: &PathBuf) -> anyhow::Result<(Vec<Vec<i32
         ids.push(engine.submit(req.prompt, req.max_new_tokens));
     }
     let t0 = Instant::now();
-    let report = engine.run_to_completion()?;
+    let report: EngineReport = engine.run_to_completion()?;
     let wall = t0.elapsed().as_secs_f64();
     let outs = ids.iter().map(|id| report.outputs[id].clone()).collect();
     Ok((outs, wall, report.metrics.report()))
 }
 
 fn main() -> anyhow::Result<()> {
-    let dir = PathBuf::from("artifacts");
-    anyhow::ensure!(
-        dir.join("manifest.json").exists(),
-        "artifacts/ missing — run `make artifacts` first"
-    );
-    let n_req = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(16usize);
-    let w = synth_workload(n_req, 42, 512);
+    let p = ArgParser::new(
+        "serve_decode",
+        "serve synthetic requests end-to-end through the coordinator stack",
+    )
+    .opt("artifacts", Some("artifacts"), "artifacts directory")
+    .opt("requests", Some("16"), "number of synthetic requests")
+    .opt(
+        "shared-prefix",
+        Some("0"),
+        "tokens of common system prefix prepended to every prompt",
+    )
+    .opt("seed", Some("42"), "rng seed");
+    let a = p.parse_or_exit();
+    let n_req = a.get_usize("requests").unwrap();
+    let shared_prefix = a.get_usize("shared-prefix").unwrap();
+    let w = synth_workload(n_req, shared_prefix, a.get_u64("seed").unwrap(), 512);
     let total_budget: usize = w.budgets.iter().sum();
-    println!("serving {n_req} requests ({total_budget} tokens budgeted) on the tiny MLA model\n");
-
-    let (out_etap, wall_etap, metrics_etap) = run("etap", &w, &dir)?;
-    println!("[etap]     {wall_etap:.2}s wall\n  {metrics_etap}\n");
-
-    let (out_base, wall_base, metrics_base) = run("flashmla", &w, &dir)?;
-    println!("[flashmla] {wall_base:.2}s wall\n  {metrics_base}\n");
-
-    // The paper's equivalence claim, verified end to end.
-    anyhow::ensure!(
-        out_etap == out_base,
-        "computation modes produced different tokens!"
-    );
     println!(
-        "✓ all {} output sequences identical across ETAP and query-major modes",
-        out_etap.len()
+        "serving {n_req} requests ({total_budget} tokens budgeted, \
+         {shared_prefix}-token shared prefix)\n"
     );
-    let toks: usize = out_etap.iter().map(|o| o.len()).sum();
-    println!(
-        "✓ generated {toks} tokens end-to-end through router → batcher → PJRT engine → paged KV"
-    );
+
+    let dir = PathBuf::from(a.get("artifacts").unwrap());
+    if dir.join("manifest.json").exists() {
+        // PJRT path: the paper's equivalence claim, verified end to end.
+        let (out_etap, wall_etap, metrics_etap) = run(
+            Backend::Pjrt {
+                dir: &dir,
+                kernel: "etap".into(),
+            },
+            &w,
+        )?;
+        println!("[etap]     {wall_etap:.2}s wall\n  {metrics_etap}\n");
+        let (out_base, wall_base, metrics_base) = run(
+            Backend::Pjrt {
+                dir: &dir,
+                kernel: "flashmla".into(),
+            },
+            &w,
+        )?;
+        println!("[flashmla] {wall_base:.2}s wall\n  {metrics_base}\n");
+        anyhow::ensure!(
+            out_etap == out_base,
+            "computation modes produced different tokens!"
+        );
+        println!(
+            "✓ all {} output sequences identical across ETAP and query-major modes",
+            out_etap.len()
+        );
+        let toks: usize = out_etap.iter().map(|o| o.len()).sum();
+        println!(
+            "✓ generated {toks} tokens end-to-end through router → batcher → \
+             PJRT engine → paged KV"
+        );
+    } else {
+        // Reference fallback: prefix sharing must be a pure optimization.
+        println!("(artifacts/ not built — using the reference decode backend)\n");
+        let (out_off, wall_off, metrics_off) = run(Backend::Reference { prefix_cache: false }, &w)?;
+        println!("[prefix off] {wall_off:.2}s wall\n  {metrics_off}\n");
+        let (out_on, wall_on, metrics_on) = run(Backend::Reference { prefix_cache: true }, &w)?;
+        println!("[prefix on]  {wall_on:.2}s wall\n  {metrics_on}\n");
+        anyhow::ensure!(
+            out_off == out_on,
+            "prefix sharing changed decode outputs!"
+        );
+        println!(
+            "✓ all {} output sequences identical with and without prefix sharing",
+            out_on.len()
+        );
+        if shared_prefix >= 32 {
+            println!("✓ hit path exercised (see `prefix hits` in the metrics line)");
+        } else {
+            println!("  (pass --shared-prefix 32 to exercise the hit path)");
+        }
+    }
     Ok(())
 }

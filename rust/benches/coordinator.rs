@@ -98,6 +98,7 @@ fn main() -> anyhow::Result<()> {
                         kv_blocks: 512,
                         block_size: 16,
                         eos_token: None,
+                        prefix_cache: true,
                     },
                 )
                 .unwrap();

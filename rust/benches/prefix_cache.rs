@@ -1,0 +1,123 @@
+//! Bench: prefix-cache hot paths — lookup, insert, adoption, eviction —
+//! plus the end-to-end effect of sharing on a reference-backend serving
+//! run.
+//!
+//!     cargo bench --bench prefix_cache
+
+use flashmla_etap::bench::Bencher;
+use flashmla_etap::coordinator::{Engine, EngineConfig};
+use flashmla_etap::kvcache::{CacheConfig, PagedLatentCache};
+use flashmla_etap::prefixcache::PrefixTree;
+use flashmla_etap::runtime::ReferenceModelConfig;
+use flashmla_etap::util::rng::Rng;
+
+const BS: usize = 16;
+
+fn prompt(rng: &mut Rng, blocks: usize) -> Vec<i32> {
+    (0..blocks * BS).map(|_| rng.range(1, 500) as i32).collect()
+}
+
+/// Tree preloaded with `n` prompts of `blocks` blocks each.
+fn loaded_tree(n: usize, blocks: usize) -> (PrefixTree, PagedLatentCache, Vec<Vec<i32>>) {
+    let mut cache = PagedLatentCache::new(CacheConfig {
+        block_size: BS,
+        latent_dim: 8,
+        num_blocks: 4096,
+    });
+    let mut tree = PrefixTree::new(BS, None);
+    let mut rng = Rng::new(7);
+    let latent = vec![0.25f32; 8];
+    let mut prompts = Vec::new();
+    for _ in 0..n {
+        let p = prompt(&mut rng, blocks);
+        let s = cache.new_seq();
+        for _ in 0..p.len() {
+            cache.append(s, &latent).unwrap();
+        }
+        let chain = cache.blocks_of(s).to_vec();
+        tree.insert(&p, &chain, &mut cache);
+        cache.free_seq(s);
+        prompts.push(p);
+    }
+    (tree, cache, prompts)
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    println!("radix tree (64 cached prompts × 8 blocks of {BS}):");
+    let (tree, _cache, prompts) = loaded_tree(64, 8);
+    let mut i = 0usize;
+    b.bench("peek_match (hit)", || {
+        i = (i + 1) % prompts.len();
+        tree.peek_match(&prompts[i])
+    });
+    let miss: Vec<i32> = vec![999; 8 * BS];
+    b.bench("peek_match (miss)", || tree.peek_match(&miss));
+
+    let (mut tree2, mut cache2, prompts2) = loaded_tree(64, 8);
+    let mut j = 0usize;
+    b.bench("match_prefix + adopt + free (hit path)", || {
+        j = (j + 1) % prompts2.len();
+        let m = tree2.match_prefix(&prompts2[j]);
+        let s = cache2.adopt_chain(&m.blocks, m.tokens);
+        cache2.free_seq(s);
+        m.tokens
+    });
+
+    b.bench("insert (fresh 8-block prompt) + evict", || {
+        let mut rng = Rng::new(j as u64);
+        let p = prompt(&mut rng, 8);
+        let s = cache2.new_seq();
+        let latent = vec![0.5f32; 8];
+        for _ in 0..p.len() {
+            cache2.append(s, &latent).unwrap();
+        }
+        let chain = cache2.blocks_of(s).to_vec();
+        let adopted = tree2.insert(&p, &chain, &mut cache2);
+        cache2.free_seq(s);
+        // Evict what we just added so the bench state stays bounded.
+        tree2.evict(adopted, &mut cache2, true);
+        j += 1;
+        adopted
+    });
+
+    println!("\nend-to-end (reference backend, 16 requests, 32-token shared prefix):");
+    let mut rng = Rng::new(42);
+    let system: Vec<i32> = (0..32).map(|_| rng.range(1, 500) as i32).collect();
+    let workload: Vec<(Vec<i32>, usize)> = (0..16)
+        .map(|_| {
+            let mut p = system.clone();
+            let extra = rng.range(2, 10) as usize;
+            p.extend((0..extra).map(|_| rng.range(1, 500) as i32));
+            (p, rng.range(4, 12) as usize)
+        })
+        .collect();
+    for (label, prefix_cache) in [("prefix off", false), ("prefix on ", true)] {
+        let serve = |prefix_cache: bool| {
+            let mut e = Engine::reference(
+                ReferenceModelConfig::default(),
+                EngineConfig {
+                    max_slots: 4,
+                    kv_blocks: 256,
+                    block_size: BS,
+                    prefix_cache,
+                    ..EngineConfig::default()
+                },
+            )
+            .unwrap();
+            for (p, budget) in &workload {
+                e.submit(p.clone(), *budget);
+            }
+            e.run_to_completion().unwrap()
+        };
+        let prefill = serve(prefix_cache).metrics.prefill_tokens;
+        let r = b.bench(&format!("serve 16 requests ({label})"), || {
+            serve(prefix_cache).metrics.prefill_tokens
+        });
+        println!(
+            "    → {prefill} prefill tokens per run, mean wall {:.2} ms",
+            r.mean_us / 1e3
+        );
+    }
+}

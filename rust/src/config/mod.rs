@@ -82,6 +82,9 @@ impl Config {
         if let Some(n) = e.get("eos_token").as_i64() {
             c.engine.eos_token = Some(n as i32);
         }
+        if let Some(b) = e.get("prefix_cache").as_bool() {
+            c.engine.prefix_cache = b;
+        }
         let cl = t.get("cluster");
         if let Some(n) = cl.get("gpus").as_usize() {
             c.cluster.gpus = n;
@@ -171,5 +174,13 @@ kernel = "fa3"
         let c = Config::from_tree(&tree).unwrap();
         assert_eq!(c.engine.max_slots, 2);
         assert_eq!(c.seed, 9);
+    }
+
+    #[test]
+    fn prefix_cache_toggle() {
+        assert!(Config::default().engine.prefix_cache, "on by default");
+        let tree = crate::util::toml::parse("[engine]\nprefix_cache = false").unwrap();
+        let c = Config::from_tree(&tree).unwrap();
+        assert!(!c.engine.prefix_cache);
     }
 }

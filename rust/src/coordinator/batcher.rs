@@ -74,6 +74,12 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Head of the admission queue (next candidate), if any.  Lets the
+    /// engine size eviction pressure before running `admit`.
+    pub fn front(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
     pub fn active(&self) -> &[Request] {
         &self.active
     }
@@ -130,15 +136,21 @@ impl Batcher {
             .unwrap_or(self.cfg.batch_buckets.last().unwrap())
     }
 
-    /// Smallest KV bucket covering every active context *after* this step
-    /// (each active request writes one more position).
-    pub fn kv_bucket(&self) -> usize {
-        let need = self
-            .active
+    /// KV positions the active set needs *after* this step (each active
+    /// request writes one more position).  The engine may raise this
+    /// further for anticipated prefix-cache adoptions before rounding up
+    /// to a bucket.
+    pub fn kv_bucket_need(&self) -> usize {
+        self.active
             .iter()
             .map(|r| r.context_len() + 1)
             .max()
-            .unwrap_or(1);
+            .unwrap_or(1)
+    }
+
+    /// Smallest KV bucket covering [`kv_bucket_need`](Self::kv_bucket_need).
+    pub fn kv_bucket(&self) -> usize {
+        let need = self.kv_bucket_need();
         *self
             .cfg
             .kv_buckets
@@ -150,6 +162,12 @@ impl Batcher {
     /// Abort everything still queued (drain shutdown).
     pub fn abort_queued(&mut self) -> Vec<RequestId> {
         self.queue.drain(..).map(|r| r.id).collect()
+    }
+
+    /// Remove and return the head of the queue without admitting it (the
+    /// engine rejects requests that can never fit the block pool).
+    pub fn reject_front(&mut self) -> Option<Request> {
+        self.queue.pop_front()
     }
 }
 

@@ -1,10 +1,10 @@
-//! The decode engine: continuous batching over fixed-shape PJRT artifacts.
+//! The decode engine: continuous batching over fixed-shape decode steps.
 //!
 //! Hot-path design (see also EXPERIMENTS.md §Perf):
 //!
 //! * While batch composition and buckets are stable, the engine feeds the
-//!   decode artifact its own returned cache literal — zero bookkeeping per
-//!   step, the artifact writes each request's new latent in place.
+//!   decode step its own returned cache literal — zero bookkeeping per
+//!   step, the backend writes each request's new latent in place.
 //! * On *recomposition* (request finished / admitted / bucket growth) the
 //!   engine syncs the survivors' latents from the live cache literal into
 //!   the paged latent store, then rebuilds the dense cache for the new
@@ -15,14 +15,35 @@
 //! The paged store holds one "super-latent" per token — the concatenation
 //! of all layers' latent vectors — so request state survives slot moves
 //! and bucket changes without any model re-execution (prefix re-use).
+//!
+//! **Prefix cache.**  When enabled (default), the engine keeps a radix
+//! tree over completed-prefill prompts ([`crate::prefixcache`]):
+//!
+//! * admission charges a request only for its *unshared* suffix, since the
+//!   shared blocks are already resident;
+//! * a newly admitted request whose prompt hits the tree adopts the cached
+//!   chain copy-on-write and starts its prefill cursor past the shared
+//!   prefix — those prefill steps are skipped entirely;
+//! * after a request finishes prefilling, its prompt's whole blocks are
+//!   inserted back into the tree (deduplicated) so later requests hit;
+//! * under block-pool pressure the engine evicts least-recently-used
+//!   unreferenced tree leaves before refusing admission.
+//!
+//! Decode steps execute on one of two backends behind
+//! [`StepRunner`]: the PJRT AOT artifacts (production path) or the
+//! deterministic pure-Rust reference model (tests, examples, CI).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::kvcache::{CacheConfig, PagedLatentCache, SeqId};
 use crate::log_info;
-use crate::runtime::{DecodeRunner, Runtime};
+use crate::prefixcache::PrefixTree;
+use crate::runtime::{
+    DecodeRunner, ReferenceModel, ReferenceModelConfig, Runtime, StepRunner,
+};
 use crate::util::stats::Welford;
 
 use super::batcher::{Batcher, BatcherConfig};
@@ -42,6 +63,8 @@ pub struct EngineConfig {
     pub block_size: usize,
     /// EOS token id (None = length-only stopping).
     pub eos_token: Option<i32>,
+    /// Enable the cross-request prefix cache.
+    pub prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -52,6 +75,7 @@ impl Default for EngineConfig {
             kv_blocks: 256,
             block_size: 16,
             eos_token: None,
+            prefix_cache: true,
         }
     }
 }
@@ -72,16 +96,27 @@ struct LiveBatch {
     cache: xla::Literal,
 }
 
+/// Where decode steps execute.
+enum EngineBackend {
+    /// PJRT over AOT HLO artifacts.
+    Pjrt(Runtime),
+    /// Deterministic pure-Rust reference model.
+    Reference(Arc<ReferenceModel>),
+}
+
 /// The serving engine.
 pub struct Engine {
-    rt: Runtime,
+    backend: EngineBackend,
     cfg: EngineConfig,
     batcher: Batcher,
     store: PagedLatentCache,
+    prefix: Option<PrefixTree>,
     seq_of: HashMap<RequestId, SeqId>,
     /// Tokens already synced into the paged store, per request.
     synced: HashMap<RequestId, usize>,
-    runners: HashMap<(usize, usize), DecodeRunner>,
+    /// Requests whose prompt prefix is already in the tree.
+    inserted: HashSet<RequestId>,
+    runners: HashMap<(usize, usize), Box<dyn StepRunner>>,
     live: Option<LiveBatch>,
     metrics: ServingMetrics,
     outputs: HashMap<RequestId, Vec<i32>>,
@@ -89,11 +124,12 @@ pub struct Engine {
     recompositions: u64,
     n_layers: usize,
     latent_dim: usize,
+    kv_buckets: Vec<usize>,
     pub sync_cost: Welford,
 }
 
 impl Engine {
-    /// Build an engine over an artifacts directory.
+    /// Build an engine over an artifacts directory (PJRT backend).
     pub fn new(artifacts_dir: &Path, cfg: EngineConfig) -> anyhow::Result<Self> {
         let rt = Runtime::cpu(artifacts_dir)?;
         let model = rt
@@ -113,31 +149,74 @@ impl Engine {
         let mut kv_buckets: Vec<usize> = buckets.iter().map(|&(_, n)| n).collect();
         kv_buckets.sort();
         kv_buckets.dedup();
+        Self::build(
+            EngineBackend::Pjrt(rt),
+            model.n_layers,
+            model.latent_dim,
+            batch_buckets,
+            kv_buckets,
+            cfg,
+        )
+    }
 
+    /// Build an engine over the deterministic reference model — no
+    /// artifacts or native PJRT needed.  Decode semantics follow the same
+    /// step contract as the artifact path.
+    pub fn reference(model: ReferenceModelConfig, cfg: EngineConfig) -> anyhow::Result<Self> {
+        let batch_buckets = model.batch_buckets.clone();
+        let kv_buckets = model.kv_buckets.clone();
+        anyhow::ensure!(!batch_buckets.is_empty(), "no batch buckets");
+        anyhow::ensure!(!kv_buckets.is_empty(), "no kv buckets");
+        let (n_layers, latent_dim) = (model.n_layers, model.latent_dim);
+        let model = ReferenceModel::new(model);
+        Self::build(
+            EngineBackend::Reference(model),
+            n_layers,
+            latent_dim,
+            batch_buckets,
+            kv_buckets,
+            cfg,
+        )
+    }
+
+    fn build(
+        backend: EngineBackend,
+        n_layers: usize,
+        latent_dim: usize,
+        batch_buckets: Vec<usize>,
+        kv_buckets: Vec<usize>,
+        cfg: EngineConfig,
+    ) -> anyhow::Result<Self> {
         let batcher = Batcher::new(BatcherConfig {
             max_slots: cfg.max_slots.min(*batch_buckets.last().unwrap()),
             batch_buckets,
-            kv_buckets,
+            kv_buckets: kv_buckets.clone(),
         })?;
         let store = PagedLatentCache::new(CacheConfig {
             block_size: cfg.block_size,
-            latent_dim: model.n_layers * model.latent_dim,
+            latent_dim: n_layers * latent_dim,
             num_blocks: cfg.kv_blocks,
         });
+        let prefix = cfg
+            .prefix_cache
+            .then(|| PrefixTree::new(cfg.block_size, None));
         Ok(Engine {
-            rt,
+            backend,
             batcher,
             store,
+            prefix,
             seq_of: HashMap::new(),
             synced: HashMap::new(),
+            inserted: HashSet::new(),
             runners: HashMap::new(),
             live: None,
             metrics: ServingMetrics::new(),
             outputs: HashMap::new(),
             next_id: 1,
             recompositions: 0,
-            n_layers: model.n_layers,
-            latent_dim: model.latent_dim,
+            n_layers,
+            latent_dim,
+            kv_buckets,
             sync_cost: Welford::new(),
             cfg,
         })
@@ -145,14 +224,7 @@ impl Engine {
 
     /// Largest admissible context (biggest kv bucket, minus the write slot).
     pub fn max_context(&self) -> usize {
-        self.rt
-            .manifest()
-            .buckets("decode_step", &self.cfg.kernel)
-            .iter()
-            .map(|&(_, n)| n)
-            .max()
-            .unwrap_or(0)
-            - 1
+        self.kv_buckets.last().copied().unwrap_or(1) - 1
     }
 
     /// Submit a request; returns its id.
@@ -185,6 +257,27 @@ impl Engine {
         &self.metrics
     }
 
+    /// Worst-case blocks the active set may still allocate: each request's
+    /// peak block count minus what its sequence already holds.  The paged
+    /// store allocates lazily (at sync time), so admission must reserve
+    /// against this, not against the instantaneous free count.
+    fn committed_future_blocks(&self) -> usize {
+        let bs = self.cfg.block_size;
+        self.batcher
+            .active()
+            .iter()
+            .map(|r| {
+                let peak = r.max_context().div_ceil(bs);
+                let held = self
+                    .seq_of
+                    .get(&r.id)
+                    .map(|s| self.store.blocks_of(*s).len())
+                    .unwrap_or(0);
+                peak.saturating_sub(held)
+            })
+            .sum()
+    }
+
     /// One engine step: reap, admit, (maybe) recompose, execute, advance.
     pub fn step(&mut self) -> anyhow::Result<bool> {
         let t0 = Instant::now();
@@ -198,15 +291,85 @@ impl Engine {
                 self.store.free_seq(seq);
             }
             self.synced.remove(&r.id);
+            self.inserted.remove(&r.id);
             self.outputs.insert(r.id, r.generated.clone());
         }
 
-        // 2. Admit from the queue under the block budget.
+        // 1b. Abort queued requests that can never fit: a request whose
+        // peak block demand exceeds the whole pool is unservable even with
+        // every other sequence and tree leaf gone, so leaving it at the
+        // head of the queue would spin the serving loop forever (and the
+        // pressure path below would pointlessly drain the prefix tree).
+        // Sharing cannot rescue it either — its own sequence must hold all
+        // `peak` distinct blocks at once.
+        while let Some(front) = self.batcher.front() {
+            if front.max_context().div_ceil(self.cfg.block_size) <= self.cfg.kv_blocks {
+                break;
+            }
+            let mut r = self.batcher.reject_front().expect("front exists");
+            r.finish(super::request::FinishReason::Aborted);
+            self.metrics.on_finish(&r);
+            self.outputs.insert(r.id, Vec::new());
+        }
+
+        // 2a. Under pool pressure, evict cold prefix-cache leaves so the
+        // head-of-queue request can fit (only leaves the tree holds the
+        // last reference to — eviction always returns blocks to the pool).
+        // Pressure counts blocks already committed to active requests but
+        // not yet lazily allocated, not just the instantaneous free count.
+        let committed = self.committed_future_blocks();
+        let pressure = match (&self.prefix, self.batcher.front()) {
+            (Some(tree), Some(front)) => {
+                let cap = tree.usable_prefix_len(front.prompt.len());
+                let matched = tree.peek_match(&front.prompt[..cap]);
+                let needed = committed
+                    + (front.max_context() - matched).div_ceil(self.cfg.block_size);
+                let free = self.store.free_blocks();
+                if needed > free {
+                    Some(needed - free)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
+        if let Some(want) = pressure {
+            let tree = self.prefix.as_mut().expect("pressure implies a tree");
+            tree.evict(want, &mut self.store, true);
+        }
+
+        // 2b. Admit from the queue under the block budget, charging prefix
+        // hits only for their unshared suffix.  `committed` carries the
+        // outstanding worst-case demand of already-running requests plus
+        // the ones admitted earlier in this very call, so a sequence of
+        // admissions can never over-commit the (lazily allocated) pool.
+        // (Eviction above only dropped tree references, so the active
+        // set's committed demand from 2a is still exact.)
         let store = &self.store;
+        let prefix = self.prefix.as_ref();
         let block_size = self.cfg.block_size;
+        let mut committed = committed;
+        // Matches peeked here are re-used for bucket selection below: they
+        // are taken *after* 2a's eviction, and the tree only grows between
+        // here and adoption, so they are safe lower bounds.
+        let mut peeked: HashMap<RequestId, usize> = HashMap::new();
         let admitted = self.batcher.admit(|r| {
-            let blocks_needed = r.max_context().div_ceil(block_size);
-            blocks_needed <= store.free_blocks()
+            let matched = match prefix {
+                Some(t) => {
+                    let cap = t.usable_prefix_len(r.prompt.len());
+                    let m = t.peek_match(&r.prompt[..cap]);
+                    peeked.insert(r.id, m);
+                    m
+                }
+                None => 0,
+            };
+            let blocks_needed = (r.max_context() - matched).div_ceil(block_size);
+            if committed + blocks_needed <= store.free_blocks() {
+                committed += blocks_needed;
+                true
+            } else {
+                false
+            }
         });
         if admitted > 0 {
             composition_changed = true;
@@ -216,9 +379,30 @@ impl Engine {
             return Ok(false); // idle (queue blocked on capacity or empty)
         }
 
-        // 3. Determine buckets; recompose if needed.
+        // 3. Determine buckets; recompose if needed.  Bucket choice
+        // anticipates prefix adoption: a newly admitted request may start
+        // its context at the cached prefix length rather than zero, so the
+        // kv bucket must already cover that length (adoption itself is
+        // additionally capped at the chosen bucket — see recompose (b) —
+        // because tree inserts during the same recompose can deepen the
+        // match past this estimate).
         let batch_bucket = self.batcher.batch_bucket();
-        let kv_bucket = self.batcher.kv_bucket();
+        let mut kv_need = self.batcher.kv_bucket_need();
+        if self.prefix.is_some() {
+            for r in self.batcher.active() {
+                if !self.seq_of.contains_key(&r.id) {
+                    if let Some(&m) = peeked.get(&r.id) {
+                        kv_need = kv_need.max(m + 1);
+                    }
+                }
+            }
+        }
+        let kv_bucket = self
+            .kv_buckets
+            .iter()
+            .copied()
+            .find(|&n| n >= kv_need)
+            .unwrap_or(*self.kv_buckets.last().expect("validated nonempty"));
         let needs_rebuild = composition_changed
             || match &self.live {
                 None => true,
@@ -281,6 +465,10 @@ impl Engine {
             new_tokens,
             prefill_tokens,
         );
+        if let Some(tree) = &self.prefix {
+            self.metrics.prefix = tree.stats();
+            self.metrics.prefix_cached_blocks = tree.cached_blocks() as u64;
+        }
         Ok(true)
     }
 
@@ -322,24 +510,82 @@ impl Engine {
             }
         }
 
+        // (a2) Feed completed prefills back into the prefix tree: once a
+        // request is decoding, its prompt's whole blocks are synced and
+        // immutable, so later requests can share them.  Dedup is the
+        // tree's job; `inserted` just avoids rewalking every recompose.
+        if self.prefix.is_some() {
+            let block_size = self.cfg.block_size;
+            let candidates: Vec<(RequestId, Vec<i32>)> = self
+                .batcher
+                .active()
+                .iter()
+                .filter(|r| {
+                    r.state == RequestState::Decoding && !self.inserted.contains(&r.id)
+                })
+                .map(|r| (r.id, r.prompt.clone()))
+                .collect();
+            let tree = self.prefix.as_mut().expect("checked above");
+            for (rid, prompt) in candidates {
+                let Some(&seq) = self.seq_of.get(&rid) else { continue };
+                let aligned = (prompt.len() / block_size) * block_size;
+                let synced = self.synced.get(&rid).copied().unwrap_or(0);
+                if aligned == 0 || synced < aligned {
+                    continue;
+                }
+                let chain = self.store.blocks_of(seq)[..aligned / block_size].to_vec();
+                tree.insert(&prompt[..aligned], &chain, &mut self.store);
+                self.inserted.insert(rid);
+            }
+        }
+
         // (b) Assign slots (stable order = batcher order) and create
-        // sequences for newly admitted requests.
+        // sequences for newly admitted requests — adopting cached prefix
+        // chains copy-on-write where the tree has them.
         let mut slots: Vec<Option<RequestId>> = vec![None; batch_bucket];
         for (i, r) in self.batcher.active().iter().enumerate() {
             slots[i] = Some(r.id);
         }
-        let ids: Vec<RequestId> = self.batcher.active().iter().map(|r| r.id).collect();
-        for rid in &ids {
-            if !self.seq_of.contains_key(rid) {
-                let seq = self.store.new_seq();
-                self.seq_of.insert(*rid, seq);
-                self.synced.insert(*rid, 0);
+        for r in self.batcher.active_mut() {
+            if self.seq_of.contains_key(&r.id) {
+                continue;
             }
+            let seq = match self.prefix.as_mut() {
+                Some(tree) => {
+                    // Cap at the bucket as well as the prompt: inserts done
+                    // in (a2) above may have deepened the match past the
+                    // estimate the bucket was chosen with, and an adopted
+                    // context must leave room for this step's write slot.
+                    let cap = tree.usable_prefix_len(r.prompt.len().min(kv_bucket));
+                    let m = tree.match_prefix(&r.prompt[..cap]);
+                    if m.tokens > 0 {
+                        // Adopt the shared chain: prefill for the matched
+                        // tokens is skipped entirely.
+                        r.prefill_pos = m.tokens;
+                        self.store.adopt_chain(&m.blocks, m.tokens)
+                    } else {
+                        self.store.new_seq()
+                    }
+                }
+                None => self.store.new_seq(),
+            };
+            self.synced.insert(r.id, self.store.len(seq));
+            self.seq_of.insert(r.id, seq);
         }
 
         // (c) Load (cached) the runner for this bucket pair.
         if !self.runners.contains_key(&(batch_bucket, kv_bucket)) {
-            let runner = DecodeRunner::best(&self.rt, &self.cfg.kernel, batch_bucket, kv_bucket)?;
+            let runner: Box<dyn StepRunner> = match &self.backend {
+                EngineBackend::Pjrt(rt) => Box::new(DecodeRunner::best(
+                    rt,
+                    &self.cfg.kernel,
+                    batch_bucket,
+                    kv_bucket,
+                )?),
+                EngineBackend::Reference(model) => {
+                    Box::new(model.runner(batch_bucket, kv_bucket))
+                }
+            };
             log_info!(
                 "engine",
                 "loaded decode runner {} for bucket (b{batch_bucket}, n{kv_bucket})",
@@ -388,5 +634,10 @@ impl Engine {
 
     pub fn recompositions(&self) -> u64 {
         self.recompositions
+    }
+
+    /// Blocks currently pinned by the prefix tree (0 when disabled).
+    pub fn prefix_cached_blocks(&self) -> usize {
+        self.prefix.as_ref().map(|t| t.cached_blocks()).unwrap_or(0)
     }
 }

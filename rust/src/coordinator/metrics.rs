@@ -3,6 +3,7 @@
 
 use std::time::Duration;
 
+use crate::prefixcache::PrefixStats;
 use crate::util::stats::{LatencyHistogram, Welford};
 
 use super::request::Request;
@@ -24,6 +25,11 @@ pub struct ServingMetrics {
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
     pub steps: u64,
+    /// Prefix-cache counters (hit rate, shared/evicted blocks); all zero
+    /// when the cache is disabled.
+    pub prefix: PrefixStats,
+    /// Blocks currently pinned by the prefix tree.
+    pub prefix_cached_blocks: u64,
     elapsed: Duration,
 }
 
@@ -72,9 +78,22 @@ impl ServingMetrics {
         (self.tokens_generated + self.prefill_tokens) as f64 / self.elapsed.as_secs_f64()
     }
 
+    /// Fraction of prefix-cache lookups that matched at least one block.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix.lookups == 0 {
+            return 0.0;
+        }
+        self.prefix.hits as f64 / self.prefix.lookups as f64
+    }
+
+    /// Prefill steps avoided by prefix sharing (one step per reused token).
+    pub fn prefill_steps_saved(&self) -> u64 {
+        self.prefix.hit_tokens
+    }
+
     /// Human-readable dump.
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} tokens={} (prefill {}) steps={} | decode {:.1} tok/s, total {:.1} tok/s | \
              ttft p50 {:.1} ms p99 {:.1} ms | tpot p50 {:.2} ms p99 {:.2} ms | \
              e2e p50 {:.1} ms | step mean {:.2} ms | occupancy {:.0}%",
@@ -91,7 +110,20 @@ impl ServingMetrics {
             self.e2e.percentile_us(50.0) / 1e3,
             self.step.mean_us() / 1e3,
             self.occupancy.mean() * 100.0,
-        )
+        );
+        if self.prefix.lookups > 0 {
+            s.push_str(&format!(
+                " | prefix hits {}/{} ({:.0}%), {} prefill steps saved, \
+                 {} blocks cached, {} evicted",
+                self.prefix.hits,
+                self.prefix.lookups,
+                self.prefix_hit_rate() * 100.0,
+                self.prefix.hit_tokens,
+                self.prefix_cached_blocks,
+                self.prefix.evicted_blocks,
+            ));
+        }
+        s
     }
 }
 
@@ -132,5 +164,20 @@ mod tests {
         let m = ServingMetrics::new();
         let s = m.report();
         assert!(s.contains("tok/s"));
+        assert!(!s.contains("prefix"), "no prefix section when idle");
+    }
+
+    #[test]
+    fn prefix_counters_surface_in_report() {
+        let mut m = ServingMetrics::new();
+        m.prefix.lookups = 4;
+        m.prefix.hits = 3;
+        m.prefix.hit_tokens = 96;
+        m.prefix_cached_blocks = 6;
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(m.prefill_steps_saved(), 96);
+        let s = m.report();
+        assert!(s.contains("prefix hits 3/4"), "report: {s}");
+        assert!(s.contains("96 prefill steps saved"), "report: {s}");
     }
 }

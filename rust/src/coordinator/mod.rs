@@ -6,7 +6,8 @@
 //!
 //! * [`request`] — request lifecycle state machine;
 //! * [`router`] — admission control + validation against artifact buckets
-//!   and KV-cache capacity;
+//!   and KV-cache capacity, plus prefix-affinity placement for multi-
+//!   instance deployments;
 //! * [`batcher`] — continuous batching: slot management, bucket selection;
 //! * [`engine`] — the decode loop over the PJRT artifacts (prefill-as-
 //!   decode, greedy sampling, KV bookkeeping via the paged latent store);
@@ -28,4 +29,4 @@ pub use cluster::{ClusterConfig, ClusterSim, StepBreakdown, TraceReport, TraceRe
 pub use engine::{Engine, EngineConfig, EngineReport};
 pub use metrics::ServingMetrics;
 pub use request::{FinishReason, Request, RequestId, RequestState};
-pub use router::{AdmitError, Router};
+pub use router::{AdmitError, PrefixAffinityRouter, Router};

@@ -1,22 +1,38 @@
 //! Admission router: validates requests against artifact buckets and cache
-//! capacity before they reach the batcher.
+//! capacity before they reach the batcher; plus the prefix-affinity
+//! placement policy for the cluster path.
+
+use std::collections::HashMap;
 
 use super::request::{Request, RequestId};
 
 /// Why a request was rejected at the door.
-#[derive(Debug, PartialEq, thiserror::Error)]
+#[derive(Debug, PartialEq)]
 pub enum AdmitError {
-    #[error("prompt is empty")]
     EmptyPrompt,
-    #[error("max_new_tokens must be ≥ 1")]
     ZeroBudget,
-    #[error("context {needed} exceeds the largest bucket {limit}")]
     ContextTooLong { needed: usize, limit: usize },
-    #[error("token id {tok} outside vocab {vocab}")]
     BadToken { tok: i32, vocab: usize },
-    #[error("queue full ({limit} waiting)")]
     QueueFull { limit: usize },
 }
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::EmptyPrompt => write!(f, "prompt is empty"),
+            AdmitError::ZeroBudget => write!(f, "max_new_tokens must be ≥ 1"),
+            AdmitError::ContextTooLong { needed, limit } => {
+                write!(f, "context {needed} exceeds the largest bucket {limit}")
+            }
+            AdmitError::BadToken { tok, vocab } => {
+                write!(f, "token id {tok} outside vocab {vocab}")
+            }
+            AdmitError::QueueFull { limit } => write!(f, "queue full ({limit} waiting)"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
 
 /// Stateless admission validator + id allocator.
 pub struct Router {
@@ -86,6 +102,115 @@ impl Router {
     }
 }
 
+/// Prefix-affinity placement for the cluster path: route a request to the
+/// engine instance most likely to already hold its prompt prefix.
+///
+/// Each engine's prefix cache is local, so cross-instance placement decides
+/// whether sharing can happen at all.  The policy keeps, per worker, a
+/// bounded set of *block-aligned prefix fingerprints* (rolling hash per
+/// block boundary) of the prompts it has served.  `route` scores workers by
+/// the longest fingerprint match — the blocks a hit would reuse — and
+/// tie-breaks on least outstanding load, so cold prefixes still spread.
+pub struct PrefixAffinityRouter {
+    block_size: usize,
+    /// Per-worker: fingerprint → (last-use tick, block depth).  Depth is
+    /// kept so capacity trimming drops the *deepest* fingerprints of the
+    /// oldest prompt first — dropping a leading fingerprint while its
+    /// suffixes survive would zero that prompt's affinity score.
+    seen: Vec<HashMap<u64, (u64, u32)>>,
+    /// Outstanding requests per worker (caller pairs `route`/`finish`).
+    load: Vec<usize>,
+    /// Fingerprints retained per worker.
+    max_tracked: usize,
+    clock: u64,
+}
+
+impl PrefixAffinityRouter {
+    pub fn new(workers: usize, block_size: usize, max_tracked: usize) -> Self {
+        assert!(workers > 0 && block_size > 0 && max_tracked > 0);
+        PrefixAffinityRouter {
+            block_size,
+            seen: vec![HashMap::new(); workers],
+            load: vec![0; workers],
+            max_tracked,
+            clock: 0,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.seen.len()
+    }
+
+    pub fn load(&self, worker: usize) -> usize {
+        self.load[worker]
+    }
+
+    /// FNV-1a rolling fingerprints at each whole-block boundary.
+    fn fingerprints(&self, tokens: &[i32]) -> Vec<u64> {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut out = Vec::with_capacity(tokens.len() / self.block_size);
+        for (i, &t) in tokens.iter().enumerate() {
+            for byte in t.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+            if (i + 1) % self.block_size == 0 {
+                out.push(h);
+            }
+        }
+        out
+    }
+
+    /// Pick the worker for a prompt and record its prefix there.  Returns
+    /// the worker index; call [`finish`](Self::finish) when the request
+    /// completes to release the load it added.
+    pub fn route(&mut self, prompt: &[i32]) -> usize {
+        self.clock += 1;
+        let fps = self.fingerprints(prompt);
+        // Score = number of leading block fingerprints the worker has seen.
+        let mut best = 0usize;
+        let mut best_key = (0usize, usize::MAX); // (matched, load)
+        for w in 0..self.seen.len() {
+            let matched = fps
+                .iter()
+                .take_while(|fp| self.seen[w].contains_key(fp))
+                .count();
+            let key = (matched, self.load[w]);
+            if key.0 > best_key.0 || (key.0 == best_key.0 && key.1 < best_key.1) {
+                best_key = key;
+                best = w;
+            }
+        }
+        self.load[best] += 1;
+        let clock = self.clock;
+        let seen = &mut self.seen[best];
+        for (depth, fp) in fps.into_iter().enumerate() {
+            seen.insert(fp, (clock, depth as u32));
+        }
+        // Bound memory: drop the oldest prompt's deepest fingerprints
+        // first (ascending tick, descending depth), so a surviving
+        // fingerprint always has its whole leading chain present.
+        if seen.len() > self.max_tracked {
+            let mut ages: Vec<(u64, std::cmp::Reverse<u32>, u64)> = seen
+                .iter()
+                .map(|(&f, &(t, d))| (t, std::cmp::Reverse(d), f))
+                .collect();
+            ages.sort_unstable();
+            let drop = seen.len() - self.max_tracked;
+            for &(_, _, f) in ages.iter().take(drop) {
+                seen.remove(&f);
+            }
+        }
+        best
+    }
+
+    /// Release the load recorded by [`route`](Self::route).
+    pub fn finish(&mut self, worker: usize) {
+        assert!(self.load[worker] > 0, "finish without a routed request");
+        self.load[worker] -= 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,5 +271,69 @@ mod tests {
             Err(AdmitError::QueueFull { limit: 8 })
         ));
         assert!(r.admit(vec![1], 1, 7).is_ok());
+    }
+
+    fn prompt(system: i32, user: i32) -> Vec<i32> {
+        let mut p = vec![system; 8];
+        p.extend(vec![user; 4]);
+        p
+    }
+
+    #[test]
+    fn affinity_routes_shared_prefixes_together() {
+        let mut r = PrefixAffinityRouter::new(4, 4, 64);
+        let w_a = r.route(&prompt(1, 10));
+        let w_b = r.route(&prompt(2, 20));
+        assert_ne!(w_a, w_b, "cold prefixes spread by load");
+        // Every later request with system prompt 1 sticks to w_a, 2 to w_b.
+        for u in 30..40 {
+            assert_eq!(r.route(&prompt(1, u)), w_a);
+            assert_eq!(r.route(&prompt(2, u)), w_b);
+        }
+    }
+
+    #[test]
+    fn affinity_spreads_cold_prefixes_by_load() {
+        let mut r = PrefixAffinityRouter::new(3, 4, 64);
+        let mut counts = [0usize; 3];
+        for s in 0..9 {
+            counts[r.route(&prompt(100 + s, 0))] += 1;
+        }
+        assert_eq!(counts, [3, 3, 3], "round-robins under equal affinity");
+    }
+
+    #[test]
+    fn affinity_finish_releases_load() {
+        let mut r = PrefixAffinityRouter::new(2, 4, 64);
+        let w = r.route(&prompt(1, 2));
+        assert_eq!(r.load(w), 1);
+        r.finish(w);
+        assert_eq!(r.load(w), 0);
+    }
+
+    #[test]
+    fn affinity_prefers_longer_match() {
+        let mut r = PrefixAffinityRouter::new(2, 4, 64);
+        // Worker 0 has seen [1;8]+[2;4]; worker 1 a disjoint prompt.
+        let mut long = vec![1; 8];
+        long.extend(vec![2; 4]);
+        let mut other = vec![3; 8];
+        other.extend(vec![1; 4]);
+        let w_long = r.route(&long);
+        let w_other = r.route(&other);
+        assert_ne!(w_long, w_other);
+        // A query extending the 8-token run of 1s matches w_long deeper.
+        let mut q = vec![1; 8];
+        q.extend(vec![9; 4]);
+        assert_eq!(r.route(&q), w_long);
+    }
+
+    #[test]
+    fn affinity_fingerprint_cap_bounds_memory() {
+        let mut r = PrefixAffinityRouter::new(1, 4, 8);
+        for s in 0..100 {
+            r.route(&vec![s; 16]);
+        }
+        assert!(r.seen[0].len() <= 8);
     }
 }

@@ -4,11 +4,22 @@
 pub type BlockId = u32;
 
 /// Allocation failure.
-#[derive(Debug, PartialEq, thiserror::Error)]
+#[derive(Debug, PartialEq)]
 pub enum AllocError {
-    #[error("out of cache blocks ({capacity} total, all in use)")]
     OutOfBlocks { capacity: usize },
 }
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::OutOfBlocks { capacity } => {
+                write!(f, "out of cache blocks ({capacity} total, all in use)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
 
 /// Free-list allocator with per-block refcounts.
 #[derive(Debug)]

@@ -73,7 +73,13 @@ impl PagedLatentCache {
         id
     }
 
-    /// Drop a sequence, releasing its blocks.
+    /// Drop a sequence, releasing one reference on each of its blocks.
+    ///
+    /// Refcount-correct for forked/shared sequences: a block returns to the
+    /// free list only when its *last* reference drops (the allocator counts
+    /// references; forks, adopted chains, and the prefix tree each hold
+    /// their own).  Freeing an unknown or already-freed `SeqId` is a no-op
+    /// — double-free must never panic the serving loop.
     pub fn free_seq(&mut self, id: SeqId) {
         if let Some(state) = self.seqs.remove(&id) {
             for b in state.blocks {
@@ -92,18 +98,31 @@ impl PagedLatentCache {
     }
 
     /// Can `tokens` more tokens be appended without running out of blocks?
-    /// (Conservative: ignores possibly shared last blocks.)
+    ///
+    /// Accounts for copy-on-write: if the tail block is shared and partially
+    /// filled, the first append into it must deep-copy it, which costs one
+    /// extra block beyond the capacity arithmetic.
     pub fn can_append(&self, id: SeqId, tokens: usize) -> bool {
         let state = match self.seqs.get(&id) {
             Some(s) => s,
             None => return false,
         };
-        let have = state.blocks.len() * self.cfg.block_size;
-        let need = state.len + tokens;
-        if need <= have {
+        if tokens == 0 {
             return true;
         }
-        let extra = (need - have).div_ceil(self.cfg.block_size);
+        let mut extra = 0usize;
+        // CoW of a shared, partially-filled tail block.
+        if state.len % self.cfg.block_size != 0 {
+            let tail = *state.blocks.last().expect("partial len implies a block");
+            if !self.allocator.is_exclusive(tail) {
+                extra += 1;
+            }
+        }
+        let have = state.blocks.len() * self.cfg.block_size;
+        let need = state.len + tokens;
+        if need > have {
+            extra += (need - have).div_ceil(self.cfg.block_size);
+        }
         extra <= self.allocator.free_blocks()
     }
 
@@ -153,6 +172,78 @@ impl PagedLatentCache {
         let id = self.next_id;
         self.next_id += 1;
         self.seqs.insert(id, state);
+        id
+    }
+
+    /// Physical block chain backing a sequence (prefix order).
+    pub fn blocks_of(&self, id: SeqId) -> &[BlockId] {
+        self.seqs
+            .get(&id)
+            .map(|s| s.blocks.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Take an extra reference on a block (external owner, e.g. the prefix
+    /// tree adopting a chain into a node).
+    pub fn retain_block(&mut self, b: BlockId) {
+        self.allocator.retain(b);
+    }
+
+    /// Drop one external reference on a block; frees it at refcount zero.
+    pub fn release_block(&mut self, b: BlockId) {
+        self.allocator.release(b);
+    }
+
+    /// Current refcount of a block (0 = free).
+    pub fn block_refcount(&self, b: BlockId) -> u32 {
+        self.allocator.refcount(b)
+    }
+
+    /// Export the first `n_blocks` blocks of a sequence, taking one extra
+    /// reference on each on behalf of the caller (who must eventually
+    /// `release_block` them).  Used by the prefix tree to take ownership of
+    /// a completed prefill's prompt blocks.
+    pub fn export_chain(&mut self, id: SeqId, n_blocks: usize) -> Vec<BlockId> {
+        let state = self.seqs.get(&id).expect("unknown sequence");
+        assert!(
+            n_blocks <= state.blocks.len(),
+            "export {n_blocks} of {} blocks",
+            state.blocks.len()
+        );
+        let chain: Vec<BlockId> = state.blocks[..n_blocks].to_vec();
+        for &b in &chain {
+            self.allocator.retain(b);
+        }
+        chain
+    }
+
+    /// Create a sequence backed by an existing (shared) block chain holding
+    /// `len` tokens.  Takes one reference per block on behalf of the new
+    /// sequence; the donor (e.g. the prefix tree) keeps its own references.
+    /// Copy-on-write applies on the first append into a shared tail block,
+    /// exactly as after [`fork`](Self::fork).
+    pub fn adopt_chain(&mut self, chain: &[BlockId], len: usize) -> SeqId {
+        assert!(
+            len <= chain.len() * self.cfg.block_size,
+            "len {len} exceeds chain capacity {}",
+            chain.len() * self.cfg.block_size
+        );
+        assert!(
+            chain.is_empty() || len > (chain.len() - 1) * self.cfg.block_size,
+            "len {len} leaves trailing unused blocks in the chain"
+        );
+        for &b in chain {
+            self.allocator.retain(b);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.seqs.insert(
+            id,
+            SeqState {
+                blocks: chain.to_vec(),
+                len,
+            },
+        );
         id
     }
 
@@ -348,6 +439,118 @@ mod tests {
     }
 
     #[test]
+    fn double_free_seq_is_noop() {
+        let mut c = PagedLatentCache::new(cfg(2));
+        let s = c.new_seq();
+        for t in 0..8 {
+            c.append(s, &latent(t as f32, 3)).unwrap();
+        }
+        c.free_seq(s);
+        assert_eq!(c.free_blocks(), 2);
+        c.free_seq(s); // must not panic or double-release
+        assert_eq!(c.free_blocks(), 2);
+        c.free_seq(9999); // unknown id: also a no-op
+        assert_eq!(c.free_blocks(), 2);
+    }
+
+    #[test]
+    fn free_seq_keeps_blocks_shared_with_fork() {
+        let mut c = PagedLatentCache::new(cfg(4));
+        let a = c.new_seq();
+        for t in 0..8 {
+            c.append(a, &latent(t as f32, 3)).unwrap();
+        }
+        let b = c.fork(a);
+        c.free_seq(a);
+        // Fork still owns the blocks: nothing returned to the free list.
+        assert_eq!(c.free_blocks(), 2);
+        for t in 0..8 {
+            assert_eq!(c.token_latent(b, t), latent(t as f32, 3).as_slice());
+        }
+        c.free_seq(b);
+        assert_eq!(c.free_blocks(), 4);
+    }
+
+    #[test]
+    fn adopt_chain_shares_and_cows() {
+        let mut c = PagedLatentCache::new(cfg(4));
+        let a = c.new_seq();
+        for t in 0..8 {
+            c.append(a, &latent(t as f32, 3)).unwrap();
+        }
+        let chain = c.export_chain(a, 2); // donor reference (the "tree")
+        assert_eq!(chain.len(), 2);
+        let b = c.adopt_chain(&chain, 8);
+        assert_eq!(c.len(b), 8);
+        assert_eq!(c.free_blocks(), 2, "adoption allocates nothing");
+        // Divergent appends: both sequences extend without corrupting the
+        // shared prefix.
+        c.append(b, &latent(100.0, 3)).unwrap();
+        c.append(a, &latent(200.0, 3)).unwrap();
+        assert_eq!(c.token_latent(a, 8), latent(200.0, 3).as_slice());
+        assert_eq!(c.token_latent(b, 8), latent(100.0, 3).as_slice());
+        for t in 0..8 {
+            assert_eq!(c.token_latent(a, t), c.token_latent(b, t));
+        }
+        // Donor references survive both sequences.
+        c.free_seq(a);
+        c.free_seq(b);
+        assert_eq!(c.block_refcount(chain[0]), 1);
+        for &blk in &chain {
+            c.release_block(blk);
+        }
+        assert_eq!(c.free_blocks(), 4);
+    }
+
+    #[test]
+    fn adopt_chain_partial_tail_copy_on_write() {
+        let mut c = PagedLatentCache::new(cfg(4));
+        let a = c.new_seq();
+        for t in 0..6 {
+            // 1.5 blocks
+            c.append(a, &latent(t as f32, 3)).unwrap();
+        }
+        let chain = c.export_chain(a, 2);
+        let b = c.adopt_chain(&chain, 6); // shared partial tail
+        c.append(b, &latent(50.0, 3)).unwrap(); // must deep-copy the tail
+        assert_eq!(c.token_latent(b, 6), latent(50.0, 3).as_slice());
+        assert_eq!(c.len(a), 6, "donor untouched");
+        for t in 0..6 {
+            assert_eq!(c.token_latent(a, t), c.token_latent(b, t));
+        }
+        c.free_seq(a);
+        c.free_seq(b);
+        for &blk in &chain {
+            c.release_block(blk);
+        }
+        assert_eq!(c.free_blocks(), 4);
+    }
+
+    #[test]
+    fn can_append_charges_cow_of_shared_tail() {
+        let mut c = PagedLatentCache::new(cfg(2));
+        let a = c.new_seq();
+        for t in 0..6 {
+            // block 0 full, block 1 half-full — pool exhausted
+            c.append(a, &latent(t as f32, 3)).unwrap();
+        }
+        let b = c.fork(a);
+        assert_eq!(c.free_blocks(), 0);
+        // b's tail is shared and partial: appending would need a CoW block
+        // that does not exist.
+        assert!(!c.can_append(b, 1), "CoW cost must be charged");
+        assert!(matches!(
+            c.append(b, &latent(9.0, 3)),
+            Err(AllocError::OutOfBlocks { .. })
+        ));
+        // After the donor frees, the fork still can't append (blocks still
+        // referenced by b itself — CoW of tail needs a *new* block).
+        c.free_seq(a);
+        assert!(c.can_append(b, 1));
+        c.append(b, &latent(9.0, 3)).unwrap();
+    }
+
+    #[test]
     fn property_forks_never_corrupt_parent() {
         forall(Config::default().cases(60), |g| {
             let mut c = PagedLatentCache::new(CacheConfig {
@@ -375,6 +578,135 @@ mod tests {
                     c.token_latent(b, t) == [t as f32, -(t as f32)],
                     "fork prefix corrupted at {t}"
                 );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_fork_divergence_only_past_fork_point() {
+        // After fork + divergent appends, parent and child latents differ
+        // only past the fork point.
+        forall(Config::default().cases(80), |g| {
+            let bs = g.usize(1..6);
+            let mut c = PagedLatentCache::new(CacheConfig {
+                block_size: bs,
+                latent_dim: 2,
+                num_blocks: 64,
+            });
+            let a = c.new_seq();
+            let fork_at = g.usize(1..20);
+            for t in 0..fork_at {
+                c.append(a, &[t as f32, 1.0]).unwrap();
+            }
+            let b = c.fork(a);
+            let extend_a = g.usize(1..10);
+            let extend_b = g.usize(1..10);
+            // Interleave so CoW triggers in arbitrary order.
+            let mut ia = 0usize;
+            let mut ib = 0usize;
+            while ia < extend_a || ib < extend_b {
+                if ib >= extend_b || (ia < extend_a && g.bool()) {
+                    c.append(a, &[1000.0 + ia as f32, 2.0]).unwrap();
+                    ia += 1;
+                } else {
+                    c.append(b, &[2000.0 + ib as f32, 3.0]).unwrap();
+                    ib += 1;
+                }
+            }
+            for t in 0..fork_at {
+                prop_assert!(
+                    c.token_latent(a, t) == c.token_latent(b, t),
+                    "prefix diverged at {t} (fork at {fork_at})"
+                );
+            }
+            for t in 0..extend_a.min(extend_b) {
+                prop_assert!(
+                    c.token_latent(a, fork_at + t) != c.token_latent(b, fork_at + t),
+                    "suffix should diverge at {t}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_refcounts_and_free_list_under_fork_append_free() {
+        // Allocator invariants under random fork/append/free interleavings:
+        // every block's refcount equals the number of live block tables
+        // containing it, used == distinct live blocks, and contents always
+        // match a shadow model.
+        use std::collections::{BTreeMap, HashMap};
+        forall(Config::default().cases(60), |g| {
+            let bs = g.usize(1..5);
+            let nb = g.usize(4..32);
+            let mut c = PagedLatentCache::new(CacheConfig {
+                block_size: bs,
+                latent_dim: 1,
+                num_blocks: nb,
+            });
+            // BTreeMap so `g.choose` over keys is deterministic per seed.
+            let mut shadow: BTreeMap<SeqId, Vec<f32>> = BTreeMap::new();
+            let first = c.new_seq();
+            shadow.insert(first, Vec::new());
+            let mut tick = 0f32;
+            for _ in 0..g.usize(10..120) {
+                let live: Vec<SeqId> = shadow.keys().copied().collect();
+                match g.usize(0..10) {
+                    // append (most common)
+                    0..=5 if !live.is_empty() => {
+                        let s = *g.choose(&live);
+                        tick += 1.0;
+                        if c.append(s, &[tick]).is_ok() {
+                            shadow.get_mut(&s).unwrap().push(tick);
+                        }
+                    }
+                    6..=7 if !live.is_empty() => {
+                        let s = *g.choose(&live);
+                        let f = c.fork(s);
+                        let cloned = shadow[&s].clone();
+                        shadow.insert(f, cloned);
+                    }
+                    8 if live.len() > 1 => {
+                        let s = *g.choose(&live);
+                        c.free_seq(s);
+                        shadow.remove(&s);
+                    }
+                    _ => {
+                        let s = c.new_seq();
+                        shadow.insert(s, Vec::new());
+                    }
+                }
+                // Refcount invariant: count block-table references.
+                let mut want: HashMap<BlockId, u32> = HashMap::new();
+                for (&s, _) in &shadow {
+                    for &b in c.blocks_of(s) {
+                        *want.entry(b).or_insert(0) += 1;
+                    }
+                }
+                for (&b, &rc) in &want {
+                    prop_assert!(
+                        c.block_refcount(b) == rc,
+                        "block {b}: refcount {} want {rc}",
+                        c.block_refcount(b)
+                    );
+                }
+                prop_assert!(
+                    nb - c.free_blocks() == want.len(),
+                    "used {} vs distinct live blocks {}",
+                    nb - c.free_blocks(),
+                    want.len()
+                );
+                // Content invariant for every live sequence.
+                for (&s, vals) in &shadow {
+                    prop_assert!(c.len(s) == vals.len(), "len mismatch for {s}");
+                    for (t, v) in vals.iter().enumerate() {
+                        prop_assert!(
+                            c.token_latent(s, t) == [*v],
+                            "content mismatch seq {s} tok {t}"
+                        );
+                    }
+                }
             }
             Ok(())
         });

@@ -25,6 +25,7 @@ pub mod config;
 pub mod coordinator;
 pub mod hardware;
 pub mod kvcache;
+pub mod prefixcache;
 pub mod runtime;
 pub mod sim;
 pub mod testing;

@@ -1,0 +1,700 @@
+//! Radix-tree prefix cache with copy-on-write block sharing.
+//!
+//! Serving workloads re-prefill the same prompt prefixes constantly: system
+//! prompts, few-shot templates, multi-turn history.  MLA's compressed
+//! latent cache (576 floats/token) makes cross-request sharing unusually
+//! cheap, and the paged store already has the two primitives sharing needs
+//! — per-block refcounts and copy-on-write appends.  This module adds the
+//! missing piece: a radix tree over token-id prefixes whose nodes own
+//! chains of physical [`BlockId`]s in the paged latent pool.
+//!
+//! Design (see `docs/prefix-cache.md`):
+//!
+//! * **Block granularity.**  Edges carry token runs that are exact
+//!   multiples of `block_size`; matching proceeds block-by-block, so every
+//!   edge split lands on a block boundary and a matched prefix maps 1:1
+//!   onto a chain of whole physical blocks.
+//! * **Ownership via refcounts.**  The tree holds one allocator reference
+//!   per cached block (taken at [`PrefixTree::insert`]).  A hit adopts the
+//!   chain into a fresh [`SeqId`] with
+//!   [`PagedLatentCache::adopt_chain`], which takes the sequence's own
+//!   references; divergence past the shared prefix is handled by the
+//!   store's existing copy-on-write append.  Nothing is ever copied on the
+//!   hit path.
+//! * **LRU eviction.**  Under block-pool pressure the engine asks the tree
+//!   to release leaves, oldest-access first.  Pressure eviction only takes
+//!   *unreferenced* leaves (refcount 1 — the tree holds the last
+//!   reference), so it always returns blocks to the free list; budget
+//!   eviction (`max_blocks`) may also drop still-shared leaves to bound
+//!   tree size.
+//!
+//! Related work: SGLang's RadixAttention and vLLM's prefix caching use the
+//! same tree-of-blocks shape over a refcounted paged pool.
+
+use std::collections::HashMap;
+
+use crate::kvcache::{BlockId, PagedLatentCache};
+
+/// Counters the tree maintains; surfaced through `ServingMetrics`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixStats {
+    /// `match_prefix` calls.
+    pub lookups: u64,
+    /// Lookups that matched at least one block.
+    pub hits: u64,
+    /// Tokens covered by matched prefixes (prefill work avoided).
+    pub hit_tokens: u64,
+    /// Physical blocks handed out to adopters across all hits.
+    pub hit_blocks: u64,
+    /// Blocks adopted into the tree by `insert`.
+    pub inserted_blocks: u64,
+    /// Blocks released by eviction.
+    pub evicted_blocks: u64,
+    /// Leaf nodes evicted.
+    pub evictions: u64,
+}
+
+#[derive(Debug)]
+struct Node {
+    /// Token run on the edge into this node; always a multiple of
+    /// `block_size` tokens (empty only for the root).
+    key: Vec<i32>,
+    /// Physical blocks covering `key` (`key.len() / block_size` of them).
+    blocks: Vec<BlockId>,
+    /// Children keyed by the first token of their edge.
+    children: HashMap<i32, usize>,
+    parent: usize,
+    /// Logical timestamp of the last lookup/insert touching this node.
+    last_access: u64,
+}
+
+/// Outcome of a prefix lookup.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixMatch {
+    /// Tokens covered (multiple of `block_size`).
+    pub tokens: usize,
+    /// The physical chain backing those tokens, in prefix order.  Pass to
+    /// [`PagedLatentCache::adopt_chain`] to create a sequence over it.
+    pub blocks: Vec<BlockId>,
+}
+
+struct Walk {
+    matched_tokens: usize,
+    blocks: Vec<BlockId>,
+    /// Fully-entered nodes, in root→leaf order (root excluded).
+    path: Vec<usize>,
+    /// Edge matched only partially: (node, chunks matched).
+    partial: Option<(usize, usize)>,
+}
+
+/// The radix tree.  One per engine; not thread-safe by itself (the engine
+/// owns it behind its own synchronization, like the paged store).
+pub struct PrefixTree {
+    block_size: usize,
+    /// Optional cap on blocks the tree may keep referenced.
+    max_blocks: Option<usize>,
+    nodes: Vec<Option<Node>>,
+    free_slots: Vec<usize>,
+    clock: u64,
+    cached_blocks: usize,
+    stats: PrefixStats,
+}
+
+const ROOT: usize = 0;
+
+impl PrefixTree {
+    pub fn new(block_size: usize, max_blocks: Option<usize>) -> Self {
+        assert!(block_size > 0);
+        PrefixTree {
+            block_size,
+            max_blocks,
+            nodes: vec![Some(Node {
+                key: Vec::new(),
+                blocks: Vec::new(),
+                children: HashMap::new(),
+                parent: ROOT,
+                last_access: 0,
+            })],
+            free_slots: Vec::new(),
+            clock: 0,
+            cached_blocks: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Blocks currently referenced by the tree.
+    pub fn cached_blocks(&self) -> usize {
+        self.cached_blocks
+    }
+
+    /// Live nodes (excluding the root).
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().flatten().count() - 1
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    fn node(&self, i: usize) -> &Node {
+        self.nodes[i].as_ref().expect("dangling node index")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node {
+        self.nodes[i].as_mut().expect("dangling node index")
+    }
+
+    fn alloc_node(&mut self, n: Node) -> usize {
+        match self.free_slots.pop() {
+            Some(slot) => {
+                self.nodes[slot] = Some(n);
+                slot
+            }
+            None => {
+                self.nodes.push(Some(n));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Whole blocks of `key` matched against `tokens` (both from offset 0).
+    fn chunks_matched(&self, key: &[i32], tokens: &[i32]) -> usize {
+        let bs = self.block_size;
+        let mut k = 0usize;
+        while (k + 1) * bs <= key.len()
+            && (k + 1) * bs <= tokens.len()
+            && key[k * bs..(k + 1) * bs] == tokens[k * bs..(k + 1) * bs]
+        {
+            k += 1;
+        }
+        k
+    }
+
+    fn walk(&self, tokens: &[i32]) -> Walk {
+        let bs = self.block_size;
+        let mut node = ROOT;
+        let mut pos = 0usize;
+        let mut blocks = Vec::new();
+        let mut path = Vec::new();
+        let mut partial = None;
+        while pos < tokens.len() {
+            let Some(&child) = self.node(node).children.get(&tokens[pos]) else {
+                break;
+            };
+            let k = self.chunks_matched(&self.node(child).key, &tokens[pos..]);
+            if k == 0 {
+                // First token matched but the first block differs: a
+                // block-granularity tree cannot split inside a block.
+                break;
+            }
+            blocks.extend_from_slice(&self.node(child).blocks[..k]);
+            pos += k * bs;
+            if k * bs == self.node(child).key.len() {
+                path.push(child);
+                node = child;
+            } else {
+                partial = Some((child, k));
+                break;
+            }
+        }
+        Walk {
+            matched_tokens: pos,
+            blocks,
+            path,
+            partial,
+        }
+    }
+
+    /// Longest cached prefix of `tokens`, without touching LRU state or
+    /// stats.  Used by admission control to charge only the unshared
+    /// suffix.
+    pub fn peek_match(&self, tokens: &[i32]) -> usize {
+        self.walk(tokens).matched_tokens
+    }
+
+    /// Longest cached prefix of `tokens`; bumps LRU recency on the path
+    /// and records hit statistics.  The returned chain stays owned by the
+    /// tree — adopt it into a sequence before the next eviction.
+    pub fn match_prefix(&mut self, tokens: &[i32]) -> PrefixMatch {
+        let w = self.walk(tokens);
+        self.clock += 1;
+        let clock = self.clock;
+        for &n in &w.path {
+            self.node_mut(n).last_access = clock;
+        }
+        if let Some((n, _)) = w.partial {
+            self.node_mut(n).last_access = clock;
+        }
+        self.stats.lookups += 1;
+        if w.matched_tokens > 0 {
+            self.stats.hits += 1;
+            self.stats.hit_tokens += w.matched_tokens as u64;
+            self.stats.hit_blocks += w.blocks.len() as u64;
+        }
+        PrefixMatch {
+            tokens: w.matched_tokens,
+            blocks: w.blocks,
+        }
+    }
+
+    /// Insert the (block-aligned) prefix `tokens`, backed by `chain` — the
+    /// first `tokens.len() / block_size` physical blocks of the sequence
+    /// that just finished prefilling.  The tree takes its own reference on
+    /// every block it adopts; fully-cached prefixes adopt nothing (dedup).
+    /// Returns the number of blocks newly adopted.
+    pub fn insert(
+        &mut self,
+        tokens: &[i32],
+        chain: &[BlockId],
+        cache: &mut PagedLatentCache,
+    ) -> usize {
+        let bs = self.block_size;
+        assert!(
+            tokens.len() % bs == 0,
+            "insert of unaligned prefix ({} tokens, block {bs})",
+            tokens.len()
+        );
+        assert!(
+            chain.len() * bs >= tokens.len(),
+            "chain too short: {} blocks for {} tokens",
+            chain.len(),
+            tokens.len()
+        );
+        if tokens.is_empty() {
+            return 0;
+        }
+        let w = self.walk(tokens);
+        self.clock += 1;
+        let clock = self.clock;
+        for &n in &w.path {
+            self.node_mut(n).last_access = clock;
+        }
+        if w.matched_tokens == tokens.len() {
+            if let Some((n, _)) = w.partial {
+                self.node_mut(n).last_access = clock;
+            }
+            return 0;
+        }
+        // Attach point: split a partially-matched edge at the block
+        // boundary, otherwise hang off the deepest fully-entered node.
+        let attach = match w.partial {
+            Some((child, k)) => {
+                let bs_off = k * bs;
+                if self.node(child).key[bs_off] == tokens[w.matched_tokens] {
+                    // First-block conflict under the same first token right
+                    // after the split point: the existing entry wins (a
+                    // block-granularity tree cannot split inside a block).
+                    self.node_mut(child).last_access = clock;
+                    return 0;
+                }
+                self.split_edge(child, k, clock)
+            }
+            None => {
+                if self
+                    .node(w.path.last().copied().unwrap_or(ROOT))
+                    .children
+                    .contains_key(&tokens[w.matched_tokens])
+                {
+                    // First-block conflict under the same first token: the
+                    // existing entry wins (cannot split inside a block).
+                    return 0;
+                }
+                w.path.last().copied().unwrap_or(ROOT)
+            }
+        };
+        let start_block = w.matched_tokens / bs;
+        let new_blocks: Vec<BlockId> = chain[start_block..tokens.len() / bs].to_vec();
+        for &b in &new_blocks {
+            cache.retain_block(b);
+        }
+        let adopted = new_blocks.len();
+        self.cached_blocks += adopted;
+        self.stats.inserted_blocks += adopted as u64;
+        let idx = self.alloc_node(Node {
+            key: tokens[w.matched_tokens..].to_vec(),
+            blocks: new_blocks,
+            children: HashMap::new(),
+            parent: attach,
+            last_access: clock,
+        });
+        self.node_mut(attach)
+            .children
+            .insert(tokens[w.matched_tokens], idx);
+        if let Some(budget) = self.max_blocks {
+            if self.cached_blocks > budget {
+                let excess = self.cached_blocks - budget;
+                self.evict(excess, cache, false);
+            }
+        }
+        adopted
+    }
+
+    /// Split `child`'s edge after `k` whole blocks; returns the new
+    /// intermediate node (which becomes the attach point).
+    fn split_edge(&mut self, child: usize, k: usize, clock: u64) -> usize {
+        let bs = self.block_size;
+        let parent = self.node(child).parent;
+        let key = self.node(child).key.clone();
+        let blocks = self.node(child).blocks.clone();
+        debug_assert!(k > 0 && k * bs < key.len());
+        let mid = self.alloc_node(Node {
+            key: key[..k * bs].to_vec(),
+            blocks: blocks[..k].to_vec(),
+            children: HashMap::from([(key[k * bs], child)]),
+            parent,
+            last_access: clock,
+        });
+        {
+            let c = self.node_mut(child);
+            c.key = key[k * bs..].to_vec();
+            c.blocks = blocks[k..].to_vec();
+            c.parent = mid;
+        }
+        let first = key[0];
+        self.node_mut(parent).children.insert(first, mid);
+        mid
+    }
+
+    /// Release leaves, least-recently-used first, until at least
+    /// `want_blocks` blocks have been dropped or no candidates remain.
+    ///
+    /// With `only_unreferenced` set (pool-pressure path), only leaves whose
+    /// blocks the tree holds the *last* reference to are taken, so every
+    /// released block goes straight back to the free list.  Without it
+    /// (budget path), still-shared leaves may be dropped too; their blocks
+    /// free later when the sharing sequences finish.  Returns the number of
+    /// blocks released.
+    pub fn evict(
+        &mut self,
+        want_blocks: usize,
+        cache: &mut PagedLatentCache,
+        only_unreferenced: bool,
+    ) -> usize {
+        let mut released = 0usize;
+        while released < want_blocks {
+            let mut victim: Option<(u64, usize)> = None;
+            for (i, slot) in self.nodes.iter().enumerate() {
+                let Some(n) = slot else { continue };
+                if i == ROOT || !n.children.is_empty() {
+                    continue;
+                }
+                if only_unreferenced
+                    && n.blocks.iter().any(|&b| cache.block_refcount(b) > 1)
+                {
+                    continue;
+                }
+                match victim {
+                    Some((t, _)) if n.last_access >= t => {}
+                    _ => victim = Some((n.last_access, i)),
+                }
+            }
+            let Some((_, idx)) = victim else { break };
+            let node = self.nodes[idx].take().expect("victim exists");
+            self.free_slots.push(idx);
+            let first = node.key[0];
+            self.node_mut(node.parent).children.remove(&first);
+            for &b in &node.blocks {
+                cache.release_block(b);
+            }
+            released += node.blocks.len();
+            self.cached_blocks -= node.blocks.len();
+            self.stats.evicted_blocks += node.blocks.len() as u64;
+            self.stats.evictions += 1;
+        }
+        released
+    }
+
+    /// Release every block the tree holds (shutdown / tests).
+    pub fn clear(&mut self, cache: &mut PagedLatentCache) {
+        for slot in self.nodes.iter_mut().skip(1) {
+            if let Some(n) = slot.take() {
+                for &b in &n.blocks {
+                    cache.release_block(b);
+                }
+            }
+        }
+        self.nodes.truncate(1);
+        self.free_slots.clear();
+        self.node_mut(ROOT).children.clear();
+        self.cached_blocks = 0;
+    }
+
+    /// Largest block-aligned prefix length strictly shorter than `len`.
+    ///
+    /// Admission caps matches with this so at least one prefill step always
+    /// runs: the decode contract emits the first generated token from the
+    /// last prompt token's logits, which the cache does not store.
+    pub fn usable_prefix_len(&self, len: usize) -> usize {
+        if len == 0 {
+            return 0;
+        }
+        ((len - 1) / self.block_size) * self.block_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::CacheConfig;
+    use crate::prop_assert;
+    use crate::testing::{forall, Config};
+
+    const BS: usize = 4;
+
+    fn cache(blocks: usize) -> PagedLatentCache {
+        PagedLatentCache::new(CacheConfig {
+            block_size: BS,
+            latent_dim: 2,
+            num_blocks: blocks,
+        })
+    }
+
+    /// Build a sequence holding `tokens.len()` latents tagged by token id.
+    fn seed_seq(c: &mut PagedLatentCache, tokens: &[i32]) -> crate::kvcache::SeqId {
+        let s = c.new_seq();
+        for &t in tokens {
+            c.append(s, &[t as f32, 0.5]).unwrap();
+        }
+        s
+    }
+
+    fn insert_prompt(tree: &mut PrefixTree, c: &mut PagedLatentCache, tokens: &[i32]) {
+        let aligned = (tokens.len() / BS) * BS;
+        let s = seed_seq(c, tokens);
+        let chain = c.blocks_of(s).to_vec();
+        tree.insert(&tokens[..aligned], &chain[..aligned / BS], c);
+        c.free_seq(s);
+    }
+
+    fn toks(spec: &[(i32, usize)]) -> Vec<i32> {
+        let mut v = Vec::new();
+        for &(t, n) in spec {
+            v.extend(std::iter::repeat(t).take(n));
+        }
+        v
+    }
+
+    #[test]
+    fn miss_on_empty_tree() {
+        let mut tree = PrefixTree::new(BS, None);
+        let m = tree.match_prefix(&[1, 2, 3, 4, 5]);
+        assert_eq!(m.tokens, 0);
+        assert!(m.blocks.is_empty());
+        assert_eq!(tree.stats().lookups, 1);
+        assert_eq!(tree.stats().hits, 0);
+    }
+
+    #[test]
+    fn insert_then_match_block_granularity() {
+        let mut c = cache(16);
+        let mut tree = PrefixTree::new(BS, None);
+        let prompt = toks(&[(7, 10)]); // 10 tokens → 2 aligned blocks
+        insert_prompt(&mut tree, &mut c, &prompt);
+        assert_eq!(tree.cached_blocks(), 2);
+        // Sequence freed but tree keeps the blocks alive.
+        assert_eq!(16 - c.free_blocks(), 2);
+
+        let m = tree.match_prefix(&prompt);
+        assert_eq!(m.tokens, 8, "matches whole blocks only");
+        assert_eq!(m.blocks.len(), 2);
+        // Shorter and longer queries with the same prefix.
+        assert_eq!(tree.peek_match(&toks(&[(7, 4)])), 4);
+        assert_eq!(tree.peek_match(&toks(&[(7, 3)])), 0, "sub-block: no match");
+        assert_eq!(tree.peek_match(&toks(&[(7, 64)])), 8);
+        assert_eq!(tree.peek_match(&toks(&[(9, 8)])), 0);
+    }
+
+    #[test]
+    fn adopted_chain_serves_latents() {
+        let mut c = cache(16);
+        let mut tree = PrefixTree::new(BS, None);
+        let prompt: Vec<i32> = (100..108).collect();
+        insert_prompt(&mut tree, &mut c, &prompt);
+        let m = tree.match_prefix(&prompt);
+        let s = c.adopt_chain(&m.blocks, m.tokens);
+        assert_eq!(c.len(s), 8);
+        for (t, &tok) in prompt.iter().enumerate() {
+            assert_eq!(c.token_latent(s, t), [tok as f32, 0.5]);
+        }
+        c.free_seq(s);
+    }
+
+    #[test]
+    fn edge_split_on_divergence() {
+        let mut c = cache(32);
+        let mut tree = PrefixTree::new(BS, None);
+        // Two prompts sharing the first two blocks, diverging after.
+        let a = toks(&[(1, 8), (2, 8)]);
+        let b = toks(&[(1, 8), (3, 8)]);
+        insert_prompt(&mut tree, &mut c, &a);
+        insert_prompt(&mut tree, &mut c, &b);
+        // Shared prefix stored once: 2 shared + 2 + 2 divergent.
+        assert_eq!(tree.cached_blocks(), 6);
+        assert_eq!(tree.node_count(), 3, "split produced an interior node");
+        assert_eq!(tree.match_prefix(&a).tokens, 16);
+        assert_eq!(tree.match_prefix(&b).tokens, 16);
+        assert_eq!(tree.match_prefix(&toks(&[(1, 8), (4, 8)])).tokens, 8);
+    }
+
+    #[test]
+    fn duplicate_insert_adopts_nothing() {
+        let mut c = cache(16);
+        let mut tree = PrefixTree::new(BS, None);
+        let prompt = toks(&[(5, 8)]);
+        insert_prompt(&mut tree, &mut c, &prompt);
+        let used = 16 - c.free_blocks();
+        insert_prompt(&mut tree, &mut c, &prompt);
+        assert_eq!(tree.cached_blocks(), 2, "dedup");
+        assert_eq!(16 - c.free_blocks(), used, "no extra blocks pinned");
+    }
+
+    #[test]
+    fn lru_eviction_frees_unreferenced_leaves() {
+        let mut c = cache(16);
+        let mut tree = PrefixTree::new(BS, None);
+        let old = toks(&[(1, 8)]);
+        let newer = toks(&[(2, 8)]);
+        insert_prompt(&mut tree, &mut c, &old);
+        insert_prompt(&mut tree, &mut c, &newer);
+        tree.match_prefix(&newer); // bump recency
+        tree.match_prefix(&old);
+        tree.match_prefix(&newer); // `newer` is most recent
+        let freed = tree.evict(2, &mut c, true);
+        assert_eq!(freed, 2);
+        assert_eq!(tree.peek_match(&old), 0, "LRU victim was `old`");
+        assert_eq!(tree.peek_match(&newer), 8);
+        assert_eq!(c.free_blocks(), 16 - 2);
+        assert_eq!(tree.stats().evictions, 1);
+    }
+
+    #[test]
+    fn pressure_eviction_skips_shared_leaves() {
+        let mut c = cache(16);
+        let mut tree = PrefixTree::new(BS, None);
+        let shared = toks(&[(1, 8)]);
+        insert_prompt(&mut tree, &mut c, &shared);
+        let m = tree.match_prefix(&shared);
+        let live = c.adopt_chain(&m.blocks, m.tokens); // an active request
+        assert_eq!(tree.evict(2, &mut c, true), 0, "leaf is referenced");
+        assert_eq!(tree.peek_match(&shared), 8, "entry survives");
+        c.free_seq(live);
+        assert_eq!(tree.evict(2, &mut c, true), 2);
+        assert_eq!(c.free_blocks(), 16);
+    }
+
+    #[test]
+    fn interior_nodes_become_evictable_leaves() {
+        let mut c = cache(32);
+        let mut tree = PrefixTree::new(BS, None);
+        insert_prompt(&mut tree, &mut c, &toks(&[(1, 8), (2, 8)]));
+        insert_prompt(&mut tree, &mut c, &toks(&[(1, 8), (3, 8)]));
+        // Evict everything: children first, then the interior node.
+        let freed = tree.evict(6, &mut c, true);
+        assert_eq!(freed, 6);
+        assert_eq!(tree.node_count(), 0);
+        assert_eq!(c.free_blocks(), 32);
+    }
+
+    #[test]
+    fn max_blocks_budget_enforced_on_insert() {
+        let mut c = cache(32);
+        let mut tree = PrefixTree::new(BS, Some(4));
+        insert_prompt(&mut tree, &mut c, &toks(&[(1, 8)]));
+        insert_prompt(&mut tree, &mut c, &toks(&[(2, 8)]));
+        insert_prompt(&mut tree, &mut c, &toks(&[(3, 8)]));
+        assert!(tree.cached_blocks() <= 4, "budget respected");
+        assert!(tree.stats().evicted_blocks >= 2);
+    }
+
+    #[test]
+    fn usable_prefix_len_always_leaves_one_step() {
+        let tree = PrefixTree::new(4, None);
+        assert_eq!(tree.usable_prefix_len(0), 0);
+        assert_eq!(tree.usable_prefix_len(1), 0);
+        assert_eq!(tree.usable_prefix_len(4), 0);
+        assert_eq!(tree.usable_prefix_len(5), 4);
+        assert_eq!(tree.usable_prefix_len(8), 4);
+        assert_eq!(tree.usable_prefix_len(9), 8);
+    }
+
+    #[test]
+    fn property_match_is_longest_common_block_prefix() {
+        // Against a shadow list of inserted prefixes, match length must be
+        // the longest shared whole-block prefix with any inserted prompt,
+        // and adopted chains must replay the right latents.
+        forall(Config::default().cases(60), |g| {
+            let mut c = cache(256);
+            let mut tree = PrefixTree::new(BS, None);
+            let mut inserted: Vec<Vec<i32>> = Vec::new();
+            for _ in 0..g.usize(1..8) {
+                let prompt = g.tokens(BS..8 * BS, 3);
+                insert_prompt(&mut tree, &mut c, &prompt);
+                inserted.push(prompt);
+            }
+            for _ in 0..g.usize(1..8) {
+                let q = g.tokens(1..8 * BS, 3);
+                let got = tree.peek_match(&q);
+                let want = inserted
+                    .iter()
+                    .map(|p| {
+                        let aligned = (p.len() / BS) * BS;
+                        let mut k = 0;
+                        while (k + 1) * BS <= aligned
+                            && (k + 1) * BS <= q.len()
+                            && p[k * BS..(k + 1) * BS] == q[k * BS..(k + 1) * BS]
+                        {
+                            k += 1;
+                        }
+                        k * BS
+                    })
+                    .max()
+                    .unwrap_or(0);
+                // A block-granularity tree can under-match when two inserted
+                // prompts collide inside a first block (first-token equal,
+                // block content different) — never over-match.
+                prop_assert!(
+                    got <= want,
+                    "over-match: got {got}, longest common is {want}"
+                );
+                let m = tree.match_prefix(&q);
+                prop_assert!(m.tokens == got, "peek vs match disagree");
+                if m.tokens > 0 {
+                    let s = c.adopt_chain(&m.blocks, m.tokens);
+                    for t in 0..m.tokens {
+                        prop_assert!(
+                            c.token_latent(s, t) == [q[t] as f32, 0.5],
+                            "wrong latent at {t}"
+                        );
+                    }
+                    c.free_seq(s);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_eviction_restores_all_blocks() {
+        // Insert random prompts, evict everything: the pool must return to
+        // fully free, and the tree to empty.
+        forall(Config::default().cases(40), |g| {
+            let mut c = cache(256);
+            let mut tree = PrefixTree::new(BS, None);
+            for _ in 0..g.usize(1..10) {
+                let prompt = g.tokens(BS..10 * BS, 4);
+                insert_prompt(&mut tree, &mut c, &prompt);
+            }
+            let held = tree.cached_blocks();
+            prop_assert!(256 - c.free_blocks() == held, "tree is sole owner");
+            let freed = tree.evict(usize::MAX, &mut c, true);
+            prop_assert!(freed == held, "freed {freed} of {held}");
+            prop_assert!(c.free_blocks() == 256);
+            prop_assert!(tree.node_count() == 0);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,52 @@
+//! Backend abstraction for the decode engine.
+//!
+//! The engine drives one fixed-shape "decode step" per tick; where that
+//! step executes is a backend detail.  Two implementations exist:
+//!
+//! * [`DecodeRunner`](super::DecodeRunner) — the PJRT path over AOT HLO
+//!   artifacts (requires `make artifacts` and a native `xla` build);
+//! * [`ReferenceRunner`](super::reference::ReferenceRunner) — a pure-Rust
+//!   deterministic tiny model honoring the same step contract, available
+//!   everywhere (tests, examples, CI).
+//!
+//! The contract (fixed by `aot.py`): given per-slot input tokens, the live
+//! cache literal `[L × B × N × latent]`, and per-slot lengths, write each
+//! slot's new latent at position `lengths[b]` and return
+//! `(logits [B × vocab], new_cache)`.
+
+/// One decode step over a fixed `(batch, kv_bucket)` shape.
+pub trait StepRunner {
+    /// Execute one step.  `lengths[b]` is the tokens already cached for
+    /// slot `b`; the new latent is written at that position.
+    fn step(
+        &self,
+        tokens: &[i32],
+        cache: &xla::Literal,
+        lengths: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, xla::Literal)>;
+
+    /// Vocabulary size (logits row width).
+    fn vocab(&self) -> usize;
+
+    /// Human-readable runner name (for logs).
+    fn name(&self) -> &str;
+}
+
+impl StepRunner for super::DecodeRunner {
+    fn step(
+        &self,
+        tokens: &[i32],
+        cache: &xla::Literal,
+        lengths: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, xla::Literal)> {
+        super::DecodeRunner::step(self, tokens, cache, lengths)
+    }
+
+    fn vocab(&self) -> usize {
+        super::DecodeRunner::vocab(self)
+    }
+
+    fn name(&self) -> &str {
+        super::DecodeRunner::name(self)
+    }
+}

@@ -11,10 +11,14 @@
 
 pub mod artifact;
 pub mod attention;
+pub mod backend;
 pub mod client;
 pub mod decode;
+pub mod reference;
 
 pub use artifact::{ArtifactMeta, Dtype, Manifest, ModelMeta, TensorSpec};
 pub use attention::AttentionRunner;
+pub use backend::StepRunner;
 pub use client::Runtime;
 pub use decode::DecodeRunner;
+pub use reference::{ReferenceModel, ReferenceModelConfig, ReferenceRunner};

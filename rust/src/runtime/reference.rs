@@ -1,0 +1,336 @@
+//! Pure-Rust deterministic reference decode backend.
+//!
+//! A tiny MLA-shaped recurrent attention model that honors the AOT decode
+//! artifact contract exactly (see [`super::backend`]), with three
+//! properties the serving stack's tests depend on:
+//!
+//! * **Bit-deterministic.**  All arithmetic is sequential f32 with a fixed
+//!   reduction order and seeded weights, so equal token histories produce
+//!   bit-identical latents and logits on every platform.
+//! * **Batch/bucket invariant.**  Each slot's computation reads only its
+//!   own cache rows and valid positions, so outputs do not change when the
+//!   engine migrates a request across slots or grows buckets — the same
+//!   isolation contract the real artifacts guarantee.
+//! * **History sensitive.**  The written latent depends on the hidden
+//!   state, which attends over every cached position, so a single corrupted
+//!   or misplaced cache entry changes all later logits.  This is what makes
+//!   it a real end-to-end check for paged-store and prefix-cache plumbing
+//!   rather than a mock.
+//!
+//! Per slot with context length `t` and input token `x`:
+//!
+//! ```text
+//! e   = emb[x]
+//! h_0 = e
+//! for layer l:
+//!     c_l = tanh(W_l · h_l + p_l · (t+1)/32)     # written at cache[l, b, t]
+//!     q_l = Q_l · h_l
+//!     a   = softmax_{j ≤ t}(q_l · cache[l, b, j] / √d)
+//!     h_{l+1} = tanh(h_l + Σ_j a_j · cache[l, b, j])
+//! logits = O · h_L
+//! ```
+
+use std::sync::Arc;
+
+use crate::util::rng::Rng;
+
+use super::backend::StepRunner;
+
+/// Geometry + seed for the reference model, plus the bucket grid the
+/// engine may compile against (mirrors the artifact manifest's role).
+#[derive(Clone, Debug)]
+pub struct ReferenceModelConfig {
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub latent_dim: usize,
+    pub seed: u64,
+    /// Batch-size buckets, ascending.
+    pub batch_buckets: Vec<usize>,
+    /// KV-length buckets, ascending.
+    pub kv_buckets: Vec<usize>,
+}
+
+impl Default for ReferenceModelConfig {
+    fn default() -> Self {
+        ReferenceModelConfig {
+            vocab: 512,
+            n_layers: 2,
+            latent_dim: 16,
+            seed: 0xE7A9_0001,
+            batch_buckets: vec![1, 2, 4, 8],
+            kv_buckets: vec![32, 64, 128, 256],
+        }
+    }
+}
+
+/// Seeded weights, shared by every runner the engine creates.
+pub struct ReferenceModel {
+    cfg: ReferenceModelConfig,
+    /// `[vocab × d]` token embeddings.
+    emb: Vec<f32>,
+    /// `[L × d × d]` latent projections.
+    w_latent: Vec<f32>,
+    /// `[L × d × d]` query projections.
+    w_query: Vec<f32>,
+    /// `[L × d]` positional mix-in.
+    pos_mix: Vec<f32>,
+    /// `[vocab × d]` output projection.
+    out_proj: Vec<f32>,
+}
+
+impl ReferenceModel {
+    pub fn new(cfg: ReferenceModelConfig) -> Arc<Self> {
+        assert!(cfg.vocab > 0 && cfg.n_layers > 0 && cfg.latent_dim > 0);
+        assert!(!cfg.batch_buckets.is_empty() && !cfg.kv_buckets.is_empty());
+        let (v, l, d) = (cfg.vocab, cfg.n_layers, cfg.latent_dim);
+        let mut rng = Rng::new(cfg.seed);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut mat = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal_f32() * scale).collect()
+        };
+        Arc::new(ReferenceModel {
+            emb: mat(v * d),
+            w_latent: mat(l * d * d),
+            w_query: mat(l * d * d),
+            pos_mix: mat(l * d),
+            out_proj: mat(v * d),
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &ReferenceModelConfig {
+        &self.cfg
+    }
+
+    /// A runner bound to one `(batch, kv_bucket)` shape.
+    pub fn runner(self: &Arc<Self>, batch: usize, kv_bucket: usize) -> ReferenceRunner {
+        ReferenceRunner {
+            name: format!("reference_b{batch}_n{kv_bucket}"),
+            model: Arc::clone(self),
+            batch,
+            kv_bucket,
+        }
+    }
+}
+
+/// Executes reference decode steps at a fixed shape.
+pub struct ReferenceRunner {
+    model: Arc<ReferenceModel>,
+    name: String,
+    pub batch: usize,
+    pub kv_bucket: usize,
+}
+
+impl ReferenceRunner {
+    /// A zeroed cache literal `[L × B × N × d]`.
+    pub fn fresh_cache(&self) -> anyhow::Result<xla::Literal> {
+        let c = &self.model.cfg;
+        let dims = [
+            c.n_layers as i64,
+            self.batch as i64,
+            self.kv_bucket as i64,
+            c.latent_dim as i64,
+        ];
+        let n: usize = dims.iter().map(|&x| x as usize).product();
+        super::client::literal_from_f32(&vec![0.0; n], &dims)
+    }
+}
+
+impl StepRunner for ReferenceRunner {
+    fn step(
+        &self,
+        tokens: &[i32],
+        cache: &xla::Literal,
+        lengths: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, xla::Literal)> {
+        let m = &*self.model;
+        let (v, nl, d) = (m.cfg.vocab, m.cfg.n_layers, m.cfg.latent_dim);
+        let (b, n) = (self.batch, self.kv_bucket);
+        anyhow::ensure!(tokens.len() == b, "tokens len {} != batch {b}", tokens.len());
+        anyhow::ensure!(lengths.len() == b, "lengths len {} != batch {b}", lengths.len());
+        let mut host: Vec<f32> = cache
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("cache to_vec: {e:?}"))?;
+        anyhow::ensure!(
+            host.len() == nl * b * n * d,
+            "cache has {} elems, want {}",
+            host.len(),
+            nl * b * n * d
+        );
+        let mut logits = vec![0.0f32; b * v];
+        for slot in 0..b {
+            let t = lengths[slot];
+            anyhow::ensure!(
+                t >= 0 && (t as usize) < n,
+                "length {t} overflows bucket {n} (no room for this token)"
+            );
+            let t = t as usize;
+            let x = tokens[slot];
+            anyhow::ensure!(
+                x >= 0 && (x as usize) < v,
+                "token {x} outside vocab {v}"
+            );
+            let e = &m.emb[x as usize * d..(x as usize + 1) * d];
+            let mut h: Vec<f32> = e.to_vec();
+            let pos_scale = (t + 1) as f32 * 0.03125;
+            for l in 0..nl {
+                // New latent from the hidden state, written at position t.
+                let wl = &m.w_latent[l * d * d..(l + 1) * d * d];
+                let pm = &m.pos_mix[l * d..(l + 1) * d];
+                let row = |j: usize| ((l * b + slot) * n + j) * d;
+                let base = row(t);
+                for i in 0..d {
+                    let mut acc = pm[i] * pos_scale;
+                    for (j, &hj) in h.iter().enumerate() {
+                        acc += wl[i * d + j] * hj;
+                    }
+                    host[base + i] = acc.tanh();
+                }
+                // Attention over positions 0..=t of this slot's rows.
+                let wq = &m.w_query[l * d * d..(l + 1) * d * d];
+                let mut q = vec![0.0f32; d];
+                for i in 0..d {
+                    let mut acc = 0.0f32;
+                    for (j, &hj) in h.iter().enumerate() {
+                        acc += wq[i * d + j] * hj;
+                    }
+                    q[i] = acc;
+                }
+                let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+                let mut scores = Vec::with_capacity(t + 1);
+                let mut max_s = f32::NEG_INFINITY;
+                for j in 0..=t {
+                    let r = row(j);
+                    let mut s = 0.0f32;
+                    for i in 0..d {
+                        s += q[i] * host[r + i];
+                    }
+                    let s = s * inv_sqrt_d;
+                    max_s = max_s.max(s);
+                    scores.push(s);
+                }
+                let mut norm = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - max_s).exp();
+                    norm += *s;
+                }
+                let mut ctx = vec![0.0f32; d];
+                for (j, &w) in scores.iter().enumerate() {
+                    let r = row(j);
+                    let w = w / norm;
+                    for i in 0..d {
+                        ctx[i] += w * host[r + i];
+                    }
+                }
+                for i in 0..d {
+                    h[i] = (h[i] + ctx[i]).tanh();
+                }
+            }
+            for tok in 0..v {
+                let o = &m.out_proj[tok * d..(tok + 1) * d];
+                let mut acc = 0.0f32;
+                for i in 0..d {
+                    acc += o[i] * h[i];
+                }
+                logits[slot * v + tok] = acc;
+            }
+        }
+        let dims = [nl as i64, b as i64, n as i64, d as i64];
+        let new_cache = super::client::literal_from_f32(&host, &dims)?;
+        Ok((logits, new_cache))
+    }
+
+    fn vocab(&self) -> usize {
+        self.model.cfg.vocab
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Arc<ReferenceModel> {
+        ReferenceModel::new(ReferenceModelConfig {
+            vocab: 32,
+            n_layers: 2,
+            latent_dim: 8,
+            seed: 7,
+            batch_buckets: vec![1, 2, 4],
+            kv_buckets: vec![8, 16],
+        })
+    }
+
+    fn decode_greedy(
+        model: &Arc<ReferenceModel>,
+        batch: usize,
+        kv: usize,
+        prompt: &[i32],
+        new_tokens: usize,
+        slot: usize,
+    ) -> Vec<i32> {
+        let r = model.runner(batch, kv);
+        let mut cache = r.fresh_cache().unwrap();
+        let mut lengths = vec![0i32; batch];
+        let mut tokens = vec![0i32; batch];
+        let mut out = Vec::new();
+        let v = r.vocab();
+        let mut next = prompt[0];
+        let mut fed = 0usize;
+        while out.len() < new_tokens {
+            tokens[slot] = next;
+            let (logits, c) = StepRunner::step(&r, &tokens, &cache, &lengths).unwrap();
+            cache = c;
+            lengths[slot] += 1;
+            fed += 1;
+            let arg = super::super::DecodeRunner::argmax_row(&logits, v, slot);
+            if fed < prompt.len() {
+                next = prompt[fed];
+            } else {
+                out.push(arg);
+                next = arg;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let m = small();
+        let a = decode_greedy(&m, 1, 16, &[3, 5, 7], 6, 0);
+        let b = decode_greedy(&m, 1, 16, &[3, 5, 7], 6, 0);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 6);
+        assert!(a.iter().all(|&t| (0..32).contains(&t)));
+    }
+
+    #[test]
+    fn slot_and_bucket_invariant() {
+        // The same request must decode identically in any slot of any
+        // bucket — the isolation contract the engine depends on.
+        let m = small();
+        let base = decode_greedy(&m, 1, 8, &[3, 5, 7], 4, 0);
+        assert_eq!(decode_greedy(&m, 2, 8, &[3, 5, 7], 4, 1), base);
+        assert_eq!(decode_greedy(&m, 4, 16, &[3, 5, 7], 4, 3), base);
+    }
+
+    #[test]
+    fn history_changes_outputs() {
+        let m = small();
+        let a = decode_greedy(&m, 1, 16, &[3, 5, 7], 6, 0);
+        let b = decode_greedy(&m, 1, 16, &[3, 5, 8], 6, 0);
+        assert_ne!(a, b, "prompt change must change decode");
+    }
+
+    #[test]
+    fn rejects_overflow_and_bad_tokens() {
+        let m = small();
+        let r = m.runner(1, 8);
+        let cache = r.fresh_cache().unwrap();
+        assert!(StepRunner::step(&r, &[1], &cache, &[8]).is_err());
+        assert!(StepRunner::step(&r, &[99], &cache, &[0]).is_err());
+    }
+}

@@ -107,6 +107,17 @@ impl Gen {
         self.rng.choose(xs)
     }
 
+    /// Token-id vector with length drawn from `len` over a small vocabulary
+    /// (`0..vocab`).  Small vocabularies make shared prefixes likely, which
+    /// is exactly what prefix-cache and kv-sharing properties need.
+    pub fn tokens(&mut self, len: Range<usize>, vocab: i32) -> Vec<i32> {
+        assert!(vocab > 0);
+        let n = self.usize(len);
+        (0..n)
+            .map(|_| self.rng.below(vocab as usize) as i32)
+            .collect()
+    }
+
     /// Raw RNG access for custom generators.
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng

@@ -25,6 +25,7 @@ fn engine(dir: &PathBuf, kernel: &str, slots: usize) -> Engine {
             kv_blocks: 256,
             block_size: 16,
             eos_token: None,
+            prefix_cache: true,
         },
     )
     .unwrap()
@@ -130,6 +131,7 @@ fn kv_capacity_blocks_admission_until_space() {
             kv_blocks: 8,
             block_size: 16,
             eos_token: None,
+            prefix_cache: true,
         },
     )
     .unwrap();

@@ -1,0 +1,194 @@
+//! End-to-end prefix-cache tests over the deterministic reference backend:
+//! the full coordinator stack (batcher → engine → paged store → radix
+//! tree) with no artifacts required, so these run everywhere tier-1 runs.
+
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport};
+use flashmla_etap::runtime::ReferenceModelConfig;
+
+const BLOCK: usize = 8;
+
+fn model() -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab: 64,
+        n_layers: 2,
+        latent_dim: 8,
+        seed: 11,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+fn engine(slots: usize, kv_blocks: usize, prefix_cache: bool) -> Engine {
+    Engine::reference(
+        model(),
+        EngineConfig {
+            max_slots: slots,
+            kv_blocks,
+            block_size: BLOCK,
+            prefix_cache,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+/// `n` prompts: `sys`-token shared system prefix (tagged by `family`) plus
+/// a unique suffix.
+fn shared_workload(n: usize, families: usize, sys: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let fam = (i % families) as i32;
+            let mut p: Vec<i32> = (0..sys).map(|t| 1 + (fam * 7 + t as i32 % 5) % 60).collect();
+            p.push(60 + (i as i32 % 3));
+            p.push(1 + i as i32 % 50);
+            p
+        })
+        .collect()
+}
+
+fn run(mut e: Engine, prompts: &[Vec<i32>], budget: usize) -> EngineReport {
+    let ids: Vec<_> = prompts
+        .iter()
+        .map(|p| e.submit(p.clone(), budget))
+        .collect();
+    let r = e.run_to_completion().unwrap();
+    for id in ids {
+        assert!(r.outputs.contains_key(&id));
+    }
+    r
+}
+
+#[test]
+fn reference_engine_single_request() {
+    let mut e = engine(1, 64, true);
+    let id = e.submit(vec![3, 5, 7], 8);
+    let r = e.run_to_completion().unwrap();
+    assert_eq!(r.outputs[&id].len(), 8);
+    assert!(r.outputs[&id].iter().all(|&t| (0..64).contains(&t)));
+    assert_eq!(r.metrics.requests_finished, 1);
+    assert_eq!(r.steps, 10, "3 prompt + 7 further decode steps");
+}
+
+#[test]
+fn reference_engine_deterministic() {
+    let prompts = shared_workload(6, 2, 16);
+    let a = run(engine(2, 64, true), &prompts, 6);
+    let b = run(engine(2, 64, true), &prompts, 6);
+    assert_eq!(a.outputs, b.outputs);
+}
+
+#[test]
+fn batched_equals_solo_on_reference_backend() {
+    let solo = |prompt: Vec<i32>| {
+        let mut e = engine(1, 64, false);
+        let id = e.submit(prompt, 5);
+        e.run_to_completion().unwrap().outputs[&id].clone()
+    };
+    let s1 = solo(vec![3, 5, 7]);
+    let s2 = solo(vec![11, 2]);
+    let mut e = engine(2, 64, false);
+    let a = e.submit(vec![3, 5, 7], 5);
+    let b = e.submit(vec![11, 2], 5);
+    let r = e.run_to_completion().unwrap();
+    assert_eq!(r.outputs[&a], s1);
+    assert_eq!(r.outputs[&b], s2);
+}
+
+#[test]
+fn acceptance_shared_prefix_hits_and_saves_prefill() {
+    // The PR's acceptance workload: ≥ 8 requests over system prompts
+    // spanning ≥ 2 blocks; the shared run must hit (> 0), run strictly
+    // fewer prefill steps, and produce bit-identical decode outputs.
+    let prompts = shared_workload(10, 2, 3 * BLOCK);
+    let base = run(engine(4, 128, false), &prompts, 8);
+    let shared = run(engine(4, 128, true), &prompts, 8);
+
+    assert_eq!(base.outputs, shared.outputs, "sharing changed outputs");
+    assert!(shared.metrics.prefix.lookups >= 10);
+    assert!(
+        shared.metrics.prefix_hit_rate() > 0.0,
+        "no prefix hits: {:?}",
+        shared.metrics.prefix
+    );
+    assert!(
+        shared.metrics.prefill_tokens < base.metrics.prefill_tokens,
+        "prefill not reduced: {} vs {}",
+        shared.metrics.prefill_tokens,
+        base.metrics.prefill_tokens
+    );
+    assert!(shared.steps < base.steps);
+    assert_eq!(base.metrics.prefix.lookups, 0, "baseline tree disabled");
+}
+
+#[test]
+fn prefix_hits_scale_with_request_count() {
+    // Once both system prompts are resident, every later admission hits.
+    let prompts = shared_workload(16, 2, 3 * BLOCK);
+    let r = run(engine(4, 128, true), &prompts, 6);
+    assert!(
+        r.metrics.prefix.hits >= 8,
+        "expected most of 16 requests to hit, got {:?}",
+        r.metrics.prefix
+    );
+    // Each hit reuses the whole 3-block system prompt minus nothing: the
+    // cap only trims hits when the prompt is block-aligned, and these
+    // prompts are 2 tokens past the boundary.
+    assert!(r.metrics.prefix.hit_tokens >= 8 * (3 * BLOCK as u64));
+}
+
+#[test]
+fn eviction_under_pool_pressure_keeps_serving() {
+    // A pool too small to hold every distinct prompt's blocks: the tree
+    // must evict cold leaves rather than deadlock admission, and outputs
+    // must still match the cache-off run.
+    let prompts: Vec<Vec<i32>> = (0..8)
+        .map(|i| {
+            let mut p: Vec<i32> = (0..2 * BLOCK).map(|t| (1 + i * 3 + t as i32) % 60).collect();
+            p.push(60);
+            p
+        })
+        .collect();
+    let base = run(engine(2, 12, false), &prompts, 5);
+    let shared = run(engine(2, 12, true), &prompts, 5);
+    assert_eq!(base.outputs, shared.outputs);
+    assert_eq!(shared.metrics.requests_finished, 8);
+    assert!(
+        shared.metrics.prefix.evicted_blocks > 0,
+        "pressure must trigger eviction: {:?}",
+        shared.metrics.prefix
+    );
+}
+
+#[test]
+fn unservable_request_is_aborted_not_spun_on() {
+    // A request whose peak block demand exceeds the whole pool can never
+    // be admitted; the engine must abort it (empty output) instead of
+    // spinning forever and draining the prefix tree under false pressure.
+    let mut e = engine(2, 4, true); // 4 blocks × 8 tokens = 32-token pool
+    let impossible = e.submit(vec![1; 10], 60); // peak 70 tokens → 9 blocks
+    let fine = e.submit(vec![2, 3, 4], 6);
+    let r = e.run_to_completion().unwrap();
+    assert_eq!(r.outputs[&impossible], Vec::<i32>::new());
+    assert_eq!(r.outputs[&fine].len(), 6);
+    assert_eq!(r.metrics.requests_finished, 2);
+}
+
+#[test]
+fn prefix_blocks_released_when_tree_evicts_all() {
+    // After a full run the engine still holds tree blocks (warm cache);
+    // they are bounded by the distinct prompts seen.
+    let prompts = shared_workload(8, 2, 2 * BLOCK);
+    let mut e = engine(2, 128, true);
+    for p in &prompts {
+        e.submit(p.clone(), 4);
+    }
+    let mut guard = 0;
+    while e.metrics().requests_finished < 8 {
+        e.step().unwrap();
+        guard += 1;
+        assert!(guard < 10_000, "engine failed to drain");
+    }
+    let cached = e.prefix_cached_blocks();
+    assert!(cached > 0, "warm tree after the run");
+    assert!(cached <= 128, "bounded by the pool");
+}

@@ -1,0 +1,119 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The offline build environment has no crates.io access, so this crate
+//! provides the exact surface the workspace uses: [`Error`], [`Result`],
+//! and the `anyhow!` / `bail!` / `ensure!` macros.  Semantics match the
+//! real crate for these entry points: `Error` is an opaque, `Display`able
+//! error value convertible from any `std::error::Error`.
+
+use std::fmt;
+
+/// Opaque error: a message plus an optional source chain rendered eagerly.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable (used by the `anyhow!` macro).
+    pub fn from_msg(msg: String) -> Self {
+        Error { msg }
+    }
+
+    /// Construct from a displayable value (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error {
+            msg: m.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Any std error converts (this is what makes `?` work on io::Error etc.).
+// `Error` itself deliberately does NOT implement `std::error::Error`, so
+// this blanket impl cannot overlap with the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::from_msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] when the condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/xyz")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+        let f = || -> Result<()> {
+            ensure!(1 + 1 == 3, "math broke: {}", 2);
+            Ok(())
+        };
+        assert_eq!(f().unwrap_err().to_string(), "math broke: 2");
+        let g = || -> Result<()> { bail!("nope") };
+        assert_eq!(g().unwrap_err().to_string(), "nope");
+    }
+}

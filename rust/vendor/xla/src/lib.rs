@@ -1,0 +1,281 @@
+//! Vendored stand-in for the `xla` (PJRT bindings) crate.
+//!
+//! The build image does not ship libxla, so this crate keeps the workspace
+//! compiling and running everywhere:
+//!
+//! * [`Literal`] is a **fully functional host tensor** (typed data + dims).
+//!   The serving engine uses literals as its live-cache representation, so
+//!   the reference decode backend and all host-side plumbing work with no
+//!   native library at all.
+//! * The PJRT device types ([`PjRtClient`], [`PjRtBuffer`],
+//!   [`PjRtLoadedExecutable`]) compile but return a clear
+//!   "PJRT backend unavailable" error at the first entry point
+//!   (`PjRtClient::cpu()`).  Callers that gate on the artifacts directory
+//!   (all tests and examples do) never reach them in this build.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error carrying a message (matches `{e:?}` formatting call sites).
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "PJRT backend unavailable in this build ({what}); \
+         use the reference decode backend or install native xla"
+    ))
+}
+
+/// Element types a [`Literal`] can hold.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host tensor: typed storage plus logical dims.  Fully functional.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+/// Sealed-ish marker for element types `Literal` supports.
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> LiteralData
+    where
+        Self: Sized;
+    fn unwrap(d: &LiteralData) -> Option<&[Self]>
+    where
+        Self: Sized;
+    const NAME: &'static str;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+    fn unwrap(d: &LiteralData) -> Option<&[f32]> {
+        match d {
+            LiteralData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "f32";
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+    fn unwrap(d: &LiteralData) -> Option<&[i32]> {
+        match d {
+            LiteralData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "i32";
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        let n = v.len() as i64;
+        Literal {
+            data: T::wrap(v.to_vec()),
+            dims: vec![n],
+        }
+    }
+
+    /// Build a tuple literal.
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            data: LiteralData::Tuple(parts),
+            dims: Vec::new(),
+        }
+    }
+
+    /// Logical dims.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(_) => 0,
+        }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        if matches!(self.data, LiteralData::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({want} elems) from {have} elems"
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Copy the elements out as a host `Vec`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error(format!("literal does not hold {}", T::NAME)))
+    }
+
+    /// Borrow the elements without copying.
+    pub fn as_slice<T: NativeType>(&self) -> Result<&[T], Error> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error(format!("literal does not hold {}", T::NAME)))
+    }
+
+    /// Split a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        match self.data {
+            LiteralData::Tuple(parts) => Ok(parts),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// PJRT device handle (never constructed in this build).
+pub struct PjRtDevice;
+
+/// PJRT device buffer (never constructed in this build).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// PJRT client.  `cpu()` fails cleanly in this build.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable("buffer_from_host_buffer"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable("buffer_from_host_literal"))
+    }
+}
+
+/// Compiled executable (never constructed in this build).
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("execute"))
+    }
+
+    pub fn execute_b(&self, _inputs: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+/// Parsed HLO module proto (text parse succeeds; compilation is gated).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto, Error> {
+        std::fs::read_to_string(path.as_ref())
+            .map(|_| HloModuleProto)
+            .map_err(|e| Error(format!("read {}: {e}", path.as_ref().display())))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<i32>().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn pjrt_is_gated() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e:?}").contains("unavailable"));
+    }
+}
