@@ -1,0 +1,184 @@
+//! Chunked-prefill serving: the token-budget pipeline's headline demo.
+//!
+//! N long prompts run twice through the full coordinator stack on the
+//! deterministic reference backend:
+//!
+//! * **per-token** — the old prefill-as-decode pipeline: every prompt
+//!   token costs one engine step;
+//! * **chunked** — the token-budget planner packs multi-token prefill
+//!   chunks (and decode singles) into each step, executed through the
+//!   backend's multi-token `prefill_chunk` operation.
+//!
+//! The run asserts the claims that matter: ≥ 4x fewer prefill engine
+//! steps at chunk budget 8, bit-identical generated tokens, and (with
+//! `--shared-prefix`) clean composition with the prefix cache — adopted
+//! prefixes are never re-chunked.
+//!
+//!     cargo run --release --example chunked_prefill_serving
+//!     cargo run --release --example chunked_prefill_serving -- --shared-prefix 24
+
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport};
+use flashmla_etap::prefill::{FairnessPolicy, PrefillConfig};
+use flashmla_etap::runtime::ReferenceModelConfig;
+use flashmla_etap::util::argparse::ArgParser;
+use flashmla_etap::util::rng::Rng;
+
+const BLOCK_SIZE: usize = 8;
+
+struct Workload {
+    prompts: Vec<Vec<i32>>,
+    budgets: Vec<usize>,
+}
+
+fn synth_workload(n: usize, prompt_len: usize, shared: usize, seed: u64, vocab: usize) -> Workload {
+    let mut rng = Rng::new(seed);
+    let system: Vec<i32> = (0..shared)
+        .map(|_| rng.range(1, vocab as u64) as i32)
+        .collect();
+    let mut prompts = Vec::new();
+    let mut budgets = Vec::new();
+    for _ in 0..n {
+        let mut p = system.clone();
+        while p.len() < prompt_len {
+            p.push(rng.range(1, vocab as u64) as i32);
+        }
+        prompts.push(p);
+        budgets.push(rng.range(3, 8) as usize);
+    }
+    Workload { prompts, budgets }
+}
+
+fn run(
+    w: &Workload,
+    slots: usize,
+    prefix_cache: bool,
+    prefill: PrefillConfig,
+) -> anyhow::Result<EngineReport> {
+    let model = ReferenceModelConfig {
+        kv_buckets: vec![32, 64, 128],
+        ..ReferenceModelConfig::default()
+    };
+    let mut engine = Engine::reference(
+        model,
+        EngineConfig {
+            max_slots: slots,
+            kv_blocks: 256,
+            block_size: BLOCK_SIZE,
+            prefix_cache,
+            prefill,
+            ..EngineConfig::default()
+        },
+    )?;
+    for (p, &b) in w.prompts.iter().zip(&w.budgets) {
+        engine.submit(p.clone(), b);
+    }
+    engine.run_to_completion()
+}
+
+fn main() -> anyhow::Result<()> {
+    let p = ArgParser::new(
+        "chunked_prefill_serving",
+        "chunked-prefill demo: per-token vs token-budget pipeline",
+    )
+    .opt("requests", Some("8"), "number of requests")
+    .opt("prompt-len", Some("32"), "prompt length in tokens")
+    .opt("shared-prefix", Some("0"), "tokens of shared system prefix (0 = unique prompts)")
+    .opt("chunk-tokens", Some("8"), "max prefill tokens per request per step")
+    .opt("budget", Some("32"), "per-step token budget across all slots")
+    .opt("slots", Some("4"), "batch slots")
+    .opt("fairness", Some("fair"), "surplus policy: fair|fifo")
+    .opt("seed", Some("42"), "rng seed");
+    let a = p.parse_or_exit();
+    // CI quick mode (same switch as the bench harness): cap the workload
+    // so the demo's assertions run in milliseconds.
+    let quick = std::env::var("FLASHMLA_BENCH_QUICK").is_ok();
+    let mut n = a.get_usize("requests").unwrap();
+    let mut prompt_len = a.get_usize("prompt-len").unwrap();
+    let mut shared = a.get_usize("shared-prefix").unwrap();
+    if quick {
+        n = n.min(6);
+        prompt_len = prompt_len.min(24);
+        // Keep a user-supplied prefix consistent with the capped prompt.
+        shared = shared.min(prompt_len.saturating_sub(BLOCK_SIZE));
+    }
+    let slots = a.get_usize("slots").unwrap();
+    let chunk_tokens = a.get_usize("chunk-tokens").unwrap();
+    let budget = a.get_usize("budget").unwrap();
+    let fairness = match a.get("fairness").unwrap_or("fair") {
+        "fifo" => FairnessPolicy::Fifo,
+        _ => FairnessPolicy::Fair,
+    };
+    anyhow::ensure!(shared < prompt_len, "--shared-prefix must be < --prompt-len");
+
+    let w = synth_workload(n, prompt_len, shared, a.get_u64("seed").unwrap(), 512);
+    let prefix_cache = shared > 0;
+    println!(
+        "{n} requests × {prompt_len}-token prompts ({} shared), {slots} slots, \
+         chunk {chunk_tokens}, budget {budget}, prefix cache {}\n",
+        shared,
+        if prefix_cache { "on" } else { "off" },
+    );
+
+    let base = run(&w, slots, prefix_cache, PrefillConfig::per_token())?;
+    println!("[per-token] {}", base.metrics.report());
+    let chunked_cfg = PrefillConfig {
+        step_token_budget: budget,
+        chunk_tokens,
+        fairness,
+    };
+    let fast = run(&w, slots, prefix_cache, chunked_cfg)?;
+    println!("[chunked]   {}", fast.metrics.report());
+    println!(
+        "            chunk histogram: {}\n",
+        fast.metrics.chunk_hist_summary()
+    );
+
+    // 1. Chunking is a pure optimization: generated tokens bit-identical.
+    anyhow::ensure!(
+        base.outputs == fast.outputs,
+        "chunked prefill changed generated tokens!"
+    );
+    println!("✓ all {n} output sequences bit-identical to the per-token run");
+
+    // 2. Prefill engine steps collapse by ≥ 4x (the acceptance bar at
+    // chunk budget 8; higher chunk settings do better).
+    let (b_steps, f_steps) = (base.metrics.prefill_steps, fast.metrics.prefill_steps);
+    anyhow::ensure!(
+        f_steps > 0 && f_steps * 4 <= b_steps,
+        "expected ≥ 4x fewer prefill steps, got {b_steps} → {f_steps}"
+    );
+    println!(
+        "✓ prefill engine steps {b_steps} → {f_steps} ({:.1}x fewer), \
+         {:.1} prefill tokens/step (was {:.1})",
+        b_steps as f64 / f_steps as f64,
+        fast.metrics.prefill_tokens_per_step(),
+        base.metrics.prefill_tokens_per_step(),
+    );
+    anyhow::ensure!(fast.steps < base.steps, "total engine steps should drop");
+    println!(
+        "✓ total engine steps {} → {}, ttft proxy {:.1} → {:.1} steps",
+        base.steps,
+        fast.steps,
+        base.metrics.ttft_steps.mean(),
+        fast.metrics.ttft_steps.mean(),
+    );
+
+    // 3. With a shared prefix, the cache and the chunker compose.
+    if prefix_cache {
+        anyhow::ensure!(
+            fast.metrics.prefix.hits > 0,
+            "expected prefix hits with --shared-prefix"
+        );
+        anyhow::ensure!(
+            fast.metrics.prefill_tokens < n as u64 * prompt_len as u64,
+            "adopted prefixes must not be re-chunked"
+        );
+        println!(
+            "✓ prefix cache composed: {} hits, {} prompt tokens skipped, \
+             only unshared suffixes chunked",
+            fast.metrics.prefix.hits,
+            fast.metrics.prefix.hit_tokens,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Bench: chunked-prefill sweep — serve a fixed prefill-heavy workload on
+//! the reference backend across chunk sizes and step budgets, tracking
+//! wall time per run plus the engine-step counts that are the pipeline's
+//! point.  Emits `BENCH_chunked_prefill.json` for cross-PR tracking.
+//!
+//!     cargo bench --bench chunked_prefill
+
+use flashmla_etap::bench::Bencher;
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport};
+use flashmla_etap::prefill::{FairnessPolicy, PrefillConfig};
+use flashmla_etap::runtime::ReferenceModelConfig;
+use flashmla_etap::util::rng::Rng;
+
+const BLOCK: usize = 8;
+const SLOTS: usize = 4;
+
+fn workload(n: usize, len: usize) -> Vec<(Vec<i32>, usize)> {
+    let mut rng = Rng::new(42);
+    (0..n)
+        .map(|_| {
+            let p: Vec<i32> = (0..len).map(|_| rng.range(1, 500) as i32).collect();
+            (p, rng.range(3, 8) as usize)
+        })
+        .collect()
+}
+
+fn serve(work: &[(Vec<i32>, usize)], prefill: PrefillConfig) -> EngineReport {
+    let mut e = Engine::reference(
+        ReferenceModelConfig {
+            kv_buckets: vec![32, 64, 128],
+            ..ReferenceModelConfig::default()
+        },
+        EngineConfig {
+            max_slots: SLOTS,
+            kv_blocks: 256,
+            block_size: BLOCK,
+            prefix_cache: false,
+            prefill,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    for (p, budget) in work {
+        e.submit(p.clone(), *budget);
+    }
+    e.run_to_completion().unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    let work = workload(8, 32);
+
+    println!("chunked prefill sweep (8 requests × 32-token prompts, {SLOTS} slots):");
+    let mut per_token_steps = 0u64;
+    for &chunk in &[1usize, 2, 4, 8, 16] {
+        let cfg = if chunk == 1 {
+            PrefillConfig::per_token()
+        } else {
+            PrefillConfig {
+                step_token_budget: chunk * SLOTS,
+                chunk_tokens: chunk,
+                fairness: FairnessPolicy::Fair,
+            }
+        };
+        let report = serve(&work, cfg);
+        if chunk == 1 {
+            per_token_steps = report.metrics.prefill_steps;
+        }
+        let r = b.bench(&format!("serve (chunk {chunk:>2})"), || {
+            serve(&work, cfg).steps
+        });
+        println!(
+            "    → {} engine steps, {} prefill steps ({:.1} tok/step), {:.2} ms/run",
+            report.steps,
+            report.metrics.prefill_steps,
+            report.metrics.prefill_tokens_per_step(),
+            r.mean_us / 1e3,
+        );
+        b.record_metric(&format!("steps_chunk_{chunk}"), report.steps as f64);
+        b.record_metric(
+            &format!("prefill_steps_chunk_{chunk}"),
+            report.metrics.prefill_steps as f64,
+        );
+        b.record_metric(
+            &format!("prefill_tok_per_step_chunk_{chunk}"),
+            report.metrics.prefill_tokens_per_step(),
+        );
+    }
+
+    // Budget sensitivity at chunk 8: decode traffic competing for budget.
+    println!("\nbudget sweep (chunk 8):");
+    for &budget in &[8usize, 16, 32, 64] {
+        let cfg = PrefillConfig {
+            step_token_budget: budget,
+            chunk_tokens: 8,
+            fairness: FairnessPolicy::Fair,
+        };
+        let report = serve(&work, cfg);
+        b.bench(&format!("serve (budget {budget:>2})"), || {
+            serve(&work, cfg).steps
+        });
+        b.record_metric(&format!("steps_budget_{budget}"), report.steps as f64);
+    }
+
+    let chunk8 = serve(
+        &work,
+        PrefillConfig {
+            step_token_budget: 32,
+            chunk_tokens: 8,
+            fairness: FairnessPolicy::Fair,
+        },
+    );
+    b.record_metric(
+        "prefill_step_speedup_chunk_8",
+        per_token_steps as f64 / chunk8.metrics.prefill_steps.max(1) as f64,
+    );
+    b.emit_json("chunked_prefill")?;
+    Ok(())
+}

@@ -97,8 +97,7 @@ fn main() -> anyhow::Result<()> {
                         max_slots: slots,
                         kv_blocks: 512,
                         block_size: 16,
-                        eos_token: None,
-                        prefix_cache: true,
+                        ..EngineConfig::default()
                     },
                 )
                 .unwrap();

@@ -119,5 +119,12 @@ fn main() {
             "    → {prefill} prefill tokens per run, mean wall {:.2} ms",
             r.mean_us / 1e3
         );
+        let key = if prefix_cache {
+            "prefill_tokens_shared"
+        } else {
+            "prefill_tokens_base"
+        };
+        b.record_metric(key, prefill as f64);
     }
+    b.emit_json("prefix_cache").expect("write bench json");
 }

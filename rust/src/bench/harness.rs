@@ -1,8 +1,17 @@
 //! Micro-benchmark runner: warmup, then timed iterations until both a
 //! minimum count and a minimum wall budget are met; reports robust stats.
+//!
+//! Besides the human-readable per-case lines, a harness can emit a
+//! machine-readable `BENCH_<name>.json` ([`Bencher::emit_json`]) so the
+//! perf trajectory is trackable across PRs: each file carries every case's
+//! robust stats plus any scalar metrics the bench recorded
+//! ([`Bencher::record_metric`]).  Output lands in the current directory,
+//! or `$FLASHMLA_BENCH_OUT` when set.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::{mean, median, percentile, stddev};
 
 /// Result of one benchmark case.
@@ -31,6 +40,20 @@ impl BenchResult {
     }
 }
 
+impl BenchResult {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_us", Json::num(self.mean_us)),
+            ("median_us", Json::num(self.median_us)),
+            ("p99_us", Json::num(self.p99_us)),
+            ("stddev_us", Json::num(self.stddev_us)),
+            ("min_us", Json::num(self.min_us)),
+        ])
+    }
+}
+
 /// Bench configuration.
 pub struct Bencher {
     warmup: Duration,
@@ -38,6 +61,9 @@ pub struct Bencher {
     min_iters: usize,
     max_iters: usize,
     results: Vec<BenchResult>,
+    /// Scalar side-channel metrics (e.g. "prefill_steps"), emitted with
+    /// the JSON report.
+    metrics: Vec<(String, f64)>,
 }
 
 impl Default for Bencher {
@@ -64,6 +90,7 @@ impl Bencher {
             min_iters: 5,
             max_iters: 1_000_000,
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -107,6 +134,50 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Record a scalar metric alongside the timing cases (workload facts
+    /// like "prefill_steps" or derived ratios) for the JSON report.
+    /// Names must be unique — the JSON is a map, and silently collapsing
+    /// duplicates would corrupt the cross-PR trajectory it exists for.
+    pub fn record_metric(&mut self, name: &str, value: f64) {
+        assert!(
+            !self.metrics.iter().any(|(k, _)| k == name),
+            "duplicate bench metric `{name}`"
+        );
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// Write `BENCH_<name>.json` with every case's stats plus recorded
+    /// metrics.  Target directory: `$FLASHMLA_BENCH_OUT` if set, else the
+    /// current directory.  Returns the written path.
+    pub fn emit_json(&self, name: &str) -> anyhow::Result<PathBuf> {
+        let dir = std::env::var("FLASHMLA_BENCH_OUT").unwrap_or_else(|_| ".".into());
+        let path = PathBuf::from(dir).join(format!("BENCH_{name}.json"));
+        let doc = Json::obj(vec![
+            ("bench", Json::str(name)),
+            (
+                "quick",
+                Json::Bool(std::env::var("FLASHMLA_BENCH_QUICK").is_ok()),
+            ),
+            (
+                "cases",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+            (
+                "metrics",
+                Json::Obj(
+                    self.metrics
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v)))
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(&path, doc.dump())
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+        println!("wrote {}", path.display());
+        Ok(path)
+    }
 }
 
 #[cfg(test)]
@@ -128,6 +199,37 @@ mod tests {
         assert!(r.mean_us > 0.0);
         assert!(r.median_us <= r.p99_us + 1e-9);
         assert!(r.min_us <= r.mean_us + 1e-9);
+    }
+
+    #[test]
+    fn emit_json_round_trips() {
+        std::env::set_var("FLASHMLA_BENCH_QUICK", "1");
+        let dir = std::env::temp_dir().join(format!(
+            "flashmla_bench_json_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("FLASHMLA_BENCH_OUT", &dir);
+        let mut b = Bencher::new().with_budget(Duration::from_millis(5));
+        b.bench("case_a", || 1 + 1);
+        b.record_metric("prefill_steps", 42.0);
+        let path = b.emit_json("harness_selftest").unwrap();
+        std::env::remove_var("FLASHMLA_BENCH_OUT");
+        assert!(path.ends_with("BENCH_harness_selftest.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        assert_eq!(doc.get("bench").as_str(), Some("harness_selftest"));
+        assert_eq!(doc.get("cases").as_arr().map(|a| a.len()), Some(1));
+        assert_eq!(
+            doc.get("cases").at(0).get("name").as_str(),
+            Some("case_a")
+        );
+        assert!(doc.get("cases").at(0).get("mean_us").as_f64().unwrap() > 0.0);
+        assert_eq!(
+            doc.get("metrics").get("prefill_steps").as_f64(),
+            Some(42.0)
+        );
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

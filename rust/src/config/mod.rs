@@ -5,6 +5,7 @@ use std::path::Path;
 
 use crate::coordinator::{ClusterConfig, EngineConfig};
 use crate::hardware::GpuSpec;
+use crate::prefill::FairnessPolicy;
 use crate::util::json::Json;
 use crate::util::{json, toml};
 
@@ -84,6 +85,23 @@ impl Config {
         }
         if let Some(b) = e.get("prefix_cache").as_bool() {
             c.engine.prefix_cache = b;
+        }
+        let pf = e.get("prefill");
+        if let Some(n) = pf.get("step_token_budget").as_usize() {
+            c.engine.prefill.step_token_budget = n;
+        }
+        if let Some(n) = pf.get("chunk_tokens").as_usize() {
+            anyhow::ensure!(n >= 1, "prefill.chunk_tokens must be ≥ 1");
+            c.engine.prefill.chunk_tokens = n;
+        }
+        if let Some(s) = pf.get("fairness").as_str() {
+            c.engine.prefill.fairness = match s {
+                "fifo" => FairnessPolicy::Fifo,
+                "fair" => FairnessPolicy::Fair,
+                other => anyhow::bail!(
+                    "engine.prefill.fairness must be fifo|fair, got `{other}`"
+                ),
+            };
         }
         let cl = t.get("cluster");
         if let Some(n) = cl.get("gpus").as_usize() {
@@ -182,5 +200,33 @@ kernel = "fa3"
         let tree = crate::util::toml::parse("[engine]\nprefix_cache = false").unwrap();
         let c = Config::from_tree(&tree).unwrap();
         assert!(!c.engine.prefix_cache);
+    }
+
+    #[test]
+    fn prefill_section_parsed() {
+        let d = Config::default().engine.prefill;
+        assert_eq!(d.step_token_budget, 32, "chunking on by default");
+        assert_eq!(d.chunk_tokens, 8);
+        assert_eq!(d.fairness, FairnessPolicy::Fair);
+        let doc = r#"
+[engine.prefill]
+step_token_budget = 64
+chunk_tokens = 16
+fairness = "fifo"
+"#;
+        let tree = crate::util::toml::parse(doc).unwrap();
+        let c = Config::from_tree(&tree).unwrap();
+        assert_eq!(c.engine.prefill.step_token_budget, 64);
+        assert_eq!(c.engine.prefill.chunk_tokens, 16);
+        assert_eq!(c.engine.prefill.fairness, FairnessPolicy::Fifo);
+    }
+
+    #[test]
+    fn prefill_rejects_bad_values() {
+        let bad = crate::util::toml::parse("[engine.prefill]\nchunk_tokens = 0").unwrap();
+        assert!(Config::from_tree(&bad).is_err());
+        let bad =
+            crate::util::toml::parse("[engine.prefill]\nfairness = \"greedy\"").unwrap();
+        assert!(Config::from_tree(&bad).is_err());
     }
 }

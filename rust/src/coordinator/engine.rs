@@ -29,6 +29,15 @@
 //! * under block-pool pressure the engine evicts least-recently-used
 //!   unreferenced tree leaves before refusing admission.
 //!
+//! **Chunked prefill.**  Prompts no longer prefill one token per engine
+//! tick.  Each tick, a [`ChunkPlanner`] packs a mixed batch — every
+//! decoding slot's single token plus multi-token prefill chunks — under
+//! `prefill.step_token_budget`, and the whole plan executes in a single
+//! [`StepRunner::prefill_chunk`] call (native multi-token on the reference
+//! backend, documented per-token fallback on PJRT).  Prefix-cache
+//! adoption composes: only the unshared suffix is chunked.  See
+//! `docs/chunked-prefill.md`.
+//!
 //! Decode steps execute on one of two backends behind
 //! [`StepRunner`]: the PJRT AOT artifacts (production path) or the
 //! deterministic pure-Rust reference model (tests, examples, CI).
@@ -40,6 +49,7 @@ use std::time::Instant;
 
 use crate::kvcache::{CacheConfig, PagedLatentCache, SeqId};
 use crate::log_info;
+use crate::prefill::{ChunkPlanner, PrefillConfig, SlotDemand};
 use crate::prefixcache::PrefixTree;
 use crate::runtime::{
     DecodeRunner, ReferenceModel, ReferenceModelConfig, Runtime, StepRunner,
@@ -65,6 +75,9 @@ pub struct EngineConfig {
     pub eos_token: Option<i32>,
     /// Enable the cross-request prefix cache.
     pub prefix_cache: bool,
+    /// Chunked-prefill knobs (`PrefillConfig::per_token()` restores the
+    /// one-token-per-tick pipeline exactly).
+    pub prefill: PrefillConfig,
 }
 
 impl Default for EngineConfig {
@@ -76,6 +89,7 @@ impl Default for EngineConfig {
             block_size: 16,
             eos_token: None,
             prefix_cache: true,
+            prefill: PrefillConfig::default(),
         }
     }
 }
@@ -109,11 +123,15 @@ pub struct Engine {
     backend: EngineBackend,
     cfg: EngineConfig,
     batcher: Batcher,
+    planner: ChunkPlanner,
     store: PagedLatentCache,
     prefix: Option<PrefixTree>,
     seq_of: HashMap<RequestId, SeqId>,
     /// Tokens already synced into the paged store, per request.
     synced: HashMap<RequestId, usize>,
+    /// Engine step count at submission, per queued/active request (for the
+    /// steps-based TTFT proxy).
+    submit_step: HashMap<RequestId, u64>,
     /// Requests whose prompt prefix is already in the tree.
     inserted: HashSet<RequestId>,
     runners: HashMap<(usize, usize), Box<dyn StepRunner>>,
@@ -200,13 +218,35 @@ impl Engine {
         let prefix = cfg
             .prefix_cache
             .then(|| PrefixTree::new(cfg.block_size, None));
+        cfg.prefill.validate()?;
+        // Multi-token scheduling only pays on backends that execute chunks
+        // natively.  On PJRT the fallback would emulate a chunk with k
+        // step dispatches, so a co-resident *decoding* slot's inter-token
+        // wall time would grow ~k× for zero dispatch savings — degrade to
+        // per-token planning there until a chunked artifact lands (ROADMAP
+        // "chunked PJRT artifact").
+        let effective_prefill = match &backend {
+            EngineBackend::Reference(_) => cfg.prefill,
+            EngineBackend::Pjrt(_) => {
+                if cfg.prefill.chunk_tokens > 1 {
+                    log_info!(
+                        "engine",
+                        "PJRT backend has no native chunked step; \
+                         using per-token prefill"
+                    );
+                }
+                PrefillConfig::per_token()
+            }
+        };
         Ok(Engine {
             backend,
             batcher,
+            planner: ChunkPlanner::new(effective_prefill),
             store,
             prefix,
             seq_of: HashMap::new(),
             synced: HashMap::new(),
+            submit_step: HashMap::new(),
             inserted: HashSet::new(),
             runners: HashMap::new(),
             live: None,
@@ -235,6 +275,7 @@ impl Engine {
         if let Some(eos) = self.cfg.eos_token {
             r = r.with_eos(eos);
         }
+        self.submit_step.insert(id, self.metrics.steps);
         self.batcher.submit(r);
         id
     }
@@ -291,6 +332,7 @@ impl Engine {
                 self.store.free_seq(seq);
             }
             self.synced.remove(&r.id);
+            self.submit_step.remove(&r.id);
             self.inserted.remove(&r.id);
             self.outputs.insert(r.id, r.generated.clone());
         }
@@ -309,6 +351,7 @@ impl Engine {
             let mut r = self.batcher.reject_front().expect("front exists");
             r.finish(super::request::FinishReason::Aborted);
             self.metrics.on_finish(&r);
+            self.submit_step.remove(&r.id);
             self.outputs.insert(r.id, Vec::new());
         }
 
@@ -380,21 +423,43 @@ impl Engine {
         }
 
         // 3. Determine buckets; recompose if needed.  Bucket choice
-        // anticipates prefix adoption: a newly admitted request may start
-        // its context at the cached prefix length rather than zero, so the
-        // kv bucket must already cover that length (adoption itself is
-        // additionally capped at the chosen bucket — see recompose (b) —
-        // because tree inserts during the same recompose can deepen the
-        // match past this estimate).
+        // anticipates both prefix adoption (a newly admitted request may
+        // start its context at the cached prefix length rather than zero)
+        // and this tick's prefill chunks (a chunk of k tokens writes up to
+        // position ctx + k - 1).  The estimate plan below may differ from
+        // the final plan — adoption in recompose can shift contexts — but
+        // the final plan is capped by the chosen bucket's headroom, so an
+        // off estimate only truncates chunks, never overflows the bucket.
         let batch_bucket = self.batcher.batch_bucket();
+        let largest_kv = *self.kv_buckets.last().expect("validated nonempty");
         let mut kv_need = self.batcher.kv_bucket_need();
-        if self.prefix.is_some() {
-            for r in self.batcher.active() {
-                if !self.seq_of.contains_key(&r.id) {
-                    if let Some(&m) = peeked.get(&r.id) {
-                        kv_need = kv_need.max(m + 1);
-                    }
-                }
+        {
+            let est: Vec<(usize, SlotDemand)> = self
+                .batcher
+                .active()
+                .iter()
+                .map(|r| {
+                    let adopted = if self.seq_of.contains_key(&r.id) {
+                        None
+                    } else {
+                        peeked.get(&r.id).copied()
+                    };
+                    let ctx = adopted.unwrap_or_else(|| r.context_len());
+                    let demand = if r.state == RequestState::Prefilling {
+                        let consumed = adopted.unwrap_or(r.prefill_pos);
+                        let remaining = r.prompt.len().saturating_sub(consumed);
+                        let headroom = largest_kv.saturating_sub(ctx).max(1);
+                        SlotDemand::prefill(remaining.max(1), ctx, headroom)
+                    } else {
+                        SlotDemand::decode()
+                    };
+                    (ctx, demand)
+                })
+                .collect();
+            let demands: Vec<SlotDemand> = est.iter().map(|&(_, d)| d).collect();
+            let plan = self.planner.plan(&demands);
+            for (&(ctx, _), &k) in est.iter().zip(&plan) {
+                kv_need = kv_need.max(ctx + k);
             }
         }
         let kv_bucket = self
@@ -402,7 +467,7 @@ impl Engine {
             .iter()
             .copied()
             .find(|&n| n >= kv_need)
-            .unwrap_or(*self.kv_buckets.last().expect("validated nonempty"));
+            .unwrap_or(largest_kv);
         let needs_rebuild = composition_changed
             || match &self.live {
                 None => true,
@@ -412,46 +477,80 @@ impl Engine {
             self.recompose(batch_bucket, kv_bucket)?;
         }
 
-        // 4. Build step inputs.
+        // 4. Plan this tick's chunks on the post-adoption state and build
+        // the mixed-batch inputs: every decoding slot contributes its one
+        // token, every prefilling slot a chunk of its unshared prompt
+        // suffix, padded slots an empty chunk.
         let live = self.live.as_ref().unwrap();
         let b = live.batch_bucket;
-        let mut tokens = vec![0i32; b];
-        let mut lengths = vec![0i32; b];
+        let kv_bucket = live.kv_bucket;
         let mut by_id: HashMap<RequestId, usize> = HashMap::new();
         for (slot, rid) in live.slots.iter().enumerate() {
             if let Some(rid) = rid {
                 by_id.insert(*rid, slot);
             }
         }
-        for r in self.batcher.active() {
+        let demands: Vec<SlotDemand> = self
+            .batcher
+            .active()
+            .iter()
+            .map(|r| {
+                if r.state == RequestState::Prefilling {
+                    let remaining = r.prompt.len() - r.prefill_pos;
+                    // Positions ctx .. kv_bucket - 1 are addressable.
+                    let headroom = kv_bucket.saturating_sub(r.context_len()).max(1);
+                    SlotDemand::prefill(remaining, r.prefill_pos, headroom)
+                } else {
+                    SlotDemand::decode()
+                }
+            })
+            .collect();
+        let plan = self.planner.plan(&demands);
+        let mut chunks: Vec<Vec<i32>> = vec![Vec::new(); b];
+        let mut start_pos = vec![0i32; b];
+        for (i, r) in self.batcher.active().iter().enumerate() {
             let slot = by_id[&r.id];
-            tokens[slot] = r.next_input_token().expect("active request has input");
-            lengths[slot] = r.context_len() as i32;
+            let k = plan[i];
+            start_pos[slot] = r.context_len() as i32;
+            chunks[slot] = if r.state == RequestState::Prefilling {
+                r.prompt[r.prefill_pos..r.prefill_pos + k].to_vec()
+            } else {
+                vec![r.next_input_token().expect("active request has input")]
+            };
         }
 
-        // 5. Execute.
+        // 5. Execute the whole mixed batch in one multi-token step.
         let runner = self
             .runners
             .get(&(b, kv_bucket))
             .expect("runner loaded at recompose");
-        let (logits, new_cache) = runner.step(&tokens, &live.cache, &lengths)?;
+        let (logits, new_cache) = runner.prefill_chunk(&chunks, &live.cache, &start_pos)?;
         let vocab = runner.vocab();
 
-        // 6. Advance request state machines.
+        // 6. Advance request state machines.  Each slot's logits row holds
+        // its *last* consumed token's logits; for a chunk that reaches the
+        // end of its prompt those are the first generated token, exactly as
+        // in the per-token pipeline.
         let mut new_tokens = 0usize;
-        let mut prefill_tokens = 0usize;
-        for r in self.batcher.active_mut() {
+        let mut chunk_sizes: Vec<usize> = Vec::new();
+        let mut first_tokens: Vec<RequestId> = Vec::new();
+        // Same `batcher.active` order the plan was built from above (no
+        // reap/admit between), so `plan[i]` still lines up.
+        for (i, r) in self.batcher.active_mut().iter_mut().enumerate() {
             let slot = by_id[&r.id];
             let sampled = DecodeRunner::argmax_row(&logits, vocab, slot);
-            let was_prefill = r.state == RequestState::Prefilling;
-            r.advance(sampled);
-            if was_prefill {
-                prefill_tokens += 1;
+            let k = plan[i];
+            if r.state == RequestState::Prefilling {
+                r.advance_chunk(k, sampled);
+                chunk_sizes.push(k);
                 if r.state != RequestState::Prefilling {
                     // transition emitted the first generated token
                     new_tokens += 1;
+                    first_tokens.push(r.id);
                 }
             } else {
+                debug_assert_eq!(k, 1, "decode slots consume exactly one token");
+                r.advance(sampled);
                 new_tokens += 1;
             }
         }
@@ -463,8 +562,13 @@ impl Engine {
             active,
             self.cfg.max_slots,
             new_tokens,
-            prefill_tokens,
+            &chunk_sizes,
         );
+        for id in first_tokens {
+            if let Some(s0) = self.submit_step.remove(&id) {
+                self.metrics.on_first_token_step(self.metrics.steps - s0);
+            }
+        }
         if let Some(tree) = &self.prefix {
             self.metrics.prefix = tree.stats();
             self.metrics.prefix_cached_blocks = tree.cached_blocks() as u64;

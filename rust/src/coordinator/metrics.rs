@@ -1,6 +1,7 @@
 //! Serving metrics: TTFT, per-token latency, throughput, engine step
 //! timing, KV utilization.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use crate::prefixcache::PrefixStats;
@@ -23,7 +24,18 @@ pub struct ServingMetrics {
     pub occupancy: Welford,
     pub requests_finished: u64,
     pub tokens_generated: u64,
+    /// Prompt tokens consumed (chunked: a size-k chunk counts k).
     pub prefill_tokens: u64,
+    /// Engine steps in which at least one prompt token was consumed — the
+    /// denominator of the chunked-prefill win (tokens per prefill step).
+    pub prefill_steps: u64,
+    /// Prefill chunks executed (decode slots don't count).
+    pub prefill_chunks: u64,
+    /// Chunk-size histogram: chunk tokens → occurrences.
+    pub chunk_hist: BTreeMap<usize, u64>,
+    /// Steps from submission to first generated token, per request — the
+    /// wall-clock-free TTFT proxy (engine ticks are the scheduler's clock).
+    pub ttft_steps: Welford,
     pub steps: u64,
     /// Prefix-cache counters (hit rate, shared/evicted blocks); all zero
     /// when the cache is disabled.
@@ -38,14 +50,56 @@ impl ServingMetrics {
         Self::default()
     }
 
-    pub fn on_step(&mut self, wall: Duration, active: usize, slots: usize, new_tokens: usize, prefill_tokens: usize) {
+    /// Record one engine step.  `chunk_sizes` holds the prompt-token count
+    /// of every prefill chunk consumed this step (one entry per prefilling
+    /// slot; decode slots are not listed).
+    pub fn on_step(
+        &mut self,
+        wall: Duration,
+        active: usize,
+        slots: usize,
+        new_tokens: usize,
+        chunk_sizes: &[usize],
+    ) {
         self.step.record(wall);
         self.occupancy
             .push(active as f64 / slots.max(1) as f64);
         self.tokens_generated += new_tokens as u64;
+        let prefill_tokens: usize = chunk_sizes.iter().sum();
         self.prefill_tokens += prefill_tokens as u64;
+        if prefill_tokens > 0 {
+            self.prefill_steps += 1;
+        }
+        for &k in chunk_sizes {
+            self.prefill_chunks += 1;
+            *self.chunk_hist.entry(k).or_insert(0) += 1;
+        }
         self.steps += 1;
         self.elapsed += wall;
+    }
+
+    /// Record a request's first generated token landing `steps_waited`
+    /// engine ticks after submission.
+    pub fn on_first_token_step(&mut self, steps_waited: u64) {
+        self.ttft_steps.push(steps_waited as f64);
+    }
+
+    /// Mean prompt tokens consumed per prefill-bearing step (≈ 1.0 on the
+    /// per-token pipeline; the chunked pipeline's speedup factor).
+    pub fn prefill_tokens_per_step(&self) -> f64 {
+        if self.prefill_steps == 0 {
+            return 0.0;
+        }
+        self.prefill_tokens as f64 / self.prefill_steps as f64
+    }
+
+    /// Render the chunk-size histogram (`size×count`, ascending sizes).
+    pub fn chunk_hist_summary(&self) -> String {
+        self.chunk_hist
+            .iter()
+            .map(|(k, n)| format!("{k}×{n}"))
+            .collect::<Vec<_>>()
+            .join(" ")
     }
 
     pub fn on_finish(&mut self, r: &Request) {
@@ -111,6 +165,14 @@ impl ServingMetrics {
             self.step.mean_us() / 1e3,
             self.occupancy.mean() * 100.0,
         );
+        if self.prefill_steps > 0 {
+            s.push_str(&format!(
+                " | prefill {:.1} tok/step over {} steps, ttft {:.1} steps",
+                self.prefill_tokens_per_step(),
+                self.prefill_steps,
+                self.ttft_steps.mean(),
+            ));
+        }
         if self.prefix.lookups > 0 {
             s.push_str(&format!(
                 " | prefix hits {}/{} ({:.0}%), {} prefill steps saved, \
@@ -134,14 +196,37 @@ mod tests {
     #[test]
     fn step_accounting() {
         let mut m = ServingMetrics::new();
-        m.on_step(Duration::from_millis(10), 3, 4, 3, 1);
-        m.on_step(Duration::from_millis(10), 4, 4, 4, 0);
+        m.on_step(Duration::from_millis(10), 3, 4, 3, &[1]);
+        m.on_step(Duration::from_millis(10), 4, 4, 4, &[]);
         assert_eq!(m.steps, 2);
         assert_eq!(m.tokens_generated, 7);
         assert_eq!(m.prefill_tokens, 1);
+        assert_eq!(m.prefill_steps, 1);
         let tps = m.decode_tokens_per_s();
         assert!((tps - 350.0).abs() < 1.0, "tps {tps}");
         assert!((m.occupancy.mean() - 0.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunk_accounting() {
+        let mut m = ServingMetrics::new();
+        // A mixed step: two chunks (8 and 3 tokens) plus decode slots.
+        m.on_step(Duration::from_millis(1), 4, 4, 2, &[8, 3]);
+        m.on_step(Duration::from_millis(1), 4, 4, 4, &[]);
+        m.on_step(Duration::from_millis(1), 4, 4, 3, &[8]);
+        assert_eq!(m.prefill_tokens, 19);
+        assert_eq!(m.prefill_steps, 2);
+        assert_eq!(m.prefill_chunks, 3);
+        assert_eq!(m.chunk_hist.get(&8), Some(&2));
+        assert_eq!(m.chunk_hist.get(&3), Some(&1));
+        assert!((m.prefill_tokens_per_step() - 9.5).abs() < 1e-12);
+        assert_eq!(m.chunk_hist_summary(), "3×1 8×2");
+        m.on_first_token_step(4);
+        m.on_first_token_step(2);
+        assert!((m.ttft_steps.mean() - 3.0).abs() < 1e-12);
+        let s = m.report();
+        assert!(s.contains("prefill 9.5 tok/step"), "report: {s}");
+        assert!(s.contains("ttft 3.0 steps"), "report: {s}");
     }
 
     #[test]

@@ -113,6 +113,34 @@ impl Request {
         }
     }
 
+    /// Advance after consuming a multi-token prefill chunk of `k` prompt
+    /// tokens in one engine step (chunked prefill).  `sampled` is the token
+    /// sampled from the logits of the chunk's *last* prompt token; it is
+    /// only meaningful — and only consumed — when the chunk reaches the end
+    /// of the prompt, where those logits are the first generated token
+    /// (identical semantics to `advance` with k = 1).
+    pub fn advance_chunk(&mut self, k: usize, sampled: i32) {
+        assert_eq!(
+            self.state,
+            RequestState::Prefilling,
+            "advance_chunk() outside prefill"
+        );
+        assert!(k >= 1, "empty chunk");
+        assert!(
+            self.prefill_pos + k <= self.prompt.len(),
+            "chunk of {k} overruns prompt ({} of {})",
+            self.prefill_pos,
+            self.prompt.len()
+        );
+        self.prefill_pos += k;
+        if self.prefill_pos == self.prompt.len() {
+            self.push_generated(sampled);
+            if self.state != RequestState::Finished {
+                self.state = RequestState::Decoding;
+            }
+        }
+    }
+
     fn push_generated(&mut self, tok: i32) {
         if self.first_token_at.is_none() {
             self.first_token_at = Some(Instant::now());
@@ -192,6 +220,46 @@ mod tests {
     #[should_panic(expected = "empty prompt")]
     fn empty_prompt_rejected() {
         Request::new(1, vec![], 1);
+    }
+
+    #[test]
+    fn chunked_advance_matches_per_token() {
+        // advance_chunk(k) must land in the same state as k advance()s.
+        let mut per_tok = Request::new(1, vec![10, 11, 12, 13, 14], 3);
+        per_tok.state = RequestState::Prefilling;
+        per_tok.advance(99);
+        per_tok.advance(99);
+        per_tok.advance(99);
+        per_tok.advance(99);
+        per_tok.advance(42); // last prompt token → first generated is 42
+
+        let mut chunked = Request::new(1, vec![10, 11, 12, 13, 14], 3);
+        chunked.state = RequestState::Prefilling;
+        chunked.advance_chunk(3, 99); // mid-prompt: sampled discarded
+        assert_eq!(chunked.state, RequestState::Prefilling);
+        assert_eq!(chunked.generated, Vec::<i32>::new());
+        chunked.advance_chunk(2, 42); // reaches the end: 42 emitted
+        assert_eq!(chunked.state, per_tok.state);
+        assert_eq!(chunked.generated, per_tok.generated);
+        assert_eq!(chunked.prefill_pos, per_tok.prefill_pos);
+        assert_eq!(chunked.context_len(), per_tok.context_len());
+    }
+
+    #[test]
+    fn whole_prompt_chunk_emits_first_token() {
+        let mut r = Request::new(1, vec![5, 6, 7], 1).with_eos(0);
+        r.state = RequestState::Prefilling;
+        r.advance_chunk(3, 8);
+        assert!(r.is_finished(), "budget 1 satisfied by the chunk's token");
+        assert_eq!(r.generated, vec![8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overruns prompt")]
+    fn chunk_overrun_rejected() {
+        let mut r = Request::new(1, vec![5, 6], 4);
+        r.state = RequestState::Prefilling;
+        r.advance_chunk(3, 0);
     }
 
     #[test]

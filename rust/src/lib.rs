@@ -19,12 +19,19 @@
 //! Python never runs on the request path: `make artifacts` runs once, the
 //! `flashmla-etap` binary is self-contained afterwards.
 
+// Style: this crate is index-heavy numeric kernel code; the loops mirror
+// the tensor math they implement (and the HLO the artifacts lower to), so
+// iterator rewrites obscure more than they clarify.  CI runs
+// `cargo clippy -- -D warnings` with these exceptions, applied
+// workspace-wide via `[workspace.lints]`.
+
 pub mod attention;
 pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod hardware;
 pub mod kvcache;
+pub mod prefill;
 pub mod prefixcache;
 pub mod runtime;
 pub mod sim;

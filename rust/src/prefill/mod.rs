@@ -1,0 +1,96 @@
+//! Chunked-prefill pipeline: token-budget chunk planning for mixed
+//! prefill/decode engine steps.
+//!
+//! The paper's premise is that prefill-shaped work (long KV, many query
+//! tokens) should reach the hardware as large well-shaped tiles, not as
+//! degenerate one-token slices.  Before this module the serving engine
+//! prefilled prompts one token per engine tick (prefill-as-decode); now
+//! each tick packs a *mixed batch* — every decoding slot's single token
+//! plus multi-token prefill chunks — under a configurable per-step token
+//! budget (the Sarathi-style chunked-prefill shape).
+//!
+//! The split of responsibilities:
+//!
+//! * [`ChunkPlanner`] (this module) decides, each tick, how many tokens
+//!   every active request consumes.  It is pure and deterministic — same
+//!   demands in, same plan out — which is what the property tests lean on.
+//! * The backend executes the plan through
+//!   [`StepRunner::prefill_chunk`](crate::runtime::StepRunner::prefill_chunk),
+//!   the multi-token step operation (native on the reference backend,
+//!   documented per-token fallback on PJRT until a chunked artifact lands).
+//! * The engine (`coordinator::engine`) wires the two together and keeps
+//!   the KV-bucket and paged-store bookkeeping honest.
+//!
+//! Budget semantics (see `docs/chunked-prefill.md`):
+//!
+//! * Every active slot makes **at least one token of progress per tick**
+//!   (the fixed-shape step executes all slots anyway, and holding a slot
+//!   would add no throughput).  The budget therefore binds only *above*
+//!   the active-slot count: `total planned ≤ max(step_token_budget,
+//!   active slots)`.  A budget below the slot count degenerates to the old
+//!   per-token pipeline.
+//! * Decoding slots always consume exactly 1 token.
+//! * The budget surplus (budget minus the mandatory 1-per-slot) is handed
+//!   to prefilling slots, each capped by `chunk_tokens`, by its remaining
+//!   prompt, and by the KV bucket headroom the engine reports.
+//! * Prefix-cache hits are never re-chunked: the planner sees only the
+//!   *unshared suffix* (`prompt.len() - prefill_pos`, where adoption has
+//!   already advanced `prefill_pos` past the shared blocks).
+
+mod planner;
+
+pub use planner::{ChunkPlanner, SlotDemand};
+
+/// How the budget surplus is divided among concurrently prefilling slots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FairnessPolicy {
+    /// Slot order (≈ admission order): the oldest prefilling request takes
+    /// as much of the surplus as it can use before younger ones see any.
+    /// Minimizes time-to-first-token for the head request; a hot stream of
+    /// short prompts can crowd out a long cold one.
+    Fifo,
+    /// Round-robin the surplus one token at a time, least-prefilled slot
+    /// first.  Cold long prompts keep pace with hot short ones; per-request
+    /// TTFT is traded for tail fairness.
+    Fair,
+}
+
+/// Chunked-prefill knobs, plumbed through `EngineConfig` / `[engine.prefill]`.
+#[derive(Clone, Copy, Debug)]
+pub struct PrefillConfig {
+    /// Target total tokens consumed per engine tick across all slots
+    /// (decode slots count 1 each).  Binds only above the active-slot
+    /// count; see the module docs for the exact semantics.
+    pub step_token_budget: usize,
+    /// Hard cap on prompt tokens one request may consume in one tick.
+    pub chunk_tokens: usize,
+    /// Surplus-division policy (the fairness knob).
+    pub fairness: FairnessPolicy,
+}
+
+impl Default for PrefillConfig {
+    fn default() -> Self {
+        PrefillConfig {
+            step_token_budget: 32,
+            chunk_tokens: 8,
+            fairness: FairnessPolicy::Fair,
+        }
+    }
+}
+
+impl PrefillConfig {
+    /// The pre-chunking pipeline: one prompt token per request per tick.
+    /// Used as the baseline in equivalence tests and benches.
+    pub fn per_token() -> Self {
+        PrefillConfig {
+            step_token_budget: 0,
+            chunk_tokens: 1,
+            fairness: FairnessPolicy::Fifo,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.chunk_tokens >= 1, "chunk_tokens must be ≥ 1");
+        Ok(())
+    }
+}

@@ -1,0 +1,347 @@
+//! The token-budget chunk planner.
+//!
+//! Pure function from per-slot demands to per-slot token counts; the
+//! engine calls it once per tick (twice, counting the bucket-sizing
+//! estimate).  All invariants the engine and the property tests rely on
+//! are listed on [`ChunkPlanner::plan`].
+
+use super::{FairnessPolicy, PrefillConfig};
+
+/// What one active slot wants this tick.
+#[derive(Clone, Copy, Debug)]
+pub struct SlotDemand {
+    /// Prompt tokens not yet consumed (0 ⇒ the request is decoding).
+    /// Prefix-cache adoption has already been subtracted: this is the
+    /// unshared suffix only, so shared prefixes are never re-chunked.
+    pub remaining_prefill: usize,
+    /// Prompt tokens already consumed (adopted prefixes count).  The
+    /// `Fair` policy serves the least-prefilled slot first.
+    pub served_prefill: usize,
+    /// Most tokens this slot can write this tick (KV-bucket headroom:
+    /// positions `ctx .. ctx + headroom` are addressable).  The engine
+    /// guarantees ≥ 1 for every active slot.
+    pub headroom: usize,
+}
+
+impl SlotDemand {
+    /// A decoding slot: exactly one token, no prefill state.
+    pub fn decode() -> Self {
+        SlotDemand {
+            remaining_prefill: 0,
+            served_prefill: 0,
+            headroom: 1,
+        }
+    }
+
+    /// A prefilling slot.
+    pub fn prefill(remaining: usize, served: usize, headroom: usize) -> Self {
+        SlotDemand {
+            remaining_prefill: remaining,
+            served_prefill: served,
+            headroom,
+        }
+    }
+}
+
+/// Plans per-tick token consumption under the budget.
+#[derive(Clone, Debug)]
+pub struct ChunkPlanner {
+    cfg: PrefillConfig,
+}
+
+impl ChunkPlanner {
+    pub fn new(cfg: PrefillConfig) -> Self {
+        ChunkPlanner { cfg }
+    }
+
+    pub fn config(&self) -> &PrefillConfig {
+        &self.cfg
+    }
+
+    /// Per-slot cap on this tick's chunk, before budget division.
+    fn cap(&self, d: &SlotDemand) -> usize {
+        if d.remaining_prefill == 0 {
+            1 // decoding: always exactly one token
+        } else {
+            self.cfg
+                .chunk_tokens
+                .min(d.remaining_prefill)
+                .min(d.headroom)
+                .max(1)
+        }
+    }
+
+    /// Plan one tick.  Returns `plan` aligned with `demands` (slot order).
+    ///
+    /// Invariants (property-tested in this module):
+    ///
+    /// 1. `plan[i] == 1` for every decoding slot (`remaining_prefill == 0`);
+    /// 2. `1 ≤ plan[i] ≤ min(chunk_tokens, remaining_prefill, headroom)`
+    ///    for every prefilling slot;
+    /// 3. `Σ plan[i] ≤ max(step_token_budget, demands.len())` — the budget
+    ///    binds above the mandatory one-token-per-slot floor;
+    /// 4. deterministic: equal inputs produce equal plans.
+    pub fn plan(&self, demands: &[SlotDemand]) -> Vec<usize> {
+        let n = demands.len();
+        let mut plan = vec![0usize; n];
+        if n == 0 {
+            return plan;
+        }
+        // Mandatory floor: every active slot consumes one token.
+        for (i, p) in plan.iter_mut().enumerate() {
+            debug_assert!(demands[i].headroom >= 1, "slot {i} has no KV headroom");
+            *p = 1;
+        }
+        let mut surplus = self.cfg.step_token_budget.saturating_sub(n);
+
+        // Candidates: prefilling slots that can take more than the floor.
+        let mut cands: Vec<usize> = (0..n).filter(|&i| self.cap(&demands[i]) > 1).collect();
+        if surplus == 0 || cands.is_empty() {
+            return plan;
+        }
+        match self.cfg.fairness {
+            FairnessPolicy::Fifo => {
+                for &i in &cands {
+                    if surplus == 0 {
+                        break;
+                    }
+                    let take = (self.cap(&demands[i]) - plan[i]).min(surplus);
+                    plan[i] += take;
+                    surplus -= take;
+                }
+            }
+            FairnessPolicy::Fair => {
+                // Least-prefilled first; ties broken by slot order so the
+                // plan is deterministic.
+                cands.sort_by_key(|&i| (demands[i].served_prefill, i));
+                // Round-robin one token at a time until the surplus is gone
+                // or every candidate is at its cap.
+                let mut progressed = true;
+                while surplus > 0 && progressed {
+                    progressed = false;
+                    for &i in &cands {
+                        if surplus == 0 {
+                            break;
+                        }
+                        if plan[i] < self.cap(&demands[i]) {
+                            plan[i] += 1;
+                            surplus -= 1;
+                            progressed = true;
+                        }
+                    }
+                }
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::{forall, Config};
+
+    fn planner(budget: usize, chunk: usize, fairness: FairnessPolicy) -> ChunkPlanner {
+        ChunkPlanner::new(PrefillConfig {
+            step_token_budget: budget,
+            chunk_tokens: chunk,
+            fairness,
+        })
+    }
+
+    #[test]
+    fn decode_only_batch_takes_one_each() {
+        let p = planner(32, 8, FairnessPolicy::Fair);
+        let plan = p.plan(&[SlotDemand::decode(); 4]);
+        assert_eq!(plan, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn single_prefill_gets_whole_chunk() {
+        let p = planner(32, 8, FairnessPolicy::Fair);
+        let plan = p.plan(&[SlotDemand::prefill(100, 0, 64)]);
+        assert_eq!(plan, vec![8], "capped by chunk_tokens");
+        let plan = p.plan(&[SlotDemand::prefill(3, 0, 64)]);
+        assert_eq!(plan, vec![3], "capped by remaining prompt");
+        let plan = p.plan(&[SlotDemand::prefill(100, 0, 5)]);
+        assert_eq!(plan, vec![5], "capped by KV headroom");
+    }
+
+    #[test]
+    fn budget_below_slot_count_degenerates_to_per_token() {
+        let p = planner(2, 8, FairnessPolicy::Fair);
+        let plan = p.plan(&[
+            SlotDemand::prefill(50, 0, 64),
+            SlotDemand::decode(),
+            SlotDemand::prefill(50, 0, 64),
+        ]);
+        assert_eq!(plan, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn decode_traffic_shrinks_prefill_share_but_never_to_zero() {
+        let p = planner(8, 8, FairnessPolicy::Fair);
+        // 6 decode slots eat 6 of the 8-token budget.
+        let mut demands = vec![SlotDemand::decode(); 6];
+        demands.push(SlotDemand::prefill(50, 0, 64));
+        let plan = p.plan(&demands);
+        assert_eq!(&plan[..6], &[1, 1, 1, 1, 1, 1]);
+        assert_eq!(plan[6], 2, "floor 1 + the single surplus token");
+    }
+
+    #[test]
+    fn fair_splits_surplus_evenly() {
+        let p = planner(18, 8, FairnessPolicy::Fair);
+        let plan = p.plan(&[
+            SlotDemand::prefill(100, 0, 64),
+            SlotDemand::prefill(100, 0, 64),
+        ]);
+        assert_eq!(plan, vec![8, 8], "room for both full chunks");
+        let p = planner(10, 8, FairnessPolicy::Fair);
+        let plan = p.plan(&[
+            SlotDemand::prefill(100, 0, 64),
+            SlotDemand::prefill(100, 0, 64),
+        ]);
+        assert_eq!(plan, vec![5, 5], "tight budget split evenly");
+    }
+
+    #[test]
+    fn fair_prefers_least_served() {
+        let p = planner(7, 8, FairnessPolicy::Fair);
+        // Slot 0 is far ahead; the cold slot 1 gets the odd extra token.
+        let plan = p.plan(&[
+            SlotDemand::prefill(100, 90, 64),
+            SlotDemand::prefill(100, 2, 64),
+        ]);
+        assert_eq!(plan.iter().sum::<usize>(), 7);
+        assert!(plan[1] > plan[0], "cold slot favored: {plan:?}");
+    }
+
+    #[test]
+    fn fifo_gives_head_slot_everything() {
+        let p = planner(10, 8, FairnessPolicy::Fifo);
+        let plan = p.plan(&[
+            SlotDemand::prefill(100, 90, 64),
+            SlotDemand::prefill(100, 0, 64),
+        ]);
+        assert_eq!(plan, vec![8, 2], "head takes its full chunk first");
+    }
+
+    #[test]
+    fn per_token_config_is_exact_old_pipeline() {
+        let p = ChunkPlanner::new(PrefillConfig::per_token());
+        let plan = p.plan(&[
+            SlotDemand::prefill(100, 0, 64),
+            SlotDemand::decode(),
+            SlotDemand::prefill(2, 1, 64),
+        ]);
+        assert_eq!(plan, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn property_plan_invariants() {
+        forall(Config::default().cases(300), |g| {
+            let budget = g.usize(0..64);
+            let chunk = g.usize(1..17);
+            let fairness = if g.bool() {
+                FairnessPolicy::Fair
+            } else {
+                FairnessPolicy::Fifo
+            };
+            let p = planner(budget, chunk, fairness);
+            let n = g.usize(1..12);
+            let demands: Vec<SlotDemand> = (0..n)
+                .map(|_| {
+                    if g.bool() {
+                        SlotDemand::decode()
+                    } else {
+                        SlotDemand::prefill(g.usize(1..200), g.usize(0..200), g.usize(1..128))
+                    }
+                })
+                .collect();
+            let plan = p.plan(&demands);
+            let plan2 = p.plan(&demands);
+            prop_assert!(plan == plan2, "non-deterministic plan");
+            let total: usize = plan.iter().sum();
+            prop_assert!(
+                total <= budget.max(n),
+                "budget violated: {total} > max({budget}, {n})"
+            );
+            for (i, d) in demands.iter().enumerate() {
+                prop_assert!(plan[i] >= 1, "slot {i} starved");
+                if d.remaining_prefill == 0 {
+                    prop_assert!(plan[i] == 1, "decode slot {i} got {}", plan[i]);
+                } else {
+                    prop_assert!(
+                        plan[i] <= chunk.min(d.remaining_prefill).min(d.headroom).max(1),
+                        "slot {i} over cap: {} (chunk {chunk}, rem {}, head {})",
+                        plan[i],
+                        d.remaining_prefill,
+                        d.headroom
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_chunks_cover_each_prompt_exactly_once() {
+        // Drive a simulated lifecycle: prompts start with a random adopted
+        // (shared) prefix; per tick, plan → apply.  Every prompt's unshared
+        // suffix must be covered exactly once — no token skipped, none
+        // consumed twice, adopted prefixes never re-chunked — and the loop
+        // must terminate (liveness: every tick makes progress).
+        forall(Config::default().cases(120), |g| {
+            let budget = g.usize(0..48);
+            let chunk = g.usize(1..12);
+            let fairness = if g.bool() {
+                FairnessPolicy::Fair
+            } else {
+                FairnessPolicy::Fifo
+            };
+            let p = planner(budget, chunk, fairness);
+            let n = g.usize(1..8);
+            let lens: Vec<usize> = (0..n).map(|_| g.usize(1..60)).collect();
+            let adopted: Vec<usize> = lens.iter().map(|&l| g.usize(0..l)).collect();
+            let mut pos = adopted.clone();
+            let mut ticks = 0usize;
+            while pos.iter().zip(&lens).any(|(&p, &l)| p < l) {
+                ticks += 1;
+                prop_assert!(ticks < 10_000, "planner failed to make progress");
+                let demands: Vec<SlotDemand> = pos
+                    .iter()
+                    .zip(&lens)
+                    .map(|(&p, &l)| {
+                        if p < l {
+                            SlotDemand::prefill(l - p, p, 128)
+                        } else {
+                            SlotDemand::decode()
+                        }
+                    })
+                    .collect();
+                let plan = p.plan(&demands);
+                for i in 0..n {
+                    if pos[i] < lens[i] {
+                        prop_assert!(
+                            plan[i] <= lens[i] - pos[i],
+                            "slot {i} chunk overruns its prompt"
+                        );
+                        pos[i] += plan[i];
+                    }
+                }
+            }
+            for i in 0..n {
+                prop_assert!(
+                    pos[i] == lens[i],
+                    "slot {i} covered {} of {} (adopted {})",
+                    pos[i],
+                    lens[i],
+                    adopted[i]
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -31,7 +31,8 @@
 //! Related work: SGLang's RadixAttention and vLLM's prefix caching use the
 //! same tree-of-blocks shape over a refcounted paged pool.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::kvcache::{BlockId, PagedLatentCache};
 
@@ -97,6 +98,15 @@ pub struct PrefixTree {
     free_slots: Vec<usize>,
     clock: u64,
     cached_blocks: usize,
+    /// Lazy LRU min-heap of `(last_access, node)` snapshots.  Every
+    /// recency bump pushes a fresh entry; [`PrefixTree::evict`] pops and
+    /// discards entries whose snapshot no longer matches the node (stale
+    /// bump, evicted slot, interior node).  Turns the old
+    /// O(leaves)-per-victim scan into O(log n) amortized — the ROADMAP
+    /// "eviction heap" item.  Snapshot pairs are unique because the clock
+    /// advances on every tree operation, so a reused node slot can never
+    /// collide with a stale entry.
+    lru: BinaryHeap<Reverse<(u64, usize)>>,
     stats: PrefixStats,
 }
 
@@ -118,6 +128,7 @@ impl PrefixTree {
             free_slots: Vec::new(),
             clock: 0,
             cached_blocks: 0,
+            lru: BinaryHeap::new(),
             stats: PrefixStats::default(),
         }
     }
@@ -140,12 +151,51 @@ impl PrefixTree {
         self.stats
     }
 
+    /// Heap entries currently held (tests assert compaction bounds this).
+    #[cfg(test)]
+    fn lru_len(&self) -> usize {
+        self.lru.len()
+    }
+
     fn node(&self, i: usize) -> &Node {
         self.nodes[i].as_ref().expect("dangling node index")
     }
 
     fn node_mut(&mut self, i: usize) -> &mut Node {
         self.nodes[i].as_mut().expect("dangling node index")
+    }
+
+    /// Set a node's recency and mirror it into the LRU heap (the heap is
+    /// lazy: older snapshots for the same node become stale and are
+    /// discarded at pop time).
+    fn bump(&mut self, i: usize, clock: u64) {
+        if i == ROOT {
+            return;
+        }
+        self.node_mut(i).last_access = clock;
+        self.lru.push(Reverse((clock, i)));
+        self.maybe_compact_lru();
+    }
+
+    /// Bound the lazy heap: stale snapshots otherwise accumulate one per
+    /// recency bump and are only drained by eviction, which may never run
+    /// on an unpressured pool.  When the heap outgrows the node table by
+    /// 4x, rebuild it from the live nodes' current recency — O(nodes),
+    /// amortized O(1) per push, and memory stays O(peak nodes) instead of
+    /// O(total lookups).
+    fn maybe_compact_lru(&mut self) {
+        if self.lru.len() <= 64 + 4 * self.nodes.len() {
+            return;
+        }
+        self.lru.clear();
+        for (i, slot) in self.nodes.iter().enumerate() {
+            if i == ROOT {
+                continue;
+            }
+            if let Some(n) = slot {
+                self.lru.push(Reverse((n.last_access, i)));
+            }
+        }
     }
 
     fn alloc_node(&mut self, n: Node) -> usize {
@@ -223,11 +273,12 @@ impl PrefixTree {
         let w = self.walk(tokens);
         self.clock += 1;
         let clock = self.clock;
-        for &n in &w.path {
-            self.node_mut(n).last_access = clock;
+        for i in 0..w.path.len() {
+            let n = w.path[i];
+            self.bump(n, clock);
         }
         if let Some((n, _)) = w.partial {
-            self.node_mut(n).last_access = clock;
+            self.bump(n, clock);
         }
         self.stats.lookups += 1;
         if w.matched_tokens > 0 {
@@ -270,12 +321,13 @@ impl PrefixTree {
         let w = self.walk(tokens);
         self.clock += 1;
         let clock = self.clock;
-        for &n in &w.path {
-            self.node_mut(n).last_access = clock;
+        for i in 0..w.path.len() {
+            let n = w.path[i];
+            self.bump(n, clock);
         }
         if w.matched_tokens == tokens.len() {
             if let Some((n, _)) = w.partial {
-                self.node_mut(n).last_access = clock;
+                self.bump(n, clock);
             }
             return 0;
         }
@@ -288,7 +340,7 @@ impl PrefixTree {
                     // First-block conflict under the same first token right
                     // after the split point: the existing entry wins (a
                     // block-granularity tree cannot split inside a block).
-                    self.node_mut(child).last_access = clock;
+                    self.bump(child, clock);
                     return 0;
                 }
                 self.split_edge(child, k, clock)
@@ -321,6 +373,7 @@ impl PrefixTree {
             parent: attach,
             last_access: clock,
         });
+        self.lru.push(Reverse((clock, idx)));
         self.node_mut(attach)
             .children
             .insert(tokens[w.matched_tokens], idx);
@@ -348,6 +401,7 @@ impl PrefixTree {
             parent,
             last_access: clock,
         });
+        self.lru.push(Reverse((clock, mid)));
         {
             let c = self.node_mut(child);
             c.key = key[k * bs..].to_vec();
@@ -369,6 +423,69 @@ impl PrefixTree {
     /// free later when the sharing sequences finish.  Returns the number of
     /// blocks released.
     pub fn evict(
+        &mut self,
+        want_blocks: usize,
+        cache: &mut PagedLatentCache,
+        only_unreferenced: bool,
+    ) -> usize {
+        let mut released = 0usize;
+        // Leaves skipped because a live sequence still shares their blocks;
+        // re-pushed after the round so later evictions reconsider them at
+        // unchanged recency.
+        let mut deferred: Vec<Reverse<(u64, usize)>> = Vec::new();
+        while released < want_blocks {
+            let Some(Reverse((clock, idx))) = self.lru.pop() else { break };
+            // Lazy-deletion validity: the snapshot must still describe a
+            // live leaf.  (A reused slot can't false-match: the clock is
+            // strictly monotone, so a new occupant's last_access is newer
+            // than any stale snapshot for that slot.)
+            let valid = idx != ROOT
+                && match &self.nodes[idx] {
+                    Some(n) => n.last_access == clock && n.children.is_empty(),
+                    None => false,
+                };
+            if !valid {
+                continue;
+            }
+            if only_unreferenced
+                && self
+                    .node(idx)
+                    .blocks
+                    .iter()
+                    .any(|&b| cache.block_refcount(b) > 1)
+            {
+                deferred.push(Reverse((clock, idx)));
+                continue;
+            }
+            let node = self.nodes[idx].take().expect("validated above");
+            self.free_slots.push(idx);
+            let first = node.key[0];
+            self.node_mut(node.parent).children.remove(&first);
+            // Parent promotion: losing a child may turn the parent into a
+            // leaf; give it a heap entry at its current recency so it is
+            // reachable as a victim.  (Harmless duplicate if the parent
+            // still has children — validity filtering drops it.)
+            if node.parent != ROOT {
+                let pa = self.node(node.parent).last_access;
+                self.lru.push(Reverse((pa, node.parent)));
+            }
+            for &b in &node.blocks {
+                cache.release_block(b);
+            }
+            released += node.blocks.len();
+            self.cached_blocks -= node.blocks.len();
+            self.stats.evicted_blocks += node.blocks.len() as u64;
+            self.stats.evictions += 1;
+        }
+        self.lru.extend(deferred);
+        released
+    }
+
+    /// The pre-heap victim selection — a full scan of all leaves per
+    /// victim — kept verbatim as the test oracle: the heap path must evict
+    /// the exact same victims in the exact same order.
+    #[cfg(test)]
+    fn evict_scan(
         &mut self,
         want_blocks: usize,
         cache: &mut PagedLatentCache,
@@ -419,6 +536,7 @@ impl PrefixTree {
         }
         self.nodes.truncate(1);
         self.free_slots.clear();
+        self.lru.clear();
         self.node_mut(ROOT).children.clear();
         self.cached_blocks = 0;
     }
@@ -673,6 +791,184 @@ mod tests {
                     c.free_seq(s);
                 }
             }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lru_heap_stays_bounded_under_hot_lookups() {
+        // A hot cached prompt on an unpressured pool: millions of lookups
+        // must not grow the lazy heap without bound (compaction rebuilds
+        // it from live nodes once it outgrows the node table 4x).
+        let mut c = cache(16);
+        let mut tree = PrefixTree::new(BS, None);
+        let hot = toks(&[(7, 8)]);
+        insert_prompt(&mut tree, &mut c, &hot);
+        for _ in 0..10_000 {
+            tree.match_prefix(&hot);
+        }
+        let bound = 64 + 5 * tree.node_count().max(4);
+        assert!(
+            tree.lru_len() <= bound,
+            "heap grew to {} entries for {} nodes",
+            tree.lru_len(),
+            tree.node_count()
+        );
+        // And eviction still works right after compaction churn.
+        assert_eq!(tree.evict(2, &mut c, true), 2);
+        assert_eq!(c.free_blocks(), 16);
+    }
+
+    #[test]
+    fn heap_eviction_order_matches_scan_oracle() {
+        // Deterministic scenario exercising recency bumps, edge splits,
+        // interior-node promotion, and one-victim-at-a-time eviction: the
+        // heap path must pick the identical victim sequence as the old
+        // all-leaves scan.
+        let build = |c: &mut PagedLatentCache| {
+            let mut tree = PrefixTree::new(BS, None);
+            insert_prompt(&mut tree, c, &toks(&[(1, 8), (2, 8)]));
+            insert_prompt(&mut tree, c, &toks(&[(1, 8), (3, 8)]));
+            insert_prompt(&mut tree, c, &toks(&[(4, 8)]));
+            insert_prompt(&mut tree, c, &toks(&[(5, 12)]));
+            tree.match_prefix(&toks(&[(4, 8)])); // bump the (4,…) leaf
+            tree.match_prefix(&toks(&[(1, 8), (2, 8)]));
+            tree
+        };
+        let mut c_heap = cache(64);
+        let mut c_scan = cache(64);
+        let mut heap = build(&mut c_heap);
+        let mut scan = build(&mut c_scan);
+        let probes: Vec<Vec<i32>> = vec![
+            toks(&[(1, 8), (2, 8)]),
+            toks(&[(1, 8), (3, 8)]),
+            toks(&[(4, 8)]),
+            toks(&[(5, 12)]),
+        ];
+        // Pin one leaf with a live adopted chain (mirrored in both caches)
+        // and then bump every *other* prompt, leaving the pinned leaf as
+        // the LRU candidate: each eviction round must pop it first, defer
+        // it (refcount > 1) without losing it, and take the next-oldest
+        // unreferenced leaf instead — exactly like the scan's filter.
+        let pin = toks(&[(5, 12)]);
+        let m_h = heap.match_prefix(&pin);
+        let live_h = c_heap.adopt_chain(&m_h.blocks, m_h.tokens);
+        let m_s = scan.match_prefix(&pin);
+        let live_s = c_scan.adopt_chain(&m_s.blocks, m_s.tokens);
+        for p in probes.iter().filter(|p| **p != pin) {
+            heap.match_prefix(p);
+            scan.match_prefix(p);
+        }
+        for round in 0..4 {
+            let a = heap.evict(1, &mut c_heap, true);
+            let b = scan.evict_scan(1, &mut c_scan, true);
+            assert_eq!(a, b, "pinned round {round}: released diverge");
+            assert_eq!(heap.peek_match(&pin), 12, "pinned leaf must survive");
+            assert_eq!(scan.peek_match(&pin), 12);
+            for p in &probes {
+                assert_eq!(heap.peek_match(p), scan.peek_match(p), "round {round}");
+            }
+        }
+        // Unpin; the deferred entry must still be reachable as a victim.
+        c_heap.free_seq(live_h);
+        c_scan.free_seq(live_s);
+        // Evict one victim at a time until both trees are empty; after
+        // every single eviction the observable state must agree.
+        for round in 0..16 {
+            let a = heap.evict(1, &mut c_heap, true);
+            let b = scan.evict_scan(1, &mut c_scan, true);
+            assert_eq!(a, b, "round {round}: released counts diverge");
+            assert_eq!(
+                heap.cached_blocks(),
+                scan.cached_blocks(),
+                "round {round}: cached blocks diverge"
+            );
+            assert_eq!(
+                heap.node_count(),
+                scan.node_count(),
+                "round {round}: node counts diverge"
+            );
+            for p in &probes {
+                assert_eq!(
+                    heap.peek_match(p),
+                    scan.peek_match(p),
+                    "round {round}: surviving entries diverge on {p:?}"
+                );
+            }
+            if a == 0 {
+                break;
+            }
+        }
+        assert_eq!(heap.node_count(), 0, "everything eventually evicted");
+    }
+
+    #[test]
+    fn property_heap_eviction_order_matches_scan_oracle() {
+        // Randomized mirror of the scenario above: identical op sequences
+        // on two trees, then lock-step single-victim eviction (with random
+        // extra inserts interleaved) must stay observably identical.
+        forall(Config::default().cases(60), |g| {
+            let mut c_heap = cache(256);
+            let mut c_scan = cache(256);
+            let mut heap = PrefixTree::new(BS, None);
+            let mut scan = PrefixTree::new(BS, None);
+            let mut prompts: Vec<Vec<i32>> = Vec::new();
+            let mut op = |heap: &mut PrefixTree,
+                          scan: &mut PrefixTree,
+                          c_heap: &mut PagedLatentCache,
+                          c_scan: &mut PagedLatentCache,
+                          prompts: &mut Vec<Vec<i32>>,
+                          p: Vec<i32>,
+                          lookup: bool| {
+                if lookup {
+                    heap.match_prefix(&p);
+                    scan.match_prefix(&p);
+                } else {
+                    insert_prompt(heap, c_heap, &p);
+                    insert_prompt(scan, c_scan, &p);
+                    prompts.push(p);
+                }
+            };
+            for _ in 0..g.usize(2..10) {
+                let p = g.tokens(BS..6 * BS, 3);
+                op(&mut heap, &mut scan, &mut c_heap, &mut c_scan, &mut prompts, p, false);
+            }
+            for _ in 0..g.usize(0..8) {
+                let p = if g.bool() && !prompts.is_empty() {
+                    g.choose(&prompts).clone()
+                } else {
+                    g.tokens(1..6 * BS, 3)
+                };
+                op(&mut heap, &mut scan, &mut c_heap, &mut c_scan, &mut prompts, p, true);
+            }
+            let mut guard = 0;
+            loop {
+                guard += 1;
+                prop_assert!(guard < 1000, "eviction failed to drain");
+                let a = heap.evict(1, &mut c_heap, true);
+                let b = scan.evict_scan(1, &mut c_scan, true);
+                prop_assert!(a == b, "released diverge: {a} vs {b}");
+                prop_assert!(
+                    heap.cached_blocks() == scan.cached_blocks(),
+                    "cached blocks diverge"
+                );
+                for p in &prompts {
+                    prop_assert!(
+                        heap.peek_match(p) == scan.peek_match(p),
+                        "survivors diverge on {p:?}"
+                    );
+                }
+                if a == 0 {
+                    break;
+                }
+                // Occasionally insert mid-drain to exercise heap staleness.
+                if guard % 3 == 0 {
+                    let p = g.tokens(BS..4 * BS, 3);
+                    op(&mut heap, &mut scan, &mut c_heap, &mut c_scan, &mut prompts, p, false);
+                }
+            }
+            prop_assert!(heap.node_count() == scan.node_count());
+            prop_assert!(c_heap.free_blocks() == c_scan.free_blocks());
             Ok(())
         });
     }

@@ -13,6 +13,22 @@
 //! cache literal `[L × B × N × latent]`, and per-slot lengths, write each
 //! slot's new latent at position `lengths[b]` and return
 //! `(logits [B × vocab], new_cache)`.
+//!
+//! **Multi-token steps.**  The chunked-prefill pipeline
+//! (`crate::prefill`, `docs/chunked-prefill.md`) extends the contract with
+//! [`StepRunner::prefill_chunk`]: slot `b` consumes `chunks[b]` tokens in
+//! one call, writing latents at `start_pos[b] ..`, and gets back the
+//! logits of its *last* consumed token.  Two contract properties every
+//! backend must honor make the default per-token fallback below exact:
+//!
+//! * **slot isolation** — a step reads and writes only each slot's own
+//!   cache rows, so per-slot progress can differ freely;
+//! * **write purity** — the latent written at `(slot, pos)` is a pure
+//!   function of the input token and the cache rows *before* `pos`, never
+//!   of the value previously stored at `pos`.  Re-feeding a slot its last
+//!   token at its last position therefore rewrites bit-identical data (and
+//!   recomputes bit-identical logits), which is how the fallback holds
+//!   finished slots in place while longer chunks drain.
 
 /// One decode step over a fixed `(batch, kv_bucket)` shape.
 pub trait StepRunner {
@@ -25,11 +41,92 @@ pub trait StepRunner {
         lengths: &[i32],
     ) -> anyhow::Result<(Vec<f32>, xla::Literal)>;
 
+    /// Multi-token mixed step: slot `b` consumes `chunks[b]` in order,
+    /// writing latents at `start_pos[b] .. start_pos[b] + chunks[b].len()`.
+    /// Returns the logits of each slot's **last** consumed token plus the
+    /// new cache.
+    ///
+    /// * A one-token chunk is exactly [`step`](Self::step) for that slot;
+    ///   a call where every chunk has length ≤ 1 is exactly one `step`.
+    /// * An **empty** chunk marks a padded slot.  Its logits row and its
+    ///   row-0 cache latent are unspecified scratch (the engine never
+    ///   reads either), but implementations must produce them the same
+    ///   way `step` does for padded slots — by processing token 0 at
+    ///   position 0 — so chunked and per-token execution stay
+    ///   bit-identical literal-wide.
+    ///
+    /// The default implementation is the documented **per-token fallback**
+    /// used by the PJRT [`DecodeRunner`](super::DecodeRunner) until a
+    /// chunked artifact lands: it loops `step`, advancing each slot
+    /// through its chunk and re-feeding finished slots their last token
+    /// (a bit-identical no-op under the write-purity contract above).  It
+    /// is correct but does not reduce dispatch count; backends with a
+    /// native multi-token path (the reference model today, a chunked AOT
+    /// artifact tomorrow) override it.
+    fn prefill_chunk(
+        &self,
+        chunks: &[Vec<i32>],
+        cache: &xla::Literal,
+        start_pos: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, xla::Literal)> {
+        prefill_chunk_fallback(self, chunks, cache, start_pos)
+    }
+
     /// Vocabulary size (logits row width).
     fn vocab(&self) -> usize;
 
     /// Human-readable runner name (for logs).
     fn name(&self) -> &str;
+}
+
+/// The per-token multi-token-step fallback (the default body of
+/// [`StepRunner::prefill_chunk`]), callable directly so equivalence tests
+/// can pit a backend's native chunked path against it.
+///
+/// Walks all chunks in lockstep with repeated [`StepRunner::step`] calls:
+/// iteration `j` feeds slot `b` its `j`-th chunk token at
+/// `start_pos[b] + j`; slots whose chunk is exhausted re-feed their last
+/// token at their last position, which under the write-purity contract
+/// rewrites bit-identical data and recomputes bit-identical logits.
+/// Padded (empty-chunk) slots feed token 0 at position 0, the same
+/// scratch write the engine has always issued for padded slots.
+pub fn prefill_chunk_fallback<R: StepRunner + ?Sized>(
+    runner: &R,
+    chunks: &[Vec<i32>],
+    cache: &xla::Literal,
+    start_pos: &[i32],
+) -> anyhow::Result<(Vec<f32>, xla::Literal)> {
+    anyhow::ensure!(
+        chunks.len() == start_pos.len(),
+        "chunks len {} != start_pos len {}",
+        chunks.len(),
+        start_pos.len()
+    );
+    let b = chunks.len();
+    let max_k = chunks.iter().map(|c| c.len().max(1)).max().unwrap_or(1);
+    let mut tokens = vec![0i32; b];
+    let mut lengths = vec![0i32; b];
+    let mut logits: Vec<f32> = Vec::new();
+    let mut cur: Option<xla::Literal> = None;
+    for j in 0..max_k {
+        for slot in 0..b {
+            if chunks[slot].is_empty() {
+                // Padded slot: same scratch write `step` performs.
+                tokens[slot] = 0;
+                lengths[slot] = 0;
+            } else {
+                // Clamp: finished slots re-feed their last token at their
+                // last position (pure rewrite, see module docs).
+                let jb = j.min(chunks[slot].len() - 1);
+                tokens[slot] = chunks[slot][jb];
+                lengths[slot] = start_pos[slot] + jb as i32;
+            }
+        }
+        let (lg, c) = runner.step(&tokens, cur.as_ref().unwrap_or(cache), &lengths)?;
+        logits = lg;
+        cur = Some(c);
+    }
+    Ok((logits, cur.expect("max_k ≥ 1")))
 }
 
 impl StepRunner for super::DecodeRunner {
@@ -41,6 +138,10 @@ impl StepRunner for super::DecodeRunner {
     ) -> anyhow::Result<(Vec<f32>, xla::Literal)> {
         super::DecodeRunner::step(self, tokens, cache, lengths)
     }
+
+    // `prefill_chunk` intentionally NOT overridden: the PJRT path uses the
+    // per-token fallback until a chunked decode artifact is compiled (see
+    // ROADMAP "chunked PJRT artifact").
 
     fn vocab(&self) -> usize {
         super::DecodeRunner::vocab(self)

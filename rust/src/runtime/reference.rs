@@ -136,6 +136,126 @@ impl ReferenceRunner {
     }
 }
 
+impl ReferenceRunner {
+    /// Process one token for one slot against the host cache: write the
+    /// new latent at position `t` and fill `logits_row`.  This is the
+    /// single shared per-slot kernel behind both [`StepRunner::step`] and
+    /// the native [`StepRunner::prefill_chunk`], which makes their
+    /// bit-identity structural rather than incidental (the chunked path
+    /// runs exactly this code once per token).
+    fn step_slot(
+        &self,
+        host: &mut [f32],
+        slot: usize,
+        token: i32,
+        t: usize,
+        logits_row: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let m = &*self.model;
+        let (v, nl, d) = (m.cfg.vocab, m.cfg.n_layers, m.cfg.latent_dim);
+        let (b, n) = (self.batch, self.kv_bucket);
+        anyhow::ensure!(
+            t < n,
+            "length {t} overflows bucket {n} (no room for this token)"
+        );
+        anyhow::ensure!(
+            token >= 0 && (token as usize) < v,
+            "token {token} outside vocab {v}"
+        );
+        let e = &m.emb[token as usize * d..(token as usize + 1) * d];
+        let mut h: Vec<f32> = e.to_vec();
+        let pos_scale = (t + 1) as f32 * 0.03125;
+        for l in 0..nl {
+            // New latent from the hidden state, written at position t.
+            let wl = &m.w_latent[l * d * d..(l + 1) * d * d];
+            let pm = &m.pos_mix[l * d..(l + 1) * d];
+            let row = |j: usize| ((l * b + slot) * n + j) * d;
+            let base = row(t);
+            for i in 0..d {
+                let mut acc = pm[i] * pos_scale;
+                for (j, &hj) in h.iter().enumerate() {
+                    acc += wl[i * d + j] * hj;
+                }
+                host[base + i] = acc.tanh();
+            }
+            // Attention over positions 0..=t of this slot's rows.
+            let wq = &m.w_query[l * d * d..(l + 1) * d * d];
+            let mut q = vec![0.0f32; d];
+            for i in 0..d {
+                let mut acc = 0.0f32;
+                for (j, &hj) in h.iter().enumerate() {
+                    acc += wq[i * d + j] * hj;
+                }
+                q[i] = acc;
+            }
+            let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+            let mut scores = Vec::with_capacity(t + 1);
+            let mut max_s = f32::NEG_INFINITY;
+            for j in 0..=t {
+                let r = row(j);
+                let mut s = 0.0f32;
+                for i in 0..d {
+                    s += q[i] * host[r + i];
+                }
+                let s = s * inv_sqrt_d;
+                max_s = max_s.max(s);
+                scores.push(s);
+            }
+            let mut norm = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - max_s).exp();
+                norm += *s;
+            }
+            let mut ctx = vec![0.0f32; d];
+            for (j, &w) in scores.iter().enumerate() {
+                let r = row(j);
+                let w = w / norm;
+                for i in 0..d {
+                    ctx[i] += w * host[r + i];
+                }
+            }
+            for i in 0..d {
+                h[i] = (h[i] + ctx[i]).tanh();
+            }
+        }
+        for tok in 0..v {
+            let o = &m.out_proj[tok * d..(tok + 1) * d];
+            let mut acc = 0.0f32;
+            for i in 0..d {
+                acc += o[i] * h[i];
+            }
+            logits_row[tok] = acc;
+        }
+        Ok(())
+    }
+
+    /// Pull the cache literal to a host vector, validating its shape.
+    fn host_cache(&self, cache: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+        let c = &self.model.cfg;
+        let want = c.n_layers * self.batch * self.kv_bucket * c.latent_dim;
+        let host: Vec<f32> = cache
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("cache to_vec: {e:?}"))?;
+        anyhow::ensure!(
+            host.len() == want,
+            "cache has {} elems, want {want}",
+            host.len()
+        );
+        Ok(host)
+    }
+
+    fn pack_cache(&self, host: &[f32]) -> anyhow::Result<xla::Literal> {
+        let c = &self.model.cfg;
+        let dims = [
+            c.n_layers as i64,
+            self.batch as i64,
+            self.kv_bucket as i64,
+            c.latent_dim as i64,
+        ];
+        super::client::literal_from_f32(host, &dims)
+    }
+}
+
 impl StepRunner for ReferenceRunner {
     fn step(
         &self,
@@ -143,101 +263,59 @@ impl StepRunner for ReferenceRunner {
         cache: &xla::Literal,
         lengths: &[i32],
     ) -> anyhow::Result<(Vec<f32>, xla::Literal)> {
-        let m = &*self.model;
-        let (v, nl, d) = (m.cfg.vocab, m.cfg.n_layers, m.cfg.latent_dim);
-        let (b, n) = (self.batch, self.kv_bucket);
+        let v = self.model.cfg.vocab;
+        let b = self.batch;
         anyhow::ensure!(tokens.len() == b, "tokens len {} != batch {b}", tokens.len());
         anyhow::ensure!(lengths.len() == b, "lengths len {} != batch {b}", lengths.len());
-        let mut host: Vec<f32> = cache
-            .to_vec()
-            .map_err(|e| anyhow::anyhow!("cache to_vec: {e:?}"))?;
-        anyhow::ensure!(
-            host.len() == nl * b * n * d,
-            "cache has {} elems, want {}",
-            host.len(),
-            nl * b * n * d
-        );
+        let mut host = self.host_cache(cache)?;
         let mut logits = vec![0.0f32; b * v];
         for slot in 0..b {
             let t = lengths[slot];
             anyhow::ensure!(
-                t >= 0 && (t as usize) < n,
-                "length {t} overflows bucket {n} (no room for this token)"
+                t >= 0,
+                "length {t} overflows bucket {} (no room for this token)",
+                self.kv_bucket
             );
-            let t = t as usize;
-            let x = tokens[slot];
-            anyhow::ensure!(
-                x >= 0 && (x as usize) < v,
-                "token {x} outside vocab {v}"
-            );
-            let e = &m.emb[x as usize * d..(x as usize + 1) * d];
-            let mut h: Vec<f32> = e.to_vec();
-            let pos_scale = (t + 1) as f32 * 0.03125;
-            for l in 0..nl {
-                // New latent from the hidden state, written at position t.
-                let wl = &m.w_latent[l * d * d..(l + 1) * d * d];
-                let pm = &m.pos_mix[l * d..(l + 1) * d];
-                let row = |j: usize| ((l * b + slot) * n + j) * d;
-                let base = row(t);
-                for i in 0..d {
-                    let mut acc = pm[i] * pos_scale;
-                    for (j, &hj) in h.iter().enumerate() {
-                        acc += wl[i * d + j] * hj;
-                    }
-                    host[base + i] = acc.tanh();
-                }
-                // Attention over positions 0..=t of this slot's rows.
-                let wq = &m.w_query[l * d * d..(l + 1) * d * d];
-                let mut q = vec![0.0f32; d];
-                for i in 0..d {
-                    let mut acc = 0.0f32;
-                    for (j, &hj) in h.iter().enumerate() {
-                        acc += wq[i * d + j] * hj;
-                    }
-                    q[i] = acc;
-                }
-                let inv_sqrt_d = 1.0 / (d as f32).sqrt();
-                let mut scores = Vec::with_capacity(t + 1);
-                let mut max_s = f32::NEG_INFINITY;
-                for j in 0..=t {
-                    let r = row(j);
-                    let mut s = 0.0f32;
-                    for i in 0..d {
-                        s += q[i] * host[r + i];
-                    }
-                    let s = s * inv_sqrt_d;
-                    max_s = max_s.max(s);
-                    scores.push(s);
-                }
-                let mut norm = 0.0f32;
-                for s in scores.iter_mut() {
-                    *s = (*s - max_s).exp();
-                    norm += *s;
-                }
-                let mut ctx = vec![0.0f32; d];
-                for (j, &w) in scores.iter().enumerate() {
-                    let r = row(j);
-                    let w = w / norm;
-                    for i in 0..d {
-                        ctx[i] += w * host[r + i];
-                    }
-                }
-                for i in 0..d {
-                    h[i] = (h[i] + ctx[i]).tanh();
-                }
+            let (lo, hi) = (slot * v, (slot + 1) * v);
+            self.step_slot(&mut host, slot, tokens[slot], t as usize, &mut logits[lo..hi])?;
+        }
+        Ok((logits, self.pack_cache(&host)?))
+    }
+
+    /// Native multi-token path: one host round-trip for the whole mixed
+    /// batch, then `step_slot` once per (slot, token) — bit-identical to
+    /// the per-token fallback because slots are isolated and both paths
+    /// run the identical per-slot kernel in the identical per-slot order.
+    fn prefill_chunk(
+        &self,
+        chunks: &[Vec<i32>],
+        cache: &xla::Literal,
+        start_pos: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, xla::Literal)> {
+        let v = self.model.cfg.vocab;
+        let b = self.batch;
+        anyhow::ensure!(chunks.len() == b, "chunks len {} != batch {b}", chunks.len());
+        anyhow::ensure!(
+            start_pos.len() == b,
+            "start_pos len {} != batch {b}",
+            start_pos.len()
+        );
+        let mut host = self.host_cache(cache)?;
+        let mut logits = vec![0.0f32; b * v];
+        for slot in 0..b {
+            let (lo, hi) = (slot * v, (slot + 1) * v);
+            if chunks[slot].is_empty() {
+                // Padded slot: same scratch write `step` performs.
+                self.step_slot(&mut host, slot, 0, 0, &mut logits[lo..hi])?;
+                continue;
             }
-            for tok in 0..v {
-                let o = &m.out_proj[tok * d..(tok + 1) * d];
-                let mut acc = 0.0f32;
-                for i in 0..d {
-                    acc += o[i] * h[i];
-                }
-                logits[slot * v + tok] = acc;
+            anyhow::ensure!(start_pos[slot] >= 0, "negative start_pos");
+            for (j, &tok) in chunks[slot].iter().enumerate() {
+                let t = start_pos[slot] as usize + j;
+                self.step_slot(&mut host, slot, tok, t, &mut logits[lo..hi])?;
             }
         }
-        let dims = [nl as i64, b as i64, n as i64, d as i64];
-        let new_cache = super::client::literal_from_f32(&host, &dims)?;
-        Ok((logits, new_cache))
+        Ok((logits, self.pack_cache(&host)?))
     }
 
     fn vocab(&self) -> usize {
@@ -332,5 +410,87 @@ mod tests {
         let cache = r.fresh_cache().unwrap();
         assert!(StepRunner::step(&r, &[1], &cache, &[8]).is_err());
         assert!(StepRunner::step(&r, &[99], &cache, &[0]).is_err());
+        // Chunk overrunning the bucket fails too.
+        assert!(r
+            .prefill_chunk(&[(0..9).collect::<Vec<i32>>()], &cache, &[0])
+            .is_err());
+    }
+
+    #[test]
+    fn chunked_equals_per_token_loop() {
+        // The headline contract: one prefill_chunk call over a prompt must
+        // produce the bit-identical cache and final logits as feeding the
+        // prompt one step at a time.
+        let m = small();
+        let r = m.runner(2, 16);
+        let prompt: Vec<i32> = vec![3, 5, 7, 11, 2, 9];
+
+        // Per-token loop in slot 0 (slot 1 padded, token 0 / length 0).
+        let mut cache = r.fresh_cache().unwrap();
+        let mut logits = Vec::new();
+        for (t, &tok) in prompt.iter().enumerate() {
+            let (lg, c) =
+                StepRunner::step(&r, &[tok, 0], &cache, &[t as i32, 0]).unwrap();
+            cache = c;
+            logits = lg;
+        }
+
+        // One chunked call.
+        let fresh = r.fresh_cache().unwrap();
+        let (clogits, ccache) = r
+            .prefill_chunk(&[prompt.clone(), Vec::new()], &fresh, &[0, 0])
+            .unwrap();
+
+        assert_eq!(clogits, logits, "final logits differ");
+        assert_eq!(
+            ccache.to_vec::<f32>().unwrap(),
+            cache.to_vec::<f32>().unwrap(),
+            "cache literal differs"
+        );
+    }
+
+    #[test]
+    fn native_chunk_equals_fallback() {
+        // The native override must match the documented per-token fallback
+        // bit-for-bit on a mixed batch: a long chunk, a decode-style
+        // single token, and a padded slot.
+        let m = small();
+        let r = m.runner(4, 16);
+        // Give the decode slot some history first.
+        let mut cache = r.fresh_cache().unwrap();
+        for (t, tok) in [4i32, 6, 8].into_iter().enumerate() {
+            let (_, c) =
+                StepRunner::step(&r, &[0, tok, 0, 0], &cache, &[0, t as i32, 0, 0]).unwrap();
+            cache = c;
+        }
+        let chunks: Vec<Vec<i32>> = vec![
+            vec![3, 5, 7, 11, 2],  // 5-token prefill chunk
+            vec![12],              // decode: single token at position 3
+            Vec::new(),            // padded
+            vec![9, 1],            // 2-token chunk
+        ];
+        let start = [0, 3, 0, 0];
+        let (nl, nc) = r.prefill_chunk(&chunks, &cache, &start).unwrap();
+        let (fl, fc) =
+            super::super::backend::prefill_chunk_fallback(&r, &chunks, &cache, &start).unwrap();
+        assert_eq!(nl, fl, "logits differ between native and fallback");
+        assert_eq!(
+            nc.to_vec::<f32>().unwrap(),
+            fc.to_vec::<f32>().unwrap(),
+            "caches differ between native and fallback"
+        );
+    }
+
+    #[test]
+    fn all_single_token_chunks_equal_one_step() {
+        let m = small();
+        let r = m.runner(2, 8);
+        let cache = r.fresh_cache().unwrap();
+        let (sl, sc) = StepRunner::step(&r, &[3, 5], &cache, &[0, 0]).unwrap();
+        let (cl, cc) = r
+            .prefill_chunk(&[vec![3], vec![5]], &cache, &[0, 0])
+            .unwrap();
+        assert_eq!(sl, cl);
+        assert_eq!(sc.to_vec::<f32>().unwrap(), cc.to_vec::<f32>().unwrap());
     }
 }

@@ -1,0 +1,234 @@
+//! End-to-end chunked-prefill tests over the deterministic reference
+//! backend: the full pipeline (planner → multi-token step → engine
+//! bookkeeping) must be a pure optimization — bit-identical outputs to the
+//! per-token pipeline — while collapsing prefill engine steps by ≥ the
+//! chunk factor.  Runs everywhere tier-1 runs (no artifacts).
+
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport};
+use flashmla_etap::prefill::{FairnessPolicy, PrefillConfig};
+use flashmla_etap::runtime::ReferenceModelConfig;
+use flashmla_etap::util::rng::Rng;
+
+const BLOCK: usize = 8;
+
+fn model() -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab: 64,
+        n_layers: 2,
+        latent_dim: 8,
+        seed: 23,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+fn engine(slots: usize, prefix_cache: bool, prefill: PrefillConfig) -> Engine {
+    Engine::reference(
+        model(),
+        EngineConfig {
+            max_slots: slots,
+            kv_blocks: 128,
+            block_size: BLOCK,
+            prefix_cache,
+            prefill,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+fn chunked() -> PrefillConfig {
+    PrefillConfig {
+        step_token_budget: 32,
+        chunk_tokens: 8,
+        fairness: FairnessPolicy::Fair,
+    }
+}
+
+fn run(mut e: Engine, work: &[(Vec<i32>, usize)]) -> EngineReport {
+    for (p, budget) in work {
+        e.submit(p.clone(), *budget);
+    }
+    e.run_to_completion().unwrap()
+}
+
+/// `n` random prompts of `len` tokens (unique suffix each), budget 4.
+fn workload(n: usize, len: usize, seed: u64) -> Vec<(Vec<i32>, usize)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let p: Vec<i32> = (0..len).map(|_| rng.range(1, 63) as i32).collect();
+            (p, 4)
+        })
+        .collect()
+}
+
+/// Like `workload` but every prompt starts with the same `sys` system
+/// prefix (the `--shared-prefix` shape).
+fn shared_workload(n: usize, sys: usize, extra: usize, seed: u64) -> Vec<(Vec<i32>, usize)> {
+    let mut rng = Rng::new(seed);
+    let system: Vec<i32> = (0..sys).map(|_| rng.range(1, 63) as i32).collect();
+    (0..n)
+        .map(|_| {
+            let mut p = system.clone();
+            p.extend((0..extra).map(|_| rng.range(1, 63) as i32));
+            (p, 4)
+        })
+        .collect()
+}
+
+#[test]
+fn chunked_outputs_bit_identical_to_per_token() {
+    let work = workload(6, 32, 7);
+    let base = run(engine(2, false, PrefillConfig::per_token()), &work);
+    let fast = run(engine(2, false, chunked()), &work);
+    assert_eq!(base.outputs, fast.outputs, "chunking changed outputs");
+    assert_eq!(
+        base.metrics.prefill_tokens, fast.metrics.prefill_tokens,
+        "same prompt tokens must be consumed either way"
+    );
+}
+
+#[test]
+fn acceptance_four_x_fewer_prefill_steps_at_chunk_8() {
+    // The PR's acceptance bar: at chunk budget 8, ≥ 4x fewer prefill
+    // engine steps than the per-token pipeline, bit-identical outputs.
+    let work = workload(6, 32, 42);
+    let base = run(engine(2, false, PrefillConfig::per_token()), &work);
+    let fast = run(engine(2, false, chunked()), &work);
+    assert_eq!(base.outputs, fast.outputs, "chunking changed outputs");
+    assert!(
+        fast.metrics.prefill_steps * 4 <= base.metrics.prefill_steps,
+        "expected ≥ 4x fewer prefill steps: {} vs {}",
+        fast.metrics.prefill_steps,
+        base.metrics.prefill_steps
+    );
+    assert!(fast.steps < base.steps, "total engine steps must drop");
+    assert!(
+        fast.metrics.prefill_tokens_per_step() >= 4.0,
+        "tokens/prefill-step too low: {}",
+        fast.metrics.prefill_tokens_per_step()
+    );
+    // The histogram must show real multi-token chunks.
+    assert!(
+        fast.metrics.chunk_hist.keys().any(|&k| k >= 8),
+        "no full-size chunks recorded: {:?}",
+        fast.metrics.chunk_hist
+    );
+    assert_eq!(
+        base.metrics.chunk_hist.keys().max(),
+        Some(&1),
+        "per-token run must only see size-1 chunks"
+    );
+    // The steps-based TTFT proxy must improve with chunking.
+    assert!(
+        fast.metrics.ttft_steps.mean() < base.metrics.ttft_steps.mean(),
+        "ttft (steps) did not improve: {} vs {}",
+        fast.metrics.ttft_steps.mean(),
+        base.metrics.ttft_steps.mean()
+    );
+}
+
+#[test]
+fn chunked_bit_identical_with_shared_prefix_hits() {
+    // Chunking composes with the prefix cache: adopted prefixes are
+    // skipped, only the unshared suffix chunks, outputs stay bit-identical
+    // to the per-token run with the same cache setting.
+    let work = shared_workload(8, 3 * BLOCK, 5, 11);
+    let base = run(engine(2, true, PrefillConfig::per_token()), &work);
+    let fast = run(engine(2, true, chunked()), &work);
+    assert_eq!(base.outputs, fast.outputs, "chunking + sharing changed outputs");
+    assert!(
+        fast.metrics.prefix.hits > 0,
+        "expected prefix hits under chunking: {:?}",
+        fast.metrics.prefix
+    );
+    assert_eq!(
+        base.metrics.prefix.hits, fast.metrics.prefix.hits,
+        "chunking must not change the hit pattern"
+    );
+    assert!(
+        fast.metrics.prefill_steps < base.metrics.prefill_steps,
+        "chunking must still save steps on the unshared suffixes"
+    );
+    // And the full 2×2 grid agrees on outputs: sharing and chunking are
+    // both pure optimizations, independently and combined.
+    let plain = run(engine(2, false, PrefillConfig::per_token()), &work);
+    assert_eq!(plain.outputs, fast.outputs);
+}
+
+#[test]
+fn chunked_deterministic_across_runs() {
+    let work = shared_workload(6, 2 * BLOCK, 4, 3);
+    let a = run(engine(4, true, chunked()), &work);
+    let b = run(engine(4, true, chunked()), &work);
+    assert_eq!(a.outputs, b.outputs);
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.metrics.chunk_hist, b.metrics.chunk_hist);
+}
+
+#[test]
+fn fairness_knob_changes_schedule_not_outputs() {
+    let work = workload(8, 24, 99);
+    let fair = run(
+        engine(
+            4,
+            false,
+            PrefillConfig {
+                fairness: FairnessPolicy::Fair,
+                ..chunked()
+            },
+        ),
+        &work,
+    );
+    let fifo = run(
+        engine(
+            4,
+            false,
+            PrefillConfig {
+                fairness: FairnessPolicy::Fifo,
+                ..chunked()
+            },
+        ),
+        &work,
+    );
+    assert_eq!(fair.outputs, fifo.outputs, "policy changed outputs");
+}
+
+#[test]
+fn property_random_workloads_chunked_equals_per_token() {
+    // Randomized sweep over workload shapes, budgets and chunk sizes:
+    // outputs must always match the per-token pipeline exactly, and the
+    // planner's budget must hold step-by-step (checked via the histogram:
+    // no chunk above chunk_tokens).
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0xC0FFEE + seed);
+        let n = 2 + (rng.range(0, 5) as usize);
+        let len = 4 + (rng.range(0, 40) as usize);
+        let slots = 1 + (rng.range(0, 4) as usize);
+        let chunk = 1 + (rng.range(0, 12) as usize);
+        let budget = rng.range(0, 48) as usize;
+        let prefix = rng.range(0, 2) == 0;
+        let cfg = PrefillConfig {
+            step_token_budget: budget,
+            chunk_tokens: chunk,
+            fairness: if rng.range(0, 2) == 0 {
+                FairnessPolicy::Fair
+            } else {
+                FairnessPolicy::Fifo
+            },
+        };
+        let work = workload(n, len, seed * 31 + 1);
+        let base = run(engine(slots, prefix, PrefillConfig::per_token()), &work);
+        let fast = run(engine(slots, prefix, cfg), &work);
+        assert_eq!(
+            base.outputs, fast.outputs,
+            "outputs diverged (seed {seed}, slots {slots}, chunk {chunk}, budget {budget})"
+        );
+        assert!(
+            fast.metrics.chunk_hist.keys().all(|&k| k <= chunk.max(1)),
+            "chunk above cap (seed {seed}): {:?}",
+            fast.metrics.chunk_hist
+        );
+    }
+}

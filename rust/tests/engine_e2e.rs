@@ -24,8 +24,7 @@ fn engine(dir: &PathBuf, kernel: &str, slots: usize) -> Engine {
             max_slots: slots,
             kv_blocks: 256,
             block_size: 16,
-            eos_token: None,
-            prefix_cache: true,
+            ..EngineConfig::default()
         },
     )
     .unwrap()
@@ -41,9 +40,11 @@ fn single_request_generates() {
     assert_eq!(out.len(), 8);
     assert!(out.iter().all(|&t| (0..512).contains(&t)));
     assert_eq!(report.metrics.requests_finished, 1);
-    // 3 prompt tokens + 7 more decode steps (first token comes with the
-    // last prefill step).
+    // The PJRT backend has no native chunked step, so the engine degrades
+    // to per-token prefill: 3 prompt tokens + 7 more decode steps (first
+    // token comes with the last prefill step).
     assert_eq!(report.steps, 10);
+    assert_eq!(report.metrics.prefill_steps, 3);
 }
 
 #[test]
@@ -130,8 +131,7 @@ fn kv_capacity_blocks_admission_until_space() {
             max_slots: 2,
             kv_blocks: 8,
             block_size: 16,
-            eos_token: None,
-            prefix_cache: true,
+            ..EngineConfig::default()
         },
     )
     .unwrap();

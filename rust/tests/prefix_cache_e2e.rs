@@ -66,7 +66,11 @@ fn reference_engine_single_request() {
     assert_eq!(r.outputs[&id].len(), 8);
     assert!(r.outputs[&id].iter().all(|&t| (0..64).contains(&t)));
     assert_eq!(r.metrics.requests_finished, 1);
-    assert_eq!(r.steps, 10, "3 prompt + 7 further decode steps");
+    // One chunked-prefill step swallows the 3-token prompt (and emits the
+    // first token); 7 further decode steps follow.
+    assert_eq!(r.steps, 8, "1 chunked prefill + 7 further decode steps");
+    assert_eq!(r.metrics.prefill_steps, 1);
+    assert_eq!(r.metrics.prefill_tokens, 3);
 }
 
 #[test]
