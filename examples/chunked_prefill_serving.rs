@@ -125,6 +125,7 @@ fn main() -> anyhow::Result<()> {
         step_token_budget: budget,
         chunk_tokens,
         fairness,
+        ..PrefillConfig::default()
     };
     let fast = run(&w, slots, prefix_cache, chunked_cfg)?;
     println!("[chunked]   {}", fast.metrics.report());

@@ -49,6 +49,13 @@ fn serve(work: &[(Vec<i32>, usize)], prefill: PrefillConfig) -> EngineReport {
 fn main() -> anyhow::Result<()> {
     let mut b = Bencher::new();
     let work = workload(8, 32);
+    b.record_config("requests", "8");
+    b.record_config("prompt_len", "32");
+    b.record_config("slots", SLOTS.to_string());
+    b.record_config("block_size", BLOCK.to_string());
+    // The chunk=1 sweep case is the per_token() baseline (fifo, budget 0);
+    // every other case runs fair.
+    b.record_config("fairness", "fair (chunk=1 case: per_token/fifo)");
 
     println!("chunked prefill sweep (8 requests × 32-token prompts, {SLOTS} slots):");
     let mut per_token_steps = 0u64;
@@ -60,6 +67,7 @@ fn main() -> anyhow::Result<()> {
                 step_token_budget: chunk * SLOTS,
                 chunk_tokens: chunk,
                 fairness: FairnessPolicy::Fair,
+                ..PrefillConfig::default()
             }
         };
         let report = serve(&work, cfg);
@@ -94,6 +102,7 @@ fn main() -> anyhow::Result<()> {
             step_token_budget: budget,
             chunk_tokens: 8,
             fairness: FairnessPolicy::Fair,
+            ..PrefillConfig::default()
         };
         let report = serve(&work, cfg);
         b.bench(&format!("serve (budget {budget:>2})"), || {
@@ -108,6 +117,7 @@ fn main() -> anyhow::Result<()> {
             step_token_budget: 32,
             chunk_tokens: 8,
             fairness: FairnessPolicy::Fair,
+            ..PrefillConfig::default()
         },
     );
     b.record_metric(

@@ -1,0 +1,157 @@
+//! Bench: speculative decoding sweep — acceptance rate × draft length.
+//!
+//! Serves two fixed workloads on the reference backend across `max_draft`
+//! values: a repetition-heavy one (small-vocab cyclic model, high
+//! acceptance — speculation's home turf) and a wide-vocab one (acceptance
+//! near zero — the overhead floor).  Tracks wall time per run plus the
+//! step counts and acceptance rates that are the subsystem's point.
+//! Emits `BENCH_speculative.json`, stamped with the run metadata (git
+//! commit, config snapshot, quick flag) for cross-PR attribution.
+//!
+//!     cargo bench --bench speculative
+
+use flashmla_etap::bench::Bencher;
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport};
+use flashmla_etap::runtime::ReferenceModelConfig;
+use flashmla_etap::spec::SpecConfig;
+use flashmla_etap::util::rng::Rng;
+
+const BLOCK: usize = 8;
+const SLOTS: usize = 4;
+const LOOKBACK: usize = 64;
+const MAX_NEW: usize = 48;
+
+fn model(vocab: usize, seed: u64) -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab,
+        n_layers: 2,
+        latent_dim: 8,
+        seed,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+fn workload(n: usize, len: usize, vocab: u64) -> Vec<(Vec<i32>, usize)> {
+    let mut rng = Rng::new(42);
+    (0..n)
+        .map(|_| {
+            let p: Vec<i32> = (0..len).map(|_| rng.range(1, vocab) as i32).collect();
+            (p, MAX_NEW)
+        })
+        .collect()
+}
+
+fn serve(
+    model_cfg: &ReferenceModelConfig,
+    work: &[(Vec<i32>, usize)],
+    spec: SpecConfig,
+) -> EngineReport {
+    let mut e = Engine::reference(
+        model_cfg.clone(),
+        EngineConfig {
+            max_slots: SLOTS,
+            kv_blocks: 256,
+            block_size: BLOCK,
+            prefix_cache: false,
+            spec,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    for (p, budget) in work {
+        e.submit(p.clone(), *budget);
+    }
+    e.run_to_completion().unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    b.record_config("requests", "4");
+    b.record_config("prompt_len", "24");
+    b.record_config("max_new", MAX_NEW.to_string());
+    b.record_config("slots", SLOTS.to_string());
+    b.record_config("lookback", LOOKBACK.to_string());
+    b.record_config("cyclic_model", "vocab 16 seed 21");
+    b.record_config("wide_model", "vocab 64 seed 23");
+
+    for (tag, vocab, seed) in [("cyclic", 16usize, 21u64), ("wide", 64, 23)] {
+        let m = model(vocab, seed);
+        let work = workload(4, 24, vocab as u64 - 1);
+        let base = serve(&m, &work, SpecConfig::default());
+        println!("{tag} workload: decode-only {} steps", base.steps);
+
+        // A few tick plans from a manually-driven speculative run, so the
+        // mixed decode+prefill+verify schedule is visible in bench logs.
+        {
+            let mut e = Engine::reference(
+                m.clone(),
+                EngineConfig {
+                    max_slots: SLOTS,
+                    kv_blocks: 256,
+                    block_size: BLOCK,
+                    prefix_cache: false,
+                    spec: SpecConfig {
+                        enabled: true,
+                        lookback: LOOKBACK,
+                        max_draft: 4,
+                    },
+                    ..EngineConfig::default()
+                },
+            )
+            .unwrap();
+            for (p, budget) in &work {
+                e.submit(p.clone(), *budget);
+            }
+            for tick in 1..=6 {
+                if !e.has_work() {
+                    break;
+                }
+                e.step()?;
+                println!("    tick {tick}: {}", e.last_plan_summary());
+            }
+        }
+        b.record_metric(&format!("steps_{tag}_base"), base.steps as f64);
+        for k in [1usize, 2, 4, 8] {
+            let spec = SpecConfig {
+                enabled: true,
+                lookback: LOOKBACK,
+                max_draft: k,
+            };
+            let report = serve(&m, &work, spec);
+            assert_eq!(
+                report.outputs, base.outputs,
+                "speculation changed outputs ({tag}, k={k})"
+            );
+            let r = b.bench(&format!("serve {tag} (k {k})"), || {
+                serve(&m, &work, spec).steps
+            });
+            println!(
+                "    → k={k}: {} steps ({:.2}x), acceptance {:.0}% \
+                 ({}/{} over {} verifications), {:.2} ms/run",
+                report.steps,
+                base.steps as f64 / report.steps as f64,
+                report.metrics.acceptance_rate() * 100.0,
+                report.metrics.spec_accepted,
+                report.metrics.spec_drafted,
+                report.metrics.spec_verify_chunks,
+                r.mean_us / 1e3,
+            );
+            println!(
+                "      acceptance hist: {}",
+                report.metrics.accept_hist_summary()
+            );
+            b.record_metric(&format!("steps_{tag}_k{k}"), report.steps as f64);
+            b.record_metric(
+                &format!("acceptance_{tag}_k{k}"),
+                report.metrics.acceptance_rate(),
+            );
+            b.record_metric(
+                &format!("steps_saved_{tag}_k{k}"),
+                report.metrics.spec_steps_saved() as f64,
+            );
+        }
+    }
+    b.emit_json("speculative")?;
+    Ok(())
+}

@@ -5,8 +5,12 @@
 //! machine-readable `BENCH_<name>.json` ([`Bencher::emit_json`]) so the
 //! perf trajectory is trackable across PRs: each file carries every case's
 //! robust stats plus any scalar metrics the bench recorded
-//! ([`Bencher::record_metric`]).  Output lands in the current directory,
-//! or `$FLASHMLA_BENCH_OUT` when set.
+//! ([`Bencher::record_metric`]), and is stamped with run metadata — the
+//! git commit, the quick-mode flag, and whatever configuration snapshot
+//! the bench recorded via [`Bencher::record_config`] — so a number in one
+//! file is attributable to the code and settings that produced it.
+//! Output lands in the current directory, or `$FLASHMLA_BENCH_OUT` when
+//! set.
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
@@ -64,6 +68,8 @@ pub struct Bencher {
     /// Scalar side-channel metrics (e.g. "prefill_steps"), emitted with
     /// the JSON report.
     metrics: Vec<(String, f64)>,
+    /// Configuration snapshot (knob → value), emitted under `meta.config`.
+    config: Vec<(String, String)>,
 }
 
 impl Default for Bencher {
@@ -91,6 +97,7 @@ impl Bencher {
             max_iters: 1_000_000,
             results: Vec::new(),
             metrics: Vec::new(),
+            config: Vec::new(),
         }
     }
 
@@ -147,17 +154,57 @@ impl Bencher {
         self.metrics.push((name.to_string(), value));
     }
 
-    /// Write `BENCH_<name>.json` with every case's stats plus recorded
-    /// metrics.  Target directory: `$FLASHMLA_BENCH_OUT` if set, else the
-    /// current directory.  Returns the written path.
+    /// Record one configuration knob (e.g. "chunk_tokens" → "8") for the
+    /// JSON report's `meta.config` snapshot.  Names must be unique, as for
+    /// [`record_metric`](Self::record_metric).
+    pub fn record_config(&mut self, name: &str, value: impl Into<String>) {
+        assert!(
+            !self.config.iter().any(|(k, _)| k == name),
+            "duplicate bench config `{name}`"
+        );
+        self.config.push((name.to_string(), value.into()));
+    }
+
+    /// Short git commit of the working tree, or "unknown" outside a repo.
+    fn git_commit() -> String {
+        std::process::Command::new("git")
+            .args(["rev-parse", "--short", "HEAD"])
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| "unknown".into())
+    }
+
+    /// Write `BENCH_<name>.json` with every case's stats, recorded
+    /// metrics, and run metadata (git commit, quick flag, config
+    /// snapshot).  Target directory: `$FLASHMLA_BENCH_OUT` if set, else
+    /// the current directory.  Returns the written path.
     pub fn emit_json(&self, name: &str) -> anyhow::Result<PathBuf> {
         let dir = std::env::var("FLASHMLA_BENCH_OUT").unwrap_or_else(|_| ".".into());
         let path = PathBuf::from(dir).join(format!("BENCH_{name}.json"));
         let doc = Json::obj(vec![
             ("bench", Json::str(name)),
             (
-                "quick",
-                Json::Bool(std::env::var("FLASHMLA_BENCH_QUICK").is_ok()),
+                "meta",
+                Json::obj(vec![
+                    ("git_commit", Json::str(Self::git_commit())),
+                    (
+                        "quick",
+                        Json::Bool(std::env::var("FLASHMLA_BENCH_QUICK").is_ok()),
+                    ),
+                    (
+                        "config",
+                        Json::Obj(
+                            self.config
+                                .iter()
+                                .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+                                .collect(),
+                        ),
+                    ),
+                ]),
             ),
             (
                 "cases",
@@ -213,6 +260,7 @@ mod tests {
         let mut b = Bencher::new().with_budget(Duration::from_millis(5));
         b.bench("case_a", || 1 + 1);
         b.record_metric("prefill_steps", 42.0);
+        b.record_config("chunk_tokens", "8");
         let path = b.emit_json("harness_selftest").unwrap();
         std::env::remove_var("FLASHMLA_BENCH_OUT");
         assert!(path.ends_with("BENCH_harness_selftest.json"));
@@ -229,7 +277,22 @@ mod tests {
             doc.get("metrics").get("prefill_steps").as_f64(),
             Some(42.0)
         );
+        // Run metadata: git commit (or "unknown"), quick flag, config
+        // snapshot — the cross-PR attribution stamp.
+        let meta = doc.get("meta");
+        let commit = meta.get("git_commit").as_str().unwrap();
+        assert!(!commit.is_empty());
+        assert_eq!(meta.get("quick").as_bool(), Some(true));
+        assert_eq!(meta.get("config").get("chunk_tokens").as_str(), Some("8"));
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate bench config")]
+    fn duplicate_config_rejected() {
+        let mut b = Bencher::new();
+        b.record_config("k", "1");
+        b.record_config("k", "2");
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::path::Path;
 
 use crate::coordinator::{ClusterConfig, EngineConfig};
 use crate::hardware::GpuSpec;
-use crate::prefill::FairnessPolicy;
+use crate::prefill::{FairnessPolicy, SpecPriority};
 use crate::util::json::Json;
 use crate::util::{json, toml};
 
@@ -103,6 +103,26 @@ impl Config {
                 ),
             };
         }
+        if let Some(s) = pf.get("spec_priority").as_str() {
+            c.engine.prefill.spec_priority = match s {
+                "spec" => SpecPriority::Spec,
+                "prefill" => SpecPriority::Prefill,
+                other => anyhow::bail!(
+                    "engine.prefill.spec_priority must be spec|prefill, got `{other}`"
+                ),
+            };
+        }
+        let sp = e.get("spec");
+        if let Some(b) = sp.get("enabled").as_bool() {
+            c.engine.spec.enabled = b;
+        }
+        if let Some(n) = sp.get("lookback").as_usize() {
+            c.engine.spec.lookback = n;
+        }
+        if let Some(n) = sp.get("max_draft").as_usize() {
+            c.engine.spec.max_draft = n;
+        }
+        c.engine.spec.validate()?;
         let cl = t.get("cluster");
         if let Some(n) = cl.get("gpus").as_usize() {
             c.cluster.gpus = n;
@@ -227,6 +247,44 @@ fairness = "fifo"
         assert!(Config::from_tree(&bad).is_err());
         let bad =
             crate::util::toml::parse("[engine.prefill]\nfairness = \"greedy\"").unwrap();
+        assert!(Config::from_tree(&bad).is_err());
+    }
+
+    #[test]
+    fn spec_section_parsed() {
+        let d = Config::default().engine.spec;
+        assert!(!d.enabled, "speculation off by default");
+        assert_eq!(d.lookback, 256);
+        assert_eq!(d.max_draft, 4);
+        assert_eq!(
+            Config::default().engine.prefill.spec_priority,
+            SpecPriority::Spec
+        );
+        let doc = r#"
+[engine.prefill]
+spec_priority = "prefill"
+
+[engine.spec]
+enabled = true
+lookback = 64
+max_draft = 6
+"#;
+        let tree = crate::util::toml::parse(doc).unwrap();
+        let c = Config::from_tree(&tree).unwrap();
+        assert!(c.engine.spec.enabled);
+        assert_eq!(c.engine.spec.lookback, 64);
+        assert_eq!(c.engine.spec.max_draft, 6);
+        assert_eq!(c.engine.prefill.spec_priority, SpecPriority::Prefill);
+    }
+
+    #[test]
+    fn spec_rejects_bad_values() {
+        let bad = crate::util::toml::parse("[engine.spec]\nmax_draft = 0").unwrap();
+        assert!(Config::from_tree(&bad).is_err());
+        let bad = crate::util::toml::parse("[engine.spec]\nlookback = 2").unwrap();
+        assert!(Config::from_tree(&bad).is_err());
+        let bad =
+            crate::util::toml::parse("[engine.prefill]\nspec_priority = \"draft\"").unwrap();
         assert!(Config::from_tree(&bad).is_err());
     }
 }

@@ -38,6 +38,21 @@
 //! adoption composes: only the unshared suffix is chunked.  See
 //! `docs/chunked-prefill.md`.
 //!
+//! **Speculative decoding.**  With `[engine.spec]` enabled, every decoding
+//! request keeps a [`PromptLookupDrafter`] over its own prompt + generated
+//! history.  A non-empty draft turns the slot's tick into a *verification
+//! chunk* `[last_token, d₁ … dₘ]`, planned under the same token budget and
+//! executed through [`StepRunner::verify_chunk`] — the prefill-shaped
+//! workload the paper optimizes for, replacing up to `m` memory-bound
+//! decode ticks.  The engine accepts the longest draft prefix matching the
+//! per-position greedy argmax, which keeps outputs bit-identical to plain
+//! decode; rejected positions only ever exist in the live literal past the
+//! request's context (overwritten before anything attends to them, per the
+//! write-purity contract) and are additionally rolled out of the paged
+//! store by truncation.  Disabled (the default), none of this runs and the
+//! step sequence is byte-for-byte the non-speculative pipeline.  See
+//! `docs/speculative-decoding.md`.
+//!
 //! Decode steps execute on one of two backends behind
 //! [`StepRunner`]: the PJRT AOT artifacts (production path) or the
 //! deterministic pure-Rust reference model (tests, examples, CI).
@@ -54,6 +69,7 @@ use crate::prefixcache::PrefixTree;
 use crate::runtime::{
     DecodeRunner, ReferenceModel, ReferenceModelConfig, Runtime, StepRunner,
 };
+use crate::spec::{PromptLookupDrafter, SpecConfig};
 use crate::util::stats::Welford;
 
 use super::batcher::{Batcher, BatcherConfig};
@@ -78,6 +94,8 @@ pub struct EngineConfig {
     /// Chunked-prefill knobs (`PrefillConfig::per_token()` restores the
     /// one-token-per-tick pipeline exactly).
     pub prefill: PrefillConfig,
+    /// Speculative-decoding knobs (`[engine.spec]`); disabled by default.
+    pub spec: SpecConfig,
 }
 
 impl Default for EngineConfig {
@@ -90,6 +108,7 @@ impl Default for EngineConfig {
             eos_token: None,
             prefix_cache: true,
             prefill: PrefillConfig::default(),
+            spec: SpecConfig::default(),
         }
     }
 }
@@ -143,6 +162,15 @@ pub struct Engine {
     n_layers: usize,
     latent_dim: usize,
     kv_buckets: Vec<usize>,
+    /// Effective speculation config (PJRT degrades to disabled).
+    spec: SpecConfig,
+    /// One self-drafter per active decoding request (spec enabled only).
+    drafters: HashMap<RequestId, PromptLookupDrafter>,
+    /// The last executed tick's (demands, plan), moved in after the tick
+    /// (no extra allocation) so [`last_plan_summary`](Self::last_plan_summary)
+    /// can format on demand — hot ticks never pay for a log string.
+    last_demands: Vec<SlotDemand>,
+    last_plan: Vec<usize>,
     pub sync_cost: Welford,
 }
 
@@ -219,6 +247,7 @@ impl Engine {
             .prefix_cache
             .then(|| PrefixTree::new(cfg.block_size, None));
         cfg.prefill.validate()?;
+        cfg.spec.validate()?;
         // Multi-token scheduling only pays on backends that execute chunks
         // natively.  On PJRT the fallback would emulate a chunk with k
         // step dispatches, so a co-resident *decoding* slot's inter-token
@@ -236,6 +265,25 @@ impl Engine {
                     );
                 }
                 PrefillConfig::per_token()
+            }
+        };
+        // Same degrade for speculation: the verify fallback would emulate
+        // an m-draft verification with m+1 step dispatches, k-multiplying
+        // co-resident slots' token latency for zero dispatch savings.
+        let effective_spec = match &backend {
+            EngineBackend::Reference(_) => cfg.spec,
+            EngineBackend::Pjrt(_) => {
+                if cfg.spec.enabled {
+                    log_info!(
+                        "engine",
+                        "PJRT backend has no native verify step; \
+                         speculative decoding disabled"
+                    );
+                }
+                SpecConfig {
+                    enabled: false,
+                    ..cfg.spec
+                }
             }
         };
         Ok(Engine {
@@ -257,6 +305,10 @@ impl Engine {
             n_layers,
             latent_dim,
             kv_buckets,
+            spec: effective_spec,
+            drafters: HashMap::new(),
+            last_demands: Vec::new(),
+            last_plan: Vec::new(),
             sync_cost: Welford::new(),
             cfg,
         })
@@ -282,20 +334,38 @@ impl Engine {
 
     /// Run until all submitted work completes; returns the report.
     pub fn run_to_completion(mut self) -> anyhow::Result<EngineReport> {
-        while self.batcher.has_work() {
+        while self.has_work() {
             self.step()?;
         }
+        Ok(self.into_report())
+    }
+
+    /// Anything queued or active?  Lets callers drive [`step`](Self::step)
+    /// manually (e.g. to inspect per-tick plans) instead of
+    /// [`run_to_completion`](Self::run_to_completion).
+    pub fn has_work(&self) -> bool {
+        self.batcher.has_work()
+    }
+
+    /// Finish a manually-driven run: consume the engine into its report.
+    pub fn into_report(self) -> EngineReport {
         let steps = self.metrics.steps;
-        Ok(EngineReport {
+        EngineReport {
             outputs: self.outputs,
             metrics: self.metrics,
             recompositions: self.recompositions,
             steps,
-        })
+        }
     }
 
     pub fn metrics(&self) -> &ServingMetrics {
         &self.metrics
+    }
+
+    /// Summary of the most recent tick's plan (empty before the first
+    /// tick), formatted on demand; see [`ChunkPlanner::plan_summary`].
+    pub fn last_plan_summary(&self) -> String {
+        self.planner.plan_summary(&self.last_demands, &self.last_plan)
     }
 
     /// Worst-case blocks the active set may still allocate: each request's
@@ -334,6 +404,7 @@ impl Engine {
             self.synced.remove(&r.id);
             self.submit_step.remove(&r.id);
             self.inserted.remove(&r.id);
+            self.drafters.remove(&r.id);
             self.outputs.insert(r.id, r.generated.clone());
         }
 
@@ -422,6 +493,38 @@ impl Engine {
             return Ok(false); // idle (queue blocked on capacity or empty)
         }
 
+        // 2c. Speculation: refresh every decoding slot's draft from its
+        // prompt-lookup drafter (created on first decode tick, fed the
+        // history incrementally, dropped at reap).  Drafts are recomputed
+        // each tick — the drafter is deterministic and cheap, and a
+        // rejected draft simply reappears shorter or not at all.  Tokens
+        // past the generation budget are never drafted: plain decode could
+        // not emit them, so they could never be accepted.
+        if self.spec.enabled {
+            let spec_cfg = self.spec;
+            for r in self.batcher.active_mut() {
+                if r.state != RequestState::Decoding {
+                    continue;
+                }
+                let d = self
+                    .drafters
+                    .entry(r.id)
+                    .or_insert_with(|| PromptLookupDrafter::new(&spec_cfg));
+                while (d.observed() as usize) < r.prompt.len() + r.generated.len() {
+                    let i = d.observed() as usize;
+                    d.observe(if i < r.prompt.len() {
+                        r.prompt[i]
+                    } else {
+                        r.generated[i - r.prompt.len()]
+                    });
+                }
+                let mut draft = d.draft();
+                let room = r.max_new_tokens - r.generated.len();
+                draft.truncate(room.saturating_sub(1));
+                r.draft = draft;
+            }
+        }
+
         // 3. Determine buckets; recompose if needed.  Bucket choice
         // anticipates both prefix adoption (a newly admitted request may
         // start its context at the cached prefix length rather than zero)
@@ -450,6 +553,9 @@ impl Engine {
                         let remaining = r.prompt.len().saturating_sub(consumed);
                         let headroom = largest_kv.saturating_sub(ctx).max(1);
                         SlotDemand::prefill(remaining.max(1), ctx, headroom)
+                    } else if !r.draft.is_empty() {
+                        let headroom = largest_kv.saturating_sub(ctx).max(1);
+                        SlotDemand::verify(r.draft.len(), headroom)
                     } else {
                         SlotDemand::decode()
                     };
@@ -500,6 +606,9 @@ impl Engine {
                     // Positions ctx .. kv_bucket - 1 are addressable.
                     let headroom = kv_bucket.saturating_sub(r.context_len()).max(1);
                     SlotDemand::prefill(remaining, r.prefill_pos, headroom)
+                } else if !r.draft.is_empty() {
+                    let headroom = kv_bucket.saturating_sub(r.context_len()).max(1);
+                    SlotDemand::verify(r.draft.len(), headroom)
                 } else {
                     SlotDemand::decode()
                 }
@@ -508,6 +617,8 @@ impl Engine {
         let plan = self.planner.plan(&demands);
         let mut chunks: Vec<Vec<i32>> = vec![Vec::new(); b];
         let mut start_pos = vec![0i32; b];
+        // Draft tokens fed per active index (verification chunk size - 1).
+        let mut fed = vec![0usize; plan.len()];
         for (i, r) in self.batcher.active().iter().enumerate() {
             let slot = by_id[&r.id];
             let k = plan[i];
@@ -515,31 +626,54 @@ impl Engine {
             chunks[slot] = if r.state == RequestState::Prefilling {
                 r.prompt[r.prefill_pos..r.prefill_pos + k].to_vec()
             } else {
-                vec![r.next_input_token().expect("active request has input")]
+                let tok = r.next_input_token().expect("active request has input");
+                // The planner may have trimmed the draft (budget or
+                // headroom): feed only the prefix it granted.
+                fed[i] = k - 1;
+                let mut c = Vec::with_capacity(k);
+                c.push(tok);
+                c.extend_from_slice(&r.draft[..k - 1]);
+                c
             };
         }
 
-        // 5. Execute the whole mixed batch in one multi-token step.
+        // 5. Execute the whole mixed batch in one multi-token step.  Ticks
+        // carrying draft tokens go through `verify_chunk`, whose cache
+        // effects are contractually bit-identical to `prefill_chunk` but
+        // which also returns the greedy argmax after every consumed token;
+        // all other ticks take the non-speculative call unchanged.
         let runner = self
             .runners
             .get(&(b, kv_bucket))
             .expect("runner loaded at recompose");
-        let (logits, new_cache) = runner.prefill_chunk(&chunks, &live.cache, &start_pos)?;
         let vocab = runner.vocab();
+        let spec_tick = fed.iter().any(|&m| m > 0);
+        let (argmaxes, new_cache) = if spec_tick {
+            runner.verify_chunk(&chunks, &live.cache, &start_pos)?
+        } else {
+            let (logits, cache) = runner.prefill_chunk(&chunks, &live.cache, &start_pos)?;
+            let am: Vec<Vec<i32>> = (0..b)
+                .map(|s| vec![DecodeRunner::argmax_row(&logits, vocab, s)])
+                .collect();
+            (am, cache)
+        };
 
-        // 6. Advance request state machines.  Each slot's logits row holds
-        // its *last* consumed token's logits; for a chunk that reaches the
-        // end of its prompt those are the first generated token, exactly as
-        // in the per-token pipeline.
+        // 6. Advance request state machines.  Each slot's final argmax is
+        // that of its *last* consumed token's logits; for a chunk that
+        // reaches the end of its prompt it is the first generated token,
+        // exactly as in the per-token pipeline.  Verification slots accept
+        // the longest draft prefix matching the per-position argmaxes.
         let mut new_tokens = 0usize;
         let mut chunk_sizes: Vec<usize> = Vec::new();
         let mut first_tokens: Vec<RequestId> = Vec::new();
+        let mut verified: Vec<(usize, usize)> = Vec::new();
+        let mut rollbacks: Vec<(RequestId, usize)> = Vec::new();
         // Same `batcher.active` order the plan was built from above (no
         // reap/admit between), so `plan[i]` still lines up.
         for (i, r) in self.batcher.active_mut().iter_mut().enumerate() {
             let slot = by_id[&r.id];
-            let sampled = DecodeRunner::argmax_row(&logits, vocab, slot);
             let k = plan[i];
+            let sampled = *argmaxes[slot].last().expect("active slot has a chunk");
             if r.state == RequestState::Prefilling {
                 r.advance_chunk(k, sampled);
                 chunk_sizes.push(k);
@@ -548,6 +682,13 @@ impl Engine {
                     new_tokens += 1;
                     first_tokens.push(r.id);
                 }
+            } else if spec_tick {
+                let outcome = r.apply_verification(fed[i], &argmaxes[slot]);
+                new_tokens += outcome.emitted;
+                if fed[i] > 0 {
+                    verified.push((outcome.drafted, outcome.accepted));
+                    rollbacks.push((r.id, r.context_len()));
+                }
             } else {
                 debug_assert_eq!(k, 1, "decode slots consume exactly one token");
                 r.advance(sampled);
@@ -555,6 +696,33 @@ impl Engine {
             }
         }
         self.live.as_mut().unwrap().cache = new_cache;
+
+        // 6b. Roll rejected draft positions out of the paged store.  Under
+        // the engine's lazy sync this is provably a no-op — latents enter
+        // the store only at recompose, which copies positions
+        // `synced .. context_len()`, and `context_len` never counts a
+        // rejected position — but the invariant "the store never holds an
+        // unverified latent" is enforced here rather than assumed, so a
+        // future eager-sync backend (e.g. a chunked PJRT artifact writing
+        // through the paged store) cannot silently poison prefix sharing.
+        // Rejected rows in the *live literal* need no cleanup at all:
+        // they sit past the request's context and are rewritten by the
+        // next correct token before anything attends to them (the
+        // write-purity contract; see `docs/speculative-decoding.md`).
+        for (rid, ctx) in rollbacks {
+            let Some(&seq) = self.seq_of.get(&rid) else {
+                continue;
+            };
+            if self.store.len(seq) > ctx {
+                self.store.truncate(seq, ctx);
+            }
+            if let Some(s) = self.synced.get_mut(&rid) {
+                *s = (*s).min(ctx);
+            }
+        }
+        for (drafted, accepted) in verified {
+            self.metrics.on_verify(drafted, accepted);
+        }
 
         let active = self.batcher.active().len();
         self.metrics.on_step(
@@ -573,6 +741,8 @@ impl Engine {
             self.metrics.prefix = tree.stats();
             self.metrics.prefix_cached_blocks = tree.cached_blocks() as u64;
         }
+        self.last_demands = demands;
+        self.last_plan = plan;
         Ok(true)
     }
 

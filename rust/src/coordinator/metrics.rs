@@ -42,6 +42,16 @@ pub struct ServingMetrics {
     pub prefix: PrefixStats,
     /// Blocks currently pinned by the prefix tree.
     pub prefix_cached_blocks: u64,
+    /// Draft tokens fed through speculative verification chunks.
+    pub spec_drafted: u64,
+    /// Draft tokens accepted (each one is a decode step the request did
+    /// not have to wait a tick for — the steps-saved counter).
+    pub spec_accepted: u64,
+    /// Verification chunks executed (draft non-empty; plain decode slots
+    /// in the same tick don't count).
+    pub spec_verify_chunks: u64,
+    /// Acceptance histogram: accepted-per-verification → occurrences.
+    pub accept_hist: BTreeMap<usize, u64>,
     elapsed: Duration,
 }
 
@@ -82,6 +92,79 @@ impl ServingMetrics {
     /// engine ticks after submission.
     pub fn on_first_token_step(&mut self, steps_waited: u64) {
         self.ttft_steps.push(steps_waited as f64);
+    }
+
+    /// Record one speculative verification: `drafted` tokens were fed,
+    /// the longest plain-decode-matching prefix of `accepted` was kept.
+    pub fn on_verify(&mut self, drafted: usize, accepted: usize) {
+        debug_assert!(accepted <= drafted);
+        self.spec_verify_chunks += 1;
+        self.spec_drafted += drafted as u64;
+        self.spec_accepted += accepted as u64;
+        *self.accept_hist.entry(accepted).or_insert(0) += 1;
+    }
+
+    /// Fraction of drafted tokens accepted (0 when nothing was drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_drafted as f64
+    }
+
+    /// Decode engine steps avoided by speculation: every accepted draft
+    /// token is a token the request got without waiting another tick.
+    pub fn spec_steps_saved(&self) -> u64 {
+        self.spec_accepted
+    }
+
+    /// Render the acceptance histogram (`accepted×count`, ascending).
+    pub fn accept_hist_summary(&self) -> String {
+        self.accept_hist
+            .iter()
+            .map(|(k, n)| format!("{k}×{n}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Fold another engine's metrics into this one (multi-engine and
+    /// cluster-sim aggregation).  Totals add and histograms merge, so
+    /// every derived rate recomputes from the merged totals — e.g.
+    /// `merged.acceptance_rate()` equals accepted-over-drafted across the
+    /// union of both streams, not an average of the two rates.
+    /// `prefix_cached_blocks` is a gauge and sums: blocks pinned across
+    /// all merged engines.
+    pub fn merge(&mut self, other: &ServingMetrics) {
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
+        self.e2e.merge(&other.e2e);
+        self.step.merge(&other.step);
+        self.occupancy.merge(&other.occupancy);
+        self.requests_finished += other.requests_finished;
+        self.tokens_generated += other.tokens_generated;
+        self.prefill_tokens += other.prefill_tokens;
+        self.prefill_steps += other.prefill_steps;
+        self.prefill_chunks += other.prefill_chunks;
+        for (&k, &n) in &other.chunk_hist {
+            *self.chunk_hist.entry(k).or_insert(0) += n;
+        }
+        self.ttft_steps.merge(&other.ttft_steps);
+        self.steps += other.steps;
+        self.prefix.lookups += other.prefix.lookups;
+        self.prefix.hits += other.prefix.hits;
+        self.prefix.hit_tokens += other.prefix.hit_tokens;
+        self.prefix.hit_blocks += other.prefix.hit_blocks;
+        self.prefix.inserted_blocks += other.prefix.inserted_blocks;
+        self.prefix.evicted_blocks += other.prefix.evicted_blocks;
+        self.prefix.evictions += other.prefix.evictions;
+        self.prefix_cached_blocks += other.prefix_cached_blocks;
+        self.spec_drafted += other.spec_drafted;
+        self.spec_accepted += other.spec_accepted;
+        self.spec_verify_chunks += other.spec_verify_chunks;
+        for (&k, &n) in &other.accept_hist {
+            *self.accept_hist.entry(k).or_insert(0) += n;
+        }
+        self.elapsed += other.elapsed;
     }
 
     /// Mean prompt tokens consumed per prefill-bearing step (≈ 1.0 on the
@@ -185,6 +268,17 @@ impl ServingMetrics {
                 self.prefix.evicted_blocks,
             ));
         }
+        if self.spec_verify_chunks > 0 {
+            s.push_str(&format!(
+                " | spec {}/{} drafts accepted ({:.0}%) over {} verifications, \
+                 {} decode steps saved",
+                self.spec_accepted,
+                self.spec_drafted,
+                self.acceptance_rate() * 100.0,
+                self.spec_verify_chunks,
+                self.spec_steps_saved(),
+            ));
+        }
         s
     }
 }
@@ -250,6 +344,81 @@ mod tests {
         let s = m.report();
         assert!(s.contains("tok/s"));
         assert!(!s.contains("prefix"), "no prefix section when idle");
+    }
+
+    #[test]
+    fn spec_accounting_and_report() {
+        let mut m = ServingMetrics::new();
+        m.on_verify(4, 4);
+        m.on_verify(4, 1);
+        m.on_verify(2, 0);
+        assert_eq!(m.spec_verify_chunks, 3);
+        assert_eq!(m.spec_drafted, 10);
+        assert_eq!(m.spec_accepted, 5);
+        assert_eq!(m.spec_steps_saved(), 5);
+        assert!((m.acceptance_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(m.accept_hist_summary(), "0×1 1×1 4×1");
+        let s = m.report();
+        assert!(s.contains("spec 5/10 drafts accepted (50%)"), "report: {s}");
+        assert!(s.contains("3 verifications"), "report: {s}");
+        let quiet = ServingMetrics::new().report();
+        assert!(!quiet.contains("spec"), "no spec section when idle");
+    }
+
+    #[test]
+    fn merge_rates_equal_recomputed_from_totals() {
+        // The satellite contract: merged rates must equal the rates of the
+        // concatenated streams, never an average of per-engine rates.
+        let mut a = ServingMetrics::new();
+        a.on_step(Duration::from_millis(10), 2, 4, 3, &[8, 3]);
+        a.on_step(Duration::from_millis(30), 4, 4, 4, &[]);
+        a.on_verify(4, 4);
+        a.on_verify(4, 2);
+        a.on_first_token_step(4);
+        a.prefix.lookups = 3;
+        a.prefix.hits = 1;
+        let mut b = ServingMetrics::new();
+        b.on_step(Duration::from_millis(20), 1, 4, 9, &[5]);
+        b.on_verify(2, 0);
+        b.on_first_token_step(8);
+        b.on_first_token_step(6);
+        b.prefix.lookups = 1;
+        b.prefix.hits = 1;
+        b.prefix_cached_blocks = 7;
+
+        let mut merged = ServingMetrics::new();
+        merged.merge(&a);
+        merged.merge(&b);
+
+        // Acceptance: (6 + 0) / (8 + 2), not avg(0.75, 0.0).
+        assert!((merged.acceptance_rate() - 6.0 / 10.0).abs() < 1e-12);
+        assert_eq!(merged.spec_verify_chunks, 3);
+        assert_eq!(merged.spec_steps_saved(), 6);
+        assert_eq!(merged.accept_hist_summary(), "0×1 2×1 4×1");
+        // Prefill tokens/step: (11 + 5) / (1 + 1).
+        assert!((merged.prefill_tokens_per_step() - 8.0).abs() < 1e-12);
+        // Throughput over merged busy time: 16 tokens / 60 ms.
+        assert!(
+            (merged.decode_tokens_per_s() - 16.0 / 0.06).abs() < 1e-6,
+            "tps {}",
+            merged.decode_tokens_per_s()
+        );
+        // Prefix hit rate from summed counters: 2/4.
+        assert!((merged.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(merged.prefix_cached_blocks, 7);
+        // Welford-backed stats match pushing every sample into one stream.
+        assert_eq!(merged.ttft_steps.count(), 3);
+        assert!((merged.ttft_steps.mean() - 6.0).abs() < 1e-12);
+        let occ_mean = (2.0 / 4.0 + 4.0 / 4.0 + 1.0 / 4.0) / 3.0;
+        assert!((merged.occupancy.mean() - occ_mean).abs() < 1e-12);
+        assert_eq!(merged.steps, 3);
+        assert_eq!(merged.chunk_hist_summary(), "3×1 5×1 8×1");
+        // Histogram-backed latencies count every step.
+        assert_eq!(merged.step.count(), 3);
+        // Merging an empty stream changes nothing.
+        let snapshot = merged.report();
+        merged.merge(&ServingMetrics::new());
+        assert_eq!(merged.report(), snapshot);
     }
 
     #[test]

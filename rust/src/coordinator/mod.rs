@@ -28,5 +28,5 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use cluster::{ClusterConfig, ClusterSim, StepBreakdown, TraceReport, TraceRequest};
 pub use engine::{Engine, EngineConfig, EngineReport};
 pub use metrics::ServingMetrics;
-pub use request::{FinishReason, Request, RequestId, RequestState};
+pub use request::{FinishReason, Request, RequestId, RequestState, VerifyOutcome};
 pub use router::{AdmitError, PrefixAffinityRouter, Router};

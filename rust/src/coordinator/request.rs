@@ -29,6 +29,21 @@ pub enum RequestState {
     Finished,
 }
 
+/// What one speculative verification did to a request (per-tick, fed to
+/// the serving metrics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VerifyOutcome {
+    /// Draft tokens fed through the verification chunk.
+    pub drafted: usize,
+    /// Longest draft prefix that matched plain greedy decode.
+    pub accepted: usize,
+    /// Tokens appended to `generated` — always `accepted + 1`: the
+    /// chunk's first argmax is the plain-decode token and always lands,
+    /// and a draft token is only counted accepted if its follow-up argmax
+    /// was actually emitted.
+    pub emitted: usize,
+}
+
 /// One inference request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -40,6 +55,12 @@ pub struct Request {
     pub generated: Vec<i32>,
     /// Prompt tokens already consumed (prefill cursor).
     pub prefill_pos: usize,
+    /// Draft tokens proposed for this tick's speculative verification
+    /// (decoding requests only; empty when speculation is off or nothing
+    /// matched).  Set by the engine before planning, consumed by
+    /// [`apply_verification`](Self::apply_verification) — the field never
+    /// carries state across ticks.
+    pub draft: Vec<i32>,
     pub finish_reason: Option<FinishReason>,
     pub arrived_at: Instant,
     pub first_token_at: Option<Instant>,
@@ -58,6 +79,7 @@ impl Request {
             state: RequestState::Queued,
             generated: Vec::new(),
             prefill_pos: 0,
+            draft: Vec::new(),
             finish_reason: None,
             arrived_at: Instant::now(),
             first_token_at: None,
@@ -138,6 +160,52 @@ impl Request {
             if self.state != RequestState::Finished {
                 self.state = RequestState::Decoding;
             }
+        }
+    }
+
+    /// Apply a speculative verification result (greedy acceptance).
+    ///
+    /// The engine fed this request's chunk `[x₀, d₁ … d_fed]` — the normal
+    /// decode input plus the first `fed` tokens of [`draft`](Self::draft)
+    /// — and `argmaxes[j]` is the backend's greedy argmax after the j-th
+    /// chunk token (`argmaxes[0]` is exactly what plain decode would have
+    /// sampled this tick).  Acceptance walks the draft in order: `dᵢ` is
+    /// accepted iff it equals `argmaxes[i-1]`, i.e. the token plain decode
+    /// would have produced — which inductively makes `argmaxes[i]` the
+    /// next plain-decode token, so outputs are bit-identical to the
+    /// non-speculative pipeline.  The walk stops at the first mismatch and
+    /// whenever the request finishes (EOS or budget), exactly where plain
+    /// decode would have stopped.
+    ///
+    /// Clears the draft; returns the bookkeeping the metrics need.
+    pub fn apply_verification(&mut self, fed: usize, argmaxes: &[i32]) -> VerifyOutcome {
+        assert_eq!(
+            self.state,
+            RequestState::Decoding,
+            "apply_verification() outside decode"
+        );
+        assert!(fed <= self.draft.len(), "fed {fed} of {}", self.draft.len());
+        assert_eq!(
+            argmaxes.len(),
+            fed + 1,
+            "need one argmax per chunk position"
+        );
+        let mut accepted = 0usize;
+        let mut emitted = 1usize;
+        self.push_generated(argmaxes[0]);
+        for i in 0..fed {
+            if self.is_finished() || self.draft[i] != argmaxes[i] {
+                break;
+            }
+            accepted += 1;
+            emitted += 1;
+            self.push_generated(argmaxes[i + 1]);
+        }
+        self.draft.clear();
+        VerifyOutcome {
+            drafted: fed,
+            accepted,
+            emitted,
         }
     }
 
@@ -260,6 +328,120 @@ mod tests {
         let mut r = Request::new(1, vec![5, 6], 4);
         r.state = RequestState::Prefilling;
         r.advance_chunk(3, 0);
+    }
+
+    /// Decode `r` one token at a time with a scripted token stream (the
+    /// plain-decode oracle for the verification tests).
+    fn plain_decode(mut r: Request, stream: &[i32]) -> Request {
+        for &t in stream {
+            if r.is_finished() {
+                break;
+            }
+            r.advance(t);
+        }
+        r
+    }
+
+    fn decoding(prompt: usize, budget: usize) -> Request {
+        let mut r = Request::new(1, (0..prompt as i32).collect(), budget);
+        r.state = RequestState::Prefilling;
+        for _ in 0..prompt - 1 {
+            r.advance(99);
+        }
+        r.advance(10); // first generated token
+        assert_eq!(r.state, RequestState::Decoding);
+        r
+    }
+
+    #[test]
+    fn verification_full_acceptance_matches_plain_decode() {
+        // Plain decode would emit 20, 21, 22 next; the draft guesses all
+        // three, so one verification emits all of them plus nothing extra.
+        let mut spec = decoding(3, 8);
+        spec.draft = vec![20, 21, 22];
+        let out = spec.apply_verification(3, &[20, 21, 22, 23]);
+        assert_eq!(
+            out,
+            VerifyOutcome {
+                drafted: 3,
+                accepted: 3,
+                emitted: 4
+            }
+        );
+        let plain = plain_decode(decoding(3, 8), &[20, 21, 22, 23]);
+        assert_eq!(spec.generated, plain.generated);
+        assert_eq!(spec.context_len(), plain.context_len());
+        assert!(spec.draft.is_empty(), "draft consumed");
+    }
+
+    #[test]
+    fn verification_rejects_at_first_mismatch() {
+        let mut spec = decoding(3, 8);
+        spec.draft = vec![20, 77, 22]; // 77 is wrong: argmax after 20 is 21
+        let out = spec.apply_verification(3, &[20, 21, 22, 23]);
+        assert_eq!(out.accepted, 1, "only the prefix before the mismatch");
+        assert_eq!(out.emitted, 2);
+        // Tokens after the mismatch are discarded even though the backend
+        // computed argmaxes for them (they came from a wrong history).
+        let plain = plain_decode(decoding(3, 8), &[20, 21]);
+        assert_eq!(spec.generated, plain.generated);
+    }
+
+    #[test]
+    fn verification_without_draft_is_plain_advance() {
+        let mut spec = decoding(3, 8);
+        let out = spec.apply_verification(0, &[42]);
+        assert_eq!(
+            out,
+            VerifyOutcome {
+                drafted: 0,
+                accepted: 0,
+                emitted: 1
+            }
+        );
+        let plain = plain_decode(decoding(3, 8), &[42]);
+        assert_eq!(spec.generated, plain.generated);
+    }
+
+    #[test]
+    fn verification_stops_at_eos_mid_chunk() {
+        // argmax 0 is EOS: everything after it must be dropped, even
+        // matching draft tokens — exactly where plain decode stops.
+        let mut spec = decoding(3, 8);
+        spec.eos_token = Some(0);
+        spec.draft = vec![0, 5];
+        let out = spec.apply_verification(2, &[0, 5, 6]);
+        assert_eq!(out.accepted, 0);
+        assert_eq!(out.emitted, 1);
+        assert!(spec.is_finished());
+        assert_eq!(spec.finish_reason, Some(FinishReason::Eos));
+        let mut plain = decoding(3, 8);
+        plain.eos_token = Some(0);
+        let plain = plain_decode(plain, &[0, 5, 6]);
+        assert_eq!(spec.generated, plain.generated);
+    }
+
+    #[test]
+    fn verification_stops_at_token_budget() {
+        // Budget 2 and one token already generated: only one more token
+        // may land no matter how much of the draft matches.
+        let mut spec = decoding(3, 2);
+        spec.draft = vec![20, 21, 22];
+        let out = spec.apply_verification(3, &[20, 21, 22, 23]);
+        assert_eq!(out.accepted, 0);
+        assert_eq!(out.emitted, 1);
+        assert!(spec.is_finished());
+        assert_eq!(spec.finish_reason, Some(FinishReason::Length));
+        let plain = plain_decode(decoding(3, 2), &[20, 21, 22, 23]);
+        assert_eq!(spec.generated, plain.generated);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside decode")]
+    fn verification_rejected_while_prefilling() {
+        let mut r = Request::new(1, vec![1, 2], 4);
+        r.state = RequestState::Prefilling;
+        r.apply_verification(0, &[7]);
     }
 
     #[test]

@@ -163,6 +163,31 @@ impl PagedLatentCache {
         Ok(())
     }
 
+    /// Truncate a sequence to `new_len` tokens, releasing one reference on
+    /// every whole block past the new boundary.  This is the speculative-
+    /// decoding rollback primitive: rejected KV positions must never
+    /// survive in the store (they hold latents of tokens that were never
+    /// generated), and whole-block release keeps the refcount story
+    /// identical to `free_seq` — a shared block survives for its other
+    /// owners.  The kept tail block may hold stale latents past `new_len`;
+    /// that region is unreachable (`gather_padded`/`append` are length-
+    /// driven) and the next `append` into a *shared* tail still deep-copies
+    /// first.  Truncating to ≥ the current length is a no-op.
+    pub fn truncate(&mut self, id: SeqId, new_len: usize) {
+        let dropped = {
+            let state = self.seqs.get_mut(&id).expect("unknown sequence");
+            if new_len >= state.len {
+                return;
+            }
+            let keep = new_len.div_ceil(self.cfg.block_size);
+            state.len = new_len;
+            state.blocks.split_off(keep)
+        };
+        for b in dropped {
+            self.allocator.release(b);
+        }
+    }
+
     /// Fork a sequence: shares all blocks (refcount++), O(blocks).
     pub fn fork(&mut self, parent: SeqId) -> SeqId {
         let state = self.seqs.get(&parent).expect("unknown sequence").clone();
@@ -548,6 +573,121 @@ mod tests {
         c.free_seq(a);
         assert!(c.can_append(b, 1));
         c.append(b, &latent(9.0, 3)).unwrap();
+    }
+
+    #[test]
+    fn truncate_releases_whole_blocks_and_replays() {
+        let mut c = PagedLatentCache::new(cfg(4)); // block_size 4
+        let s = c.new_seq();
+        for t in 0..10 {
+            c.append(s, &latent(t as f32, 3)).unwrap();
+        }
+        assert_eq!(c.free_blocks(), 1);
+        c.truncate(s, 5); // keep blocks 0..=1, drop block 2
+        assert_eq!(c.len(s), 5);
+        assert_eq!(c.free_blocks(), 2);
+        // Prefix untouched; re-appending overwrites the stale tail slots.
+        for t in 0..5 {
+            assert_eq!(c.token_latent(s, t), latent(t as f32, 3).as_slice());
+        }
+        for t in 5..9 {
+            c.append(s, &latent(100.0 + t as f32, 3)).unwrap();
+        }
+        for t in 5..9 {
+            assert_eq!(c.token_latent(s, t), latent(100.0 + t as f32, 3).as_slice());
+        }
+        // No-ops: truncating to the current or a larger length.
+        c.truncate(s, 9);
+        c.truncate(s, 50);
+        assert_eq!(c.len(s), 9);
+        // To zero: everything returns to the pool.
+        c.truncate(s, 0);
+        assert_eq!(c.len(s), 0);
+        assert_eq!(c.free_blocks(), 4);
+    }
+
+    #[test]
+    fn truncate_respects_shared_blocks() {
+        let mut c = PagedLatentCache::new(cfg(4));
+        let a = c.new_seq();
+        for t in 0..8 {
+            c.append(a, &latent(t as f32, 3)).unwrap();
+        }
+        let b = c.fork(a);
+        c.truncate(b, 2); // drops b's reference on block 1 only
+        assert_eq!(c.len(b), 2);
+        assert_eq!(c.free_blocks(), 2, "block 1 still owned by a");
+        for t in 0..8 {
+            assert_eq!(c.token_latent(a, t), latent(t as f32, 3).as_slice());
+        }
+        // b's tail block is still shared with a: appending must CoW, not
+        // clobber a's token 2.
+        c.append(b, &latent(55.0, 3)).unwrap();
+        assert_eq!(c.token_latent(b, 2), latent(55.0, 3).as_slice());
+        assert_eq!(c.token_latent(a, 2), latent(2.0, 3).as_slice());
+        c.free_seq(a);
+        c.free_seq(b);
+        assert_eq!(c.free_blocks(), 4);
+    }
+
+    #[test]
+    fn property_truncate_then_append_equals_fresh() {
+        // Rollback must be invisible: truncate + re-append produces the
+        // same contents and allocator state as a sequence that never held
+        // the rejected suffix, under arbitrary block geometry and sharing.
+        forall(Config::default().cases(80), |g| {
+            let bs = g.usize(1..6);
+            let nb = g.usize(8..32);
+            let mk = |c: &mut PagedLatentCache, toks: &[f32]| {
+                let s = c.new_seq();
+                for &v in toks {
+                    c.append(s, &[v]).unwrap();
+                }
+                s
+            };
+            // Keep full + tail within pool capacity so appends can't fail.
+            let cap = bs * nb;
+            let full_len = g.usize(1..30).min(cap.saturating_sub(8)).max(1);
+            let full: Vec<f32> = (0..full_len).map(|t| t as f32 + 1.0).collect();
+            let cut = g.usize(0..full.len() + 1).min(full.len());
+            let tail: Vec<f32> = (0..g.usize(0..8)).map(|t| 1000.0 + t as f32).collect();
+
+            let mut c1 = PagedLatentCache::new(CacheConfig {
+                block_size: bs,
+                latent_dim: 1,
+                num_blocks: nb,
+            });
+            let s1 = mk(&mut c1, &full);
+            c1.truncate(s1, cut);
+            for &v in &tail {
+                c1.append(s1, &[v]).unwrap();
+            }
+
+            let mut c2 = PagedLatentCache::new(CacheConfig {
+                block_size: bs,
+                latent_dim: 1,
+                num_blocks: nb,
+            });
+            let s2 = mk(&mut c2, &full[..cut]);
+            for &v in &tail {
+                c2.append(s2, &[v]).unwrap();
+            }
+
+            prop_assert!(c1.len(s1) == c2.len(s2), "length diverged");
+            prop_assert!(
+                c1.free_blocks() == c2.free_blocks(),
+                "allocator diverged: {} vs {}",
+                c1.free_blocks(),
+                c2.free_blocks()
+            );
+            for t in 0..c1.len(s1) {
+                prop_assert!(
+                    c1.token_latent(s1, t) == c2.token_latent(s2, t),
+                    "content diverged at {t}"
+                );
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub mod prefill;
 pub mod prefixcache;
 pub mod runtime;
 pub mod sim;
+pub mod spec;
 pub mod testing;
 pub mod util;
 

@@ -36,6 +36,12 @@
 //! * Prefix-cache hits are never re-chunked: the planner sees only the
 //!   *unshared suffix* (`prompt.len() - prefill_pos`, where adoption has
 //!   already advanced `prefill_pos` past the shared blocks).
+//! * Speculative **verification chunks** (`crate::spec`) compete for the
+//!   same surplus: a decoding slot with a pending draft may consume
+//!   `1 + draft` tokens in one tick, capped by its KV headroom.  The
+//!   [`SpecPriority`] knob decides whether verification or prefill is
+//!   served from the surplus first; within a class the fairness policy
+//!   applies unchanged.
 
 mod planner;
 
@@ -55,6 +61,21 @@ pub enum FairnessPolicy {
     Fair,
 }
 
+/// Which class of multi-token chunks is served from the budget surplus
+/// first when both compete in one tick (speculative verification chunks
+/// vs prefill chunks).  Within a class the [`FairnessPolicy`] applies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpecPriority {
+    /// Verification chunks first (default): drafted tokens directly
+    /// compress decode latency for running requests, and drafts are small;
+    /// prefill takes what remains.  Under tight budgets a stream of
+    /// low-acceptance drafts can slow concurrent prefills.
+    Spec,
+    /// Prefill chunks first: protects TTFT of queued prompts; verification
+    /// only speculates on budget prefill leaves behind.
+    Prefill,
+}
+
 /// Chunked-prefill knobs, plumbed through `EngineConfig` / `[engine.prefill]`.
 #[derive(Clone, Copy, Debug)]
 pub struct PrefillConfig {
@@ -66,6 +87,9 @@ pub struct PrefillConfig {
     pub chunk_tokens: usize,
     /// Surplus-division policy (the fairness knob).
     pub fairness: FairnessPolicy,
+    /// Who gets the surplus first when speculative verification chunks
+    /// compete with prefill chunks (`[engine.prefill] spec_priority`).
+    pub spec_priority: SpecPriority,
 }
 
 impl Default for PrefillConfig {
@@ -74,6 +98,7 @@ impl Default for PrefillConfig {
             step_token_budget: 32,
             chunk_tokens: 8,
             fairness: FairnessPolicy::Fair,
+            spec_priority: SpecPriority::Spec,
         }
     }
 }
@@ -86,6 +111,7 @@ impl PrefillConfig {
             step_token_budget: 0,
             chunk_tokens: 1,
             fairness: FairnessPolicy::Fifo,
+            spec_priority: SpecPriority::Spec,
         }
     }
 

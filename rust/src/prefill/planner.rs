@@ -5,7 +5,7 @@
 //! estimate).  All invariants the engine and the property tests rely on
 //! are listed on [`ChunkPlanner::plan`].
 
-use super::{FairnessPolicy, PrefillConfig};
+use super::{FairnessPolicy, PrefillConfig, SpecPriority};
 
 /// What one active slot wants this tick.
 #[derive(Clone, Copy, Debug)]
@@ -17,6 +17,11 @@ pub struct SlotDemand {
     /// Prompt tokens already consumed (adopted prefixes count).  The
     /// `Fair` policy serves the least-prefilled slot first.
     pub served_prefill: usize,
+    /// Draft tokens pending speculative verification (decoding slots
+    /// only; 0 ⇒ plain decode).  A verify slot may consume up to
+    /// `1 + pending_draft` tokens: its mandatory decode token plus the
+    /// draft it verifies in the same step.
+    pub pending_draft: usize,
     /// Most tokens this slot can write this tick (KV-bucket headroom:
     /// positions `ctx .. ctx + headroom` are addressable).  The engine
     /// guarantees ≥ 1 for every active slot.
@@ -29,6 +34,7 @@ impl SlotDemand {
         SlotDemand {
             remaining_prefill: 0,
             served_prefill: 0,
+            pending_draft: 0,
             headroom: 1,
         }
     }
@@ -38,8 +44,27 @@ impl SlotDemand {
         SlotDemand {
             remaining_prefill: remaining,
             served_prefill: served,
+            pending_draft: 0,
             headroom,
         }
+    }
+
+    /// A decoding slot with `draft` tokens awaiting verification.
+    pub fn verify(draft: usize, headroom: usize) -> Self {
+        SlotDemand {
+            remaining_prefill: 0,
+            served_prefill: 0,
+            pending_draft: draft,
+            headroom,
+        }
+    }
+
+    pub fn is_prefill(&self) -> bool {
+        self.remaining_prefill > 0
+    }
+
+    pub fn is_verify(&self) -> bool {
+        self.remaining_prefill == 0 && self.pending_draft > 0
     }
 }
 
@@ -60,14 +85,19 @@ impl ChunkPlanner {
 
     /// Per-slot cap on this tick's chunk, before budget division.
     fn cap(&self, d: &SlotDemand) -> usize {
-        if d.remaining_prefill == 0 {
-            1 // decoding: always exactly one token
-        } else {
+        if d.is_prefill() {
             self.cfg
                 .chunk_tokens
                 .min(d.remaining_prefill)
                 .min(d.headroom)
                 .max(1)
+        } else if d.is_verify() {
+            // The decode token plus its draft; `chunk_tokens` does not cap
+            // verification (the draft was already bounded by
+            // `spec.max_draft` when proposed).
+            (1 + d.pending_draft).min(d.headroom).max(1)
+        } else {
+            1 // decoding: always exactly one token
         }
     }
 
@@ -75,12 +105,19 @@ impl ChunkPlanner {
     ///
     /// Invariants (property-tested in this module):
     ///
-    /// 1. `plan[i] == 1` for every decoding slot (`remaining_prefill == 0`);
+    /// 1. `plan[i] == 1` for every plain decoding slot
+    ///    (`remaining_prefill == 0`, `pending_draft == 0`);
     /// 2. `1 ≤ plan[i] ≤ min(chunk_tokens, remaining_prefill, headroom)`
     ///    for every prefilling slot;
-    /// 3. `Σ plan[i] ≤ max(step_token_budget, demands.len())` — the budget
+    /// 3. `1 ≤ plan[i] ≤ min(1 + pending_draft, headroom)` for every
+    ///    verify slot;
+    /// 4. `Σ plan[i] ≤ max(step_token_budget, demands.len())` — the budget
     ///    binds above the mandatory one-token-per-slot floor;
-    /// 4. deterministic: equal inputs produce equal plans.
+    /// 5. deterministic: equal inputs produce equal plans.
+    ///
+    /// The surplus is handed out class-by-class (`spec_priority` decides
+    /// whether verify or prefill chunks are served first); within a class
+    /// the fairness policy divides it.
     pub fn plan(&self, demands: &[SlotDemand]) -> Vec<usize> {
         let n = demands.len();
         let mut plan = vec![0usize; n];
@@ -93,46 +130,99 @@ impl ChunkPlanner {
             *p = 1;
         }
         let mut surplus = self.cfg.step_token_budget.saturating_sub(n);
-
-        // Candidates: prefilling slots that can take more than the floor.
-        let mut cands: Vec<usize> = (0..n).filter(|&i| self.cap(&demands[i]) > 1).collect();
-        if surplus == 0 || cands.is_empty() {
+        if surplus == 0 {
             return plan;
         }
+
+        // Candidates that can take more than the floor, split by class.
+        let verify: Vec<usize> = (0..n)
+            .filter(|&i| demands[i].is_verify() && self.cap(&demands[i]) > 1)
+            .collect();
+        let prefill: Vec<usize> = (0..n)
+            .filter(|&i| demands[i].is_prefill() && self.cap(&demands[i]) > 1)
+            .collect();
+        let classes = match self.cfg.spec_priority {
+            SpecPriority::Spec => [verify, prefill],
+            SpecPriority::Prefill => [prefill, verify],
+        };
+        for mut cands in classes {
+            if surplus == 0 || cands.is_empty() {
+                continue;
+            }
+            self.distribute(&mut cands, demands, &mut plan, &mut surplus);
+        }
+        plan
+    }
+
+    /// Divide `surplus` among `cands` (indices into `demands`) under the
+    /// fairness policy.  `cands` arrive in slot order.
+    fn distribute(
+        &self,
+        cands: &mut Vec<usize>,
+        demands: &[SlotDemand],
+        plan: &mut [usize],
+        surplus: &mut usize,
+    ) {
         match self.cfg.fairness {
             FairnessPolicy::Fifo => {
-                for &i in &cands {
-                    if surplus == 0 {
+                for &i in cands.iter() {
+                    if *surplus == 0 {
                         break;
                     }
-                    let take = (self.cap(&demands[i]) - plan[i]).min(surplus);
+                    let take = (self.cap(&demands[i]) - plan[i]).min(*surplus);
                     plan[i] += take;
-                    surplus -= take;
+                    *surplus -= take;
                 }
             }
             FairnessPolicy::Fair => {
                 // Least-prefilled first; ties broken by slot order so the
-                // plan is deterministic.
+                // plan is deterministic.  Verify slots all carry
+                // `served_prefill == 0`, so among themselves `Fair` is a
+                // plain slot-order round-robin.
                 cands.sort_by_key(|&i| (demands[i].served_prefill, i));
                 // Round-robin one token at a time until the surplus is gone
                 // or every candidate is at its cap.
                 let mut progressed = true;
-                while surplus > 0 && progressed {
+                while *surplus > 0 && progressed {
                     progressed = false;
-                    for &i in &cands {
-                        if surplus == 0 {
+                    for &i in cands.iter() {
+                        if *surplus == 0 {
                             break;
                         }
                         if plan[i] < self.cap(&demands[i]) {
                             plan[i] += 1;
-                            surplus -= 1;
+                            *surplus -= 1;
                             progressed = true;
                         }
                     }
                 }
             }
         }
-        plan
+    }
+
+    /// Render one tick's plan for logs: per slot `d1` (decode),
+    /// `p<k>/<remaining>` (prefill chunk of `k` against the remaining
+    /// unshared suffix), or `v1+<m>/<draft>` (decode token plus `m` of the
+    /// pending draft), after a `used/budget` header.  Deterministic; the
+    /// speculative example and benches print it so mixed
+    /// decode+prefill+verify ticks are inspectable without a debugger.
+    pub fn plan_summary(&self, demands: &[SlotDemand], plan: &[usize]) -> String {
+        debug_assert_eq!(demands.len(), plan.len());
+        let used: usize = plan.iter().sum();
+        let mut s = format!(
+            "plan[used {used}/{}]",
+            self.cfg.step_token_budget.max(demands.len())
+        );
+        for (i, (d, &k)) in demands.iter().zip(plan).enumerate() {
+            if d.is_prefill() {
+                s.push_str(&format!(" s{i}=p{k}/{}", d.remaining_prefill));
+            } else if d.is_verify() {
+                s.push_str(&format!(" s{i}=v1+{}/{}", k - 1, d.pending_draft));
+            } else {
+                s.push_str(&format!(" s{i}=d{k}"));
+            }
+        }
+        s
     }
 }
 
@@ -147,6 +237,16 @@ mod tests {
             step_token_budget: budget,
             chunk_tokens: chunk,
             fairness,
+            ..PrefillConfig::default()
+        })
+    }
+
+    fn planner_prio(budget: usize, prio: SpecPriority) -> ChunkPlanner {
+        ChunkPlanner::new(PrefillConfig {
+            step_token_budget: budget,
+            chunk_tokens: 8,
+            fairness: FairnessPolicy::Fair,
+            spec_priority: prio,
         })
     }
 
@@ -169,6 +269,19 @@ mod tests {
     }
 
     #[test]
+    fn verify_slot_takes_its_draft() {
+        let p = planner(32, 8, FairnessPolicy::Fair);
+        let plan = p.plan(&[SlotDemand::verify(4, 64), SlotDemand::decode()]);
+        assert_eq!(plan, vec![5, 1], "decode token + the whole draft");
+        let plan = p.plan(&[SlotDemand::verify(4, 3)]);
+        assert_eq!(plan, vec![3], "capped by KV headroom");
+        // Verification is not capped by chunk_tokens.
+        let p = planner(64, 2, FairnessPolicy::Fair);
+        let plan = p.plan(&[SlotDemand::verify(9, 64)]);
+        assert_eq!(plan, vec![10]);
+    }
+
+    #[test]
     fn budget_below_slot_count_degenerates_to_per_token() {
         let p = planner(2, 8, FairnessPolicy::Fair);
         let plan = p.plan(&[
@@ -177,6 +290,9 @@ mod tests {
             SlotDemand::prefill(50, 0, 64),
         ]);
         assert_eq!(plan, vec![1, 1, 1]);
+        // Verify slots degrade to plain decode the same way.
+        let plan = p.plan(&[SlotDemand::verify(4, 64), SlotDemand::verify(4, 64)]);
+        assert_eq!(plan, vec![1, 1]);
     }
 
     #[test]
@@ -229,6 +345,19 @@ mod tests {
     }
 
     #[test]
+    fn spec_priority_orders_the_classes() {
+        // Surplus 4 over the 2-slot floor; both classes want more.
+        let demands = [SlotDemand::verify(4, 64), SlotDemand::prefill(50, 0, 64)];
+        let plan = planner_prio(6, SpecPriority::Spec).plan(&demands);
+        assert_eq!(plan, vec![5, 1], "verify drains the surplus first");
+        let plan = planner_prio(6, SpecPriority::Prefill).plan(&demands);
+        assert_eq!(plan, vec![1, 5], "prefill drains the surplus first");
+        // With room for both, priority does not matter.
+        let plan = planner_prio(32, SpecPriority::Prefill).plan(&demands);
+        assert_eq!(plan, vec![5, 8], "room for both: full draft and full chunk");
+    }
+
+    #[test]
     fn per_token_config_is_exact_old_pipeline() {
         let p = ChunkPlanner::new(PrefillConfig::per_token());
         let plan = p.plan(&[
@@ -237,6 +366,22 @@ mod tests {
             SlotDemand::prefill(2, 1, 64),
         ]);
         assert_eq!(plan, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn plan_summary_renders_all_slot_kinds() {
+        let p = planner(32, 8, FairnessPolicy::Fair);
+        let demands = [
+            SlotDemand::decode(),
+            SlotDemand::prefill(40, 0, 64),
+            SlotDemand::verify(4, 64),
+        ];
+        let plan = p.plan(&demands);
+        let s = p.plan_summary(&demands, &plan);
+        assert!(s.starts_with("plan[used "), "summary: {s}");
+        assert!(s.contains("s0=d1"), "summary: {s}");
+        assert!(s.contains("s1=p8/40"), "summary: {s}");
+        assert!(s.contains("s2=v1+4/4"), "summary: {s}");
     }
 
     #[test]
@@ -249,15 +394,23 @@ mod tests {
             } else {
                 FairnessPolicy::Fifo
             };
-            let p = planner(budget, chunk, fairness);
+            let prio = if g.bool() {
+                SpecPriority::Spec
+            } else {
+                SpecPriority::Prefill
+            };
+            let p = ChunkPlanner::new(PrefillConfig {
+                step_token_budget: budget,
+                chunk_tokens: chunk,
+                fairness,
+                spec_priority: prio,
+            });
             let n = g.usize(1..12);
             let demands: Vec<SlotDemand> = (0..n)
-                .map(|_| {
-                    if g.bool() {
-                        SlotDemand::decode()
-                    } else {
-                        SlotDemand::prefill(g.usize(1..200), g.usize(0..200), g.usize(1..128))
-                    }
+                .map(|_| match g.usize(0..3) {
+                    0 => SlotDemand::decode(),
+                    1 => SlotDemand::prefill(g.usize(1..200), g.usize(0..200), g.usize(1..128)),
+                    _ => SlotDemand::verify(g.usize(1..9), g.usize(1..128)),
                 })
                 .collect();
             let plan = p.plan(&demands);
@@ -270,9 +423,7 @@ mod tests {
             );
             for (i, d) in demands.iter().enumerate() {
                 prop_assert!(plan[i] >= 1, "slot {i} starved");
-                if d.remaining_prefill == 0 {
-                    prop_assert!(plan[i] == 1, "decode slot {i} got {}", plan[i]);
-                } else {
+                if d.is_prefill() {
                     prop_assert!(
                         plan[i] <= chunk.min(d.remaining_prefill).min(d.headroom).max(1),
                         "slot {i} over cap: {} (chunk {chunk}, rem {}, head {})",
@@ -280,6 +431,16 @@ mod tests {
                         d.remaining_prefill,
                         d.headroom
                     );
+                } else if d.is_verify() {
+                    prop_assert!(
+                        plan[i] <= (1 + d.pending_draft).min(d.headroom).max(1),
+                        "verify slot {i} over cap: {} (draft {}, head {})",
+                        plan[i],
+                        d.pending_draft,
+                        d.headroom
+                    );
+                } else {
+                    prop_assert!(plan[i] == 1, "decode slot {i} got {}", plan[i]);
                 }
             }
             Ok(())

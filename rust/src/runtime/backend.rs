@@ -29,6 +29,14 @@
 //!   token at its last position therefore rewrites bit-identical data (and
 //!   recomputes bit-identical logits), which is how the fallback holds
 //!   finished slots in place while longer chunks drain.
+//!
+//! **Verification steps.**  Speculative decoding (`crate::spec`,
+//! `docs/speculative-decoding.md`) adds [`StepRunner::verify_chunk`]: the
+//! same multi-token execution, but returning the greedy argmax after
+//! *every* consumed token so the engine can accept the longest draft
+//! prefix that matches plain decode.  Write purity is also what makes
+//! speculation exact: a rejected draft position is rewritten by the next
+//! correct token before anything ever attends to it.
 
 /// One decode step over a fixed `(batch, kv_bucket)` shape.
 pub trait StepRunner {
@@ -70,6 +78,40 @@ pub trait StepRunner {
         start_pos: &[i32],
     ) -> anyhow::Result<(Vec<f32>, xla::Literal)> {
         prefill_chunk_fallback(self, chunks, cache, start_pos)
+    }
+
+    /// Multi-token **verification** step for speculative decoding: the
+    /// same execution as [`prefill_chunk`](Self::prefill_chunk) — slot `b`
+    /// consumes `chunks[b]` in order, writing latents at `start_pos[b] ..`
+    /// — but instead of only the last logits row, it returns the **greedy
+    /// argmax after every consumed token** (`out[b][j]` = argmax of the
+    /// logits after `chunks[b][j]`), which is exactly what the engine
+    /// needs to accept the longest draft prefix matching plain decode.
+    ///
+    /// Contract (tested against the reference backend):
+    ///
+    /// * **cache-identical to `prefill_chunk`** on the same inputs — a
+    ///   verification tick must leave bit-identical state to the prefill
+    ///   path, or speculation would not be a pure optimization;
+    /// * `out[b].len() == chunks[b].len()`; a padded (empty) chunk gets an
+    ///   empty argmax vector plus the same scratch write `prefill_chunk`
+    ///   performs;
+    /// * `out[b].last()` equals the argmax of the logits row
+    ///   `prefill_chunk` would have returned for slot `b`.
+    ///
+    /// The default implementation ([`verify_chunk_fallback`]) reuses
+    /// `prefill_chunk` one wavefront at a time — correct everywhere, one
+    /// dispatch per draft position on PJRT (the engine disables
+    /// speculation there until a chunked artifact lands, mirroring the
+    /// chunked-prefill degrade).  Backends with a native multi-token path
+    /// override it and record the argmax as they go.
+    fn verify_chunk(
+        &self,
+        chunks: &[Vec<i32>],
+        cache: &xla::Literal,
+        start_pos: &[i32],
+    ) -> anyhow::Result<(Vec<Vec<i32>>, xla::Literal)> {
+        verify_chunk_fallback(self, chunks, cache, start_pos)
     }
 
     /// Vocabulary size (logits row width).
@@ -129,6 +171,59 @@ pub fn prefill_chunk_fallback<R: StepRunner + ?Sized>(
     Ok((logits, cur.expect("max_k ≥ 1")))
 }
 
+/// The wavefront verification fallback (the default body of
+/// [`StepRunner::verify_chunk`]), callable directly so equivalence tests
+/// can pit a backend's native verification against it.
+///
+/// Iteration `j` feeds every slot its `j`-th chunk token through a
+/// single-token [`StepRunner::prefill_chunk`] call and records the greedy
+/// argmax for slots still inside their chunk.  Slot clamping mirrors
+/// [`prefill_chunk_fallback`] exactly — finished slots re-feed their last
+/// token at their last position (a pure rewrite under the write-purity
+/// contract), padded slots re-issue the token-0/position-0 scratch write —
+/// so the final cache is bit-identical to one `prefill_chunk` call over
+/// the same chunks, regardless of how the backend interleaves slots
+/// internally (slot isolation makes per-slot results order-independent).
+pub fn verify_chunk_fallback<R: StepRunner + ?Sized>(
+    runner: &R,
+    chunks: &[Vec<i32>],
+    cache: &xla::Literal,
+    start_pos: &[i32],
+) -> anyhow::Result<(Vec<Vec<i32>>, xla::Literal)> {
+    anyhow::ensure!(
+        chunks.len() == start_pos.len(),
+        "chunks len {} != start_pos len {}",
+        chunks.len(),
+        start_pos.len()
+    );
+    let b = chunks.len();
+    let vocab = runner.vocab();
+    let max_k = chunks.iter().map(|c| c.len().max(1)).max().unwrap_or(1);
+    let mut out: Vec<Vec<i32>> = vec![Vec::new(); b];
+    let mut cur: Option<xla::Literal> = None;
+    for j in 0..max_k {
+        let mut wave: Vec<Vec<i32>> = Vec::with_capacity(b);
+        let mut pos = vec![0i32; b];
+        for slot in 0..b {
+            if chunks[slot].is_empty() {
+                wave.push(Vec::new());
+            } else {
+                let jb = j.min(chunks[slot].len() - 1);
+                wave.push(vec![chunks[slot][jb]]);
+                pos[slot] = start_pos[slot] + jb as i32;
+            }
+        }
+        let (logits, c) = runner.prefill_chunk(&wave, cur.as_ref().unwrap_or(cache), &pos)?;
+        for (slot, o) in out.iter_mut().enumerate() {
+            if j < chunks[slot].len() {
+                o.push(super::DecodeRunner::argmax_row(&logits, vocab, slot));
+            }
+        }
+        cur = Some(c);
+    }
+    Ok((out, cur.expect("max_k ≥ 1")))
+}
+
 impl StepRunner for super::DecodeRunner {
     fn step(
         &self,
@@ -139,9 +234,10 @@ impl StepRunner for super::DecodeRunner {
         super::DecodeRunner::step(self, tokens, cache, lengths)
     }
 
-    // `prefill_chunk` intentionally NOT overridden: the PJRT path uses the
-    // per-token fallback until a chunked decode artifact is compiled (see
-    // ROADMAP "chunked PJRT artifact").
+    // `prefill_chunk` and `verify_chunk` intentionally NOT overridden: the
+    // PJRT path uses the per-token fallbacks until a chunked decode
+    // artifact is compiled (see ROADMAP "chunked PJRT artifact"); the
+    // engine degrades to per-token prefill and disables speculation there.
 
     fn vocab(&self) -> usize {
         super::DecodeRunner::vocab(self)

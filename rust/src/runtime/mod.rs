@@ -18,7 +18,7 @@ pub mod reference;
 
 pub use artifact::{ArtifactMeta, Dtype, Manifest, ModelMeta, TensorSpec};
 pub use attention::AttentionRunner;
-pub use backend::{prefill_chunk_fallback, StepRunner};
+pub use backend::{prefill_chunk_fallback, verify_chunk_fallback, StepRunner};
 pub use client::Runtime;
 pub use decode::DecodeRunner;
 pub use reference::{ReferenceModel, ReferenceModelConfig, ReferenceRunner};

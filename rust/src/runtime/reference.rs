@@ -318,6 +318,44 @@ impl StepRunner for ReferenceRunner {
         Ok((logits, self.pack_cache(&host)?))
     }
 
+    /// Native verification: identical per-slot kernel walk to the native
+    /// [`prefill_chunk`](Self::prefill_chunk) — same `step_slot` calls in
+    /// the same order, hence bit-identical cache effects — recording the
+    /// greedy argmax after every consumed token instead of keeping only
+    /// the last logits row.
+    fn verify_chunk(
+        &self,
+        chunks: &[Vec<i32>],
+        cache: &xla::Literal,
+        start_pos: &[i32],
+    ) -> anyhow::Result<(Vec<Vec<i32>>, xla::Literal)> {
+        let v = self.model.cfg.vocab;
+        let b = self.batch;
+        anyhow::ensure!(chunks.len() == b, "chunks len {} != batch {b}", chunks.len());
+        anyhow::ensure!(
+            start_pos.len() == b,
+            "start_pos len {} != batch {b}",
+            start_pos.len()
+        );
+        let mut host = self.host_cache(cache)?;
+        let mut logits_row = vec![0.0f32; v];
+        let mut out: Vec<Vec<i32>> = vec![Vec::new(); b];
+        for slot in 0..b {
+            if chunks[slot].is_empty() {
+                // Padded slot: same scratch write `step` performs.
+                self.step_slot(&mut host, slot, 0, 0, &mut logits_row)?;
+                continue;
+            }
+            anyhow::ensure!(start_pos[slot] >= 0, "negative start_pos");
+            for (j, &tok) in chunks[slot].iter().enumerate() {
+                let t = start_pos[slot] as usize + j;
+                self.step_slot(&mut host, slot, tok, t, &mut logits_row)?;
+                out[slot].push(super::DecodeRunner::argmax_row(&logits_row, v, 0));
+            }
+        }
+        Ok((out, self.pack_cache(&host)?))
+    }
+
     fn vocab(&self) -> usize {
         self.model.cfg.vocab
     }
@@ -479,6 +517,94 @@ mod tests {
             fc.to_vec::<f32>().unwrap(),
             "caches differ between native and fallback"
         );
+    }
+
+    #[test]
+    fn verify_chunk_cache_identical_to_prefill_chunk() {
+        // The speculative contract: a verification tick must leave the
+        // exact cache a prefill tick over the same chunks would, and its
+        // last argmax must match the prefill path's logits row.
+        let m = small();
+        let r = m.runner(3, 16);
+        let mut cache = r.fresh_cache().unwrap();
+        for (t, tok) in [4i32, 6].into_iter().enumerate() {
+            let (_, c) =
+                StepRunner::step(&r, &[0, tok, 0], &cache, &[0, t as i32, 0]).unwrap();
+            cache = c;
+        }
+        let chunks: Vec<Vec<i32>> = vec![
+            vec![3, 5, 7, 11], // prefill-style chunk
+            vec![12, 1, 9],    // decode token + 2 draft tokens at position 2
+            Vec::new(),        // padded
+        ];
+        let start = [0, 2, 0];
+        let (pl, pc) = r.prefill_chunk(&chunks, &cache, &start).unwrap();
+        let (am, vc) = r.verify_chunk(&chunks, &cache, &start).unwrap();
+        assert_eq!(
+            vc.to_vec::<f32>().unwrap(),
+            pc.to_vec::<f32>().unwrap(),
+            "verification changed the cache"
+        );
+        let v = StepRunner::vocab(&r);
+        for slot in 0..2 {
+            assert_eq!(am[slot].len(), chunks[slot].len());
+            assert_eq!(
+                *am[slot].last().unwrap(),
+                super::super::DecodeRunner::argmax_row(&pl, v, slot),
+                "slot {slot} final argmax diverges from prefill logits"
+            );
+        }
+        assert!(am[2].is_empty(), "padded slot has no argmaxes");
+    }
+
+    #[test]
+    fn verify_native_equals_fallback() {
+        let m = small();
+        let r = m.runner(4, 16);
+        let mut cache = r.fresh_cache().unwrap();
+        for (t, tok) in [4i32, 6, 8].into_iter().enumerate() {
+            let (_, c) =
+                StepRunner::step(&r, &[0, tok, 0, 0], &cache, &[0, t as i32, 0, 0]).unwrap();
+            cache = c;
+        }
+        let chunks: Vec<Vec<i32>> = vec![
+            vec![3, 5, 7, 11, 2], // long chunk
+            vec![12, 9],          // decode + 1 draft at position 3
+            Vec::new(),           // padded
+            vec![9],              // single token
+        ];
+        let start = [0, 3, 0, 0];
+        let (na, nc) = r.verify_chunk(&chunks, &cache, &start).unwrap();
+        let (fa, fc) =
+            super::super::backend::verify_chunk_fallback(&r, &chunks, &cache, &start).unwrap();
+        assert_eq!(na, fa, "argmaxes differ between native and fallback");
+        assert_eq!(
+            nc.to_vec::<f32>().unwrap(),
+            fc.to_vec::<f32>().unwrap(),
+            "caches differ between native and fallback"
+        );
+    }
+
+    #[test]
+    fn verify_argmaxes_track_per_token_greedy() {
+        // Position j's argmax must equal what a per-token step loop sees
+        // after feeding the same j+1 tokens — the property the engine's
+        // acceptance rule is built on.
+        let m = small();
+        let r = m.runner(1, 16);
+        let toks: Vec<i32> = vec![3, 5, 7, 11, 2];
+        let fresh = r.fresh_cache().unwrap();
+        let (am, _) = r.verify_chunk(&[toks.clone()], &fresh, &[0]).unwrap();
+        let mut cache = r.fresh_cache().unwrap();
+        for (t, &tok) in toks.iter().enumerate() {
+            let (lg, c) = StepRunner::step(&r, &[tok], &cache, &[t as i32]).unwrap();
+            cache = c;
+            assert_eq!(
+                am[0][t],
+                super::super::DecodeRunner::argmax_row(&lg, StepRunner::vocab(&r), 0),
+                "argmax diverges at position {t}"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! Prompt-lookup drafting: n-gram continuation proposals from the
+//! request's own history.
+//!
+//! The idea (prompt-lookup decoding): generated text frequently repeats
+//! spans of its own context — templates, code identifiers, quoted input,
+//! cycles.  When the last few tokens match an earlier n-gram, the tokens
+//! that *followed* that earlier occurrence are a cheap, often-correct
+//! guess for what comes next.  The drafter costs no model execution at
+//! all, so every accepted token is pure profit.
+//!
+//! Implementation: a **ring buffer** holds the last `lookback` history
+//! tokens, and an incremental index maps every 1-, 2- and 3-gram to its
+//! most recent end positions (up to [`OCC_SLOTS`] occurrences, newest
+//! first).  Drafting walks the ladder n = 3, 2, 1 (longest suffix match
+//! first) and, among the indexed in-window occurrences, prefers the
+//! newest one with a full `max_draft` continuation — the most recent
+//! match that is *not* butted against the end of history — falling back
+//! to the oldest stored occurrence (longest available continuation).
+//! This matters for periodic text: the most recent occurrence of the
+//! suffix is always one period back, truncating the draft to one period,
+//! while a slightly older occurrence yields the full `max_draft` tokens.
+//!
+//! Properties the engine and the property tests rely on:
+//!
+//! * **deterministic** — a pure function of the observed history;
+//! * **bounded** — never proposes more than `max_draft` tokens;
+//! * **grounded** — proposes nothing when no n-gram of the suffix occurs
+//!   earlier in the window, and every proposal is the verbatim
+//!   continuation of some earlier in-window occurrence;
+//! * **windowed** — positions that slid out of the ring are never read
+//!   (stale index entries are filtered lazily at draft time).
+//!
+//! Memory: the ring is `lookback` tokens; the index holds at most
+//! `OCC_SLOTS` positions per distinct gram ever observed, i.e. O(history
+//! length).  The engine keeps one drafter per active request and drops it
+//! when the request finishes.
+
+use std::collections::HashMap;
+
+use super::SpecConfig;
+
+/// Longest suffix n-gram the drafter matches on (the ladder tries
+/// `MAX_NGRAM`, then shorter, down to 1).
+pub const MAX_NGRAM: usize = 3;
+
+/// Most-recent occurrences remembered per gram.  More slots let the
+/// drafter skip past occurrences too close to the end of history to have
+/// a full continuation; 4 covers every cycle of period ≤ `MAX_NGRAM`
+/// while keeping the index O(1) per observe.
+const OCC_SLOTS: usize = 4;
+
+/// Gram key: (n, tokens right-aligned in a fixed array, unused slots -1).
+type GramKey = (u8, [i32; MAX_NGRAM]);
+
+/// Deterministic self-drafter over one request's token history.
+#[derive(Clone, Debug)]
+pub struct PromptLookupDrafter {
+    lookback: usize,
+    max_draft: usize,
+    /// Ring of the last `lookback` tokens; absolute position `p` lives at
+    /// `ring[p % lookback]` once `p ≥ observed - lookback`.
+    ring: Vec<i32>,
+    /// Total tokens observed (absolute position of the next token).
+    observed: u64,
+    /// Gram → most recent end positions, newest first, ≤ `OCC_SLOTS`.
+    index: HashMap<GramKey, Vec<u64>>,
+}
+
+impl PromptLookupDrafter {
+    pub fn new(cfg: &SpecConfig) -> Self {
+        cfg.validate().expect("invalid spec config");
+        PromptLookupDrafter {
+            lookback: cfg.lookback,
+            max_draft: cfg.max_draft,
+            ring: Vec::with_capacity(cfg.lookback),
+            observed: 0,
+            index: HashMap::new(),
+        }
+    }
+
+    /// Tokens observed so far.  The engine feeds history incrementally and
+    /// uses this as the sync cursor (prompt first, then each generated
+    /// token as it is accepted).
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    fn tok_at(&self, pos: u64) -> i32 {
+        debug_assert!(pos + (self.lookback as u64) >= self.observed, "read outside window");
+        debug_assert!(pos < self.observed);
+        self.ring[(pos % self.lookback as u64) as usize]
+    }
+
+    /// Key of the n-gram ending at absolute position `end` (inclusive).
+    /// All `n` positions must be inside the window, which holds whenever
+    /// `n ≤ MAX_NGRAM ≤ lookback` and `end` is among the newest tokens.
+    fn gram_key(&self, end: u64, n: usize) -> GramKey {
+        let mut toks = [-1i32; MAX_NGRAM];
+        for (i, slot) in toks[MAX_NGRAM - n..].iter_mut().enumerate() {
+            *slot = self.tok_at(end + 1 - n as u64 + i as u64);
+        }
+        (n as u8, toks)
+    }
+
+    /// Append one history token and index the grams it completes.
+    pub fn observe(&mut self, token: i32) {
+        assert!(token >= 0, "negative token id {token}");
+        let slot = (self.observed % self.lookback as u64) as usize;
+        if self.ring.len() < self.lookback {
+            debug_assert_eq!(slot, self.ring.len());
+            self.ring.push(token);
+        } else {
+            self.ring[slot] = token;
+        }
+        self.observed += 1;
+        let end = self.observed - 1;
+        for n in 1..=MAX_NGRAM.min(self.observed as usize) {
+            let key = self.gram_key(end, n);
+            let occs = self.index.entry(key).or_default();
+            occs.insert(0, end);
+            occs.truncate(OCC_SLOTS);
+        }
+    }
+
+    pub fn observe_all(&mut self, tokens: &[i32]) {
+        for &t in tokens {
+            self.observe(t);
+        }
+    }
+
+    /// Propose up to `max_draft` continuation tokens for the current
+    /// history, or an empty vector when no suffix n-gram has occurred
+    /// earlier in the window.
+    pub fn draft(&self) -> Vec<i32> {
+        let l = self.observed;
+        if l < 2 {
+            return Vec::new();
+        }
+        let start = l.saturating_sub(self.lookback as u64);
+        for n in (1..=MAX_NGRAM.min((l - 1) as usize)).rev() {
+            let key = self.gram_key(l - 1, n);
+            let Some(occs) = self.index.get(&key) else {
+                continue;
+            };
+            // In-window occurrences strictly before the suffix itself
+            // (which is always the newest entry, pushed by `observe`).
+            let valid: Vec<u64> = occs
+                .iter()
+                .copied()
+                .filter(|&p| p != l - 1 && p + 1 >= start + n as u64)
+                .collect();
+            let Some(&newest_full) = valid
+                .iter()
+                .find(|&&p| l - 1 - p >= self.max_draft as u64)
+            else {
+                // No occurrence has a full continuation; take the oldest
+                // stored one (the longest continuation available), if any.
+                let Some(&p) = valid.last() else { continue };
+                return self.continuation(p);
+            };
+            return self.continuation(newest_full);
+        }
+        Vec::new()
+    }
+
+    /// The tokens that followed the occurrence ending at `p`, clipped to
+    /// `max_draft` and to recorded history (all within the window: the
+    /// continuation starts after an in-window position).
+    fn continuation(&self, p: u64) -> Vec<i32> {
+        let take = self.max_draft.min((self.observed - 1 - p) as usize);
+        (0..take as u64).map(|i| self.tok_at(p + 1 + i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::{forall, Config};
+
+    fn drafter(lookback: usize, max_draft: usize) -> PromptLookupDrafter {
+        PromptLookupDrafter::new(&SpecConfig {
+            enabled: true,
+            lookback,
+            max_draft,
+        })
+    }
+
+    #[test]
+    fn empty_and_tiny_histories_draft_nothing() {
+        let mut d = drafter(64, 4);
+        assert!(d.draft().is_empty());
+        d.observe(7);
+        assert!(d.draft().is_empty(), "one token has no earlier match");
+    }
+
+    #[test]
+    fn novel_suffix_drafts_nothing() {
+        let mut d = drafter(64, 4);
+        d.observe_all(&[1, 2, 3, 4, 5]);
+        assert!(d.draft().is_empty(), "all-distinct history has no match");
+    }
+
+    #[test]
+    fn repeat_continues_the_pattern() {
+        // History ...5 4 5 4 5: the 3-gram [4,5,4] ends at an earlier
+        // occurrence whose continuation alternates — the draft must too.
+        let mut d = drafter(64, 4);
+        d.observe_all(&[9, 5, 4, 5, 4, 5, 4, 5, 4, 5]);
+        let draft = d.draft();
+        assert_eq!(draft, vec![4, 5, 4, 5], "full-length periodic draft");
+    }
+
+    #[test]
+    fn prefers_occurrence_with_full_continuation() {
+        // Periodic tail: the newest previous occurrence of the suffix is
+        // one period back (continuation length 2); an older one yields the
+        // full draft.  This is the OCC_SLOTS mechanism working.
+        let mut d = drafter(64, 3);
+        d.observe_all(&[7, 1, 2, 1, 2, 1, 2, 1, 2]);
+        assert_eq!(d.draft(), vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn unigram_fallback_matches_last_token() {
+        let mut d = drafter(64, 2);
+        d.observe_all(&[3, 9, 9]);
+        // Suffix 3-grams/2-grams [9,9] occur only at the end; unigram 9 at
+        // position 1 has continuation [9].
+        let draft = d.draft();
+        assert!(!draft.is_empty());
+        assert_eq!(draft[0], 9);
+    }
+
+    #[test]
+    fn window_eviction_forgets_old_matches() {
+        let mut d = drafter(8, 4);
+        d.observe_all(&[1, 2, 3]); // will slide out
+        d.observe_all(&[4, 5, 6, 7, 8]); // fills the window to 8
+        d.observe_all(&[9, 9]); // evicts 1, 2
+        // Token 3's earlier occurrence of suffix... suffix is [9]; 9 occurs
+        // at the previous position only (in window) → continuation [9].
+        assert_eq!(d.draft(), vec![9]);
+        // Now a suffix whose only earlier occurrence slid out:
+        let mut d = drafter(8, 4);
+        d.observe_all(&[7, 1, 2, 3, 4, 5, 6, 8, 9, 7]);
+        // `7` at position 0 is out of the 8-token window → nothing.
+        assert!(d.draft().is_empty());
+    }
+
+    #[test]
+    fn deterministic_and_bounded() {
+        let hist = [1, 2, 1, 2, 3, 1, 2, 1, 2, 3, 1, 2];
+        let mut a = drafter(16, 4);
+        let mut b = drafter(16, 4);
+        a.observe_all(&hist);
+        b.observe_all(&hist);
+        assert_eq!(a.draft(), b.draft());
+        assert!(a.draft().len() <= 4);
+    }
+
+    /// Scan-based soundness check: a non-empty draft must be the verbatim
+    /// continuation of an in-window occurrence of some suffix n-gram.
+    fn draft_is_grounded(hist: &[i32], lookback: usize, draft: &[i32]) -> bool {
+        let l = hist.len();
+        let start = l.saturating_sub(lookback);
+        let win = &hist[start..];
+        for n in (1..=MAX_NGRAM.min(win.len().saturating_sub(1))).rev() {
+            let suffix = &win[win.len() - n..];
+            for p in 0..win.len() - n {
+                // occurrence at win[p..p+n], continuation after it
+                if &win[p..p + n] == suffix {
+                    let cont = &win[p + n..];
+                    if cont.len() >= draft.len() && &cont[..draft.len()] == draft {
+                        return true;
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    #[test]
+    fn property_drafts_bounded_grounded_deterministic() {
+        forall(Config::default().cases(300), |g| {
+            let lookback = g.usize(8..64);
+            let max_draft = g.usize(1..(lookback - MAX_NGRAM).min(9));
+            let vocab = g.usize(2..8) as i32;
+            let hist = g.tokens(0..120, vocab);
+            let cfg = SpecConfig {
+                enabled: true,
+                lookback,
+                max_draft,
+            };
+            let mut a = PromptLookupDrafter::new(&cfg);
+            let mut b = PromptLookupDrafter::new(&cfg);
+            a.observe_all(&hist);
+            b.observe_all(&hist);
+            let draft = a.draft();
+            prop_assert!(draft == b.draft(), "identical histories must draft identically");
+            prop_assert!(draft == a.draft(), "draft() must not mutate state");
+            prop_assert!(
+                draft.len() <= max_draft,
+                "draft {} exceeds max_draft {max_draft}",
+                draft.len()
+            );
+            // No match ⇒ nothing proposed; a proposal ⇒ a real in-window
+            // continuation backs it.
+            let l = hist.len();
+            let start = l.saturating_sub(lookback);
+            let last_seen_before = l >= 2 && hist[start..l - 1].contains(&hist[l - 1]);
+            if !last_seen_before {
+                prop_assert!(
+                    draft.is_empty(),
+                    "novel last token must draft nothing, got {draft:?}"
+                );
+            }
+            if !draft.is_empty() {
+                prop_assert!(
+                    draft_is_grounded(&hist, lookback, &draft),
+                    "ungrounded draft {draft:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_incremental_equals_batch() {
+        forall(Config::default().cases(100), |g| {
+            let hist = g.tokens(2..80, 5);
+            let cfg = SpecConfig {
+                enabled: true,
+                lookback: 32,
+                max_draft: 4,
+            };
+            let mut inc = PromptLookupDrafter::new(&cfg);
+            // Draft after every prefix: must equal a fresh drafter fed the
+            // same prefix in one shot.
+            for i in 0..hist.len() {
+                inc.observe(hist[i]);
+                let mut batch = PromptLookupDrafter::new(&cfg);
+                batch.observe_all(&hist[..=i]);
+                prop_assert!(
+                    inc.draft() == batch.draft(),
+                    "incremental/batch divergence at prefix {}",
+                    i + 1
+                );
+            }
+            Ok(())
+        });
+    }
+}

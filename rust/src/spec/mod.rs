@@ -1,0 +1,117 @@
+//! Speculative decoding: self-drafting via prompt lookup, verified as
+//! chunked attention steps.
+//!
+//! The paper's core observation is that attention cost is shaped by the
+//! M-dimension of the GEMM: prefill-shaped work (many query tokens against
+//! a long KV context) runs near the roofline knee, while single-token
+//! decode is memory-bound (see PAPERS.md, *Hardware-Centric Analysis of
+//! DeepSeek's MLA*).  Speculative decoding converts `k` memory-bound
+//! decode steps into **one prefill-shaped verification chunk** — exactly
+//! the workload `StepRunner::prefill_chunk` was built to execute.
+//!
+//! The split of responsibilities:
+//!
+//! * [`PromptLookupDrafter`] (this module) proposes up to `max_draft`
+//!   continuation tokens by n-gram matching against the request's own
+//!   prompt + generated history.  No draft model is needed, so speculation
+//!   runs on the hermetic reference backend, and the drafter is a pure
+//!   deterministic function of the token history.
+//! * The planner (`crate::prefill::ChunkPlanner`) admits verification
+//!   chunks into the tick under the same `step_token_budget` as prefill
+//!   chunks, ordered by the `spec_priority` knob.
+//! * The backend verifies through
+//!   [`StepRunner::verify_chunk`](crate::runtime::StepRunner::verify_chunk):
+//!   the chunk `[last_token, d₁ … dₘ]` executes like a prefill chunk, but
+//!   the greedy argmax after *every* position comes back.
+//! * The engine accepts the longest draft prefix matching those argmaxes,
+//!   which guarantees outputs **bit-identical** to plain greedy decode:
+//!   token `dᵢ` is only accepted when it equals the token plain decode
+//!   would have produced, so every cache row at an accepted position is
+//!   (by the write-purity contract) the exact row plain decode would have
+//!   written.  Rejected positions are rolled back; see
+//!   `docs/speculative-decoding.md` for the full argument.
+//!
+//! Configured by `[engine.spec]` (`enabled`, `lookback`, `max_draft`);
+//! disabled by default so the engine reproduces the non-speculative step
+//! sequence byte-for-byte out of the box.
+
+mod drafter;
+
+pub use drafter::{PromptLookupDrafter, MAX_NGRAM};
+
+/// Speculative-decoding knobs, plumbed through `EngineConfig` /
+/// `[engine.spec]`.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecConfig {
+    /// Master switch.  Off by default: speculation never changes generated
+    /// tokens (greedy verification is exact), but it does change the
+    /// engine's step cadence and metrics, so it is opt-in.
+    pub enabled: bool,
+    /// History window (in tokens) the drafter's ring-buffer n-gram index
+    /// covers.  Matches and continuations are only drawn from the last
+    /// `lookback` tokens of prompt + generated history.
+    pub lookback: usize,
+    /// Maximum draft tokens proposed (and therefore verified) per engine
+    /// tick per request — the `k` in the k-step-to-one-chunk conversion.
+    pub max_draft: usize,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig {
+            enabled: false,
+            lookback: 256,
+            max_draft: 4,
+        }
+    }
+}
+
+impl SpecConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.lookback >= 8, "spec.lookback must be ≥ 8");
+        anyhow::ensure!(self.max_draft >= 1, "spec.max_draft must be ≥ 1");
+        anyhow::ensure!(
+            self.max_draft + MAX_NGRAM <= self.lookback,
+            "spec.max_draft {} too large for lookback {} (a match plus its \
+             continuation must fit the window)",
+            self.max_draft,
+            self.lookback
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_off_and_valid() {
+        let c = SpecConfig::default();
+        assert!(!c.enabled, "speculation must be opt-in");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(SpecConfig {
+            lookback: 4,
+            ..SpecConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(SpecConfig {
+            max_draft: 0,
+            ..SpecConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(SpecConfig {
+            lookback: 8,
+            max_draft: 8,
+            ..SpecConfig::default()
+        }
+        .validate()
+        .is_err());
+    }
+}

@@ -133,6 +133,26 @@ impl Welford {
     pub fn max(&self) -> f64 {
         if self.n == 0 { 0.0 } else { self.max }
     }
+
+    /// Fold another accumulator in (the parallel-variance combination):
+    /// the result is exactly the accumulator of the concatenated streams,
+    /// up to f64 rounding.  Used by `ServingMetrics::merge`.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean += d * other.n as f64 / n as f64;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.n = n;
+    }
 }
 
 /// Log-bucketed latency histogram: covers 1 µs … ~17 min with ≤ ~4 % bucket
@@ -271,6 +291,31 @@ mod tests {
         assert_eq!(w.min(), -3.0);
         assert_eq!(w.max(), 7.0);
         assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn welford_merge_equals_single_stream() {
+        let xs = [1.0, 2.5, -3.0, 7.0, 0.25, 4.0, -1.5];
+        for split in 0..=xs.len() {
+            let mut a = Welford::new();
+            let mut b = Welford::new();
+            for &x in &xs[..split] {
+                a.push(x);
+            }
+            for &x in &xs[split..] {
+                b.push(x);
+            }
+            let mut whole = Welford::new();
+            for &x in &xs {
+                whole.push(x);
+            }
+            a.merge(&b);
+            assert_eq!(a.count(), whole.count());
+            assert!((a.mean() - whole.mean()).abs() < 1e-12, "split {split}");
+            assert!((a.stddev() - whole.stddev()).abs() < 1e-12, "split {split}");
+            assert_eq!(a.min(), whole.min());
+            assert_eq!(a.max(), whole.max());
+        }
     }
 
     #[test]

@@ -42,6 +42,7 @@ fn chunked() -> PrefillConfig {
         step_token_budget: 32,
         chunk_tokens: 8,
         fairness: FairnessPolicy::Fair,
+        ..PrefillConfig::default()
     }
 }
 
@@ -217,6 +218,7 @@ fn property_random_workloads_chunked_equals_per_token() {
             } else {
                 FairnessPolicy::Fifo
             },
+            ..PrefillConfig::default()
         };
         let work = workload(n, len, seed * 31 + 1);
         let base = run(engine(slots, prefix, PrefillConfig::per_token()), &work);

@@ -1,0 +1,305 @@
+//! End-to-end speculative-decoding tests over the deterministic reference
+//! backend: prompt-lookup drafts verified as chunked attention steps must
+//! be a pure optimization — bit-identical outputs to the non-speculative
+//! PR-2 pipeline (the oracle) — while measurably collapsing decode engine
+//! steps on repetition-heavy workloads.  Runs everywhere tier-1 runs.
+//!
+//! Workload notes: the "repetitive" workload uses a small-vocab reference
+//! model (seed 21) whose greedy decode settles into a short cycle within a
+//! few tokens — the regime prompt-lookup drafting exists for — so drafts
+//! are accepted at a high rate.  The "random" workload uses the default
+//! 512-token vocab, where drafts rarely match; speculation must then cost
+//! nothing correctness-wise (and the rejection path gets exercised hard).
+
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport};
+use flashmla_etap::prefill::{PrefillConfig, SpecPriority};
+use flashmla_etap::runtime::ReferenceModelConfig;
+use flashmla_etap::spec::SpecConfig;
+use flashmla_etap::util::rng::Rng;
+
+const BLOCK: usize = 8;
+
+/// Small-vocab model whose greedy decode cycles quickly (seed chosen for
+/// robust period-2 attractors across workload seeds).
+fn cyclic_model() -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab: 16,
+        n_layers: 2,
+        latent_dim: 8,
+        seed: 21,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+/// Default-vocab model: greedy decode wanders, drafts rarely match.
+fn wide_model() -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab: 64,
+        n_layers: 2,
+        latent_dim: 8,
+        seed: 23,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+fn spec_on(max_draft: usize) -> SpecConfig {
+    SpecConfig {
+        enabled: true,
+        lookback: 64,
+        max_draft,
+    }
+}
+
+fn engine(model: ReferenceModelConfig, slots: usize, spec: SpecConfig) -> Engine {
+    Engine::reference(
+        model,
+        EngineConfig {
+            max_slots: slots,
+            kv_blocks: 256,
+            block_size: BLOCK,
+            spec,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+fn run(mut e: Engine, work: &[(Vec<i32>, usize)]) -> EngineReport {
+    for (p, budget) in work {
+        e.submit(p.clone(), *budget);
+    }
+    e.run_to_completion().unwrap()
+}
+
+/// `n` random prompts over `vocab` (tokens 1..vocab), fixed budget.
+fn workload(n: usize, len: usize, vocab: u64, budget: usize, seed: u64) -> Vec<(Vec<i32>, usize)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let p: Vec<i32> = (0..len).map(|_| rng.range(1, vocab) as i32).collect();
+            (p, budget)
+        })
+        .collect()
+}
+
+#[test]
+fn acceptance_repetitive_workload_saves_steps_bit_identically() {
+    // The PR's acceptance bar: on the repetitive workload, speculation
+    // produces bit-identical outputs with ≥ 1.5x fewer engine steps.
+    let work = workload(4, 24, 16, 48, 42);
+    let base = run(engine(cyclic_model(), 4, SpecConfig::default()), &work);
+    let fast = run(engine(cyclic_model(), 4, spec_on(4)), &work);
+    assert_eq!(base.outputs, fast.outputs, "speculation changed outputs");
+    assert!(
+        fast.steps * 3 <= base.steps * 2,
+        "expected ≥ 1.5x fewer engine steps: {} vs {}",
+        fast.steps,
+        base.steps
+    );
+    let m = &fast.metrics;
+    assert!(m.spec_verify_chunks > 0, "no verifications ran");
+    assert!(m.spec_accepted > 0, "nothing accepted on a cyclic workload");
+    assert!(
+        m.acceptance_rate() > 0.5,
+        "low acceptance on a cyclic workload: {:.2}",
+        m.acceptance_rate()
+    );
+    assert_eq!(
+        m.spec_steps_saved(),
+        m.spec_accepted,
+        "steps saved is the accepted-token count"
+    );
+    // The baseline reports no speculation at all.
+    assert_eq!(base.metrics.spec_verify_chunks, 0);
+    assert_eq!(base.metrics.spec_drafted, 0);
+    // Token accounting must agree: same tokens, fewer ticks.
+    assert_eq!(
+        base.metrics.tokens_generated,
+        fast.metrics.tokens_generated
+    );
+}
+
+#[test]
+fn disabled_spec_reproduces_the_nonspeculative_sequence() {
+    // `[engine.spec]` off must be byte-for-byte the PR-2 pipeline: not
+    // just equal outputs but the identical step/chunk schedule and zero
+    // speculation side effects.  (`SpecConfig::default()` is disabled, so
+    // the default engine IS the oracle; this pins that contract.)
+    let work = workload(4, 24, 16, 32, 7);
+    let a = run(engine(cyclic_model(), 4, SpecConfig::default()), &work);
+    let b = run(
+        engine(
+            cyclic_model(),
+            4,
+            SpecConfig {
+                enabled: false,
+                lookback: 64,
+                max_draft: 4,
+            },
+        ),
+        &work,
+    );
+    assert_eq!(a.outputs, b.outputs);
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.recompositions, b.recompositions);
+    assert_eq!(a.metrics.chunk_hist, b.metrics.chunk_hist);
+    assert_eq!(a.metrics.tokens_generated, b.metrics.tokens_generated);
+    assert_eq!(a.metrics.spec_verify_chunks, 0);
+    assert_eq!(b.metrics.spec_verify_chunks, 0);
+}
+
+#[test]
+fn random_workload_rejections_stay_bit_identical() {
+    // Wide vocab: drafts almost never match the model's continuation, so
+    // this drives the rejection/rollback path.  Outputs must still be
+    // exactly the oracle's, and every tick still makes progress.
+    let work = workload(5, 20, 63, 24, 99);
+    let base = run(engine(wide_model(), 4, SpecConfig::default()), &work);
+    let fast = run(engine(wide_model(), 4, spec_on(4)), &work);
+    assert_eq!(base.outputs, fast.outputs, "rejections corrupted outputs");
+    assert!(
+        fast.steps <= base.steps,
+        "speculation must never add engine steps at default budget: {} vs {}",
+        fast.steps,
+        base.steps
+    );
+}
+
+#[test]
+fn speculative_runs_are_deterministic() {
+    let work = workload(4, 24, 16, 40, 3);
+    let a = run(engine(cyclic_model(), 4, spec_on(4)), &work);
+    let b = run(engine(cyclic_model(), 4, spec_on(4)), &work);
+    assert_eq!(a.outputs, b.outputs);
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.metrics.spec_drafted, b.metrics.spec_drafted);
+    assert_eq!(a.metrics.spec_accepted, b.metrics.spec_accepted);
+    assert_eq!(a.metrics.accept_hist, b.metrics.accept_hist);
+}
+
+#[test]
+fn speculation_composes_with_chunked_prefill_and_prefix_cache() {
+    // Shared-prefix prompts + chunked prefill + speculation, all at once:
+    // outputs must match the fully-vanilla oracle, and both optimizations
+    // must actually fire.
+    let mut rng = Rng::new(5);
+    let system: Vec<i32> = (0..2 * BLOCK).map(|_| rng.range(1, 16) as i32).collect();
+    let work: Vec<(Vec<i32>, usize)> = (0..6)
+        .map(|_| {
+            let mut p = system.clone();
+            p.extend((0..6).map(|_| rng.range(1, 16) as i32));
+            (p, 32)
+        })
+        .collect();
+    let base = run(engine(cyclic_model(), 2, SpecConfig::default()), &work);
+    let fast = run(engine(cyclic_model(), 2, spec_on(4)), &work);
+    assert_eq!(base.outputs, fast.outputs);
+    assert!(fast.metrics.prefix.hits > 0, "prefix cache must fire");
+    assert!(fast.metrics.spec_accepted > 0, "speculation must fire");
+    assert_eq!(
+        base.metrics.prefix.hits, fast.metrics.prefix.hits,
+        "speculation must not change the prefix hit pattern"
+    );
+}
+
+#[test]
+fn property_random_sweeps_match_the_oracle() {
+    // Randomized sweep over workload shapes, draft lengths, budgets,
+    // priorities and both models: outputs must always match the
+    // non-speculative oracle exactly.
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0x5BEC + seed);
+        let cyclic = rng.range(0, 2) == 0;
+        let (model, vocab) = if cyclic {
+            (cyclic_model(), 16u64)
+        } else {
+            (wide_model(), 63u64)
+        };
+        let n = 2 + rng.range(0, 4) as usize;
+        let len = 4 + rng.range(0, 24) as usize;
+        let budget = 4 + rng.range(0, 40) as usize;
+        let slots = 1 + rng.range(0, 4) as usize;
+        let max_draft = 1 + rng.range(0, 6) as usize;
+        let spec = SpecConfig {
+            enabled: true,
+            lookback: 16 + rng.range(0, 64) as usize,
+            max_draft,
+        };
+        let prefill = PrefillConfig {
+            step_token_budget: rng.range(0, 40) as usize,
+            spec_priority: if rng.range(0, 2) == 0 {
+                SpecPriority::Spec
+            } else {
+                SpecPriority::Prefill
+            },
+            ..PrefillConfig::default()
+        };
+        let work = workload(n, len, vocab, budget, seed * 17 + 3);
+        let mk = |spec: SpecConfig| {
+            Engine::reference(
+                model.clone(),
+                EngineConfig {
+                    max_slots: slots,
+                    kv_blocks: 256,
+                    block_size: BLOCK,
+                    prefill,
+                    spec,
+                    ..EngineConfig::default()
+                },
+            )
+            .unwrap()
+        };
+        let base = run(mk(SpecConfig::default()), &work);
+        let fast = run(mk(spec), &work);
+        assert_eq!(
+            base.outputs, fast.outputs,
+            "outputs diverged (seed {seed}, cyclic {cyclic}, slots {slots}, \
+             max_draft {max_draft})"
+        );
+        assert_eq!(
+            base.metrics.tokens_generated, fast.metrics.tokens_generated,
+            "token accounting diverged (seed {seed})"
+        );
+    }
+}
+
+#[test]
+fn max_draft_one_still_works() {
+    // Degenerate k=1: each verification carries a single draft token.
+    let work = workload(3, 16, 16, 32, 11);
+    let base = run(engine(cyclic_model(), 2, SpecConfig::default()), &work);
+    let fast = run(engine(cyclic_model(), 2, spec_on(1)), &work);
+    assert_eq!(base.outputs, fast.outputs);
+    assert!(fast.metrics.spec_accepted > 0);
+    assert!(fast.steps < base.steps);
+}
+
+#[test]
+fn eos_inside_an_accepted_draft_stops_exactly() {
+    // With an EOS token in a cyclic model's output alphabet, speculation
+    // must stop generation at exactly the same token as plain decode —
+    // accepted drafts past EOS are discarded.
+    let work = workload(4, 24, 16, 48, 42);
+    let mk = |spec: SpecConfig| {
+        Engine::reference(
+            cyclic_model(),
+            EngineConfig {
+                max_slots: 2,
+                kv_blocks: 256,
+                block_size: BLOCK,
+                // Token 5 appears in this model's cycles (seed-21 decode
+                // commonly alternates 5/4), so some request hits EOS
+                // mid-stream; the rest stop on budget.
+                eos_token: Some(5),
+                spec,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap()
+    };
+    let base = run(mk(SpecConfig::default()), &work);
+    let fast = run(mk(spec_on(4)), &work);
+    assert_eq!(base.outputs, fast.outputs, "EOS semantics diverged");
+}
