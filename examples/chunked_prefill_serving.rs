@@ -17,7 +17,7 @@
 //!     cargo run --release --example chunked_prefill_serving
 //!     cargo run --release --example chunked_prefill_serving -- --shared-prefix 24
 
-use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport};
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport, GenerationRequest};
 use flashmla_etap::prefill::{FairnessPolicy, PrefillConfig};
 use flashmla_etap::runtime::ReferenceModelConfig;
 use flashmla_etap::util::argparse::ArgParser;
@@ -70,7 +70,7 @@ fn run(
         },
     )?;
     for (p, &b) in w.prompts.iter().zip(&w.budgets) {
-        engine.submit(p.clone(), b);
+        engine.submit(GenerationRequest::new(p.clone(), b));
     }
     engine.run_to_completion()
 }

@@ -21,7 +21,7 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport, Router};
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport, GenerationRequest, Router};
 use flashmla_etap::runtime::ReferenceModelConfig;
 use flashmla_etap::util::argparse::ArgParser;
 use flashmla_etap::util::rng::Rng;
@@ -83,7 +83,7 @@ fn run(backend: Backend, w: &Workload) -> anyhow::Result<(Vec<Vec<i32>>, f64, St
         let req = router
             .admit(prompt.clone(), budget, 0)
             .map_err(|e| anyhow::anyhow!("admission: {e}"))?;
-        ids.push(engine.submit(req.prompt, req.max_new_tokens));
+        ids.push(engine.submit(GenerationRequest::new(req.prompt, req.max_new_tokens)).id());
     }
     let t0 = Instant::now();
     let report: EngineReport = engine.run_to_completion()?;

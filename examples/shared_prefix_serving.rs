@@ -17,7 +17,7 @@
 //!
 //!     cargo run --release --example shared_prefix_serving
 
-use flashmla_etap::coordinator::{EngineConfig, Engine, EngineReport};
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport, GenerationRequest};
 use flashmla_etap::runtime::ReferenceModelConfig;
 use flashmla_etap::util::argparse::ArgParser;
 use flashmla_etap::util::rng::Rng;
@@ -68,7 +68,7 @@ fn run(w: &Workload, slots: usize, prefix_cache: bool) -> anyhow::Result<EngineR
         },
     )?;
     for (p, &b) in w.prompts.iter().zip(&w.budgets) {
-        engine.submit(p.clone(), b);
+        engine.submit(GenerationRequest::new(p.clone(), b));
     }
     engine.run_to_completion()
 }

@@ -19,7 +19,7 @@
 //!     cargo run --release --example speculative_serving
 //!     cargo run --release --example speculative_serving -- --max-draft 8
 
-use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport};
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport, GenerationRequest};
 use flashmla_etap::runtime::ReferenceModelConfig;
 use flashmla_etap::spec::SpecConfig;
 use flashmla_etap::util::argparse::ArgParser;
@@ -58,7 +58,7 @@ fn run(
         },
     )?;
     for (p, b) in work {
-        engine.submit(p.clone(), *b);
+        engine.submit(GenerationRequest::new(p.clone(), *b));
     }
     // Drive ticks manually so the first few plans can be shown (the
     // planner's `plan_summary` — d=decode, p=prefill, v=verify slots).
@@ -123,6 +123,7 @@ fn main() -> anyhow::Result<()> {
         enabled: true,
         lookback,
         max_draft,
+        ..SpecConfig::default()
     };
     let fast = run(&work, slots, spec, show_plans)?;
     println!("    {}", fast.metrics.report());

@@ -1,0 +1,188 @@
+//! Streaming serving: request handles, per-request sampling, token
+//! events, and mid-flight cancellation — the serving-API demo.
+//!
+//! Two requests stream interleaved through the event-driven engine loop
+//! (`Engine::poll_events`); one is cancelled mid-decode.  The run asserts
+//! the claims that matter (`docs/serving-api.md`):
+//!
+//! * **greedy-path bit-identity** — the surviving request's streamed
+//!   tokens equal the batch-mode `run_to_completion` output exactly, and
+//!   the cancelled request's partial stream is a prefix of its
+//!   uncancelled output;
+//! * **no KV leak** — after the drain every block is back in the pool;
+//! * **sampling determinism** — a temperature-sampled rerun with the same
+//!   seed reproduces itself bit-for-bit.
+//!
+//!     cargo run --release --example streaming_serving
+//!     cargo run --release --example streaming_serving -- --cancel-at 12
+
+use std::collections::HashMap;
+
+use flashmla_etap::coordinator::{
+    Engine, EngineConfig, FinishReason, GenerationRequest, SamplingParams, StepEvent,
+};
+use flashmla_etap::runtime::ReferenceModelConfig;
+use flashmla_etap::util::argparse::ArgParser;
+use flashmla_etap::util::rng::Rng;
+
+const BLOCK_SIZE: usize = 8;
+const KV_BLOCKS: usize = 64;
+const VOCAB: usize = 64;
+
+fn model() -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab: VOCAB,
+        n_layers: 2,
+        latent_dim: 8,
+        seed: 23,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+fn engine() -> anyhow::Result<Engine> {
+    Engine::reference(
+        model(),
+        EngineConfig {
+            max_slots: 2,
+            kv_blocks: KV_BLOCKS,
+            block_size: BLOCK_SIZE,
+            prefix_cache: false, // exact pool accounting for the leak check
+            ..EngineConfig::default()
+        },
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let p = ArgParser::new(
+        "streaming_serving",
+        "streaming serving demo: token events, cancellation, sampling determinism",
+    )
+    .opt("prompt-len", Some("10"), "prompt length in tokens")
+    .opt("max-new", Some("32"), "generated tokens per request")
+    .opt("cancel-at", Some("8"), "engine step at which request B is cancelled")
+    .opt("seed", Some("42"), "workload rng seed");
+    let a = p.parse_or_exit();
+    let quick = std::env::var("FLASHMLA_BENCH_QUICK").is_ok();
+    let prompt_len = a.get_usize("prompt-len").unwrap();
+    let mut max_new = a.get_usize("max-new").unwrap();
+    if quick {
+        max_new = max_new.min(20);
+    }
+    let cancel_at = a.get_u64("cancel-at").unwrap();
+
+    let mut rng = Rng::new(a.get_u64("seed").unwrap());
+    let mut prompt = || -> Vec<i32> {
+        (0..prompt_len)
+            .map(|_| rng.range(1, VOCAB as u64 - 1) as i32)
+            .collect()
+    };
+    let (pa, pb) = (prompt(), prompt());
+
+    // Batch-mode oracle: both requests run to completion.
+    let (want_a, want_b) = {
+        let mut e = engine()?;
+        let ha = e.submit(GenerationRequest::new(pa.clone(), max_new));
+        let hb = e.submit(GenerationRequest::new(pb.clone(), max_new));
+        let r = e.run_to_completion()?;
+        (r.outputs[&ha.id()].clone(), r.outputs[&hb.id()].clone())
+    };
+
+    // Streaming run: drive steps manually, drain events, cancel B mid-way.
+    println!("[streaming] two interleaved requests, cancelling B at step {cancel_at}\n");
+    let mut e = engine()?;
+    let ha = e.submit(GenerationRequest::new(pa.clone(), max_new));
+    let hb = e.submit(GenerationRequest::new(pb.clone(), max_new));
+    let name = |id: u64| if id == ha.id() { "A" } else { "B" };
+    let mut streamed: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut reasons: HashMap<u64, FinishReason> = HashMap::new();
+    let mut tick = 0u64;
+    while e.has_work() {
+        if tick == cancel_at {
+            anyhow::ensure!(e.cancel(hb.id()), "cancel must land mid-decode");
+            println!("  -- cancel(B) issued at step {tick}");
+        }
+        e.step()?;
+        tick += 1;
+        let mut line: Vec<String> = Vec::new();
+        for ev in e.poll_events() {
+            match ev {
+                StepEvent::Admitted { id } => line.push(format!("{}+", name(id))),
+                StepEvent::Token { id, token } => {
+                    streamed.entry(id).or_default().push(token);
+                    line.push(format!("{}:{token}", name(id)));
+                }
+                StepEvent::Finished { id, reason } => {
+                    reasons.insert(id, reason);
+                    line.push(format!("{}✓{reason:?}", name(id)));
+                }
+                StepEvent::Rejected { id, reason } => {
+                    line.push(format!("{}✗{reason}", name(id)));
+                }
+            }
+        }
+        if tick <= 6 || line.iter().any(|s| s.contains('✓')) {
+            println!("  step {tick:>3}: {}", line.join(" "));
+        }
+    }
+    println!("\n  {}", e.metrics().report());
+
+    // 1. Greedy-path bit-identity for the survivor.
+    let got_a = &streamed[&ha.id()];
+    anyhow::ensure!(
+        got_a == &want_a,
+        "streamed tokens for A diverge from run_to_completion"
+    );
+    println!("\n✓ A streamed {} tokens, bit-identical to batch mode", got_a.len());
+
+    // 2. The cancelled stream is a strict prefix of its uncancelled run.
+    let got_b = &streamed[&hb.id()];
+    anyhow::ensure!(
+        reasons[&hb.id()] == FinishReason::Cancelled,
+        "B must finish as Cancelled, got {:?}",
+        reasons[&hb.id()]
+    );
+    anyhow::ensure!(
+        !got_b.is_empty() && got_b.len() < want_b.len(),
+        "B must be cancelled mid-decode ({} of {} tokens)",
+        got_b.len(),
+        want_b.len()
+    );
+    anyhow::ensure!(
+        got_b[..] == want_b[..got_b.len()],
+        "B's partial stream must be a prefix of its uncancelled output"
+    );
+    println!(
+        "✓ B cancelled after {} of {} tokens; partial stream is an exact prefix",
+        got_b.len(),
+        want_b.len()
+    );
+
+    // 3. No KV leak: every block back in the pool.
+    anyhow::ensure!(
+        e.free_kv_blocks() == KV_BLOCKS,
+        "leaked KV blocks: {} of {} free",
+        e.free_kv_blocks(),
+        KV_BLOCKS
+    );
+    anyhow::ensure!(e.metrics().requests_cancelled == 1);
+    println!("✓ all {KV_BLOCKS} KV blocks returned to the pool");
+
+    // 4. Sampling determinism: same seed, same stream.
+    let sampled = |seed: u64| -> anyhow::Result<Vec<i32>> {
+        let mut e = engine()?;
+        let h = e.submit(
+            GenerationRequest::new(pa.clone(), max_new.min(16))
+                .sampling(SamplingParams::sampled(1.0, seed).with_top_k(32)),
+        );
+        Ok(e.run_to_completion()?.outputs[&h.id()].clone())
+    };
+    let s1 = sampled(7)?;
+    let s2 = sampled(7)?;
+    let s3 = sampled(8)?;
+    anyhow::ensure!(s1 == s2, "same-seed sampled reruns must be bit-identical");
+    anyhow::ensure!(s1 != s3, "different seeds must diverge");
+    anyhow::ensure!(s1 != want_a[..s1.len()], "temperature 1 must leave the greedy path");
+    println!("✓ sampled run (temp 1.0, top-k 32) reproducible by seed, distinct across seeds");
+    Ok(())
+}

@@ -6,7 +6,7 @@
 //!     cargo bench --bench chunked_prefill
 
 use flashmla_etap::bench::Bencher;
-use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport};
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport, GenerationRequest};
 use flashmla_etap::prefill::{FairnessPolicy, PrefillConfig};
 use flashmla_etap::runtime::ReferenceModelConfig;
 use flashmla_etap::util::rng::Rng;
@@ -41,7 +41,7 @@ fn serve(work: &[(Vec<i32>, usize)], prefill: PrefillConfig) -> EngineReport {
     )
     .unwrap();
     for (p, budget) in work {
-        e.submit(p.clone(), *budget);
+        e.submit(GenerationRequest::new(p.clone(), *budget));
     }
     e.run_to_completion().unwrap()
 }

@@ -7,8 +7,8 @@
 use std::path::PathBuf;
 
 use flashmla_etap::coordinator::{
-    Batcher, BatcherConfig, ClusterConfig, ClusterSim, Engine, EngineConfig, Request,
-    TraceRequest,
+    Batcher, BatcherConfig, ClusterConfig, ClusterSim, Engine, EngineConfig, GenerationRequest,
+    Request, TraceRequest,
 };
 use flashmla_etap::bench::Bencher;
 use flashmla_etap::hardware::GpuSpec;
@@ -102,7 +102,7 @@ fn main() -> anyhow::Result<()> {
                 )
                 .unwrap();
                 for i in 0..reqs {
-                    e.submit(vec![(i as i32 % 500) + 1, 7, 9], 6);
+                    e.submit(GenerationRequest::new(vec![(i as i32 % 500) + 1, 7, 9], 6));
                 }
                 e.run_to_completion().unwrap().metrics.tokens_generated
             });

@@ -5,7 +5,7 @@
 //!     cargo bench --bench prefix_cache
 
 use flashmla_etap::bench::Bencher;
-use flashmla_etap::coordinator::{Engine, EngineConfig};
+use flashmla_etap::coordinator::{Engine, EngineConfig, GenerationRequest};
 use flashmla_etap::kvcache::{CacheConfig, PagedLatentCache};
 use flashmla_etap::prefixcache::PrefixTree;
 use flashmla_etap::runtime::ReferenceModelConfig;
@@ -107,7 +107,7 @@ fn main() {
             )
             .unwrap();
             for (p, budget) in &workload {
-                e.submit(p.clone(), *budget);
+                e.submit(GenerationRequest::new(p.clone(), *budget));
             }
             e.run_to_completion().unwrap()
         };

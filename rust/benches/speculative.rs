@@ -11,7 +11,7 @@
 //!     cargo bench --bench speculative
 
 use flashmla_etap::bench::Bencher;
-use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport};
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport, GenerationRequest};
 use flashmla_etap::runtime::ReferenceModelConfig;
 use flashmla_etap::spec::SpecConfig;
 use flashmla_etap::util::rng::Rng;
@@ -60,7 +60,7 @@ fn serve(
     )
     .unwrap();
     for (p, budget) in work {
-        e.submit(p.clone(), *budget);
+        e.submit(GenerationRequest::new(p.clone(), *budget));
     }
     e.run_to_completion().unwrap()
 }
@@ -95,13 +95,14 @@ fn main() -> anyhow::Result<()> {
                         enabled: true,
                         lookback: LOOKBACK,
                         max_draft: 4,
+                        ..SpecConfig::default()
                     },
                     ..EngineConfig::default()
                 },
             )
             .unwrap();
             for (p, budget) in &work {
-                e.submit(p.clone(), *budget);
+                e.submit(GenerationRequest::new(p.clone(), *budget));
             }
             for tick in 1..=6 {
                 if !e.has_work() {
@@ -117,6 +118,7 @@ fn main() -> anyhow::Result<()> {
                 enabled: true,
                 lookback: LOOKBACK,
                 max_draft: k,
+                ..SpecConfig::default()
             };
             let report = serve(&m, &work, spec);
             assert_eq!(

@@ -122,6 +122,9 @@ impl Config {
         if let Some(n) = sp.get("max_draft").as_usize() {
             c.engine.spec.max_draft = n;
         }
+        if let Some(b) = sp.get("adaptive").as_bool() {
+            c.engine.spec.adaptive = b;
+        }
         c.engine.spec.validate()?;
         let cl = t.get("cluster");
         if let Some(n) = cl.get("gpus").as_usize() {
@@ -256,6 +259,7 @@ fairness = "fifo"
         assert!(!d.enabled, "speculation off by default");
         assert_eq!(d.lookback, 256);
         assert_eq!(d.max_draft, 4);
+        assert!(!d.adaptive, "fixed draft budget by default");
         assert_eq!(
             Config::default().engine.prefill.spec_priority,
             SpecPriority::Spec
@@ -268,12 +272,14 @@ spec_priority = "prefill"
 enabled = true
 lookback = 64
 max_draft = 6
+adaptive = true
 "#;
         let tree = crate::util::toml::parse(doc).unwrap();
         let c = Config::from_tree(&tree).unwrap();
         assert!(c.engine.spec.enabled);
         assert_eq!(c.engine.spec.lookback, 64);
         assert_eq!(c.engine.spec.max_draft, 6);
+        assert!(c.engine.spec.adaptive);
         assert_eq!(c.engine.prefill.spec_priority, SpecPriority::Prefill);
     }
 

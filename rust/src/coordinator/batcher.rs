@@ -159,15 +159,29 @@ impl Batcher {
             .unwrap_or(self.cfg.kv_buckets.last().unwrap())
     }
 
-    /// Abort everything still queued (drain shutdown).
-    pub fn abort_queued(&mut self) -> Vec<RequestId> {
-        self.queue.drain(..).map(|r| r.id).collect()
+    /// Abort everything still queued (drain shutdown).  The engine turns
+    /// each drained request into a `Rejected` event.
+    pub fn abort_queued(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
     }
 
     /// Remove and return the head of the queue without admitting it (the
     /// engine rejects requests that can never fit the block pool).
     pub fn reject_front(&mut self) -> Option<Request> {
         self.queue.pop_front()
+    }
+
+    /// Remove a queued request by id (client cancellation), preserving the
+    /// FIFO order of everything else.  `None` if the id is not queued.
+    pub fn remove_queued(&mut self, id: RequestId) -> Option<Request> {
+        let pos = self.queue.iter().position(|r| r.id == id)?;
+        self.queue.remove(pos)
+    }
+
+    /// Mutable access to an active request by id (cancellation of a
+    /// running request marks it finished in place; the next reap frees it).
+    pub fn find_active_mut(&mut self, id: RequestId) -> Option<&mut Request> {
+        self.active.iter_mut().find(|r| r.id == id)
     }
 }
 
@@ -267,6 +281,44 @@ mod tests {
             kv_buckets: vec![128],
         })
         .is_err());
+    }
+
+    #[test]
+    fn remove_queued_preserves_order_of_the_rest() {
+        let mut b = Batcher::new(cfg()).unwrap();
+        for i in 0..4 {
+            b.submit(req(i, 3, 2));
+        }
+        assert_eq!(b.remove_queued(2).map(|r| r.id), Some(2));
+        assert!(b.remove_queued(2).is_none(), "already gone");
+        assert!(b.remove_queued(99).is_none(), "unknown id");
+        assert_eq!(b.admit(|_| true), 3);
+        let ids: Vec<_> = b.active().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 3], "FIFO order survives the removal");
+    }
+
+    #[test]
+    fn abort_queued_drains_in_order_and_spares_active() {
+        let mut b = Batcher::new(cfg()).unwrap();
+        for i in 0..6 {
+            b.submit(req(i, 3, 2));
+        }
+        b.admit(|_| true); // 0..4 active, 4..6 queued
+        let drained: Vec<_> = b.abort_queued().iter().map(|r| r.id).collect();
+        assert_eq!(drained, vec![4, 5]);
+        assert_eq!(b.queued(), 0);
+        assert_eq!(b.active().len(), 4, "active set untouched");
+    }
+
+    #[test]
+    fn find_active_mut_by_id() {
+        let mut b = Batcher::new(cfg()).unwrap();
+        b.submit(req(7, 3, 2));
+        b.admit(|_| true);
+        assert!(b.find_active_mut(8).is_none());
+        let r = b.find_active_mut(7).expect("active");
+        r.finish(super::super::request::FinishReason::Cancelled);
+        assert_eq!(b.reap().len(), 1);
     }
 
     #[test]

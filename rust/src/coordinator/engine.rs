@@ -53,11 +53,37 @@
 //! step sequence is byte-for-byte the non-speculative pipeline.  See
 //! `docs/speculative-decoding.md`.
 //!
+//! **Serving API.**  Clients talk to the engine through handles and
+//! events (`docs/serving-api.md`): [`submit`](Engine::submit) takes a
+//! [`GenerationRequest`] (prompt, budget, stop tokens, per-request
+//! [`SamplingParams`](super::SamplingParams)) and returns a
+//! [`RequestHandle`]; every
+//! [`step`](Engine::step) appends [`StepEvent`]s (`Admitted` / `Token` /
+//! `Finished` / `Rejected`) drained via [`poll_events`](Engine::poll_events);
+//! [`take_finished`](Engine::take_finished) hands out terminal results
+//! without consuming the engine; [`cancel`](Engine::cancel) stops a
+//! queued or running request, freeing its KV blocks through the normal
+//! refcounted reap path and re-inserting its completed prompt prefix
+//! into the radix tree.  [`run_to_completion`](Engine::run_to_completion)
+//! survives as a thin batch-mode shim over the event loop.
+//!
+//! **Sampling.**  Token selection is engine-side ([`Sampler`]) over the
+//! backend's logits row: greedy by default (bit-identical to the
+//! pre-sampler pipeline), or seeded temperature/top-k/top-p per request.
+//! Sampled requests auto-disable speculation for themselves — greedy
+//! verification cannot verify sampled tokens (rejection sampling is the
+//! ROADMAP follow-on) — and the engine records why in the metrics
+//! (`spec_disabled_sampling`).  A tick that contains any sampled slot
+//! additionally suppresses drafting batch-wide (`spec_suppressed_ticks`
+//! counts the ticks where a greedy decoding co-resident lost its
+//! drafting opportunity): verification ticks return per-position
+//! argmaxes, but a sampled slot needs its full logits row.
+//!
 //! Decode steps execute on one of two backends behind
 //! [`StepRunner`]: the PJRT AOT artifacts (production path) or the
 //! deterministic pure-Rust reference model (tests, examples, CI).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
@@ -69,12 +95,16 @@ use crate::prefixcache::PrefixTree;
 use crate::runtime::{
     DecodeRunner, ReferenceModel, ReferenceModelConfig, Runtime, StepRunner,
 };
-use crate::spec::{PromptLookupDrafter, SpecConfig};
+use crate::spec::{AdaptiveDraft, PromptLookupDrafter, SpecConfig};
 use crate::util::stats::Welford;
 
 use super::batcher::{Batcher, BatcherConfig};
+use super::events::{FinishedRequest, RejectReason, StepEvent};
 use super::metrics::ServingMetrics;
-use super::request::{Request, RequestId, RequestState};
+use super::request::{
+    FinishReason, GenerationRequest, Request, RequestHandle, RequestId, RequestState,
+};
+use super::sampler::Sampler;
 
 /// Engine configuration.
 #[derive(Clone, Debug)]
@@ -166,6 +196,17 @@ pub struct Engine {
     spec: SpecConfig,
     /// One self-drafter per active decoding request (spec enabled only).
     drafters: HashMap<RequestId, PromptLookupDrafter>,
+    /// One adaptive draft-budget controller per active decoding request
+    /// (`spec.adaptive` only).
+    adaptive: HashMap<RequestId, AdaptiveDraft>,
+    /// One token sampler per active request, created lazily on its first
+    /// emitted token and dropped at reap.  Greedy samplers are stateless;
+    /// sampled ones own the request's seeded PRNG stream.
+    samplers: HashMap<RequestId, Sampler>,
+    /// Step events since the last [`poll_events`](Self::poll_events).
+    events: VecDeque<StepEvent>,
+    /// Terminal results since the last [`take_finished`](Self::take_finished).
+    finished_buf: Vec<FinishedRequest>,
     /// The last executed tick's (demands, plan), moved in after the tick
     /// (no extra allocation) so [`last_plan_summary`](Self::last_plan_summary)
     /// can format on demand — hot ticks never pay for a log string.
@@ -307,6 +348,10 @@ impl Engine {
             kv_buckets,
             spec: effective_spec,
             drafters: HashMap::new(),
+            adaptive: HashMap::new(),
+            samplers: HashMap::new(),
+            events: VecDeque::new(),
+            finished_buf: Vec::new(),
             last_demands: Vec::new(),
             last_plan: Vec::new(),
             sync_cost: Welford::new(),
@@ -319,23 +364,137 @@ impl Engine {
         self.kv_buckets.last().copied().unwrap_or(1) - 1
     }
 
-    /// Submit a request; returns its id.
-    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> RequestId {
+    /// Submit a request; returns its handle.  The config-level EOS token
+    /// (when set) is folded into the request's stop-token list, and a
+    /// sampled request under an effective-spec engine is counted in
+    /// `spec_disabled_sampling` — greedy verification cannot verify its
+    /// tokens, so it will never carry a draft.
+    pub fn submit(&mut self, req: GenerationRequest) -> RequestHandle {
         let id = self.next_id;
         self.next_id += 1;
-        let mut r = Request::new(id, prompt, max_new_tokens);
+        let mut r = req.into_request(id);
         if let Some(eos) = self.cfg.eos_token {
-            r = r.with_eos(eos);
+            if !r.stop_tokens.contains(&eos) {
+                r.stop_tokens.push(eos);
+            }
+        }
+        if self.spec.enabled && !r.sampling.is_greedy() {
+            self.metrics.spec_disabled_sampling += 1;
         }
         self.submit_step.insert(id, self.metrics.steps);
         self.batcher.submit(r);
-        id
+        RequestHandle::new(id)
+    }
+
+    /// Cancel a request by id.  Covers both lifecycles:
+    ///
+    /// * **queued** — removed immediately: empty output, a
+    ///   `Finished { reason: Cancelled }` event, no slot ever held;
+    /// * **running** — marked finished in place; the next
+    ///   [`step`](Self::step) reaps it exactly like a natural finish,
+    ///   freeing its KV blocks through the refcounted `free_seq` path and
+    ///   emitting the `Finished` event with its partial output.  If the
+    ///   request had completed prefill, its prompt's whole synced blocks
+    ///   are re-inserted into the prefix tree first, so the prefill work
+    ///   stays sharable after the client walks away.
+    ///
+    /// Returns `false` when the id is unknown, already finished, or
+    /// already cancelled.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(mut r) = self.batcher.remove_queued(id) {
+            r.finish(FinishReason::Cancelled);
+            self.metrics.requests_cancelled += 1;
+            self.retire_unstarted(
+                r,
+                StepEvent::Finished {
+                    id,
+                    reason: FinishReason::Cancelled,
+                },
+            );
+            return true;
+        }
+        let Some(r) = self.batcher.find_active_mut(id) else {
+            return false;
+        };
+        if r.is_finished() {
+            return false;
+        }
+        let had_prefilled = r.state == RequestState::Decoding;
+        let prompt = r.prompt.clone();
+        r.finish(FinishReason::Cancelled);
+        self.metrics.requests_cancelled += 1;
+        if had_prefilled {
+            self.insert_prompt_prefix(id, &prompt);
+        }
+        true
+    }
+
+    /// Drain the admission queue (shutdown / load-shed path): every queued
+    /// request is rejected with a `Rejected { reason: Shutdown }` event
+    /// and an empty output; running requests are untouched.  Returns the
+    /// number drained.
+    pub fn abort_queued(&mut self) -> usize {
+        let drained = self.batcher.abort_queued();
+        let n = drained.len();
+        for mut r in drained {
+            r.finish(FinishReason::Aborted);
+            self.metrics.requests_rejected += 1;
+            let id = r.id;
+            self.retire_unstarted(
+                r,
+                StepEvent::Rejected {
+                    id,
+                    reason: RejectReason::Shutdown,
+                },
+            );
+        }
+        n
+    }
+
+    /// Terminal bookkeeping for a request that never held a slot (queue
+    /// rejection, queue drain, queued cancellation): latency metrics,
+    /// empty output, the event, and the finished buffer.
+    fn retire_unstarted(&mut self, r: Request, event: StepEvent) {
+        self.metrics.on_finish(&r);
+        if let Some(s0) = self.submit_step.remove(&r.id) {
+            self.metrics.on_request_done_steps(self.metrics.steps - s0);
+        }
+        self.events.push_back(event);
+        self.finished_buf.push(FinishedRequest {
+            id: r.id,
+            tokens: Vec::new(),
+            reason: r.finish_reason.expect("retired request has a reason"),
+        });
+        self.outputs.insert(r.id, Vec::new());
+    }
+
+    /// Drain the events emitted since the last poll (every
+    /// [`step`](Self::step), [`cancel`](Self::cancel) and
+    /// [`abort_queued`](Self::abort_queued) appends; see
+    /// [`StepEvent`] for the ordering guarantees).
+    pub fn poll_events(&mut self) -> Vec<StepEvent> {
+        self.events.drain(..).collect()
+    }
+
+    /// Drain the terminal results accumulated since the last call —
+    /// the non-consuming complement of [`into_report`](Self::into_report):
+    /// the engine keeps serving, and each result carries the request's
+    /// full token vector and finish reason.
+    pub fn take_finished(&mut self) -> Vec<FinishedRequest> {
+        std::mem::take(&mut self.finished_buf)
     }
 
     /// Run until all submitted work completes; returns the report.
+    ///
+    /// Batch-mode compatibility shim over the event loop: it drives
+    /// [`step`](Self::step) and discards the event stream each tick (the
+    /// outputs map carries the same tokens), so pre-event callers migrate
+    /// by changing only their submit call sites.
     pub fn run_to_completion(mut self) -> anyhow::Result<EngineReport> {
         while self.has_work() {
             self.step()?;
+            self.events.clear();
+            self.finished_buf.clear();
         }
         Ok(self.into_report())
     }
@@ -393,7 +552,9 @@ impl Engine {
     pub fn step(&mut self) -> anyhow::Result<bool> {
         let t0 = Instant::now();
 
-        // 1. Reap finished requests.
+        // 1. Reap finished requests (natural finishes and running
+        // cancellations alike — `cancel` only marks; the blocks are freed
+        // here, through the same refcounted path as every other exit).
         let finished = self.batcher.reap();
         let mut composition_changed = !finished.is_empty();
         for r in finished {
@@ -402,10 +563,22 @@ impl Engine {
                 self.store.free_seq(seq);
             }
             self.synced.remove(&r.id);
-            self.submit_step.remove(&r.id);
+            if let Some(s0) = self.submit_step.remove(&r.id) {
+                self.metrics.on_request_done_steps(self.metrics.steps - s0);
+            }
             self.inserted.remove(&r.id);
             self.drafters.remove(&r.id);
-            self.outputs.insert(r.id, r.generated.clone());
+            self.adaptive.remove(&r.id);
+            self.samplers.remove(&r.id);
+            let reason = r.finish_reason.expect("finished request has a reason");
+            self.events.push_back(StepEvent::Finished { id: r.id, reason });
+            self.finished_buf.push(FinishedRequest {
+                id: r.id,
+                tokens: r.generated.clone(),
+                reason,
+            });
+            // `r` is owned and dropped here: move, don't clone again.
+            self.outputs.insert(r.id, r.generated);
         }
 
         // 1b. Abort queued requests that can never fit: a request whose
@@ -420,10 +593,16 @@ impl Engine {
                 break;
             }
             let mut r = self.batcher.reject_front().expect("front exists");
-            r.finish(super::request::FinishReason::Aborted);
-            self.metrics.on_finish(&r);
-            self.submit_step.remove(&r.id);
-            self.outputs.insert(r.id, Vec::new());
+            r.finish(FinishReason::Aborted);
+            self.metrics.requests_rejected += 1;
+            let id = r.id;
+            self.retire_unstarted(
+                r,
+                StepEvent::Rejected {
+                    id,
+                    reason: RejectReason::KvCapacity,
+                },
+            );
         }
 
         // 2a. Under pool pressure, evict cold prefix-cache leaves so the
@@ -487,6 +666,10 @@ impl Engine {
         });
         if admitted > 0 {
             composition_changed = true;
+            let active = self.batcher.active();
+            for r in &active[active.len() - admitted..] {
+                self.events.push_back(StepEvent::Admitted { id: r.id });
+            }
         }
 
         if self.batcher.active().is_empty() {
@@ -500,28 +683,60 @@ impl Engine {
         // rejected draft simply reappears shorter or not at all.  Tokens
         // past the generation budget are never drafted: plain decode could
         // not emit them, so they could never be accepted.
+        // A sampled request never drafts (it was counted in
+        // `spec_disabled_sampling` at submit), and its mere presence in
+        // the batch suppresses drafting for the whole tick: a tick with
+        // any draft executes through `verify_chunk`, which returns
+        // per-position argmaxes — but a sampled slot needs its full
+        // logits row to draw from.  Greedy co-residents resume drafting
+        // the tick after the last sampled request leaves.
         if self.spec.enabled {
-            let spec_cfg = self.spec;
-            for r in self.batcher.active_mut() {
-                if r.state != RequestState::Decoding {
-                    continue;
+            let any_sampled = self.batcher.active().iter().any(|r| !r.sampling.is_greedy());
+            if any_sampled {
+                // Count only ticks where a greedy co-resident actually
+                // lost a drafting opportunity — a batch of nothing but
+                // sampled/prefilling slots had nothing to suppress.
+                let suppressible = self
+                    .batcher
+                    .active()
+                    .iter()
+                    .any(|r| r.state == RequestState::Decoding && r.sampling.is_greedy());
+                if suppressible {
+                    self.metrics.spec_suppressed_ticks += 1;
                 }
-                let d = self
-                    .drafters
-                    .entry(r.id)
-                    .or_insert_with(|| PromptLookupDrafter::new(&spec_cfg));
-                while (d.observed() as usize) < r.prompt.len() + r.generated.len() {
-                    let i = d.observed() as usize;
-                    d.observe(if i < r.prompt.len() {
-                        r.prompt[i]
-                    } else {
-                        r.generated[i - r.prompt.len()]
-                    });
+                for r in self.batcher.active_mut() {
+                    r.draft.clear();
                 }
-                let mut draft = d.draft();
-                let room = r.max_new_tokens - r.generated.len();
-                draft.truncate(room.saturating_sub(1));
-                r.draft = draft;
+            } else {
+                let spec_cfg = self.spec;
+                for r in self.batcher.active_mut() {
+                    if r.state != RequestState::Decoding {
+                        continue;
+                    }
+                    let d = self
+                        .drafters
+                        .entry(r.id)
+                        .or_insert_with(|| PromptLookupDrafter::new(&spec_cfg));
+                    while (d.observed() as usize) < r.prompt.len() + r.generated.len() {
+                        let i = d.observed() as usize;
+                        d.observe(if i < r.prompt.len() {
+                            r.prompt[i]
+                        } else {
+                            r.generated[i - r.prompt.len()]
+                        });
+                    }
+                    let mut draft = d.draft();
+                    if spec_cfg.adaptive {
+                        let a = self
+                            .adaptive
+                            .entry(r.id)
+                            .or_insert_with(|| AdaptiveDraft::new(spec_cfg.max_draft));
+                        draft.truncate(a.budget());
+                    }
+                    let room = r.max_new_tokens - r.generated.len();
+                    draft.truncate(room.saturating_sub(1));
+                    r.draft = draft;
+                }
             }
         }
 
@@ -648,33 +863,53 @@ impl Engine {
             .expect("runner loaded at recompose");
         let vocab = runner.vocab();
         let spec_tick = fed.iter().any(|&m| m > 0);
-        let (argmaxes, new_cache) = if spec_tick {
-            runner.verify_chunk(&chunks, &live.cache, &start_pos)?
+        // A spec tick returns per-position argmaxes (all slots are greedy
+        // — drafting was suppressed otherwise); a plain tick keeps the
+        // raw logits rows so each slot's request samples its own token.
+        let (argmaxes, logits, new_cache) = if spec_tick {
+            let (am, cache) = runner.verify_chunk(&chunks, &live.cache, &start_pos)?;
+            (am, Vec::new(), cache)
         } else {
-            let (logits, cache) = runner.prefill_chunk(&chunks, &live.cache, &start_pos)?;
-            let am: Vec<Vec<i32>> = (0..b)
-                .map(|s| vec![DecodeRunner::argmax_row(&logits, vocab, s)])
-                .collect();
-            (am, cache)
+            let (lg, cache) = runner.prefill_chunk(&chunks, &live.cache, &start_pos)?;
+            (Vec::new(), lg, cache)
         };
 
-        // 6. Advance request state machines.  Each slot's final argmax is
-        // that of its *last* consumed token's logits; for a chunk that
-        // reaches the end of its prompt it is the first generated token,
-        // exactly as in the per-token pipeline.  Verification slots accept
-        // the longest draft prefix matching the per-position argmaxes.
+        // 6. Advance request state machines.  Each slot's next token comes
+        // from its *last* consumed position: on a spec tick the final
+        // greedy argmax, otherwise the slot's own sampler over its logits
+        // row (greedy samplers reproduce `argmax_row` bit-for-bit); for a
+        // chunk that reaches the end of its prompt it is the first
+        // generated token, exactly as in the per-token pipeline.
+        // Verification slots accept the longest draft prefix matching the
+        // per-position argmaxes.  Every appended token becomes a `Token`
+        // event, in generation order.
         let mut new_tokens = 0usize;
         let mut chunk_sizes: Vec<usize> = Vec::new();
         let mut first_tokens: Vec<RequestId> = Vec::new();
-        let mut verified: Vec<(usize, usize)> = Vec::new();
+        let mut verified: Vec<(RequestId, usize, usize)> = Vec::new();
         let mut rollbacks: Vec<(RequestId, usize)> = Vec::new();
         // Same `batcher.active` order the plan was built from above (no
         // reap/admit between), so `plan[i]` still lines up.
+        let samplers = &mut self.samplers;
+        let events = &mut self.events;
         for (i, r) in self.batcher.active_mut().iter_mut().enumerate() {
             let slot = by_id[&r.id];
             let k = plan[i];
-            let sampled = *argmaxes[slot].last().expect("active slot has a chunk");
+            let before = r.generated.len();
             if r.state == RequestState::Prefilling {
+                let completes = r.prefill_pos + k == r.prompt.len();
+                // The sampler only runs — and only consumes PRNG state —
+                // for positions whose token is actually emitted; the
+                // argument of a mid-prompt chunk is discarded entirely.
+                let sampled = if !completes {
+                    0
+                } else if spec_tick {
+                    *argmaxes[slot].last().expect("active slot has a chunk")
+                } else {
+                    let row = &logits[slot * vocab..(slot + 1) * vocab];
+                    let s = samplers.entry(r.id).or_insert_with(|| Sampler::new(&r.sampling));
+                    s.sample(row)
+                };
                 r.advance_chunk(k, sampled);
                 chunk_sizes.push(k);
                 if r.state != RequestState::Prefilling {
@@ -686,13 +921,19 @@ impl Engine {
                 let outcome = r.apply_verification(fed[i], &argmaxes[slot]);
                 new_tokens += outcome.emitted;
                 if fed[i] > 0 {
-                    verified.push((outcome.drafted, outcome.accepted));
+                    verified.push((r.id, outcome.drafted, outcome.accepted));
                     rollbacks.push((r.id, r.context_len()));
                 }
             } else {
                 debug_assert_eq!(k, 1, "decode slots consume exactly one token");
+                let row = &logits[slot * vocab..(slot + 1) * vocab];
+                let s = samplers.entry(r.id).or_insert_with(|| Sampler::new(&r.sampling));
+                let sampled = s.sample(row);
                 r.advance(sampled);
                 new_tokens += 1;
+            }
+            for &t in &r.generated[before..] {
+                events.push_back(StepEvent::Token { id: r.id, token: t });
             }
         }
         self.live.as_mut().unwrap().cache = new_cache;
@@ -720,8 +961,13 @@ impl Engine {
                 *s = (*s).min(ctx);
             }
         }
-        for (drafted, accepted) in verified {
+        for (rid, drafted, accepted) in verified {
             self.metrics.on_verify(drafted, accepted);
+            if self.spec.adaptive {
+                if let Some(a) = self.adaptive.get_mut(&rid) {
+                    a.on_verify(drafted, accepted);
+                }
+            }
         }
 
         let active = self.batcher.active().len();
@@ -733,7 +979,9 @@ impl Engine {
             &chunk_sizes,
         );
         for id in first_tokens {
-            if let Some(s0) = self.submit_step.remove(&id) {
+            // `submit_step` survives until the request terminates (it also
+            // feeds the e2e-steps histogram at reap).
+            if let Some(&s0) = self.submit_step.get(&id) {
                 self.metrics.on_first_token_step(self.metrics.steps - s0);
             }
         }
@@ -789,7 +1037,6 @@ impl Engine {
         // immutable, so later requests can share them.  Dedup is the
         // tree's job; `inserted` just avoids rewalking every recompose.
         if self.prefix.is_some() {
-            let block_size = self.cfg.block_size;
             let candidates: Vec<(RequestId, Vec<i32>)> = self
                 .batcher
                 .active()
@@ -799,17 +1046,8 @@ impl Engine {
                 })
                 .map(|r| (r.id, r.prompt.clone()))
                 .collect();
-            let tree = self.prefix.as_mut().expect("checked above");
             for (rid, prompt) in candidates {
-                let Some(&seq) = self.seq_of.get(&rid) else { continue };
-                let aligned = (prompt.len() / block_size) * block_size;
-                let synced = self.synced.get(&rid).copied().unwrap_or(0);
-                if aligned == 0 || synced < aligned {
-                    continue;
-                }
-                let chain = self.store.blocks_of(seq)[..aligned / block_size].to_vec();
-                tree.insert(&prompt[..aligned], &chain, &mut self.store);
-                self.inserted.insert(rid);
+                self.insert_prompt_prefix(rid, &prompt);
             }
         }
 
@@ -901,9 +1139,43 @@ impl Engine {
         Ok(())
     }
 
+    /// Insert `prompt`'s whole, already-synced blocks into the prefix tree
+    /// on behalf of request `rid` (dedup is the tree's job).  No-op when
+    /// the tree is disabled, the prompt spans less than one block, the
+    /// blocks are not fully synced into the paged store yet, or this
+    /// request's prefix was already inserted.  Called from recompose for
+    /// every freshly-decoding request, and from [`cancel`](Self::cancel)
+    /// so a cancelled request's prefill work stays sharable.
+    fn insert_prompt_prefix(&mut self, rid: RequestId, prompt: &[i32]) {
+        if self.inserted.contains(&rid) {
+            return;
+        }
+        let Some(tree) = self.prefix.as_mut() else {
+            return;
+        };
+        let Some(&seq) = self.seq_of.get(&rid) else {
+            return;
+        };
+        let block_size = self.cfg.block_size;
+        let aligned = (prompt.len() / block_size) * block_size;
+        let synced = self.synced.get(&rid).copied().unwrap_or(0);
+        if aligned == 0 || synced < aligned {
+            return;
+        }
+        let chain = self.store.blocks_of(seq)[..aligned / block_size].to_vec();
+        tree.insert(&prompt[..aligned], &chain, &mut self.store);
+        self.inserted.insert(rid);
+    }
+
     /// Paged-store utilization (for dashboards/tests).
     pub fn kv_usage(&self) -> f64 {
         self.store.usage()
+    }
+
+    /// Free blocks in the paged store (the cancellation-hygiene tests
+    /// compare this against the pool size and the tree's pinned blocks).
+    pub fn free_kv_blocks(&self) -> usize {
+        self.store.free_blocks()
     }
 
     pub fn recompositions(&self) -> u64 {

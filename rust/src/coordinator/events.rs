@@ -1,0 +1,113 @@
+//! Engine step events: the streaming surface of the serving API.
+//!
+//! Every [`Engine::step`](super::Engine::step) appends events to an
+//! internal buffer; clients drain it with
+//! [`Engine::poll_events`](super::Engine::poll_events) after each step
+//! (or batch of steps) and correlate by request id.  The event stream is
+//! complete: concatenating a request's [`Token`](StepEvent::Token)
+//! payloads reproduces its final output exactly, so a streaming client
+//! never needs the report.  [`Engine::take_finished`](super::Engine::take_finished)
+//! is the non-consuming complement — terminal results with full token
+//! vectors, without giving up the engine like `into_report` does.
+//!
+//! Ordering guarantees, per step:
+//!
+//! * `Finished`/`Rejected` for requests leaving the engine come first
+//!   (reap/reject run at the head of the tick);
+//! * `Admitted` precedes any `Token` of the same request;
+//! * `Token` events of one request appear in generation order (a
+//!   speculative verification emits several in one step);
+//! * a request's `Finished` arrives on the step *after* its last token —
+//!   the tick that reaps it and frees its KV blocks.
+
+use std::fmt;
+
+use super::request::{FinishReason, RequestId};
+
+/// Why the server refused a queued request (never admitted).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Peak KV demand exceeds the whole block pool — unservable even with
+    /// every other sequence evicted.
+    KvCapacity,
+    /// Queue drained server-side (`Engine::abort_queued`).
+    Shutdown,
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::KvCapacity => write!(f, "kv-capacity"),
+            RejectReason::Shutdown => write!(f, "shutdown"),
+        }
+    }
+}
+
+/// One engine-loop event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepEvent {
+    /// The request left the queue for a batch slot.
+    Admitted { id: RequestId },
+    /// One generated token (streamed in generation order).
+    Token { id: RequestId, token: i32 },
+    /// The request completed (budget, stop token, or cancellation) and its
+    /// KV blocks were released.
+    Finished { id: RequestId, reason: FinishReason },
+    /// The server refused the queued request; it never held a slot.
+    Rejected { id: RequestId, reason: RejectReason },
+}
+
+impl StepEvent {
+    /// The request this event belongs to.
+    pub fn id(&self) -> RequestId {
+        match *self {
+            StepEvent::Admitted { id }
+            | StepEvent::Token { id, .. }
+            | StepEvent::Finished { id, .. }
+            | StepEvent::Rejected { id, .. } => id,
+        }
+    }
+}
+
+/// Terminal result handed out by `Engine::take_finished`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FinishedRequest {
+    pub id: RequestId,
+    /// The full generated sequence (empty for rejected / queued-cancelled
+    /// requests that never produced a token).
+    pub tokens: Vec<i32>,
+    pub reason: FinishReason,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_id_extraction() {
+        assert_eq!(StepEvent::Admitted { id: 3 }.id(), 3);
+        assert_eq!(StepEvent::Token { id: 4, token: 9 }.id(), 4);
+        assert_eq!(
+            StepEvent::Finished {
+                id: 5,
+                reason: FinishReason::Length
+            }
+            .id(),
+            5
+        );
+        assert_eq!(
+            StepEvent::Rejected {
+                id: 6,
+                reason: RejectReason::KvCapacity
+            }
+            .id(),
+            6
+        );
+    }
+
+    #[test]
+    fn reject_reason_renders() {
+        assert_eq!(RejectReason::KvCapacity.to_string(), "kv-capacity");
+        assert_eq!(RejectReason::Shutdown.to_string(), "shutdown");
+    }
+}

@@ -36,6 +36,16 @@ pub struct ServingMetrics {
     /// Steps from submission to first generated token, per request — the
     /// wall-clock-free TTFT proxy (engine ticks are the scheduler's clock).
     pub ttft_steps: Welford,
+    /// Steps from submission to termination, per request — the end-to-end
+    /// companion of [`ttft_steps`](Self::ttft_steps), derived from the
+    /// same event stream (`Finished`/`Rejected`) the serving API emits.
+    pub e2e_steps: Welford,
+    /// Requests refused server-side (unservable peak demand, queue drain)
+    /// — the formerly silent `reject_front`/`abort_queued` paths.
+    pub requests_rejected: u64,
+    /// Requests cancelled by the client (`Engine::cancel`), queued or
+    /// running.
+    pub requests_cancelled: u64,
     pub steps: u64,
     /// Prefix-cache counters (hit rate, shared/evicted blocks); all zero
     /// when the cache is disabled.
@@ -52,6 +62,17 @@ pub struct ServingMetrics {
     pub spec_verify_chunks: u64,
     /// Acceptance histogram: accepted-per-verification → occurrences.
     pub accept_hist: BTreeMap<usize, u64>,
+    /// Requests whose speculation was auto-disabled because they sample
+    /// (temperature > 0): greedy verification cannot verify sampled
+    /// tokens, so the engine records *why* a spec-enabled run drafted
+    /// nothing for them (rejection sampling is the ROADMAP follow-on).
+    pub spec_disabled_sampling: u64,
+    /// Engine ticks in which a greedy decoding request lost its drafting
+    /// opportunity because a sampled request shared the batch
+    /// (verification ticks return per-position argmaxes, but a sampled
+    /// slot needs its full logits row).  Ticks with nothing to suppress
+    /// (no greedy decoding co-resident) are not counted.
+    pub spec_suppressed_ticks: u64,
     elapsed: Duration,
 }
 
@@ -92,6 +113,12 @@ impl ServingMetrics {
     /// engine ticks after submission.
     pub fn on_first_token_step(&mut self, steps_waited: u64) {
         self.ttft_steps.push(steps_waited as f64);
+    }
+
+    /// Record a request terminating (finish, cancel, or reject)
+    /// `steps_waited` engine ticks after submission.
+    pub fn on_request_done_steps(&mut self, steps_waited: u64) {
+        self.e2e_steps.push(steps_waited as f64);
     }
 
     /// Record one speculative verification: `drafted` tokens were fed,
@@ -149,6 +176,9 @@ impl ServingMetrics {
             *self.chunk_hist.entry(k).or_insert(0) += n;
         }
         self.ttft_steps.merge(&other.ttft_steps);
+        self.e2e_steps.merge(&other.e2e_steps);
+        self.requests_rejected += other.requests_rejected;
+        self.requests_cancelled += other.requests_cancelled;
         self.steps += other.steps;
         self.prefix.lookups += other.prefix.lookups;
         self.prefix.hits += other.prefix.hits;
@@ -164,6 +194,8 @@ impl ServingMetrics {
         for (&k, &n) in &other.accept_hist {
             *self.accept_hist.entry(k).or_insert(0) += n;
         }
+        self.spec_disabled_sampling += other.spec_disabled_sampling;
+        self.spec_suppressed_ticks += other.spec_suppressed_ticks;
         self.elapsed += other.elapsed;
     }
 
@@ -256,6 +288,15 @@ impl ServingMetrics {
                 self.ttft_steps.mean(),
             ));
         }
+        if self.e2e_steps.count() > 0 {
+            s.push_str(&format!(" | e2e {:.1} steps/req", self.e2e_steps.mean()));
+        }
+        if self.requests_rejected + self.requests_cancelled > 0 {
+            s.push_str(&format!(
+                " | rejected {} cancelled {}",
+                self.requests_rejected, self.requests_cancelled,
+            ));
+        }
         if self.prefix.lookups > 0 {
             s.push_str(&format!(
                 " | prefix hits {}/{} ({:.0}%), {} prefill steps saved, \
@@ -277,6 +318,12 @@ impl ServingMetrics {
                 self.acceptance_rate() * 100.0,
                 self.spec_verify_chunks,
                 self.spec_steps_saved(),
+            ));
+        }
+        if self.spec_disabled_sampling > 0 {
+            s.push_str(&format!(
+                " | spec auto-off for {} sampled requests ({} ticks suppressed)",
+                self.spec_disabled_sampling, self.spec_suppressed_ticks,
             ));
         }
         s
@@ -375,6 +422,9 @@ mod tests {
         a.on_verify(4, 4);
         a.on_verify(4, 2);
         a.on_first_token_step(4);
+        a.on_request_done_steps(10);
+        a.requests_rejected = 2;
+        a.spec_disabled_sampling = 1;
         a.prefix.lookups = 3;
         a.prefix.hits = 1;
         let mut b = ServingMetrics::new();
@@ -382,6 +432,11 @@ mod tests {
         b.on_verify(2, 0);
         b.on_first_token_step(8);
         b.on_first_token_step(6);
+        b.on_request_done_steps(20);
+        b.on_request_done_steps(30);
+        b.requests_rejected = 1;
+        b.requests_cancelled = 3;
+        b.spec_suppressed_ticks = 5;
         b.prefix.lookups = 1;
         b.prefix.hits = 1;
         b.prefix_cached_blocks = 7;
@@ -409,6 +464,13 @@ mod tests {
         // Welford-backed stats match pushing every sample into one stream.
         assert_eq!(merged.ttft_steps.count(), 3);
         assert!((merged.ttft_steps.mean() - 6.0).abs() < 1e-12);
+        // Event-derived counters: totals add, histograms concatenate.
+        assert_eq!(merged.e2e_steps.count(), 3);
+        assert!((merged.e2e_steps.mean() - 20.0).abs() < 1e-12);
+        assert_eq!(merged.requests_rejected, 3);
+        assert_eq!(merged.requests_cancelled, 3);
+        assert_eq!(merged.spec_disabled_sampling, 1);
+        assert_eq!(merged.spec_suppressed_ticks, 5);
         let occ_mean = (2.0 / 4.0 + 4.0 / 4.0 + 1.0 / 4.0) / 3.0;
         assert!((merged.occupancy.mean() - occ_mean).abs() < 1e-12);
         assert_eq!(merged.steps, 3);
@@ -419,6 +481,26 @@ mod tests {
         let snapshot = merged.report();
         merged.merge(&ServingMetrics::new());
         assert_eq!(merged.report(), snapshot);
+    }
+
+    #[test]
+    fn lifecycle_counters_surface_in_report() {
+        let mut m = ServingMetrics::new();
+        assert!(!m.report().contains("rejected"), "quiet when idle");
+        assert!(!m.report().contains("steps/req"), "no e2e-steps section yet");
+        m.requests_rejected = 2;
+        m.requests_cancelled = 1;
+        m.on_request_done_steps(6);
+        m.on_request_done_steps(10);
+        m.spec_disabled_sampling = 3;
+        m.spec_suppressed_ticks = 4;
+        let s = m.report();
+        assert!(s.contains("rejected 2 cancelled 1"), "report: {s}");
+        assert!(s.contains("e2e 8.0 steps/req"), "report: {s}");
+        assert!(
+            s.contains("spec auto-off for 3 sampled requests (4 ticks suppressed)"),
+            "report: {s}"
+        );
     }
 
     #[test]

@@ -4,13 +4,20 @@
 //! of DeepSeek-R1 on one 8×H20 server* (paper §1).  This module is that
 //! server's control plane, in the style of vLLM's engine:
 //!
-//! * [`request`] — request lifecycle state machine;
+//! * [`request`] — the submission surface ([`GenerationRequest`] builder,
+//!   [`RequestHandle`], per-request [`SamplingParams`]) and the lifecycle
+//!   state machine;
+//! * [`events`] — the streaming surface: [`StepEvent`]s emitted by every
+//!   engine step, drained via `Engine::poll_events`;
+//! * [`sampler`] — engine-side token selection over logits rows (greedy
+//!   argmax by default, seeded temperature/top-k/top-p otherwise);
 //! * [`router`] — admission control + validation against artifact buckets
 //!   and KV-cache capacity, plus prefix-affinity placement for multi-
 //!   instance deployments;
 //! * [`batcher`] — continuous batching: slot management, bucket selection;
-//! * [`engine`] — the decode loop over the PJRT artifacts (prefill-as-
-//!   decode, greedy sampling, KV bookkeeping via the paged latent store);
+//! * [`engine`] — the event-driven decode loop over the PJRT artifacts
+//!   (chunked prefill, per-request sampling, cancellation, KV bookkeeping
+//!   via the paged latent store);
 //! * [`cluster`] — the simulated 8-GPU head-split topology driving the
 //!   `sim` kernel models at paper scale (64K contexts the CPU cannot run);
 //! * [`metrics`] — TTFT/TPOT/throughput accounting.
@@ -20,13 +27,20 @@
 pub mod batcher;
 pub mod cluster;
 pub mod engine;
+pub mod events;
 pub mod metrics;
 pub mod request;
 pub mod router;
+pub mod sampler;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use cluster::{ClusterConfig, ClusterSim, StepBreakdown, TraceReport, TraceRequest};
 pub use engine::{Engine, EngineConfig, EngineReport};
+pub use events::{FinishedRequest, RejectReason, StepEvent};
 pub use metrics::ServingMetrics;
-pub use request::{FinishReason, Request, RequestId, RequestState, VerifyOutcome};
+pub use request::{
+    FinishReason, GenerationRequest, Request, RequestHandle, RequestId, RequestState,
+    SamplingParams, VerifyOutcome,
+};
 pub use router::{AdmitError, PrefixAffinityRouter, Router};
+pub use sampler::Sampler;

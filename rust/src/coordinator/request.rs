@@ -1,19 +1,190 @@
-//! Request lifecycle: the state machine every request moves through.
+//! Request lifecycle: the public submission types (builder, handle,
+//! sampling parameters) and the state machine every request moves through.
 
 use std::time::Instant;
 
-/// Unique request handle.
+/// Unique request id (the value inside a [`RequestHandle`]).
 pub type RequestId = u64;
+
+/// Opaque handle returned by `Engine::submit`.  Carries the id used to
+/// correlate [`StepEvent`](super::StepEvent)s, cancel the request, and
+/// look up its output in the final report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RequestHandle(RequestId);
+
+impl RequestHandle {
+    pub(crate) fn new(id: RequestId) -> Self {
+        RequestHandle(id)
+    }
+
+    pub fn id(self) -> RequestId {
+        self.0
+    }
+}
+
+/// Per-request sampling parameters (the greedy default reproduces the
+/// pre-handle pipeline bit-for-bit).
+///
+/// Determinism contract: a sampled request draws exactly one PRNG value
+/// per emitted token from its own [`crate::util::rng::Rng`] stream seeded
+/// by `seed`, and the backend's logits rows depend only on the request's
+/// own history (slot isolation) — so equal `(prompt, params)` pairs
+/// produce bit-identical outputs regardless of batch composition, engine
+/// config, or what else is being served.  That is why `seed` is
+/// **mandatory** whenever `temperature > 0`: an unseeded sampled request
+/// could never be replayed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature.  `0.0` (the default) means greedy argmax; any
+    /// positive value samples from the (top-k/top-p filtered) softmax.
+    pub temperature: f32,
+    /// Keep only the `top_k` highest-logit tokens before sampling
+    /// (`0` = disabled).  `top_k = 1` is exactly greedy.
+    pub top_k: usize,
+    /// Nucleus cutoff: keep the smallest set of tokens whose cumulative
+    /// probability reaches `top_p` (`1.0` = disabled).
+    pub top_p: f32,
+    /// Per-request PRNG seed; required when `temperature > 0`.
+    pub seed: Option<u64>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self::greedy()
+    }
+}
+
+impl SamplingParams {
+    /// Greedy argmax — the bit-identical default.
+    pub fn greedy() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: None,
+        }
+    }
+
+    /// Temperature sampling with the mandatory reproducibility seed.
+    pub fn sampled(temperature: f32, seed: u64) -> Self {
+        SamplingParams {
+            temperature,
+            top_k: 0,
+            top_p: 1.0,
+            seed: Some(seed),
+        }
+    }
+
+    pub fn with_top_k(mut self, k: usize) -> Self {
+        self.top_k = k;
+        self
+    }
+
+    pub fn with_top_p(mut self, p: f32) -> Self {
+        self.top_p = p;
+        self
+    }
+
+    /// Greedy requests never touch a PRNG (and stay eligible for
+    /// speculative verification).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.temperature.is_finite() && self.temperature >= 0.0,
+            "temperature must be finite and ≥ 0, got {}",
+            self.temperature
+        );
+        anyhow::ensure!(
+            self.top_p > 0.0 && self.top_p <= 1.0,
+            "top_p must be in (0, 1], got {}",
+            self.top_p
+        );
+        anyhow::ensure!(
+            self.is_greedy() || self.seed.is_some(),
+            "sampled requests (temperature > 0) require a seed — \
+             unseeded runs could never be replayed bit-identically"
+        );
+        Ok(())
+    }
+}
+
+/// Builder for one generation request (the argument of `Engine::submit`).
+///
+/// ```ignore
+/// let h = engine.submit(
+///     GenerationRequest::new(prompt, 64)
+///         .stop_token(eos)
+///         .sampling(SamplingParams::sampled(0.8, 42).with_top_k(40)),
+/// );
+/// ```
+#[derive(Clone, Debug)]
+pub struct GenerationRequest {
+    prompt: Vec<i32>,
+    max_new_tokens: usize,
+    stop_tokens: Vec<i32>,
+    sampling: SamplingParams,
+}
+
+impl GenerationRequest {
+    pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(max_new_tokens > 0, "must request at least one token");
+        GenerationRequest {
+            prompt,
+            max_new_tokens,
+            stop_tokens: Vec::new(),
+            sampling: SamplingParams::greedy(),
+        }
+    }
+
+    /// Add one stop token (generation finishes when any stop token is
+    /// emitted; the emitted stop token is kept, EOS-style).
+    pub fn stop_token(mut self, token: i32) -> Self {
+        if !self.stop_tokens.contains(&token) {
+            self.stop_tokens.push(token);
+        }
+        self
+    }
+
+    /// Add several stop tokens at once.
+    pub fn stop_tokens(mut self, tokens: &[i32]) -> Self {
+        for &t in tokens {
+            self = self.stop_token(t);
+        }
+        self
+    }
+
+    /// Set the sampling parameters (validated here, at the earliest
+    /// failure point — an invalid request never reaches the queue).
+    pub fn sampling(mut self, params: SamplingParams) -> Self {
+        params.validate().expect("invalid sampling params");
+        self.sampling = params;
+        self
+    }
+
+    /// Materialize the engine-internal request.
+    pub(crate) fn into_request(self, id: RequestId) -> Request {
+        let mut r = Request::new(id, self.prompt, self.max_new_tokens);
+        r.stop_tokens = self.stop_tokens;
+        r.sampling = self.sampling;
+        r
+    }
+}
 
 /// Why a request stopped generating.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
     /// Hit its `max_new_tokens` budget.
     Length,
-    /// Produced the EOS token.
+    /// Produced a stop token.
     Eos,
     /// Rejected or evicted by the server.
     Aborted,
+    /// Cancelled by the client (`Engine::cancel`).
+    Cancelled,
 }
 
 /// Lifecycle states (monotone forward).
@@ -50,7 +221,11 @@ pub struct Request {
     pub id: RequestId,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
-    pub eos_token: Option<i32>,
+    /// Generation stops when any of these is emitted (the engine folds
+    /// its config-level EOS token in at submit).
+    pub stop_tokens: Vec<i32>,
+    /// How this request's tokens are drawn from the logits row.
+    pub sampling: SamplingParams,
     pub state: RequestState,
     pub generated: Vec<i32>,
     /// Prompt tokens already consumed (prefill cursor).
@@ -75,7 +250,8 @@ impl Request {
             id,
             prompt,
             max_new_tokens,
-            eos_token: None,
+            stop_tokens: Vec::new(),
+            sampling: SamplingParams::greedy(),
             state: RequestState::Queued,
             generated: Vec::new(),
             prefill_pos: 0,
@@ -87,8 +263,11 @@ impl Request {
         }
     }
 
+    /// Add an EOS-style stop token.
     pub fn with_eos(mut self, eos: i32) -> Self {
-        self.eos_token = Some(eos);
+        if !self.stop_tokens.contains(&eos) {
+            self.stop_tokens.push(eos);
+        }
         self
     }
 
@@ -214,7 +393,7 @@ impl Request {
             self.first_token_at = Some(Instant::now());
         }
         self.generated.push(tok);
-        if Some(tok) == self.eos_token {
+        if self.stop_tokens.contains(&tok) {
             self.finish(FinishReason::Eos);
         } else if self.generated.len() >= self.max_new_tokens {
             self.finish(FinishReason::Length);
@@ -275,6 +454,17 @@ mod tests {
         r.advance(0); // first sampled token is EOS
         assert!(r.is_finished());
         assert_eq!(r.finish_reason, Some(FinishReason::Eos));
+    }
+
+    #[test]
+    fn any_stop_token_in_the_list_stops() {
+        let mut r = Request::new(1, vec![5], 10).with_eos(0).with_eos(3);
+        r.state = RequestState::Prefilling;
+        r.advance(7);
+        r.advance(3); // second stop token fires too
+        assert!(r.is_finished());
+        assert_eq!(r.finish_reason, Some(FinishReason::Eos));
+        assert_eq!(r.generated, vec![7, 3]);
     }
 
     #[test]
@@ -408,7 +598,7 @@ mod tests {
         // argmax 0 is EOS: everything after it must be dropped, even
         // matching draft tokens — exactly where plain decode stops.
         let mut spec = decoding(3, 8);
-        spec.eos_token = Some(0);
+        spec.stop_tokens = vec![0];
         spec.draft = vec![0, 5];
         let out = spec.apply_verification(2, &[0, 5, 6]);
         assert_eq!(out.accepted, 0);
@@ -416,7 +606,7 @@ mod tests {
         assert!(spec.is_finished());
         assert_eq!(spec.finish_reason, Some(FinishReason::Eos));
         let mut plain = decoding(3, 8);
-        plain.eos_token = Some(0);
+        plain.stop_tokens = vec![0];
         let plain = plain_decode(plain, &[0, 5, 6]);
         assert_eq!(spec.generated, plain.generated);
     }
@@ -451,5 +641,79 @@ mod tests {
         r.advance(8);
         assert!(r.is_finished());
         assert_eq!(r.generated, vec![8]);
+    }
+
+    #[test]
+    fn builder_carries_stops_and_sampling() {
+        let spec = GenerationRequest::new(vec![1, 2, 3], 5)
+            .stop_token(0)
+            .stop_tokens(&[7, 0]) // dedup
+            .sampling(SamplingParams::sampled(0.8, 42).with_top_k(4).with_top_p(0.9));
+        let r = spec.into_request(9);
+        assert_eq!(r.id, 9);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new_tokens, 5);
+        assert_eq!(r.stop_tokens, vec![0, 7]);
+        assert_eq!(r.sampling.temperature, 0.8);
+        assert_eq!(r.sampling.top_k, 4);
+        assert_eq!(r.sampling.top_p, 0.9);
+        assert_eq!(r.sampling.seed, Some(42));
+        assert!(!r.sampling.is_greedy());
+    }
+
+    #[test]
+    fn builder_defaults_are_greedy_and_stopless() {
+        let r = GenerationRequest::new(vec![4], 2).into_request(1);
+        assert!(r.stop_tokens.is_empty());
+        assert!(r.sampling.is_greedy());
+        assert_eq!(r.sampling, SamplingParams::greedy());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid sampling params")]
+    fn sampled_without_seed_rejected() {
+        GenerationRequest::new(vec![1], 2).sampling(SamplingParams {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: None,
+        });
+    }
+
+    #[test]
+    fn sampling_params_validate() {
+        assert!(SamplingParams::greedy().validate().is_ok());
+        assert!(SamplingParams::sampled(1.0, 7).validate().is_ok());
+        assert!(SamplingParams {
+            temperature: -1.0,
+            ..SamplingParams::greedy()
+        }
+        .validate()
+        .is_err());
+        assert!(SamplingParams {
+            top_p: 0.0,
+            ..SamplingParams::greedy()
+        }
+        .validate()
+        .is_err());
+        assert!(SamplingParams {
+            top_p: 1.5,
+            ..SamplingParams::greedy()
+        }
+        .validate()
+        .is_err());
+        assert!(SamplingParams {
+            temperature: f32::NAN,
+            seed: Some(1),
+            ..SamplingParams::greedy()
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn handle_round_trips_its_id() {
+        let h = RequestHandle::new(17);
+        assert_eq!(h.id(), 17);
     }
 }

@@ -1,0 +1,275 @@
+//! Engine-side token sampling over backend logits rows.
+//!
+//! One [`Sampler`] exists per active request, built from its
+//! [`SamplingParams`].  The greedy path is a pure argmax with the same
+//! first-strictly-greater tie-break as `DecodeRunner::argmax_row`, so
+//! greedy-default requests reproduce the pre-sampler pipeline
+//! bit-for-bit.  The sampled path is deterministic given the mandatory
+//! per-request seed:
+//!
+//! 1. rank the vocabulary by logit, descending (ties by index and NaN
+//!    as `-inf`, so the order is total and platform-independent);
+//! 2. keep the `top_k` best (when enabled, via an O(V) partition so
+//!    only the k survivors pay the sort);
+//! 3. softmax the survivors at `temperature` in f64 with the max
+//!    subtracted (sequential accumulation — no platform-dependent
+//!    reduction order);
+//! 4. keep the smallest prefix reaching cumulative probability `top_p`
+//!    (when enabled) — the prefix of the *sorted* order, so the nucleus
+//!    is well-defined;
+//! 5. draw exactly **one** `Rng::f64` value and walk the cumulative
+//!    weights.
+//!
+//! "Exactly one draw per emitted token" is the determinism contract the
+//! serving API documents (`docs/serving-api.md`): a request's token
+//! stream is a pure function of `(prompt, SamplingParams)`, independent
+//! of batch composition, chunk schedule, or co-resident requests.
+
+use crate::runtime::DecodeRunner;
+use crate::util::rng::Rng;
+
+use super::request::SamplingParams;
+
+/// Greedy argmax over one logits row — delegates to
+/// `DecodeRunner::argmax_row` so the two call paths can never drift
+/// apart (the bit-identity contract depends on a single tie-break rule).
+pub fn argmax(row: &[f32]) -> i32 {
+    DecodeRunner::argmax_row(row, row.len(), 0)
+}
+
+/// Total order for ranking logits: descending value, ascending index on
+/// ties; NaN (never produced by the reference backend, but a malformed
+/// artifact could) sorts as `-inf` so the comparator stays total — a
+/// non-total comparator would panic `sort_by` and kill the engine step.
+fn rank(row: &[f32], a: usize, b: usize) -> std::cmp::Ordering {
+    let va = if row[a].is_nan() { f32::NEG_INFINITY } else { row[a] };
+    let vb = if row[b].is_nan() { f32::NEG_INFINITY } else { row[b] };
+    vb.partial_cmp(&va)
+        .expect("NaN mapped away above")
+        .then(a.cmp(&b))
+}
+
+/// Stateful per-request sampler (greedy samplers hold no PRNG at all).
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    params: SamplingParams,
+    rng: Option<Rng>,
+}
+
+impl Sampler {
+    pub fn new(params: &SamplingParams) -> Self {
+        params.validate().expect("invalid sampling params");
+        let rng = if params.is_greedy() {
+            None
+        } else {
+            Some(Rng::new(params.seed.expect("validated: sampled has a seed")))
+        };
+        Sampler {
+            params: *params,
+            rng,
+        }
+    }
+
+    /// Draw the next token from one logits row.
+    pub fn sample(&mut self, row: &[f32]) -> i32 {
+        debug_assert!(!row.is_empty(), "empty logits row");
+        let Some(rng) = self.rng.as_mut() else {
+            return argmax(row);
+        };
+        // 1+2. Rank by the total order (logit descending, index ascending
+        // on ties) and keep the top-k.  With top-k enabled, partition to
+        // the k best first so only k elements are fully sorted — O(V +
+        // k log k) instead of O(V log V) per emitted token; the partition
+        // keeps exactly the set a full sort would, so outputs are
+        // bit-identical either way.
+        let mut idx: Vec<usize> = (0..row.len()).collect();
+        let k = self.params.top_k;
+        if k > 0 && k < idx.len() {
+            idx.select_nth_unstable_by(k - 1, |&a, &b| rank(row, a, b));
+            idx.truncate(k);
+        }
+        idx.sort_by(|&a, &b| rank(row, a, b));
+        // 3. Softmax at temperature, f64, max-subtracted (the same
+        // NaN→-inf mapping as `rank`, so a poisoned row degrades to
+        // weight 0 instead of NaN-ing the whole distribution).
+        let val = |i: usize| -> f64 {
+            let v = row[i];
+            if v.is_nan() {
+                f64::NEG_INFINITY
+            } else {
+                v as f64
+            }
+        };
+        let t = self.params.temperature as f64;
+        let m = val(idx[0]);
+        let weights: Vec<f64> = idx.iter().map(|&i| ((val(i) - m) / t).exp()).collect();
+        let total: f64 = weights.iter().sum();
+        // 4. Nucleus cut on the sorted cumulative distribution.
+        let mut cut = weights.len();
+        if self.params.top_p < 1.0 {
+            let mut acc = 0.0f64;
+            for (j, w) in weights.iter().enumerate() {
+                acc += w / total;
+                if acc >= self.params.top_p as f64 {
+                    cut = j + 1;
+                    break;
+                }
+            }
+        }
+        // Zero-weight survivors (deep underflow, NaN→-inf) can never be
+        // drawn; trimming them keeps the top-edge f.p. fallback below on
+        // a real candidate.
+        while cut > 1 && weights[cut - 1] == 0.0 {
+            cut -= 1;
+        }
+        // 5. One PRNG draw, cumulative walk over the survivors.
+        let kept_total: f64 = weights[..cut].iter().sum();
+        let u = rng.f64() * kept_total;
+        let mut acc = 0.0f64;
+        for (j, w) in weights[..cut].iter().enumerate() {
+            acc += w;
+            if u < acc {
+                return idx[j] as i32;
+            }
+        }
+        idx[cut - 1] as i32 // f.p. slack: u landed on the upper edge
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> Vec<f32> {
+        vec![0.1, 2.0, -1.0, 1.9, 0.5, 1.99]
+    }
+
+    #[test]
+    fn greedy_matches_argmax_row_semantics() {
+        let r = row();
+        let mut s = Sampler::new(&SamplingParams::greedy());
+        assert_eq!(s.sample(&r), 1);
+        assert_eq!(s.sample(&r), 1, "greedy is stateless");
+        assert_eq!(argmax(&r), 1);
+        // Tie-break: first index wins, exactly like argmax_row.
+        assert_eq!(argmax(&[3.0, 3.0, 1.0]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let r = row();
+        let p = SamplingParams::sampled(1.0, 42);
+        let mut a = Sampler::new(&p);
+        let mut b = Sampler::new(&p);
+        let sa: Vec<i32> = (0..64).map(|_| a.sample(&r)).collect();
+        let sb: Vec<i32> = (0..64).map(|_| b.sample(&r)).collect();
+        assert_eq!(sa, sb, "equal seeds must replay bit-identically");
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let r = row();
+        let mut a = Sampler::new(&SamplingParams::sampled(1.0, 1));
+        let mut b = Sampler::new(&SamplingParams::sampled(1.0, 2));
+        let sa: Vec<i32> = (0..64).map(|_| a.sample(&r)).collect();
+        let sb: Vec<i32> = (0..64).map(|_| b.sample(&r)).collect();
+        assert_ne!(sa, sb, "64 draws over a 6-token near-flat row");
+    }
+
+    #[test]
+    fn top_k_one_is_greedy_for_any_seed() {
+        let r = row();
+        let mut s = Sampler::new(&SamplingParams::sampled(2.0, 999).with_top_k(1));
+        for _ in 0..16 {
+            assert_eq!(s.sample(&r), 1);
+        }
+    }
+
+    #[test]
+    fn tiny_top_p_is_greedy_for_any_seed() {
+        let r = row();
+        // The single best token already exceeds any p ≤ its probability.
+        let mut s = Sampler::new(&SamplingParams::sampled(1.0, 7).with_top_p(1e-6));
+        for _ in 0..16 {
+            assert_eq!(s.sample(&r), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_bounds_the_support() {
+        let r = row();
+        // k = 3 keeps indices {1, 5, 3} (logits 2.0, 1.99, 1.9).
+        let mut s = Sampler::new(&SamplingParams::sampled(3.0, 5).with_top_k(3));
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..256 {
+            seen.insert(s.sample(&r));
+        }
+        assert!(seen.iter().all(|t| [1, 3, 5].contains(t)), "{seen:?}");
+        assert!(seen.len() > 1, "temperature 3 over 3 near-ties must vary");
+    }
+
+    #[test]
+    fn flat_row_samples_every_token_eventually() {
+        let r = vec![0.0f32; 8];
+        let mut s = Sampler::new(&SamplingParams::sampled(1.0, 3));
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..512 {
+            let t = s.sample(&r);
+            assert!((0..8).contains(&t));
+            seen.insert(t);
+        }
+        assert_eq!(seen.len(), 8, "uniform row must reach all 8 tokens");
+    }
+
+    #[test]
+    fn nan_logits_never_panic_and_never_win() {
+        // A malformed row must not panic the sort (total-order violation)
+        // nor be sampled: NaN ranks as -inf.
+        let r = vec![0.1, f32::NAN, 2.0, f32::NAN, 0.5];
+        let mut s = Sampler::new(&SamplingParams::sampled(1.0, 3));
+        for _ in 0..128 {
+            let t = s.sample(&r);
+            assert!(t == 0 || t == 2 || t == 4, "sampled NaN index {t}");
+        }
+        // Top-2 of [0.1, NaN, 2.0, NaN, 0.5] is {2 (2.0), 4 (0.5)}.
+        let mut s = Sampler::new(&SamplingParams::sampled(1.0, 3).with_top_k(2));
+        for _ in 0..32 {
+            assert!([2, 4].contains(&s.sample(&r)));
+        }
+        assert_eq!(argmax(&r), 2);
+    }
+
+    #[test]
+    fn top_k_partition_matches_full_sort_semantics() {
+        // The select_nth_unstable fast path must keep exactly the tokens
+        // a full sort would: k=3 over near-ties with a duplicate value.
+        let r = vec![1.0, 2.0, 2.0, 1.5, 0.0, 2.0];
+        // Descending with index tie-break: [1, 2, 5, 3, 0, 4] → top 3 =
+        // {1, 2, 5}.
+        let mut s = Sampler::new(&SamplingParams::sampled(5.0, 11).with_top_k(3));
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..256 {
+            seen.insert(s.sample(&r));
+        }
+        assert!(seen.iter().all(|t| [1, 2, 5].contains(t)), "{seen:?}");
+        assert_eq!(seen.len(), 3, "all three near-ties reachable at temp 5");
+    }
+
+    #[test]
+    fn zero_temperature_never_builds_a_prng() {
+        let s = Sampler::new(&SamplingParams::greedy());
+        assert!(s.rng.is_none(), "greedy must not consume entropy");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid sampling params")]
+    fn unseeded_sampling_panics() {
+        Sampler::new(&SamplingParams {
+            temperature: 0.5,
+            top_k: 0,
+            top_p: 1.0,
+            seed: None,
+        });
+    }
+}

@@ -17,7 +17,7 @@ use flashmla_etap::attention::precision::table1_experiment;
 use flashmla_etap::attention::AttnShape;
 use flashmla_etap::bench::Table;
 use flashmla_etap::config::Config;
-use flashmla_etap::coordinator::{ClusterSim, Engine, TraceRequest};
+use flashmla_etap::coordinator::{ClusterSim, Engine, GenerationRequest, TraceRequest};
 use flashmla_etap::hardware::{padding_factor, GpuSpec};
 use flashmla_etap::sim::figures;
 use flashmla_etap::util::argparse::ArgParser;
@@ -184,7 +184,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
         let plen = rng.range(1, 12) as usize;
         let prompt: Vec<i32> = (0..plen).map(|_| rng.range(1, 500) as i32).collect();
         let budget = rng.range(2, max_new as u64 + 1) as usize;
-        engine.submit(prompt, budget);
+        engine.submit(GenerationRequest::new(prompt, budget));
     }
     let t0 = Instant::now();
     let report = match engine.run_to_completion() {

@@ -1,0 +1,148 @@
+//! Adaptive draft budget: shrink on consecutive-rejection streaks,
+//! recover on acceptance (the ROADMAP "adaptive `max_draft`" follow-on).
+//!
+//! Rationale: each drafted token costs one verification-chunk position in
+//! the step token budget (`prefill::ChunkPlanner` charges verify slots
+//! `1 + draft`), so a request whose drafts keep missing burns budget that
+//! concurrent prefills could use.  The controller is multiplicative-
+//! decrease / additive-increase, mirroring the asymmetry of the costs: a
+//! rejection streak is strong evidence the history left the predictable
+//! regime (halve quickly), a single acceptance is weak evidence it is
+//! back (recover one token at a time up to the configured ceiling).
+//!
+//! The engine keeps one controller per request (spec-enabled engines with
+//! `[engine.spec] adaptive = true` only), clamps each proposed draft to
+//! [`budget`](AdaptiveDraft::budget) *before* planning, and feeds every
+//! verification outcome back through [`on_verify`](AdaptiveDraft::on_verify).
+//! Verifications that carried no draft tokens are ignored — a
+//! budget-starved tick says nothing about predictability.
+//!
+//! The controller only shapes *scheduling*; acceptance stays exact, so
+//! outputs remain bit-identical to plain greedy decode either way.
+
+/// Consecutive fully-rejected verifications before the budget halves.
+/// Two, not one: a single miss is common at regime boundaries (e.g. the
+/// step where a cycle first forms) and halving there would throw away the
+/// next tick's likely-good full-length draft.
+pub const SHRINK_AFTER: u32 = 2;
+
+/// Per-request adaptive draft-budget controller.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveDraft {
+    /// Configured ceiling (`spec.max_draft`).
+    ceiling: usize,
+    /// Current budget, in `1..=ceiling`.
+    cur: usize,
+    /// Consecutive fully-rejected verifications seen since the last
+    /// acceptance (or shrink).
+    streak: u32,
+}
+
+impl AdaptiveDraft {
+    pub fn new(max_draft: usize) -> Self {
+        assert!(max_draft >= 1, "draft ceiling must be ≥ 1");
+        AdaptiveDraft {
+            ceiling: max_draft,
+            cur: max_draft,
+            streak: 0,
+        }
+    }
+
+    /// Tokens the next draft may carry.
+    pub fn budget(&self) -> usize {
+        self.cur
+    }
+
+    /// Feed one verification outcome (`drafted` fed, `accepted` kept).
+    pub fn on_verify(&mut self, drafted: usize, accepted: usize) {
+        debug_assert!(accepted <= drafted);
+        if drafted == 0 {
+            return; // budget-starved tick: no evidence either way
+        }
+        if accepted == 0 {
+            self.streak += 1;
+            if self.streak >= SHRINK_AFTER {
+                self.cur = (self.cur / 2).max(1);
+                self.streak = 0;
+            }
+        } else {
+            self.streak = 0;
+            self.cur = (self.cur + 1).min(self.ceiling);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_the_ceiling() {
+        let a = AdaptiveDraft::new(8);
+        assert_eq!(a.budget(), 8);
+    }
+
+    #[test]
+    fn shrink_schedule_halves_after_streaks_down_to_one() {
+        // The satellite's shrink/recover schedule test: 8 → 4 → 2 → 1,
+        // one halving per SHRINK_AFTER consecutive full rejections.
+        let mut a = AdaptiveDraft::new(8);
+        let mut seen = vec![a.budget()];
+        for _ in 0..4 * SHRINK_AFTER {
+            a.on_verify(a.budget(), 0);
+            if *seen.last().unwrap() != a.budget() {
+                seen.push(a.budget());
+            }
+        }
+        assert_eq!(seen, vec![8, 4, 2, 1]);
+        // Floor: further rejections never reach zero.
+        for _ in 0..8 {
+            a.on_verify(a.budget(), 0);
+            assert_eq!(a.budget(), 1);
+        }
+    }
+
+    #[test]
+    fn single_rejection_does_not_shrink() {
+        let mut a = AdaptiveDraft::new(4);
+        a.on_verify(4, 0);
+        assert_eq!(a.budget(), 4, "one miss is not a streak");
+        a.on_verify(4, 2); // acceptance resets the streak
+        a.on_verify(4, 0);
+        assert_eq!(a.budget(), 4, "streak restarted after the acceptance");
+    }
+
+    #[test]
+    fn recovery_is_additive_up_to_the_ceiling() {
+        let mut a = AdaptiveDraft::new(8);
+        for _ in 0..3 * SHRINK_AFTER {
+            a.on_verify(a.budget(), 0);
+        }
+        assert_eq!(a.budget(), 1);
+        let mut seen = Vec::new();
+        for _ in 0..10 {
+            a.on_verify(a.budget(), a.budget()); // full acceptance
+            seen.push(a.budget());
+        }
+        assert_eq!(seen, vec![2, 3, 4, 5, 6, 7, 8, 8, 8, 8]);
+    }
+
+    #[test]
+    fn partial_acceptance_counts_as_recovery() {
+        let mut a = AdaptiveDraft::new(4);
+        a.on_verify(4, 0);
+        a.on_verify(4, 0);
+        assert_eq!(a.budget(), 2);
+        a.on_verify(2, 1); // even one accepted token recovers
+        assert_eq!(a.budget(), 3);
+    }
+
+    #[test]
+    fn empty_verifications_carry_no_signal() {
+        let mut a = AdaptiveDraft::new(4);
+        for _ in 0..10 {
+            a.on_verify(0, 0);
+        }
+        assert_eq!(a.budget(), 4, "budget-starved ticks must not shrink");
+    }
+}

@@ -183,6 +183,7 @@ mod tests {
             enabled: true,
             lookback,
             max_draft,
+            ..SpecConfig::default()
         })
     }
 
@@ -291,6 +292,7 @@ mod tests {
                 enabled: true,
                 lookback,
                 max_draft,
+                ..SpecConfig::default()
             };
             let mut a = PromptLookupDrafter::new(&cfg);
             let mut b = PromptLookupDrafter::new(&cfg);
@@ -333,6 +335,7 @@ mod tests {
                 enabled: true,
                 lookback: 32,
                 max_draft: 4,
+                ..SpecConfig::default()
             };
             let mut inc = PromptLookupDrafter::new(&cfg);
             // Draft after every prefix: must equal a fresh drafter fed the

@@ -35,8 +35,10 @@
 //! disabled by default so the engine reproduces the non-speculative step
 //! sequence byte-for-byte out of the box.
 
+mod adaptive;
 mod drafter;
 
+pub use adaptive::{AdaptiveDraft, SHRINK_AFTER};
 pub use drafter::{PromptLookupDrafter, MAX_NGRAM};
 
 /// Speculative-decoding knobs, plumbed through `EngineConfig` /
@@ -54,6 +56,13 @@ pub struct SpecConfig {
     /// Maximum draft tokens proposed (and therefore verified) per engine
     /// tick per request — the `k` in the k-step-to-one-chunk conversion.
     pub max_draft: usize,
+    /// Adapt the per-request draft budget at runtime ([`AdaptiveDraft`]):
+    /// halve after [`SHRINK_AFTER`] consecutive fully-rejected
+    /// verifications, recover one token per accepting verification up to
+    /// `max_draft`.  Off by default so the fixed-budget step cadence (and
+    /// every step-count expectation built on it) is reproduced exactly;
+    /// outputs are bit-identical either way.
+    pub adaptive: bool,
 }
 
 impl Default for SpecConfig {
@@ -62,6 +71,7 @@ impl Default for SpecConfig {
             enabled: false,
             lookback: 256,
             max_draft: 4,
+            adaptive: false,
         }
     }
 }

@@ -4,7 +4,7 @@
 //! per-token pipeline — while collapsing prefill engine steps by ≥ the
 //! chunk factor.  Runs everywhere tier-1 runs (no artifacts).
 
-use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport};
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport, GenerationRequest};
 use flashmla_etap::prefill::{FairnessPolicy, PrefillConfig};
 use flashmla_etap::runtime::ReferenceModelConfig;
 use flashmla_etap::util::rng::Rng;
@@ -48,7 +48,7 @@ fn chunked() -> PrefillConfig {
 
 fn run(mut e: Engine, work: &[(Vec<i32>, usize)]) -> EngineReport {
     for (p, budget) in work {
-        e.submit(p.clone(), *budget);
+        e.submit(GenerationRequest::new(p.clone(), *budget));
     }
     e.run_to_completion().unwrap()
 }

@@ -4,7 +4,7 @@
 
 use std::path::PathBuf;
 
-use flashmla_etap::coordinator::{Engine, EngineConfig};
+use flashmla_etap::coordinator::{Engine, EngineConfig, GenerationRequest};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -34,7 +34,7 @@ fn engine(dir: &PathBuf, kernel: &str, slots: usize) -> Engine {
 fn single_request_generates() {
     let Some(dir) = artifacts_dir() else { return };
     let mut e = engine(&dir, "etap", 1);
-    let id = e.submit(vec![3, 5, 7], 8);
+    let id = e.submit(GenerationRequest::new(vec![3, 5, 7], 8)).id();
     let report = e.run_to_completion().unwrap();
     let out = &report.outputs[&id];
     assert_eq!(out.len(), 8);
@@ -52,8 +52,8 @@ fn deterministic_across_runs() {
     let Some(dir) = artifacts_dir() else { return };
     let run = || {
         let mut e = engine(&dir, "etap", 2);
-        let a = e.submit(vec![3, 5, 7], 6);
-        let b = e.submit(vec![11, 2], 6);
+        let a = e.submit(GenerationRequest::new(vec![3, 5, 7], 6)).id();
+        let b = e.submit(GenerationRequest::new(vec![11, 2], 6)).id();
         let r = e.run_to_completion().unwrap();
         (r.outputs[&a].clone(), r.outputs[&b].clone())
     };
@@ -67,8 +67,8 @@ fn kernels_agree_end_to_end() {
     let Some(dir) = artifacts_dir() else { return };
     let run = |kernel: &str| {
         let mut e = engine(&dir, kernel, 2);
-        let a = e.submit(vec![3, 5, 7], 6);
-        let b = e.submit(vec![100, 42], 6);
+        let a = e.submit(GenerationRequest::new(vec![3, 5, 7], 6)).id();
+        let b = e.submit(GenerationRequest::new(vec![100, 42], 6)).id();
         let r = e.run_to_completion().unwrap();
         (r.outputs[&a].clone(), r.outputs[&b].clone())
     };
@@ -82,14 +82,14 @@ fn batched_equals_solo_outputs() {
     let Some(dir) = artifacts_dir() else { return };
     let solo = |prompt: Vec<i32>| {
         let mut e = engine(&dir, "etap", 1);
-        let id = e.submit(prompt, 5);
+        let id = e.submit(GenerationRequest::new(prompt, 5)).id();
         e.run_to_completion().unwrap().outputs[&id].clone()
     };
     let s1 = solo(vec![3, 5, 7]);
     let s2 = solo(vec![11, 2]);
     let mut e = engine(&dir, "etap", 2);
-    let a = e.submit(vec![3, 5, 7], 5);
-    let b = e.submit(vec![11, 2], 5);
+    let a = e.submit(GenerationRequest::new(vec![3, 5, 7], 5)).id();
+    let b = e.submit(GenerationRequest::new(vec![11, 2], 5)).id();
     let r = e.run_to_completion().unwrap();
     assert_eq!(r.outputs[&a], s1);
     assert_eq!(r.outputs[&b], s2);
@@ -102,12 +102,12 @@ fn continuous_batching_joins_and_leaves() {
     // Staggered lengths force slot churn: short requests finish while long
     // ones continue; queued ones join mid-flight.
     let ids: Vec<_> = vec![
-        e.submit(vec![1, 2], 2),
-        e.submit(vec![3, 4, 5], 10),
-        e.submit(vec![6], 4),
-        e.submit(vec![7, 8], 3),
-        e.submit(vec![9], 6),
-        e.submit(vec![10, 11, 12], 2),
+        e.submit(GenerationRequest::new(vec![1, 2], 2)).id(),
+        e.submit(GenerationRequest::new(vec![3, 4, 5], 10)).id(),
+        e.submit(GenerationRequest::new(vec![6], 4)).id(),
+        e.submit(GenerationRequest::new(vec![7, 8], 3)).id(),
+        e.submit(GenerationRequest::new(vec![9], 6)).id(),
+        e.submit(GenerationRequest::new(vec![10, 11, 12], 2)).id(),
     ];
     let report = e.run_to_completion().unwrap();
     for (i, id) in ids.iter().enumerate() {
@@ -135,9 +135,9 @@ fn kv_capacity_blocks_admission_until_space() {
         },
     )
     .unwrap();
-    let a = e.submit(vec![1; 10], 40); // 50 ctx → 4 blocks
-    let b = e.submit(vec![2; 10], 40); // 4 blocks
-    let c = e.submit(vec![3; 10], 30); // must wait for a/b to finish
+    let a = e.submit(GenerationRequest::new(vec![1; 10], 40)).id(); // 50 ctx → 4 blocks
+    let b = e.submit(GenerationRequest::new(vec![2; 10], 40)).id(); // 4 blocks
+    let c = e.submit(GenerationRequest::new(vec![3; 10], 30)).id(); // must wait for a/b to finish
     let report = e.run_to_completion().unwrap();
     assert_eq!(report.outputs[&a].len(), 40);
     assert_eq!(report.outputs[&b].len(), 40);
@@ -148,8 +148,8 @@ fn kv_capacity_blocks_admission_until_space() {
 fn metrics_populated() {
     let Some(dir) = artifacts_dir() else { return };
     let mut e = engine(&dir, "etap", 2);
-    e.submit(vec![3, 5], 4);
-    e.submit(vec![7], 4);
+    e.submit(GenerationRequest::new(vec![3, 5], 4));
+    e.submit(GenerationRequest::new(vec![7], 4));
     let report = e.run_to_completion().unwrap();
     let m = &report.metrics;
     assert_eq!(m.requests_finished, 2);

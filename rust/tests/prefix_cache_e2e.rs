@@ -2,7 +2,7 @@
 //! the full coordinator stack (batcher → engine → paged store → radix
 //! tree) with no artifacts required, so these run everywhere tier-1 runs.
 
-use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport};
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport, GenerationRequest};
 use flashmla_etap::runtime::ReferenceModelConfig;
 
 const BLOCK: usize = 8;
@@ -49,7 +49,7 @@ fn shared_workload(n: usize, families: usize, sys: usize) -> Vec<Vec<i32>> {
 fn run(mut e: Engine, prompts: &[Vec<i32>], budget: usize) -> EngineReport {
     let ids: Vec<_> = prompts
         .iter()
-        .map(|p| e.submit(p.clone(), budget))
+        .map(|p| e.submit(GenerationRequest::new(p.clone(), budget)).id())
         .collect();
     let r = e.run_to_completion().unwrap();
     for id in ids {
@@ -61,7 +61,7 @@ fn run(mut e: Engine, prompts: &[Vec<i32>], budget: usize) -> EngineReport {
 #[test]
 fn reference_engine_single_request() {
     let mut e = engine(1, 64, true);
-    let id = e.submit(vec![3, 5, 7], 8);
+    let id = e.submit(GenerationRequest::new(vec![3, 5, 7], 8)).id();
     let r = e.run_to_completion().unwrap();
     assert_eq!(r.outputs[&id].len(), 8);
     assert!(r.outputs[&id].iter().all(|&t| (0..64).contains(&t)));
@@ -85,14 +85,14 @@ fn reference_engine_deterministic() {
 fn batched_equals_solo_on_reference_backend() {
     let solo = |prompt: Vec<i32>| {
         let mut e = engine(1, 64, false);
-        let id = e.submit(prompt, 5);
+        let id = e.submit(GenerationRequest::new(prompt, 5)).id();
         e.run_to_completion().unwrap().outputs[&id].clone()
     };
     let s1 = solo(vec![3, 5, 7]);
     let s2 = solo(vec![11, 2]);
     let mut e = engine(2, 64, false);
-    let a = e.submit(vec![3, 5, 7], 5);
-    let b = e.submit(vec![11, 2], 5);
+    let a = e.submit(GenerationRequest::new(vec![3, 5, 7], 5)).id();
+    let b = e.submit(GenerationRequest::new(vec![11, 2], 5)).id();
     let r = e.run_to_completion().unwrap();
     assert_eq!(r.outputs[&a], s1);
     assert_eq!(r.outputs[&b], s2);
@@ -169,8 +169,8 @@ fn unservable_request_is_aborted_not_spun_on() {
     // be admitted; the engine must abort it (empty output) instead of
     // spinning forever and draining the prefix tree under false pressure.
     let mut e = engine(2, 4, true); // 4 blocks × 8 tokens = 32-token pool
-    let impossible = e.submit(vec![1; 10], 60); // peak 70 tokens → 9 blocks
-    let fine = e.submit(vec![2, 3, 4], 6);
+    let impossible = e.submit(GenerationRequest::new(vec![1; 10], 60)).id(); // peak 70 tokens → 9 blocks
+    let fine = e.submit(GenerationRequest::new(vec![2, 3, 4], 6)).id();
     let r = e.run_to_completion().unwrap();
     assert_eq!(r.outputs[&impossible], Vec::<i32>::new());
     assert_eq!(r.outputs[&fine].len(), 6);
@@ -184,7 +184,7 @@ fn prefix_blocks_released_when_tree_evicts_all() {
     let prompts = shared_workload(8, 2, 2 * BLOCK);
     let mut e = engine(2, 128, true);
     for p in &prompts {
-        e.submit(p.clone(), 4);
+        e.submit(GenerationRequest::new(p.clone(), 4));
     }
     let mut guard = 0;
     while e.metrics().requests_finished < 8 {

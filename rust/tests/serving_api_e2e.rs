@@ -1,0 +1,728 @@
+//! End-to-end tests of the streaming serving API over the deterministic
+//! reference backend: request handles, per-request sampling, the
+//! event-driven engine loop, and cancellation.  Runs everywhere tier-1
+//! runs (no artifacts).
+//!
+//! The contracts under test (see `docs/serving-api.md`):
+//!
+//! * the event stream is **complete** — concatenating a request's `Token`
+//!   events reproduces its report output bit-for-bit;
+//! * greedy-default requests through the new API are bit-identical to the
+//!   batch-mode `run_to_completion` shim (and therefore to the
+//!   pre-handle pipeline the other e2e suites pin);
+//! * sampled runs are bit-reproducible given the same seed, sensitive to
+//!   the seed, and isolated from batch composition;
+//! * cancellation at an arbitrary engine step returns the block
+//!   allocator and prefix-cache refcounts to baseline (no leaked
+//!   blocks), composed with shared-prefix adoption.
+
+use std::collections::HashMap;
+
+use flashmla_etap::coordinator::{
+    Engine, EngineConfig, FinishReason, GenerationRequest, RejectReason, SamplingParams,
+    StepEvent,
+};
+use flashmla_etap::runtime::ReferenceModelConfig;
+use flashmla_etap::spec::SpecConfig;
+use flashmla_etap::util::rng::Rng;
+
+const BLOCK: usize = 8;
+
+fn model() -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab: 64,
+        n_layers: 2,
+        latent_dim: 8,
+        seed: 23,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+/// Small-vocab model whose greedy decode cycles quickly (high speculation
+/// acceptance — the multi-token-events regime).
+fn cyclic_model() -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab: 16,
+        n_layers: 2,
+        latent_dim: 8,
+        seed: 21,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+fn engine(slots: usize, kv_blocks: usize, prefix_cache: bool) -> Engine {
+    Engine::reference(
+        model(),
+        EngineConfig {
+            max_slots: slots,
+            kv_blocks,
+            block_size: BLOCK,
+            prefix_cache,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+/// `n` random prompts over tokens `1..vocab`, fixed budget.
+fn workload(n: usize, len: usize, budget: usize, vocab: u64, seed: u64) -> Vec<(Vec<i32>, usize)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let p: Vec<i32> = (0..len).map(|_| rng.range(1, vocab) as i32).collect();
+            (p, budget)
+        })
+        .collect()
+}
+
+/// Batch-mode oracle: outputs via the `run_to_completion` shim.
+fn oracle(mut e: Engine, work: &[(Vec<i32>, usize)]) -> HashMap<u64, Vec<i32>> {
+    let ids: Vec<u64> = work
+        .iter()
+        .map(|(p, b)| e.submit(GenerationRequest::new(p.clone(), *b)).id())
+        .collect();
+    let r = e.run_to_completion().unwrap();
+    ids.into_iter().map(|id| (id, r.outputs[&id].clone())).collect()
+}
+
+#[test]
+fn event_stream_reconstructs_outputs_bit_identically() {
+    // The tentpole contract: streaming clients see exactly the tokens the
+    // report records, greedy-path bit-identity included.
+    let work = workload(4, 10, 12, 63, 3);
+    let want = oracle(engine(2, 64, true), &work);
+
+    let mut e = engine(2, 64, true);
+    let ids: Vec<u64> = work
+        .iter()
+        .map(|(p, b)| e.submit(GenerationRequest::new(p.clone(), *b)).id())
+        .collect();
+    let mut streamed: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut admitted: Vec<u64> = Vec::new();
+    let mut finished: HashMap<u64, FinishReason> = HashMap::new();
+    let mut terminal = Vec::new();
+    while e.has_work() {
+        e.step().unwrap();
+        for ev in e.poll_events() {
+            match ev {
+                StepEvent::Admitted { id } => admitted.push(id),
+                StepEvent::Token { id, token } => streamed.entry(id).or_default().push(token),
+                StepEvent::Finished { id, reason } => {
+                    assert!(finished.insert(id, reason).is_none(), "double finish {id}");
+                }
+                StepEvent::Rejected { id, .. } => panic!("unexpected rejection of {id}"),
+            }
+        }
+        terminal.extend(e.take_finished());
+    }
+    assert!(e.poll_events().is_empty(), "all events drained");
+
+    for id in &ids {
+        assert_eq!(streamed[id], want[id], "streamed tokens diverge for {id}");
+        assert_eq!(finished[id], FinishReason::Length);
+    }
+    let mut admitted_sorted = admitted.clone();
+    admitted_sorted.sort();
+    admitted_sorted.dedup();
+    assert_eq!(admitted_sorted.len(), ids.len(), "each admitted exactly once");
+
+    // `take_finished` carries the same terminal payloads.
+    assert_eq!(terminal.len(), ids.len());
+    for t in &terminal {
+        assert_eq!(t.tokens, want[&t.id]);
+        assert_eq!(t.reason, FinishReason::Length);
+    }
+    // The consuming report still agrees.
+    let report = e.into_report();
+    for id in &ids {
+        assert_eq!(report.outputs[id], want[id]);
+    }
+}
+
+#[test]
+fn event_order_admit_then_tokens_then_finished() {
+    let work = workload(3, 6, 8, 63, 9);
+    let mut e = engine(2, 64, false);
+    for (p, b) in &work {
+        e.submit(GenerationRequest::new(p.clone(), *b));
+    }
+    let mut events = Vec::new();
+    while e.has_work() {
+        e.step().unwrap();
+        events.extend(e.poll_events());
+    }
+    let mut seen_admit = std::collections::HashSet::new();
+    let mut seen_finish = std::collections::HashSet::new();
+    for ev in &events {
+        match *ev {
+            StepEvent::Admitted { id } => {
+                assert!(seen_admit.insert(id), "double admit {id}");
+            }
+            StepEvent::Token { id, .. } => {
+                assert!(seen_admit.contains(&id), "token before admit for {id}");
+                assert!(!seen_finish.contains(&id), "token after finish for {id}");
+            }
+            StepEvent::Finished { id, .. } => {
+                assert!(seen_finish.insert(id), "double finish {id}");
+            }
+            StepEvent::Rejected { id, .. } => panic!("unexpected rejection of {id}"),
+        }
+    }
+    assert_eq!(seen_finish.len(), 3);
+}
+
+#[test]
+fn speculative_ticks_emit_token_bursts() {
+    // With speculation on, one step can emit several tokens for one
+    // request; the stream must still reconstruct the oracle exactly.
+    let work = workload(3, 16, 24, 15, 5);
+    let mk = |spec: SpecConfig| {
+        Engine::reference(
+            cyclic_model(),
+            EngineConfig {
+                max_slots: 2,
+                kv_blocks: 64,
+                block_size: BLOCK,
+                spec,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap()
+    };
+    let want = oracle(mk(SpecConfig::default()), &work);
+    let mut e = mk(SpecConfig {
+        enabled: true,
+        lookback: 64,
+        max_draft: 4,
+        ..SpecConfig::default()
+    });
+    for (p, b) in &work {
+        e.submit(GenerationRequest::new(p.clone(), *b));
+    }
+    let mut streamed: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut max_burst = 0usize;
+    while e.has_work() {
+        e.step().unwrap();
+        let mut per_step: HashMap<u64, usize> = HashMap::new();
+        for ev in e.poll_events() {
+            if let StepEvent::Token { id, token } = ev {
+                streamed.entry(id).or_default().push(token);
+                *per_step.entry(id).or_default() += 1;
+            }
+        }
+        max_burst = max_burst.max(per_step.values().copied().max().unwrap_or(0));
+    }
+    assert_eq!(streamed.len(), want.len());
+    for (id, toks) in &streamed {
+        assert_eq!(toks, &want[id], "spec streaming diverged for {id}");
+    }
+    assert!(
+        max_burst >= 2,
+        "cyclic workload must emit multi-token steps, max burst {max_burst}"
+    );
+}
+
+#[test]
+fn sampled_runs_reproducible_and_seed_sensitive() {
+    let work = workload(2, 6, 20, 63, 11);
+    let run = |seed_base: u64, temperature: f32| -> Vec<Vec<i32>> {
+        let mut e = engine(2, 64, false);
+        let ids: Vec<u64> = work
+            .iter()
+            .enumerate()
+            .map(|(i, (p, b))| {
+                let params = if temperature > 0.0 {
+                    SamplingParams::sampled(temperature, seed_base + i as u64)
+                } else {
+                    SamplingParams::greedy()
+                };
+                e.submit(GenerationRequest::new(p.clone(), *b).sampling(params))
+                    .id()
+            })
+            .collect();
+        let r = e.run_to_completion().unwrap();
+        ids.iter().map(|id| r.outputs[id].clone()).collect()
+    };
+    let a = run(100, 1.0);
+    let b = run(100, 1.0);
+    assert_eq!(a, b, "same seeds must replay bit-identically");
+    let c = run(900, 1.0);
+    assert_ne!(a, c, "different seeds must diverge (near-flat softmax)");
+    let greedy = run(0, 0.0);
+    assert_ne!(a, greedy, "temperature 1 must leave the greedy path");
+    // Top-k = 1 collapses to greedy regardless of seed.
+    let mut e = engine(1, 64, false);
+    let id = e
+        .submit(
+            GenerationRequest::new(work[0].0.clone(), work[0].1)
+                .sampling(SamplingParams::sampled(1.0, 77).with_top_k(1)),
+        )
+        .id();
+    let r = e.run_to_completion().unwrap();
+    assert_eq!(r.outputs[&id], greedy[0], "top_k=1 is greedy");
+}
+
+#[test]
+fn sampled_outputs_isolated_from_batch_composition() {
+    // The determinism contract: a sampled request's stream is a pure
+    // function of (prompt, params) — co-resident greedy traffic, slot
+    // migration, chunk scheduling must not perturb it (and vice versa).
+    let prompt: Vec<i32> = vec![3, 5, 7, 11, 2, 9];
+    let params = SamplingParams::sampled(1.0, 42).with_top_k(32).with_top_p(0.95);
+    let solo = {
+        let mut e = engine(1, 64, false);
+        let id = e
+            .submit(GenerationRequest::new(prompt.clone(), 16).sampling(params))
+            .id();
+        e.run_to_completion().unwrap().outputs[&id].clone()
+    };
+    let work = workload(3, 10, 16, 63, 31);
+    let greedy_solo = oracle(engine(2, 64, false), &work);
+    let mut e = engine(2, 64, false);
+    let greedy_ids: Vec<u64> = work
+        .iter()
+        .map(|(p, b)| e.submit(GenerationRequest::new(p.clone(), *b)).id())
+        .collect();
+    let sampled_id = e
+        .submit(GenerationRequest::new(prompt.clone(), 16).sampling(params))
+        .id();
+    let r = e.run_to_completion().unwrap();
+    assert_eq!(r.outputs[&sampled_id], solo, "batchmates perturbed sampling");
+    for (i, id) in greedy_ids.iter().enumerate() {
+        let want = &greedy_solo[&(i as u64 + 1)];
+        assert_eq!(&r.outputs[id], want, "sampling perturbed greedy batchmate");
+    }
+}
+
+#[test]
+fn sampled_requests_disable_speculation_but_not_greedy_batchmates() {
+    // Spec-enabled engine, mixed batch: the sampled request must draft
+    // nothing (greedy verification can't verify sampled tokens), the
+    // metrics must record why, and outputs must match the spec-off runs.
+    let work = workload(2, 16, 24, 15, 5);
+    let mk = |spec: SpecConfig| {
+        Engine::reference(
+            cyclic_model(),
+            EngineConfig {
+                max_slots: 4,
+                kv_blocks: 64,
+                block_size: BLOCK,
+                spec,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap()
+    };
+    let spec_on = SpecConfig {
+        enabled: true,
+        lookback: 64,
+        max_draft: 4,
+        ..SpecConfig::default()
+    };
+    let sampled_req = || {
+        GenerationRequest::new(vec![3, 5, 7, 11], 16)
+            .sampling(SamplingParams::sampled(1.0, 7))
+    };
+    // Oracles: greedy outputs under spec-off, sampled output solo.
+    let greedy_want = oracle(mk(SpecConfig::default()), &work);
+    let sampled_want = {
+        let mut e = mk(SpecConfig::default());
+        let id = e.submit(sampled_req()).id();
+        e.run_to_completion().unwrap().outputs[&id].clone()
+    };
+    let mut e = mk(spec_on);
+    let greedy_ids: Vec<u64> = work
+        .iter()
+        .map(|(p, b)| e.submit(GenerationRequest::new(p.clone(), *b)).id())
+        .collect();
+    let sampled_id = e.submit(sampled_req()).id();
+    let r = e.run_to_completion().unwrap();
+    for (i, id) in greedy_ids.iter().enumerate() {
+        assert_eq!(r.outputs[id], greedy_want[&(i as u64 + 1)]);
+    }
+    assert_eq!(r.outputs[&sampled_id], sampled_want);
+    assert_eq!(r.metrics.spec_disabled_sampling, 1, "reason recorded");
+    assert!(
+        r.metrics.spec_suppressed_ticks > 0,
+        "co-residency must suppress drafting ticks"
+    );
+}
+
+#[test]
+fn cancel_running_frees_blocks_and_spares_batchmates() {
+    let work = workload(3, 8, 24, 63, 17);
+    let want = oracle(engine(3, 64, false), &work);
+
+    let mut e = engine(3, 64, false);
+    let ids: Vec<u64> = work
+        .iter()
+        .map(|(p, b)| e.submit(GenerationRequest::new(p.clone(), *b)).id())
+        .collect();
+    for _ in 0..6 {
+        e.step().unwrap();
+    }
+    assert!(e.cancel(ids[1]), "mid-decode cancel must land");
+    assert!(!e.cancel(ids[1]), "second cancel is a no-op");
+    let mut reasons = HashMap::new();
+    while e.has_work() {
+        e.step().unwrap();
+        for f in e.take_finished() {
+            reasons.insert(f.id, (f.reason, f.tokens));
+        }
+    }
+    let (reason, partial) = &reasons[&ids[1]];
+    assert_eq!(*reason, FinishReason::Cancelled);
+    assert!(
+        !partial.is_empty() && partial.len() < want[&ids[1]].len(),
+        "cancelled mid-decode: partial output, {} of {}",
+        partial.len(),
+        want[&ids[1]].len()
+    );
+    assert_eq!(
+        partial[..],
+        want[&ids[1]][..partial.len()],
+        "partial output must be a prefix of the uncancelled run"
+    );
+    for id in [ids[0], ids[2]] {
+        assert_eq!(reasons[&id].1, want[&id], "cancel perturbed a batchmate");
+        assert_eq!(reasons[&id].0, FinishReason::Length);
+    }
+    assert_eq!(e.metrics().requests_cancelled, 1);
+    assert_eq!(
+        e.free_kv_blocks(),
+        64,
+        "every block must return to the pool (no prefix tree)"
+    );
+}
+
+#[test]
+fn cancel_queued_request_is_immediate_and_eventful() {
+    let mut e = engine(1, 64, false);
+    let a = e.submit(GenerationRequest::new(vec![1, 2, 3], 4)).id();
+    let b = e.submit(GenerationRequest::new(vec![4, 5, 6], 4)).id();
+    e.step().unwrap(); // admits only `a` (1 slot)
+    e.poll_events();
+    assert!(e.cancel(b), "queued cancel");
+    let evs = e.poll_events();
+    assert!(
+        evs.contains(&StepEvent::Finished {
+            id: b,
+            reason: FinishReason::Cancelled
+        }),
+        "events: {evs:?}"
+    );
+    let term = e.take_finished();
+    assert!(term
+        .iter()
+        .any(|f| f.id == b && f.tokens.is_empty() && f.reason == FinishReason::Cancelled));
+    while e.has_work() {
+        e.step().unwrap();
+    }
+    let all_events: Vec<StepEvent> = e.poll_events();
+    assert!(
+        !all_events.iter().any(|ev| *ev == StepEvent::Admitted { id: b }),
+        "cancelled-queued request must never be admitted"
+    );
+    assert_eq!(e.metrics().requests_cancelled, 1);
+    let r = e.into_report();
+    assert_eq!(r.outputs[&b], Vec::<i32>::new());
+    assert_eq!(r.outputs[&a].len(), 4, "batchmate unaffected");
+}
+
+#[test]
+fn cancel_unknown_or_finished_returns_false() {
+    let mut e = engine(1, 64, false);
+    assert!(!e.cancel(99), "unknown id");
+    let id = e.submit(GenerationRequest::new(vec![1, 2], 2)).id();
+    while e.has_work() {
+        e.step().unwrap();
+    }
+    assert!(!e.cancel(id), "already reaped");
+}
+
+#[test]
+fn rejection_and_queue_drain_emit_events() {
+    // 1b wiring: a never-fits request surfaces as Rejected{KvCapacity}.
+    let mut e = engine(2, 4, true); // 4 blocks × 8 tokens = 32-token pool
+    let impossible = e.submit(GenerationRequest::new(vec![1; 10], 60)).id();
+    let fine = e.submit(GenerationRequest::new(vec![2, 3, 4], 6)).id();
+    let mut events = Vec::new();
+    while e.has_work() {
+        e.step().unwrap();
+        events.extend(e.poll_events());
+    }
+    assert!(
+        events.contains(&StepEvent::Rejected {
+            id: impossible,
+            reason: RejectReason::KvCapacity
+        }),
+        "events: {events:?}"
+    );
+    assert_eq!(e.metrics().requests_rejected, 1);
+    let r = e.into_report();
+    assert_eq!(r.outputs[&impossible], Vec::<i32>::new());
+    assert_eq!(r.outputs[&fine].len(), 6);
+
+    // abort_queued wiring: a drain rejects everything still queued.
+    let mut e = engine(1, 64, false);
+    let a = e.submit(GenerationRequest::new(vec![1, 2], 4)).id();
+    let queued: Vec<u64> = (0..2)
+        .map(|i| e.submit(GenerationRequest::new(vec![3 + i, 4], 4)).id())
+        .collect();
+    e.step().unwrap(); // `a` takes the only slot
+    assert_eq!(e.abort_queued(), 2);
+    let evs = e.poll_events();
+    for id in &queued {
+        assert!(
+            evs.contains(&StepEvent::Rejected {
+                id: *id,
+                reason: RejectReason::Shutdown
+            }),
+            "events: {evs:?}"
+        );
+    }
+    while e.has_work() {
+        e.step().unwrap();
+    }
+    assert_eq!(e.metrics().requests_rejected, 2);
+    let r = e.into_report();
+    assert_eq!(r.outputs[&a].len(), 4, "running request survives the drain");
+}
+
+#[test]
+fn stop_token_list_matches_config_eos() {
+    // Find a token the greedy decode actually emits, then stop on it via
+    // the builder and via the config-level EOS; both must agree.
+    let prompt = vec![3, 5, 7];
+    let free = {
+        let mut e = engine(1, 64, false);
+        let id = e.submit(GenerationRequest::new(prompt.clone(), 12)).id();
+        e.run_to_completion().unwrap().outputs[&id].clone()
+    };
+    let stop = free[4]; // stop mid-stream
+    let via_builder = {
+        let mut e = engine(1, 64, false);
+        let id = e
+            .submit(GenerationRequest::new(prompt.clone(), 12).stop_token(stop))
+            .id();
+        e.run_to_completion().unwrap().outputs[&id].clone()
+    };
+    let via_config = {
+        let mut e = Engine::reference(
+            model(),
+            EngineConfig {
+                max_slots: 1,
+                kv_blocks: 64,
+                block_size: BLOCK,
+                prefix_cache: false,
+                eos_token: Some(stop),
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        let id = e.submit(GenerationRequest::new(prompt.clone(), 12)).id();
+        e.run_to_completion().unwrap().outputs[&id].clone()
+    };
+    assert_eq!(via_builder, via_config);
+    assert_eq!(via_builder.last(), Some(&stop), "stop token kept, EOS-style");
+    assert!(via_builder.len() <= free.len());
+    assert_eq!(via_builder[..], free[..via_builder.len()]);
+}
+
+#[test]
+fn property_cancellation_at_arbitrary_step_leaks_nothing() {
+    // The cancellation-hygiene satellite: cancel at an arbitrary engine
+    // step — mid-queue, mid-prefill, mid-decode, spec on or off, prefix
+    // sharing on or off — then drain.  Afterwards every pool block is
+    // either free or pinned by the prefix tree; with the tree disabled,
+    // the pool must be exactly full again.  Composed with shared-prefix
+    // adoption: prompts share a 2-block system prefix, and a post-cancel
+    // submission re-adopts the cancelled request's re-inserted prefix.
+    const KV_BLOCKS: usize = 64;
+    for case in 0..16u64 {
+        let mut rng = Rng::new(0xCA7CE1 + case);
+        let prefix_cache = rng.range(0, 2) == 0;
+        let spec_enabled = rng.range(0, 2) == 0;
+        let slots = 1 + rng.range(0, 3) as usize;
+        let n = 3 + rng.range(0, 3) as usize;
+        let system: Vec<i32> = (0..2 * BLOCK).map(|_| rng.range(1, 63) as i32).collect();
+        let work: Vec<(Vec<i32>, usize)> = (0..n)
+            .map(|_| {
+                let mut p = system.clone();
+                let extra = 1 + rng.range(0, 5) as usize;
+                p.extend((0..extra).map(|_| rng.range(1, 63) as i32));
+                (p, 4 + rng.range(0, 8) as usize)
+            })
+            .collect();
+        let mut e = Engine::reference(
+            model(),
+            EngineConfig {
+                max_slots: slots,
+                kv_blocks: KV_BLOCKS,
+                block_size: BLOCK,
+                prefix_cache,
+                spec: SpecConfig {
+                    enabled: spec_enabled,
+                    lookback: 64,
+                    max_draft: 4,
+                    adaptive: spec_enabled && rng.range(0, 2) == 0,
+                },
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        let ids: Vec<u64> = work
+            .iter()
+            .map(|(p, b)| e.submit(GenerationRequest::new(p.clone(), *b)).id())
+            .collect();
+        // Random-step cancellations of one or two random requests
+        // (tracked by position so the leak-check re-run below can cancel
+        // the same requests in its own id space).
+        let cancel_at = rng.range(0, 12);
+        let victims: Vec<usize> = (0..1 + rng.range(0, 2))
+            .map(|_| rng.below(ids.len()))
+            .collect();
+        let mut tick = 0u64;
+        let mut guard = 0u32;
+        while e.has_work() {
+            if tick == cancel_at {
+                for &v in &victims {
+                    e.cancel(ids[v]);
+                }
+            }
+            e.step().unwrap();
+            tick += 1;
+            guard += 1;
+            assert!(guard < 10_000, "engine failed to drain (case {case})");
+        }
+        // Post-cancel adoption still works: one more request over the
+        // shared prefix, served to completion on a fresh queue.
+        let mut late = system.clone();
+        late.push(7);
+        let late_id = e.submit(GenerationRequest::new(late.clone(), 4)).id();
+        while e.has_work() {
+            e.step().unwrap();
+            guard += 1;
+            assert!(guard < 10_000, "late request failed to drain (case {case})");
+        }
+        let late_out = e.into_report().outputs[&late_id].clone();
+        // Oracle: the same prompt solo on a cache-less engine (outputs are
+        // batch- and cache-invariant).
+        let mut solo = engine(1, KV_BLOCKS, false);
+        let solo_id = solo.submit(GenerationRequest::new(late, 4)).id();
+        let solo_out = solo.run_to_completion().unwrap().outputs[&solo_id].clone();
+        assert_eq!(late_out, solo_out, "post-cancel adoption corrupted (case {case})");
+        // Leak check happens on a rebuilt engine state below — `e` was
+        // consumed by `into_report`, so re-run the same case watching the
+        // pool instead.
+        let mut e = Engine::reference(
+            model(),
+            EngineConfig {
+                max_slots: slots,
+                kv_blocks: KV_BLOCKS,
+                block_size: BLOCK,
+                prefix_cache,
+                spec: SpecConfig {
+                    enabled: spec_enabled,
+                    lookback: 64,
+                    max_draft: 4,
+                    ..SpecConfig::default()
+                },
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        let ids: Vec<u64> = work
+            .iter()
+            .map(|(p, b)| e.submit(GenerationRequest::new(p.clone(), *b)).id())
+            .collect();
+        let mut tick = 0u64;
+        let mut guard = 0u32;
+        while e.has_work() {
+            if tick == cancel_at {
+                for &v in &victims {
+                    e.cancel(ids[v]);
+                }
+            }
+            e.step().unwrap();
+            tick += 1;
+            guard += 1;
+            assert!(guard < 10_000, "engine failed to drain (case {case})");
+        }
+        let used = KV_BLOCKS - e.free_kv_blocks();
+        if prefix_cache {
+            assert_eq!(
+                used,
+                e.prefix_cached_blocks(),
+                "leaked blocks beyond the tree's pins (case {case}: \
+                 spec {spec_enabled}, victims {victims:?} at step {cancel_at})"
+            );
+        } else {
+            assert_eq!(
+                used, 0,
+                "leaked blocks with the tree disabled (case {case}: \
+                 spec {spec_enabled}, victims {victims:?} at step {cancel_at})"
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_draft_budget_stays_bit_identical() {
+    // Adaptive max_draft is pure scheduling: outputs match the
+    // non-speculative oracle on both the rejection-heavy (wide) and the
+    // acceptance-heavy (cyclic) workload, and on the rejection-heavy one
+    // it drafts no more than the fixed budget does.
+    let mk = |m: ReferenceModelConfig, spec: SpecConfig| {
+        Engine::reference(
+            m,
+            EngineConfig {
+                max_slots: 2,
+                kv_blocks: 64,
+                block_size: BLOCK,
+                spec,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap()
+    };
+    let fixed = SpecConfig {
+        enabled: true,
+        lookback: 64,
+        max_draft: 4,
+        ..SpecConfig::default()
+    };
+    let adaptive = SpecConfig {
+        adaptive: true,
+        ..fixed
+    };
+    let run = |m: ReferenceModelConfig, spec: SpecConfig, work: &[(Vec<i32>, usize)]| {
+        let mut e = mk(m, spec);
+        for (p, b) in work {
+            e.submit(GenerationRequest::new(p.clone(), *b));
+        }
+        e.run_to_completion().unwrap()
+    };
+    // Wide vocab: drafts rarely match → the controller shrinks.
+    let wide_work = workload(4, 12, 20, 63, 77);
+    let base = run(model(), SpecConfig::default(), &wide_work);
+    let fix = run(model(), fixed, &wide_work);
+    let ada = run(model(), adaptive, &wide_work);
+    assert_eq!(base.outputs, fix.outputs);
+    assert_eq!(base.outputs, ada.outputs, "adaptive changed outputs");
+    assert!(
+        ada.metrics.spec_drafted <= fix.metrics.spec_drafted,
+        "shrinking must not draft more: {} vs {}",
+        ada.metrics.spec_drafted,
+        fix.metrics.spec_drafted
+    );
+    // Cyclic vocab: high acceptance → still bit-identical, still saving.
+    let cyc_work = workload(3, 16, 32, 15, 13);
+    let base = run(cyclic_model(), SpecConfig::default(), &cyc_work);
+    let ada = run(cyclic_model(), adaptive, &cyc_work);
+    assert_eq!(base.outputs, ada.outputs);
+    assert!(ada.metrics.spec_accepted > 0, "speculation must still fire");
+    assert!(ada.steps < base.steps, "speculation must still save steps");
+}

@@ -11,7 +11,7 @@
 //! 512-token vocab, where drafts rarely match; speculation must then cost
 //! nothing correctness-wise (and the rejection path gets exercised hard).
 
-use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport};
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport, GenerationRequest};
 use flashmla_etap::prefill::{PrefillConfig, SpecPriority};
 use flashmla_etap::runtime::ReferenceModelConfig;
 use flashmla_etap::spec::SpecConfig;
@@ -49,6 +49,7 @@ fn spec_on(max_draft: usize) -> SpecConfig {
         enabled: true,
         lookback: 64,
         max_draft,
+        ..SpecConfig::default()
     }
 }
 
@@ -68,7 +69,7 @@ fn engine(model: ReferenceModelConfig, slots: usize, spec: SpecConfig) -> Engine
 
 fn run(mut e: Engine, work: &[(Vec<i32>, usize)]) -> EngineReport {
     for (p, budget) in work {
-        e.submit(p.clone(), *budget);
+        e.submit(GenerationRequest::new(p.clone(), *budget));
     }
     e.run_to_completion().unwrap()
 }
@@ -137,6 +138,7 @@ fn disabled_spec_reproduces_the_nonspeculative_sequence() {
                 enabled: false,
                 lookback: 64,
                 max_draft: 4,
+                ..SpecConfig::default()
             },
         ),
         &work,
@@ -226,6 +228,7 @@ fn property_random_sweeps_match_the_oracle() {
             enabled: true,
             lookback: 16 + rng.range(0, 64) as usize,
             max_draft,
+            ..SpecConfig::default()
         };
         let prefill = PrefillConfig {
             step_token_budget: rng.range(0, 40) as usize,
