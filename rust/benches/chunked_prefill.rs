@@ -124,6 +124,9 @@ fn main() -> anyhow::Result<()> {
         "prefill_step_speedup_chunk_8",
         per_token_steps as f64 / chunk8.metrics.prefill_steps.max(1) as f64,
     );
+    // Exact-KV accounting: < 1.0 since the write hole was closed (the
+    // final token of every request is emitted without a cache write).
+    b.record_metric("kv_slots_per_token", chunk8.metrics.kv_slots_per_token());
     b.emit_json("chunked_prefill")?;
     Ok(())
 }

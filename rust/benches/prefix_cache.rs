@@ -111,7 +111,8 @@ fn main() {
             }
             e.run_to_completion().unwrap()
         };
-        let prefill = serve(prefix_cache).metrics.prefill_tokens;
+        let report = serve(prefix_cache);
+        let prefill = report.metrics.prefill_tokens;
         let r = b.bench(&format!("serve 16 requests ({label})"), || {
             serve(prefix_cache).metrics.prefill_tokens
         });
@@ -125,6 +126,10 @@ fn main() {
             "prefill_tokens_base"
         };
         b.record_metric(key, prefill as f64);
+        if prefix_cache {
+            // Exact-KV accounting: < 1.0 since the write hole was closed.
+            b.record_metric("kv_slots_per_token", report.metrics.kv_slots_per_token());
+        }
     }
     b.emit_json("prefix_cache").expect("write bench json");
 }

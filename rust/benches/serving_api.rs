@@ -116,6 +116,8 @@ fn main() -> anyhow::Result<()> {
     );
     b.record_metric("steps_greedy", greedy.steps as f64);
     b.record_metric("steps_sampled", sampled.steps as f64);
+    // Exact-KV accounting: < 1.0 since the write hole was closed.
+    b.record_metric("kv_slots_per_token", greedy.metrics.kv_slots_per_token());
 
     // Event-stream drain overhead: run_to_completion vs poll every tick.
     b.bench("batch shim (events discarded)", || {

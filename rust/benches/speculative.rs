@@ -152,6 +152,15 @@ fn main() -> anyhow::Result<()> {
                 &format!("steps_saved_{tag}_k{k}"),
                 report.metrics.spec_steps_saved() as f64,
             );
+            if k == 4 {
+                // Exact-KV accounting: < 1.0 since the write hole was
+                // closed; speculation does not change it (rejected draft
+                // rows are rolled back, never committed).
+                b.record_metric(
+                    &format!("kv_slots_per_token_{tag}"),
+                    report.metrics.kv_slots_per_token(),
+                );
+            }
         }
     }
     b.emit_json("speculative")?;

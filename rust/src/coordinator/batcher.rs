@@ -136,14 +136,19 @@ impl Batcher {
             .unwrap_or(self.cfg.batch_buckets.last().unwrap())
     }
 
-    /// KV positions the active set needs *after* this step (each active
-    /// request writes one more position).  The engine may raise this
-    /// further for anticipated prefix-cache adoptions before rounding up
-    /// to a bucket.
+    /// KV positions the active set needs *after* this step: each active
+    /// request writes its next latent at exactly `kv_len()`, so the
+    /// attention window grows to `kv_len() + 1`.  (`context_len() + 1`
+    /// would over-reserve one slot per decoding request — the newest
+    /// generated token is counted there before its latent is written —
+    /// and could round a request sitting exactly at a bucket boundary up
+    /// to the next KV bucket.)  The engine may raise this further for
+    /// anticipated prefix-cache adoptions and multi-token chunks before
+    /// rounding up to a bucket.
     pub fn kv_bucket_need(&self) -> usize {
         self.active
             .iter()
-            .map(|r| r.context_len() + 1)
+            .map(|r| r.kv_len() + 1)
             .max()
             .unwrap_or(1)
     }
@@ -258,7 +263,30 @@ mod tests {
         assert_eq!(b.kv_bucket(), 128); // 91 ≤ 128
         b.active_mut()[0].prefill_pos = 100;
         b.active_mut()[0].generated = (0..40).collect();
-        assert_eq!(b.kv_bucket(), 256); // 141 > 128
+        b.active_mut()[0].state = RequestState::Decoding;
+        assert_eq!(b.kv_bucket(), 256); // kv_len 139, next write needs 140 > 128
+    }
+
+    #[test]
+    fn kv_bucket_boundary_request_stays_in_its_bucket() {
+        // Regression for the demand formula: a decoding request whose next
+        // write lands exactly at the bucket boundary must not be rounded
+        // up.  kv_len = 100 + 28 - 1 = 127: the next latent is written at
+        // position 127 and the window grows to 128 — bucket 128 holds it.
+        // The old `context_len() + 1` formula counted the unfed newest
+        // token and demanded 129, spilling into bucket 256.
+        let mut b = Batcher::new(cfg()).unwrap();
+        b.submit(req(0, 100, 50));
+        b.admit(|_| true);
+        b.active_mut()[0].prefill_pos = 100;
+        b.active_mut()[0].generated = (0..28).collect();
+        b.active_mut()[0].state = RequestState::Decoding;
+        assert_eq!(b.kv_bucket_need(), 128);
+        assert_eq!(b.kv_bucket(), 128, "boundary request must not round up");
+        // One more generated token crosses the boundary for real.
+        b.active_mut()[0].generated.push(99);
+        assert_eq!(b.kv_bucket_need(), 129);
+        assert_eq!(b.kv_bucket(), 256);
     }
 
     #[test]

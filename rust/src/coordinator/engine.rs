@@ -16,6 +16,20 @@
 //! of all layers' latent vectors — so request state survives slot moves
 //! and bucket changes without any model re-execution (prefix re-use).
 //!
+//! **Exact KV convention.**  Every position-carrying computation uses
+//! [`Request::kv_len`] — the number of tokens actually *fed* to the model,
+//! each of whose latents sits at its sequence position — never the token
+//! count ([`Request::context_len`]), which runs one ahead once generation
+//! starts: the newest generated token is sampled from the previous
+//! position's logits and has no latent until it is fed next tick.  The
+//! first generated token's latent therefore lands at exactly
+//! `prompt.len()`, and every decode step attends over exactly the rows
+//! that were written.  (The pre-fix engine used the token count here,
+//! permanently skipping position `prompt.len()` and attending one
+//! all-zero row per decode step — self-consistent but numerically wrong;
+//! a debug-build occupancy ledger now asserts every position below
+//! `kv_len` is written exactly once.)
+//!
 //! **Prefix cache.**  When enabled (default), the engine keeps a radix
 //! tree over completed-prefill prompts ([`crate::prefixcache`]):
 //!
@@ -46,10 +60,11 @@
 //! workload the paper optimizes for, replacing up to `m` memory-bound
 //! decode ticks.  The engine accepts the longest draft prefix matching the
 //! per-position greedy argmax, which keeps outputs bit-identical to plain
-//! decode; rejected positions only ever exist in the live literal past the
-//! request's context (overwritten before anything attends to them, per the
-//! write-purity contract) and are additionally rolled out of the paged
-//! store by truncation.  Disabled (the default), none of this runs and the
+//! decode; rejected positions only ever exist in the live literal at or
+//! past the request's `kv_len()` (overwritten before anything attends to
+//! them, per the write-purity contract) and are additionally rolled out
+//! of the paged store by truncation.  Disabled (the default), none of
+//! this runs and the
 //! step sequence is byte-for-byte the non-speculative pipeline.  See
 //! `docs/speculative-decoding.md`.
 //!
@@ -212,6 +227,15 @@ pub struct Engine {
     /// can format on demand — hot ticks never pay for a log string.
     last_demands: Vec<SlotDemand>,
     last_plan: Vec<usize>,
+    /// Debug-only exact-occupancy ledger: per active request, how many
+    /// times each cache position has been written (adopted prefix
+    /// positions start at 1, courtesy of the donor request).  Checked
+    /// after every tick by [`debug_check_kv_occupancy`]
+    /// (Self::debug_check_kv_occupancy): every position below `kv_len()`
+    /// written exactly once — no hole, no double write — in every
+    /// pipeline the test suites drive.
+    #[cfg(debug_assertions)]
+    kv_written: HashMap<RequestId, Vec<u32>>,
     pub sync_cost: Welford,
 }
 
@@ -354,14 +378,20 @@ impl Engine {
             finished_buf: Vec::new(),
             last_demands: Vec::new(),
             last_plan: Vec::new(),
+            #[cfg(debug_assertions)]
+            kv_written: HashMap::new(),
             sync_cost: Welford::new(),
             cfg,
         })
     }
 
-    /// Largest admissible context (biggest kv bucket, minus the write slot).
+    /// Largest admissible context in *tokens* (prompt + generated).  A
+    /// request of `C` tokens feeds only `C - 1` of them — the final
+    /// generated token is emitted but never fed back — so its latents
+    /// occupy positions `0 .. C - 1` exactly and the biggest KV bucket
+    /// `N` serves requests of up to `N + 1` tokens.
     pub fn max_context(&self) -> usize {
-        self.kv_buckets.last().copied().unwrap_or(1) - 1
+        self.kv_buckets.last().copied().unwrap_or(1) + 1
     }
 
     /// Submit a request; returns its handle.  The config-level EOS token
@@ -530,14 +560,16 @@ impl Engine {
     /// Worst-case blocks the active set may still allocate: each request's
     /// peak block count minus what its sequence already holds.  The paged
     /// store allocates lazily (at sync time), so admission must reserve
-    /// against this, not against the instantaneous free count.
+    /// against this, not against the instantaneous free count.  Peaks are
+    /// measured in `max_kv()` — latents actually written — not token
+    /// count: the final generated token never gets a cache slot.
     fn committed_future_blocks(&self) -> usize {
         let bs = self.cfg.block_size;
         self.batcher
             .active()
             .iter()
             .map(|r| {
-                let peak = r.max_context().div_ceil(bs);
+                let peak = r.max_kv().div_ceil(bs);
                 let held = self
                     .seq_of
                     .get(&r.id)
@@ -570,6 +602,8 @@ impl Engine {
             self.drafters.remove(&r.id);
             self.adaptive.remove(&r.id);
             self.samplers.remove(&r.id);
+            #[cfg(debug_assertions)]
+            self.kv_written.remove(&r.id);
             let reason = r.finish_reason.expect("finished request has a reason");
             self.events.push_back(StepEvent::Finished { id: r.id, reason });
             self.finished_buf.push(FinishedRequest {
@@ -589,7 +623,7 @@ impl Engine {
         // Sharing cannot rescue it either — its own sequence must hold all
         // `peak` distinct blocks at once.
         while let Some(front) = self.batcher.front() {
-            if front.max_context().div_ceil(self.cfg.block_size) <= self.cfg.kv_blocks {
+            if front.max_kv().div_ceil(self.cfg.block_size) <= self.cfg.kv_blocks {
                 break;
             }
             let mut r = self.batcher.reject_front().expect("front exists");
@@ -616,7 +650,7 @@ impl Engine {
                 let cap = tree.usable_prefix_len(front.prompt.len());
                 let matched = tree.peek_match(&front.prompt[..cap]);
                 let needed = committed
-                    + (front.max_context() - matched).div_ceil(self.cfg.block_size);
+                    + (front.max_kv() - matched).div_ceil(self.cfg.block_size);
                 let free = self.store.free_blocks();
                 if needed > free {
                     Some(needed - free)
@@ -656,7 +690,7 @@ impl Engine {
                 }
                 None => 0,
             };
-            let blocks_needed = (r.max_context() - matched).div_ceil(block_size);
+            let blocks_needed = (r.max_kv() - matched).div_ceil(block_size);
             if committed + blocks_needed <= store.free_blocks() {
                 committed += blocks_needed;
                 true
@@ -742,12 +776,14 @@ impl Engine {
 
         // 3. Determine buckets; recompose if needed.  Bucket choice
         // anticipates both prefix adoption (a newly admitted request may
-        // start its context at the cached prefix length rather than zero)
-        // and this tick's prefill chunks (a chunk of k tokens writes up to
-        // position ctx + k - 1).  The estimate plan below may differ from
-        // the final plan — adoption in recompose can shift contexts — but
-        // the final plan is capped by the chosen bucket's headroom, so an
-        // off estimate only truncates chunks, never overflows the bucket.
+        // start its write frontier at the cached prefix length rather than
+        // zero) and this tick's prefill chunks (a chunk of k tokens writes
+        // positions kv .. kv + k - 1, where kv is the request's exact
+        // `kv_len()` — every latent written so far, nothing skipped).  The
+        // estimate plan below may differ from the final plan — adoption in
+        // recompose can shift frontiers — but the final plan is capped by
+        // the chosen bucket's headroom, so an off estimate only truncates
+        // chunks, never overflows the bucket.
         let batch_bucket = self.batcher.batch_bucket();
         let largest_kv = *self.kv_buckets.last().expect("validated nonempty");
         let mut kv_need = self.batcher.kv_bucket_need();
@@ -762,7 +798,7 @@ impl Engine {
                     } else {
                         peeked.get(&r.id).copied()
                     };
-                    let ctx = adopted.unwrap_or_else(|| r.context_len());
+                    let ctx = adopted.unwrap_or_else(|| r.kv_len());
                     let demand = if r.state == RequestState::Prefilling {
                         let consumed = adopted.unwrap_or(r.prefill_pos);
                         let remaining = r.prompt.len().saturating_sub(consumed);
@@ -818,11 +854,11 @@ impl Engine {
             .map(|r| {
                 if r.state == RequestState::Prefilling {
                     let remaining = r.prompt.len() - r.prefill_pos;
-                    // Positions ctx .. kv_bucket - 1 are addressable.
-                    let headroom = kv_bucket.saturating_sub(r.context_len()).max(1);
+                    // Positions kv_len .. kv_bucket - 1 are addressable.
+                    let headroom = kv_bucket.saturating_sub(r.kv_len()).max(1);
                     SlotDemand::prefill(remaining, r.prefill_pos, headroom)
                 } else if !r.draft.is_empty() {
-                    let headroom = kv_bucket.saturating_sub(r.context_len()).max(1);
+                    let headroom = kv_bucket.saturating_sub(r.kv_len()).max(1);
                     SlotDemand::verify(r.draft.len(), headroom)
                 } else {
                     SlotDemand::decode()
@@ -837,7 +873,10 @@ impl Engine {
         for (i, r) in self.batcher.active().iter().enumerate() {
             let slot = by_id[&r.id];
             let k = plan[i];
-            start_pos[slot] = r.context_len() as i32;
+            // The exact convention: the next latent lands at kv_len() —
+            // for the first decode step that is `prompt.len()`, the slot
+            // the old `context_len()` convention permanently skipped.
+            start_pos[slot] = r.kv_len() as i32;
             chunks[slot] = if r.state == RequestState::Prefilling {
                 r.prompt[r.prefill_pos..r.prefill_pos + k].to_vec()
             } else {
@@ -850,6 +889,19 @@ impl Engine {
                 c.extend_from_slice(&r.draft[..k - 1]);
                 c
             };
+        }
+        // Record this tick's planned writes in the occupancy ledger: slot
+        // `i` writes positions `kv_len() .. kv_len() + plan[i]`.
+        #[cfg(debug_assertions)]
+        for (i, r) in self.batcher.active().iter().enumerate() {
+            let (s, k) = (r.kv_len(), plan[i]);
+            let w = self.kv_written.entry(r.id).or_default();
+            if w.len() < s + k {
+                w.resize(s + k, 0);
+            }
+            for mark in &mut w[s..s + k] {
+                *mark += 1;
+            }
         }
 
         // 5. Execute the whole mixed batch in one multi-token step.  Ticks
@@ -922,7 +974,7 @@ impl Engine {
                 new_tokens += outcome.emitted;
                 if fed[i] > 0 {
                     verified.push((r.id, outcome.drafted, outcome.accepted));
-                    rollbacks.push((r.id, r.context_len()));
+                    rollbacks.push((r.id, r.kv_len()));
                 }
             } else {
                 debug_assert_eq!(k, 1, "decode slots consume exactly one token");
@@ -941,15 +993,16 @@ impl Engine {
         // 6b. Roll rejected draft positions out of the paged store.  Under
         // the engine's lazy sync this is provably a no-op — latents enter
         // the store only at recompose, which copies positions
-        // `synced .. context_len()`, and `context_len` never counts a
-        // rejected position — but the invariant "the store never holds an
-        // unverified latent" is enforced here rather than assumed, so a
-        // future eager-sync backend (e.g. a chunked PJRT artifact writing
-        // through the paged store) cannot silently poison prefix sharing.
-        // Rejected rows in the *live literal* need no cleanup at all:
-        // they sit past the request's context and are rewritten by the
-        // next correct token before anything attends to them (the
-        // write-purity contract; see `docs/speculative-decoding.md`).
+        // `synced .. kv_len()`, and `kv_len` counts exactly the validly
+        // written positions (never a rejected one) — but the invariant
+        // "the store never holds an unverified latent" is enforced here
+        // rather than assumed, so a future eager-sync backend (e.g. a
+        // chunked PJRT artifact writing through the paged store) cannot
+        // silently poison prefix sharing.  Rejected rows in the *live
+        // literal* need no cleanup at all: they sit at positions
+        // `kv_len()` and beyond and are rewritten by the next correct
+        // token before anything attends to them (the write-purity
+        // contract; see `docs/speculative-decoding.md`).
         for (rid, ctx) in rollbacks {
             let Some(&seq) = self.seq_of.get(&rid) else {
                 continue;
@@ -969,6 +1022,8 @@ impl Engine {
                 }
             }
         }
+        #[cfg(debug_assertions)]
+        self.debug_check_kv_occupancy();
 
         let active = self.batcher.active().len();
         self.metrics.on_step(
@@ -1008,9 +1063,13 @@ impl Engine {
                 .map_err(|e| anyhow::anyhow!("cache to_vec: {e:?}"))?;
             let (l, n, ld) = (self.n_layers, live.kv_bucket, self.latent_dim);
             let b = live.batch_bucket;
+            // Sync exactly the positions the backend has written: rows
+            // `synced .. kv_len()`.  The newest generated token has no
+            // latent yet (it is fed next tick), so syncing up to the token
+            // count would copy a garbage row into the store.
             let mut active_len: HashMap<RequestId, usize> = HashMap::new();
             for r in self.batcher.active() {
-                active_len.insert(r.id, r.context_len());
+                active_len.insert(r.id, r.kv_len());
             }
             for (slot, rid) in live.slots.iter().enumerate() {
                 let Some(rid) = rid else { continue };
@@ -1083,6 +1142,10 @@ impl Engine {
             };
             self.synced.insert(r.id, self.store.len(seq));
             self.seq_of.insert(r.id, seq);
+            // Adopted prefix positions were written (once) by the donor
+            // request; the ledger inherits them as already-occupied.
+            #[cfg(debug_assertions)]
+            self.kv_written.insert(r.id, vec![1; self.store.len(seq)]);
         }
 
         // (c) Load (cached) the runner for this bucket pair.
@@ -1165,6 +1228,36 @@ impl Engine {
         let chain = self.store.blocks_of(seq)[..aligned / block_size].to_vec();
         tree.insert(&prompt[..aligned], &chain, &mut self.store);
         self.inserted.insert(rid);
+    }
+
+    /// KV-occupancy invariant (debug builds, after every tick): every
+    /// cache position below a request's `kv_len()` has been written
+    /// **exactly once** — a zero would be the old write hole coming back,
+    /// a two would be a slot clobbering valid history.  Positions at or
+    /// past `kv_len()` are rejected draft rows awaiting their overwrite
+    /// under the write-purity contract; their marks are dropped so the
+    /// rewrite by the next correct token registers as the real write.
+    #[cfg(debug_assertions)]
+    fn debug_check_kv_occupancy(&mut self) {
+        for r in self.batcher.active() {
+            let kv = r.kv_len();
+            let w = self.kv_written.entry(r.id).or_default();
+            assert!(
+                w.len() >= kv,
+                "request {}: write ledger covers {} positions, kv_len is {kv}",
+                r.id,
+                w.len()
+            );
+            for (pos, &n) in w.iter().take(kv).enumerate() {
+                assert!(
+                    n == 1,
+                    "request {}: cache position {pos} written {n} times \
+                     (kv_len {kv}) — exact-occupancy violated",
+                    r.id
+                );
+            }
+            w.truncate(kv);
+        }
     }
 
     /// Paged-store utilization (for dashboards/tests).

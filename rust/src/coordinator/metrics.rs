@@ -73,6 +73,15 @@ pub struct ServingMetrics {
     /// slot needs its full logits row).  Ticks with nothing to suppress
     /// (no greedy decoding co-resident) are not counted.
     pub spec_suppressed_ticks: u64,
+    /// KV cache positions terminated requests actually occupied at their
+    /// peak (`kv_len` at termination; only requests that generated ≥ 1
+    /// token count) — the numerator of
+    /// [`kv_slots_per_token`](Self::kv_slots_per_token).
+    pub kv_slots_committed: u64,
+    /// Tokens terminated requests spanned (`context_len` at termination;
+    /// same ≥ 1-generated-token filter) — the denominator of
+    /// [`kv_slots_per_token`](Self::kv_slots_per_token).
+    pub context_tokens: u64,
     elapsed: Duration,
 }
 
@@ -196,6 +205,8 @@ impl ServingMetrics {
         }
         self.spec_disabled_sampling += other.spec_disabled_sampling;
         self.spec_suppressed_ticks += other.spec_suppressed_ticks;
+        self.kv_slots_committed += other.kv_slots_committed;
+        self.context_tokens += other.context_tokens;
         self.elapsed += other.elapsed;
     }
 
@@ -217,8 +228,29 @@ impl ServingMetrics {
             .join(" ")
     }
 
+    /// Cache slots consumed per token served, across terminated requests
+    /// that generated at least one token.  Under the exact KV convention
+    /// this sits strictly below 1.0 — the final generated token of every
+    /// counted request is emitted without a cache write — where the old
+    /// skip-one convention burned exactly 1.0 (prompt + generated slots
+    /// *plus* one garbage slot per request).  Requests that never
+    /// generated (queue rejections, prefill-stage cancellations) are
+    /// excluded: they have no emitted-but-unwritten final token, so they
+    /// would dilute the invariant toward 1.0.  Benches record it so the
+    /// reclaimed slot is visible in the perf trajectory.
+    pub fn kv_slots_per_token(&self) -> f64 {
+        if self.context_tokens == 0 {
+            return 0.0;
+        }
+        self.kv_slots_committed as f64 / self.context_tokens as f64
+    }
+
     pub fn on_finish(&mut self, r: &Request) {
         self.requests_finished += 1;
+        if !r.generated.is_empty() {
+            self.kv_slots_committed += r.kv_len() as u64;
+            self.context_tokens += r.context_len() as u64;
+        }
         if let (Some(first), Some(done)) = (r.first_token_at, r.finished_at) {
             self.ttft
                 .record(first.duration_since(r.arrived_at));
@@ -290,6 +322,9 @@ impl ServingMetrics {
         }
         if self.e2e_steps.count() > 0 {
             s.push_str(&format!(" | e2e {:.1} steps/req", self.e2e_steps.mean()));
+        }
+        if self.context_tokens > 0 {
+            s.push_str(&format!(" | kv {:.3} slots/token", self.kv_slots_per_token()));
         }
         if self.requests_rejected + self.requests_cancelled > 0 {
             s.push_str(&format!(
@@ -383,6 +418,13 @@ mod tests {
         assert!(m.e2e.count() == 1);
         assert!(m.tpot.count() == 1);
         assert!(m.tpot.mean_us() >= 1000.0, "tpot {}", m.tpot.mean_us());
+        // Exact KV accounting: 1 prompt + 2 generated tokens, but only 2
+        // latents ever written (the final token is never fed).
+        assert_eq!(m.kv_slots_committed, 2);
+        assert_eq!(m.context_tokens, 3);
+        assert!((m.kv_slots_per_token() - 2.0 / 3.0).abs() < 1e-12);
+        assert!(m.kv_slots_per_token() < 1.0, "the reclaimed slot shows");
+        assert!(m.report().contains("kv 0.667 slots/token"));
     }
 
     #[test]
@@ -427,6 +469,8 @@ mod tests {
         a.spec_disabled_sampling = 1;
         a.prefix.lookups = 3;
         a.prefix.hits = 1;
+        a.kv_slots_committed = 10;
+        a.context_tokens = 12;
         let mut b = ServingMetrics::new();
         b.on_step(Duration::from_millis(20), 1, 4, 9, &[5]);
         b.on_verify(2, 0);
@@ -440,6 +484,8 @@ mod tests {
         b.prefix.lookups = 1;
         b.prefix.hits = 1;
         b.prefix_cached_blocks = 7;
+        b.kv_slots_committed = 5;
+        b.context_tokens = 6;
 
         let mut merged = ServingMetrics::new();
         merged.merge(&a);
@@ -460,6 +506,8 @@ mod tests {
         );
         // Prefix hit rate from summed counters: 2/4.
         assert!((merged.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        // KV slots/token from summed totals: (10 + 5) / (12 + 6).
+        assert!((merged.kv_slots_per_token() - 15.0 / 18.0).abs() < 1e-12);
         assert_eq!(merged.prefix_cached_blocks, 7);
         // Welford-backed stats match pushing every sample into one stream.
         assert_eq!(merged.ttft_steps.count(), 3);

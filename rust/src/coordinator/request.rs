@@ -271,25 +271,60 @@ impl Request {
         self
     }
 
-    /// Total KV positions this request needs at peak.
+    /// Total tokens this request spans at peak (prompt + full budget).
     pub fn max_context(&self) -> usize {
         self.prompt.len() + self.max_new_tokens
     }
 
-    /// Current KV length (tokens cached so far).
+    /// KV positions this request needs at peak.  One less than
+    /// [`max_context`](Self::max_context): the final generated token is
+    /// emitted but never fed back, so its latent is never written.
+    pub fn max_kv(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens - 1
+    }
+
+    /// Tokens this request spans so far: prompt consumed + generated.
+    /// This is a *token count*, not a cache length — the newest generated
+    /// token has been sampled but not yet fed, so its latent does not
+    /// exist anywhere.  Use [`kv_len`](Self::kv_len) for anything that
+    /// addresses cache positions.
     pub fn context_len(&self) -> usize {
         self.prefill_pos + self.generated.len()
+    }
+
+    /// Latents actually written to the KV cache for this request — the
+    /// exact convention.  Every *fed* token's latent is written at its
+    /// sequence position: prompt token `i` at position `i`, generated
+    /// token `j` at position `prompt.len() + j`.  The newest generated
+    /// token is sampled from the previous position's logits and is not
+    /// fed (and not written) until the next step, so it never counts:
+    ///
+    /// * prefilling: `prefill_pos` (generated is empty);
+    /// * decoding/finished with `g` generated tokens: `prefill_pos + g - 1`.
+    ///
+    /// The next write for this request always lands at exactly `kv_len()`,
+    /// and attention after that write covers exactly `kv_len() + 1` rows —
+    /// no skipped slot, no garbage row.
+    pub fn kv_len(&self) -> usize {
+        self.prefill_pos + self.generated.len().saturating_sub(1)
     }
 
     /// The token to feed the model this step, or None if waiting on state.
     pub fn next_input_token(&self) -> Option<i32> {
         match self.state {
             RequestState::Prefilling => self.prompt.get(self.prefill_pos).copied(),
-            RequestState::Decoding => self
-                .generated
-                .last()
-                .copied()
-                .or_else(|| self.prompt.last().copied()),
+            RequestState::Decoding => {
+                // The Prefilling→Decoding transition pushes the first
+                // generated token, so `generated` is provably non-empty
+                // here; a stale-token fallback would silently re-feed
+                // `prompt.last()` and corrupt the cache convention.
+                debug_assert!(
+                    !self.generated.is_empty(),
+                    "decoding request {} has no generated token to feed",
+                    self.id
+                );
+                self.generated.last().copied()
+            }
             _ => None,
         }
     }
@@ -472,6 +507,51 @@ mod tests {
         let r = Request::new(1, vec![1, 2, 3], 5);
         assert_eq!(r.max_context(), 8);
         assert_eq!(r.context_len(), 0);
+        // The final generated token is never fed, so peak KV is one less.
+        assert_eq!(r.max_kv(), 7);
+    }
+
+    #[test]
+    fn kv_len_counts_only_fed_tokens() {
+        // The exact-convention walk: kv_len is always the number of tokens
+        // fed so far, and the next write position.  context_len (token
+        // count) runs exactly one ahead once generation starts.
+        let mut r = Request::new(1, vec![10, 11, 12], 4);
+        r.state = RequestState::Prefilling;
+        assert_eq!(r.kv_len(), 0);
+        r.advance(99); // fed prompt[0] → latent at 0
+        assert_eq!((r.kv_len(), r.context_len()), (1, 1));
+        r.advance(99); // fed prompt[1] → latent at 1
+        r.advance(42); // fed prompt[2] → latent at 2, emits g0 (unfed)
+        assert_eq!(r.state, RequestState::Decoding);
+        assert_eq!((r.kv_len(), r.context_len()), (3, 4));
+        r.advance(43); // fed g0 → latent at 3 = prompt.len(), emits g1
+        assert_eq!((r.kv_len(), r.context_len()), (4, 5));
+        r.advance(44);
+        r.advance(45); // budget reached; g3 sampled but never fed
+        assert!(r.is_finished());
+        assert_eq!(r.kv_len(), 6);
+        assert_eq!(r.kv_len(), r.max_kv());
+        assert_eq!(r.context_len(), r.max_context());
+    }
+
+    #[test]
+    fn kv_len_through_chunks_and_verification() {
+        // advance_chunk: kv_len is the prefill cursor until the prompt
+        // completes, then trails context_len by exactly one.
+        let mut r = Request::new(1, vec![1, 2, 3, 4, 5], 8);
+        r.state = RequestState::Prefilling;
+        r.advance_chunk(3, 0);
+        assert_eq!(r.kv_len(), 3);
+        r.advance_chunk(2, 42);
+        assert_eq!((r.kv_len(), r.context_len()), (5, 6));
+        // Verification: emitted tokens advance kv_len by exactly the
+        // count of chunk positions whose input was valid (1 + accepted),
+        // which is the store's post-rollback length.
+        r.draft = vec![20, 77];
+        let out = r.apply_verification(2, &[20, 21, 22]);
+        assert_eq!(out.emitted, 2);
+        assert_eq!((r.kv_len(), r.context_len()), (7, 8));
     }
 
     #[test]

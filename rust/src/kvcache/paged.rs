@@ -167,7 +167,10 @@ impl PagedLatentCache {
     /// every whole block past the new boundary.  This is the speculative-
     /// decoding rollback primitive: rejected KV positions must never
     /// survive in the store (they hold latents of tokens that were never
-    /// generated), and whole-block release keeps the refcount story
+    /// generated).  The engine rolls back to the request's exact
+    /// `kv_len()` — the count of validly-written positions — so the store
+    /// boundary always coincides with the live literal's write frontier.
+    /// Whole-block release keeps the refcount story
     /// identical to `free_seq` — a shared block survives for its other
     /// owners.  The kept tail block may hold stale latents past `new_len`;
     /// that region is unreachable (`gather_padded`/`append` are length-

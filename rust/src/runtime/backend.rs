@@ -12,7 +12,11 @@
 //! The contract (fixed by `aot.py`): given per-slot input tokens, the live
 //! cache literal `[L × B × N × latent]`, and per-slot lengths, write each
 //! slot's new latent at position `lengths[b]` and return
-//! `(logits [B × vocab], new_cache)`.
+//! `(logits [B × vocab], new_cache)`.  The engine passes each request's
+//! exact `kv_len()` (latents actually written — the sampled-but-unfed
+//! newest token never counts), so writes are always contiguous: prompt
+//! token `i` lands at position `i`, generated token `j` at
+//! `prompt.len() + j`, and attention windows contain only written rows.
 //!
 //! **Multi-token steps.**  The chunked-prefill pipeline
 //! (`crate::prefill`, `docs/chunked-prefill.md`) extends the contract with

@@ -13,9 +13,11 @@
 //!   isolation contract the real artifacts guarantee.
 //! * **History sensitive.**  The written latent depends on the hidden
 //!   state, which attends over every cached position, so a single corrupted
-//!   or misplaced cache entry changes all later logits.  This is what makes
-//!   it a real end-to-end check for paged-store and prefix-cache plumbing
-//!   rather than a mock.
+//!   or misplaced cache entry changes all later logits (bitwise — an
+//!   argmax may or may not flip, which is why `rust/tests/kv_exact_e2e.rs`
+//!   probes cache rows and raw logits rather than outputs alone).  This is
+//!   what makes it a real end-to-end check for paged-store and
+//!   prefix-cache plumbing rather than a mock.
 //!
 //! Per slot with context length `t` and input token `x`:
 //!

@@ -1,0 +1,409 @@
+//! Exact-KV-convention e2e: the decode write hole is closed.
+//!
+//! The pre-fix engine counted the sampled-but-unfed newest token in its
+//! `lengths = context_len()` convention, so every request permanently
+//! skipped cache position `prompt.len()` — one wasted slot per request
+//! and one all-zero row attended on every decode step.  These tests pin
+//! the exact convention from every angle:
+//!
+//! * position `prompt.len()` holds the **first generated token's latent**
+//!   after the first decode step, byte-identical across the native
+//!   chunked path, the per-token fallback, and the verification path;
+//! * a decode step reads **exactly the rows written so far** — garbage
+//!   past the window leaves logits bit-identical, while zeroing a row
+//!   inside it (the old hole's exact cache state) changes them;
+//! * engine outputs equal the **per-token reference oracle** (the raw
+//!   runner fed contiguous positions 0, 1, 2, … — the true model) across
+//!   per-token, chunked, speculative, and shared-prefix pipelines, which
+//!   is how every output expectation in this repo is re-derived;
+//! * the reclaimed slot shows up in `kv_slots_per_token() < 1`.
+//!
+//! Runs everywhere tier-1 runs (no artifacts).  In debug builds the
+//! engine additionally asserts the KV-occupancy ledger (every position
+//! below `kv_len` written exactly once) on every tick of every test here.
+
+use std::sync::Arc;
+
+use flashmla_etap::coordinator::{Engine, EngineConfig, GenerationRequest, SamplingParams};
+use flashmla_etap::prefill::PrefillConfig;
+use flashmla_etap::runtime::{
+    prefill_chunk_fallback, verify_chunk_fallback, DecodeRunner, ReferenceModel,
+    ReferenceModelConfig, StepRunner,
+};
+use flashmla_etap::spec::SpecConfig;
+use flashmla_etap::util::rng::Rng;
+
+const BLOCK: usize = 8;
+
+fn wide_model() -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab: 64,
+        n_layers: 2,
+        latent_dim: 8,
+        seed: 23,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+/// Small-vocab model whose greedy decode cycles (speculation fires).
+fn cyclic_model() -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab: 16,
+        n_layers: 2,
+        latent_dim: 8,
+        seed: 21,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+/// The per-token reference oracle: the raw runner fed one token per step
+/// at **contiguous** positions 0, 1, 2, … — prompt token `i` at position
+/// `i`, generated token `j` at position `prompt.len() + j`.  No skipped
+/// slot, no garbage row: this is the true model every pipeline must
+/// reproduce bit-for-bit, and the source all output expectations are
+/// derived from.
+fn oracle_decode(model: &Arc<ReferenceModel>, prompt: &[i32], budget: usize) -> Vec<i32> {
+    let r = model.runner(1, 128);
+    let mut cache = r.fresh_cache().unwrap();
+    let v = StepRunner::vocab(&r);
+    let mut out = Vec::new();
+    let mut next = prompt[0];
+    let mut fed = 0usize;
+    while out.len() < budget {
+        let (logits, c) = StepRunner::step(&r, &[next], &cache, &[fed as i32]).unwrap();
+        cache = c;
+        fed += 1;
+        let arg = DecodeRunner::argmax_row(&logits, v, 0);
+        if fed < prompt.len() {
+            next = prompt[fed];
+        } else {
+            out.push(arg);
+            next = arg;
+        }
+    }
+    out
+}
+
+/// One slot's cache row at `pos` from a `[L × B × N × d]` literal.
+fn row(host: &[f32], l: usize, b: usize, n: usize, d: usize, slot: usize, pos: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(l * d);
+    for layer in 0..l {
+        let off = ((layer * b + slot) * n + pos) * d;
+        out.extend_from_slice(&host[off..off + d]);
+    }
+    out
+}
+
+fn engine(model: ReferenceModelConfig, slots: usize, prefix: bool, cfg: PrefillConfig) -> Engine {
+    Engine::reference(
+        model,
+        EngineConfig {
+            max_slots: slots,
+            kv_blocks: 256,
+            block_size: BLOCK,
+            prefix_cache: prefix,
+            prefill: cfg,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+fn prompts(n: usize, len: usize, vocab: u64, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..len).map(|_| rng.range(1, vocab) as i32).collect())
+        .collect()
+}
+
+#[test]
+fn first_generated_latent_lands_at_prompt_len() {
+    // The acceptance probe: engine-shaped execution — one prefill chunk
+    // over the prompt, then the first decode step at start_pos =
+    // prompt.len() — must write position P, and the cache must be
+    // byte-identical to the contiguous per-token oracle loop.
+    let m = ReferenceModel::new(wide_model());
+    let r = m.runner(1, 32);
+    let (nl, d, n) = (2usize, 8usize, 32usize);
+    let prompt = vec![3i32, 5, 7];
+    let p = prompt.len();
+    let v = StepRunner::vocab(&r);
+
+    // Engine-shaped: prefill chunk, then g0 at position P (= kv_len).
+    let fresh = r.fresh_cache().unwrap();
+    let (logits, cache) = r.prefill_chunk(&[prompt.clone()], &fresh, &[0]).unwrap();
+    let g0 = DecodeRunner::argmax_row(&logits, v, 0);
+    let (_, cache) = r.prefill_chunk(&[vec![g0]], &cache, &[p as i32]).unwrap();
+    let host = cache.to_vec::<f32>().unwrap();
+
+    // Oracle: the same four tokens at contiguous positions 0..=3.
+    let mut ocache = r.fresh_cache().unwrap();
+    for (t, &tok) in prompt.iter().chain([&g0]).enumerate() {
+        let (_, c) = StepRunner::step(&r, &[tok], &ocache, &[t as i32]).unwrap();
+        ocache = c;
+    }
+    let ohost = ocache.to_vec::<f32>().unwrap();
+    assert_eq!(host, ohost, "engine-shaped cache diverges from the oracle");
+
+    // Position P holds g0's latent — written, non-zero: the hole is gone.
+    let at_p = row(&host, nl, 1, n, d, 0, p);
+    assert!(
+        at_p.iter().any(|&x| x != 0.0),
+        "position {p} still unwritten — the write hole is back"
+    );
+    // Nothing past the write frontier is written.
+    for pos in p + 1..n {
+        assert!(
+            row(&host, nl, 1, n, d, 0, pos).iter().all(|&x| x == 0.0),
+            "position {pos} written past the frontier"
+        );
+    }
+}
+
+#[test]
+fn cross_backend_parity_writes_position_p_identically() {
+    // The satellite parity contract: native ReferenceRunner chunking, the
+    // per-token `prefill_chunk_fallback`, and `verify_chunk_fallback`
+    // must produce byte-identical caches on an engine-shaped mixed batch
+    // under the exact convention — with the first-decode slot's row
+    // landing at exactly its prompt length.
+    let m = ReferenceModel::new(wide_model());
+    let r = m.runner(4, 32);
+    let (nl, d, n) = (2usize, 8usize, 32usize);
+
+    // Slot 1 is a request whose 3-token prompt already prefilled
+    // (contiguous rows 0..3); this tick feeds its first generated token.
+    let mut cache = r.fresh_cache().unwrap();
+    for (t, tok) in [9i32, 4, 11].into_iter().enumerate() {
+        let (_, c) = StepRunner::step(&r, &[0, tok, 0, 0], &cache, &[0, t as i32, 0, 0]).unwrap();
+        cache = c;
+    }
+    let chunks: Vec<Vec<i32>> = vec![
+        vec![3, 5, 7, 11, 2], // fresh prefill chunk
+        vec![12],             // first decode token at position 3 = prompt.len()
+        Vec::new(),           // padded
+        vec![8, 1],           // 2-token prefill chunk
+    ];
+    let start = [0, 3, 0, 0];
+
+    let (_, native) = r.prefill_chunk(&chunks, &cache, &start).unwrap();
+    let (_, fallback) = prefill_chunk_fallback(&r, &chunks, &cache, &start).unwrap();
+    let (_, verify) = verify_chunk_fallback(&r, &chunks, &cache, &start).unwrap();
+    let (_, vnative) = r.verify_chunk(&chunks, &cache, &start).unwrap();
+
+    let host = native.to_vec::<f32>().unwrap();
+    assert_eq!(host, fallback.to_vec::<f32>().unwrap(), "fallback diverges");
+    assert_eq!(host, verify.to_vec::<f32>().unwrap(), "verify fallback diverges");
+    assert_eq!(host, vnative.to_vec::<f32>().unwrap(), "native verify diverges");
+
+    // Slot 1's first generated token wrote position 3 — no hole.
+    assert!(
+        row(&host, nl, 4, n, d, 1, 3).iter().any(|&x| x != 0.0),
+        "first decode write skipped position prompt.len()"
+    );
+    assert!(
+        row(&host, nl, 4, n, d, 1, 4).iter().all(|&x| x == 0.0),
+        "decode wrote past its frontier"
+    );
+}
+
+#[test]
+fn decode_window_covers_exactly_the_written_rows() {
+    // The window proof: a decode step at position t attends rows 0..=t
+    // and nothing else.  Garbage past the window must leave logits
+    // bit-identical; zeroing a row *inside* it — exactly the all-zero row
+    // the old convention attended every step — must change them.  Under
+    // the exact convention that zero row no longer exists, so every
+    // decode window is one real row shorter than the old pipeline's.
+    let m = ReferenceModel::new(wide_model());
+    let r = m.runner(1, 32);
+    let (nl, d, n) = (2usize, 8usize, 32usize);
+    let v = StepRunner::vocab(&r);
+    let prompt = vec![3i32, 5, 7];
+    let p = prompt.len();
+
+    // Contiguous prefill + first decode: rows 0..=3 written.
+    let (logits, cache) = r
+        .prefill_chunk(&[prompt.clone()], &r.fresh_cache().unwrap(), &[0])
+        .unwrap();
+    let g0 = DecodeRunner::argmax_row(&logits, v, 0);
+    let (logits, cache) = r.prefill_chunk(&[vec![g0]], &cache, &[p as i32]).unwrap();
+    let g1 = DecodeRunner::argmax_row(&logits, v, 0);
+    let host = cache.to_vec::<f32>().unwrap();
+
+    // Baseline: g1 fed at position 4, window rows 0..=4.
+    let (base, _) = StepRunner::step(&r, &[g1], &cache, &[(p + 1) as i32]).unwrap();
+
+    // Garbage beyond the window (rows 5..) changes nothing.
+    let mut beyond = host.clone();
+    for pos in p + 2..n {
+        for layer in 0..nl {
+            let off = (layer * n + pos) * d;
+            for x in &mut beyond[off..off + d] {
+                *x = 1e9;
+            }
+        }
+    }
+    let poisoned = flashmla_etap::runtime::client::literal_from_f32(
+        &beyond,
+        &[nl as i64, 1, n as i64, d as i64],
+    )
+    .unwrap();
+    let (lg, _) = StepRunner::step(&r, &[g1], &poisoned, &[(p + 1) as i32]).unwrap();
+    assert_eq!(lg, base, "rows past the window leaked into the logits");
+
+    // An all-zero row *inside* the window — the kind of row the old
+    // convention left at prompt.len() and attended on every decode step
+    // — perturbs the logits.  This is the numerical error the fix
+    // removes; note it does not always flip the argmax, which is why
+    // this test compares raw logits rather than outputs.
+    let mut holed = host.clone();
+    for layer in 0..nl {
+        let off = (layer * n + p) * d;
+        for x in &mut holed[off..off + d] {
+            *x = 0.0;
+        }
+    }
+    let holed = flashmla_etap::runtime::client::literal_from_f32(
+        &holed,
+        &[nl as i64, 1, n as i64, d as i64],
+    )
+    .unwrap();
+    let (lg, _) = StepRunner::step(&r, &[g1], &holed, &[(p + 1) as i32]).unwrap();
+    assert_ne!(lg, base, "an in-window zero row must perturb the logits");
+}
+
+/// Serve `work` through one engine configuration; outputs in submit order.
+fn run_engine(
+    model: ReferenceModelConfig,
+    prefill: PrefillConfig,
+    prefix: bool,
+    spec: SpecConfig,
+    work: &[(Vec<i32>, usize)],
+) -> Vec<Vec<i32>> {
+    let mut e = Engine::reference(
+        model,
+        EngineConfig {
+            max_slots: 2,
+            kv_blocks: 256,
+            block_size: BLOCK,
+            prefix_cache: prefix,
+            prefill,
+            spec,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    let ids: Vec<u64> = work
+        .iter()
+        .map(|(p, b)| e.submit(GenerationRequest::new(p.clone(), *b)).id())
+        .collect();
+    let r = e.run_to_completion().unwrap();
+    ids.into_iter().map(|id| r.outputs[&id].clone()).collect()
+}
+
+#[test]
+fn engine_pipelines_match_the_per_token_oracle() {
+    // The re-derivation contract: per-token, chunked, shared-prefix, and
+    // speculative engine pipelines all reproduce the contiguous oracle
+    // bit-for-bit.  (The old convention could NOT pass this: its decode
+    // windows contained a zero row the oracle never sees.)
+    let spec_on = SpecConfig {
+        enabled: true,
+        lookback: 64,
+        max_draft: 4,
+        ..SpecConfig::default()
+    };
+
+    for (model, vocab) in [(wide_model(), 63u64), (cyclic_model(), 15u64)] {
+        let arc = ReferenceModel::new(model.clone());
+        let work: Vec<(Vec<i32>, usize)> =
+            prompts(4, 12, vocab, 77).into_iter().map(|p| (p, 8)).collect();
+        let want: Vec<Vec<i32>> = work.iter().map(|(p, b)| oracle_decode(&arc, p, *b)).collect();
+
+        let per_tok = run_engine(
+            model.clone(),
+            PrefillConfig::per_token(),
+            false,
+            SpecConfig::default(),
+            &work,
+        );
+        assert_eq!(per_tok, want, "per-token pipeline diverges from the oracle");
+        let chunked = run_engine(
+            model.clone(),
+            PrefillConfig::default(),
+            true,
+            SpecConfig::default(),
+            &work,
+        );
+        assert_eq!(chunked, want, "chunked pipeline diverges from the oracle");
+        let spec = run_engine(model.clone(), PrefillConfig::default(), true, spec_on, &work);
+        assert_eq!(spec, want, "speculative pipeline diverges from the oracle");
+    }
+}
+
+#[test]
+fn shared_prefix_decode_matches_the_oracle() {
+    // Prefix adoption skips prefill steps but must land every later
+    // latent at the exact same positions the oracle uses.
+    let model = wide_model();
+    let arc = ReferenceModel::new(model.clone());
+    let mut rng = Rng::new(9);
+    let system: Vec<i32> = (0..2 * BLOCK).map(|_| rng.range(1, 63) as i32).collect();
+    let work: Vec<(Vec<i32>, usize)> = (0..6)
+        .map(|_| {
+            let mut p = system.clone();
+            p.extend((0..3).map(|_| rng.range(1, 63) as i32));
+            (p, 6)
+        })
+        .collect();
+    let mut e = engine(model, 2, true, PrefillConfig::default());
+    let ids: Vec<u64> = work
+        .iter()
+        .map(|(p, b)| e.submit(GenerationRequest::new(p.clone(), *b)).id())
+        .collect();
+    let r = e.run_to_completion().unwrap();
+    assert!(r.metrics.prefix.hits > 0, "prefix cache must fire");
+    for (id, (p, b)) in ids.iter().zip(&work) {
+        assert_eq!(
+            r.outputs[id],
+            oracle_decode(&arc, p, *b),
+            "adopted-prefix decode diverges from the oracle"
+        );
+    }
+    // The reclaimed slot is visible: strictly fewer KV slots than tokens.
+    let ratio = r.metrics.kv_slots_per_token();
+    assert!(
+        ratio > 0.0 && ratio < 1.0,
+        "exact convention must commit < 1 slot per token, got {ratio}"
+    );
+}
+
+#[test]
+fn sampled_pipelines_agree_across_schedulers() {
+    // Sampling has no greedy oracle, but the exact convention must make
+    // seeded streams a pure function of (prompt, params) regardless of
+    // the scheduler: per-token and chunked engines agree bit-for-bit.
+    let work = prompts(3, 10, 63, 31);
+    let run = |prefill: PrefillConfig| -> Vec<Vec<i32>> {
+        let mut e = engine(wide_model(), 2, false, prefill);
+        let ids: Vec<u64> = work
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                e.submit(
+                    GenerationRequest::new(p.clone(), 8)
+                        .sampling(SamplingParams::sampled(0.8, 100 + i as u64).with_top_k(16)),
+                )
+                .id()
+            })
+            .collect();
+        let r = e.run_to_completion().unwrap();
+        ids.into_iter().map(|id| r.outputs[&id].clone()).collect()
+    };
+    let a = run(PrefillConfig::per_token());
+    let b = run(PrefillConfig::default());
+    assert_eq!(a, b, "sampled streams diverge across schedulers");
+}
