@@ -11,18 +11,26 @@
 //!   uncancelled output;
 //! * **no KV leak** — after the drain every block is back in the pool;
 //! * **sampling determinism** — a temperature-sampled rerun with the same
-//!   seed reproduces itself bit-for-bit.
+//!   seed reproduces itself bit-for-bit;
+//! * **flight-recorder replay** — the streaming engine runs with the
+//!   recorder on (proving observability leaves the greedy path
+//!   bit-identical), and the dumped JSON ring replays the exact per-tick
+//!   plan summaries the engine reported live.  The recorder dump and a
+//!   Prometheus metrics snapshot are written next to the bench JSONs and
+//!   re-validated by a tiny parser check (`docs/observability.md`).
 //!
 //!     cargo run --release --example streaming_serving
 //!     cargo run --release --example streaming_serving -- --cancel-at 12
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 
 use flashmla_etap::coordinator::{
     Engine, EngineConfig, FinishReason, GenerationRequest, SamplingParams, StepEvent,
 };
 use flashmla_etap::runtime::ReferenceModelConfig;
 use flashmla_etap::util::argparse::ArgParser;
+use flashmla_etap::util::json;
 use flashmla_etap::util::rng::Rng;
 
 const BLOCK_SIZE: usize = 8;
@@ -40,7 +48,9 @@ fn model() -> ReferenceModelConfig {
     }
 }
 
-fn engine() -> anyhow::Result<Engine> {
+const RECORDER_TICKS: usize = 256;
+
+fn engine_with(flight_recorder_ticks: usize) -> anyhow::Result<Engine> {
     Engine::reference(
         model(),
         EngineConfig {
@@ -48,9 +58,14 @@ fn engine() -> anyhow::Result<Engine> {
             kv_blocks: KV_BLOCKS,
             block_size: BLOCK_SIZE,
             prefix_cache: false, // exact pool accounting for the leak check
+            flight_recorder_ticks,
             ..EngineConfig::default()
         },
     )
+}
+
+fn engine() -> anyhow::Result<Engine> {
+    engine_with(0)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -89,20 +104,26 @@ fn main() -> anyhow::Result<()> {
     };
 
     // Streaming run: drive steps manually, drain events, cancel B mid-way.
+    // The flight recorder is on for this engine only — the bit-identity
+    // check against the recorder-less oracle above doubles as the proof
+    // that observability never perturbs the token stream.
     println!("[streaming] two interleaved requests, cancelling B at step {cancel_at}\n");
-    let mut e = engine()?;
+    let mut e = engine_with(RECORDER_TICKS)?;
     let ha = e.submit(GenerationRequest::new(pa.clone(), max_new));
     let hb = e.submit(GenerationRequest::new(pb.clone(), max_new));
     let name = |id: u64| if id == ha.id() { "A" } else { "B" };
     let mut streamed: HashMap<u64, Vec<i32>> = HashMap::new();
     let mut reasons: HashMap<u64, FinishReason> = HashMap::new();
+    let mut live_plans: Vec<String> = Vec::new();
     let mut tick = 0u64;
     while e.has_work() {
         if tick == cancel_at {
             anyhow::ensure!(e.cancel(hb.id()), "cancel must land mid-decode");
             println!("  -- cancel(B) issued at step {tick}");
         }
-        e.step()?;
+        if e.step()? {
+            live_plans.push(e.last_plan_summary());
+        }
         tick += 1;
         let mut line: Vec<String> = Vec::new();
         for ev in e.poll_events() {
@@ -184,5 +205,78 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(s1 != s3, "different seeds must diverge");
     anyhow::ensure!(s1 != want_a[..s1.len()], "temperature 1 must leave the greedy path");
     println!("✓ sampled run (temp 1.0, top-k 32) reproducible by seed, distinct across seeds");
+
+    // 5. Flight recorder replay + export dump.  The ring holds one record
+    // per *executed* tick, and each record's plan summary must equal what
+    // `last_plan_summary` reported live right after that step.
+    let rec = e.flight_recorder().expect("recorder enabled for the streaming engine");
+    anyhow::ensure!(rec.dropped() == 0, "ring sized to hold the whole run");
+    anyhow::ensure!(
+        rec.len() == live_plans.len(),
+        "recorder holds {} ticks, live run reported {}",
+        rec.len(),
+        live_plans.len()
+    );
+    for (r, plan) in rec.records().zip(live_plans.iter()) {
+        anyhow::ensure!(
+            &r.plan == plan,
+            "tick {}: recorded plan `{}` != live `{plan}`",
+            r.tick,
+            r.plan
+        );
+    }
+
+    // Per-request timelines survive termination.
+    let tl = e.timeline(ha).expect("timeline kept after finish");
+    anyhow::ensure!(tl.finished_step.is_some() && tl.outcome.is_some());
+    anyhow::ensure!(tl.ttft_steps().is_some(), "A produced a first token");
+    let tb = e.timeline(hb).expect("timeline for the cancelled request");
+    anyhow::ensure!(tb.outcome.as_deref() == Some("Cancelled"));
+
+    // Dump both exporters and re-validate them with a tiny checker, the
+    // same one CI's quick mode runs (reuses `util::json`).
+    let dir = PathBuf::from(std::env::var("FLASHMLA_BENCH_OUT").unwrap_or_else(|_| ".".into()));
+    let fr_path = dir.join("flight_recorder.json");
+    e.dump_flight_recorder(&fr_path)?;
+    let prom_path = dir.join("metrics.prom");
+    std::fs::write(&prom_path, e.metrics().to_prometheus())?;
+
+    let doc = json::parse_file(&fr_path)?;
+    anyhow::ensure!(doc.get("capacity").as_usize() == Some(RECORDER_TICKS));
+    let ticks = doc.get("ticks").as_arr().expect("ticks array");
+    anyhow::ensure!(ticks.len() == rec.len(), "dump holds every record");
+    let mut prev = 0u64;
+    for t in ticks {
+        let n = t.get("tick").as_usize().expect("tick number") as u64;
+        anyhow::ensure!(n > prev, "tick numbers strictly increase");
+        prev = n;
+        anyhow::ensure!(t.get("plan").as_str().is_some(), "plan is a string");
+        anyhow::ensure!(t.get("kv_free_blocks").as_usize().is_some());
+    }
+    let prom = std::fs::read_to_string(&prom_path)?;
+    let mut samples = 0usize;
+    for line in prom.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let mut it = line.split_whitespace();
+        let metric = it.next().expect("metric name");
+        anyhow::ensure!(
+            metric.starts_with("flashmla_"),
+            "unexpected metric name `{metric}`"
+        );
+        let val = it.next().expect("metric value");
+        anyhow::ensure!(
+            val.parse::<f64>().is_ok(),
+            "sample value `{val}` is not a number"
+        );
+        anyhow::ensure!(it.next().is_none(), "exactly `name value` per sample line");
+        samples += 1;
+    }
+    anyhow::ensure!(samples > 0, "exporter produced no samples");
+    println!(
+        "✓ flight recorder replayed {} ticks exactly; dumps validated \
+         ({} + {}, {samples} Prometheus samples)",
+        rec.len(),
+        fr_path.display(),
+        prom_path.display()
+    );
     Ok(())
 }

@@ -127,6 +127,7 @@ fn main() -> anyhow::Result<()> {
     // Exact-KV accounting: < 1.0 since the write hole was closed (the
     // final token of every request is emitted without a cache write).
     b.record_metric("kv_slots_per_token", chunk8.metrics.kv_slots_per_token());
+    b.record_serving_metrics(&chunk8.metrics);
     b.emit_json("chunked_prefill")?;
     Ok(())
 }

@@ -129,6 +129,7 @@ fn main() {
         if prefix_cache {
             // Exact-KV accounting: < 1.0 since the write hole was closed.
             b.record_metric("kv_slots_per_token", report.metrics.kv_slots_per_token());
+            b.record_serving_metrics(&report.metrics);
         }
     }
     b.emit_json("prefix_cache").expect("write bench json");

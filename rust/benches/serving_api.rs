@@ -144,6 +144,7 @@ fn main() -> anyhow::Result<()> {
         })
         .per_second(tokens_per_run);
     b.record_metric("streaming_tok_per_s", tps);
+    b.record_serving_metrics(&greedy.metrics);
 
     b.emit_json("serving_api")?;
     Ok(())

@@ -161,6 +161,9 @@ fn main() -> anyhow::Result<()> {
                     report.metrics.kv_slots_per_token(),
                 );
             }
+            // Last config wins: the emitted snapshot describes the final
+            // (largest-k) speculative run.
+            b.record_serving_metrics(&report.metrics);
         }
     }
     b.emit_json("speculative")?;

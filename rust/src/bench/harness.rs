@@ -70,6 +70,9 @@ pub struct Bencher {
     metrics: Vec<(String, f64)>,
     /// Configuration snapshot (knob → value), emitted under `meta.config`.
     config: Vec<(String, String)>,
+    /// Full serving-metrics registry snapshot (same schema as
+    /// `ServingMetrics::snapshot_json`), emitted under `serving_metrics`.
+    serving_metrics: Option<Json>,
 }
 
 impl Default for Bencher {
@@ -98,6 +101,7 @@ impl Bencher {
             results: Vec::new(),
             metrics: Vec::new(),
             config: Vec::new(),
+            serving_metrics: None,
         }
     }
 
@@ -152,6 +156,14 @@ impl Bencher {
             "duplicate bench metric `{name}`"
         );
         self.metrics.push((name.to_string(), value));
+    }
+
+    /// Embed the engine's full metrics-registry snapshot (the same JSON
+    /// `ServingMetrics::snapshot_json` exports) so every `BENCH_*.json`
+    /// carries the serving counters of the workload it timed.  Last call
+    /// wins: benches record the final (or merged) engine state.
+    pub fn record_serving_metrics(&mut self, m: &crate::coordinator::ServingMetrics) {
+        self.serving_metrics = Some(m.snapshot_json());
     }
 
     /// Record one configuration knob (e.g. "chunk_tokens" → "8") for the
@@ -218,6 +230,10 @@ impl Bencher {
                         .map(|(k, v)| (k.clone(), Json::num(*v)))
                         .collect(),
                 ),
+            ),
+            (
+                "serving_metrics",
+                self.serving_metrics.clone().unwrap_or(Json::Null),
             ),
         ]);
         std::fs::write(&path, doc.dump())

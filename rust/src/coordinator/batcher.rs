@@ -13,6 +13,8 @@
 
 use std::collections::VecDeque;
 
+use crate::obs;
+
 use super::request::{Request, RequestId, RequestState};
 
 /// Batcher policy knobs.
@@ -67,6 +69,9 @@ impl Batcher {
 
     /// Enqueue an admitted request.
     pub fn submit(&mut self, r: Request) {
+        obs::event_with("batcher", "queued", || {
+            format!("id={} depth={}", r.id, self.queue.len() + 1)
+        });
         self.queue.push_back(r);
     }
 
@@ -103,6 +108,11 @@ impl Batcher {
                 i += 1;
             }
         }
+        if !done.is_empty() {
+            obs::event_with("batcher", "reap", || {
+                format!("n={} active={}", done.len(), self.active.len())
+            });
+        }
         done
     }
 
@@ -116,6 +126,9 @@ impl Batcher {
                 Some(front) if kv_capacity_ok(front) => {
                     let mut r = self.queue.pop_front().unwrap();
                     r.state = RequestState::Prefilling;
+                    obs::event_with("batcher", "admit", || {
+                        format!("id={} slot={}", r.id, self.active.len())
+                    });
                     self.active.push(r);
                     admitted += 1;
                 }

@@ -105,6 +105,7 @@ use std::time::Instant;
 
 use crate::kvcache::{CacheConfig, PagedLatentCache, SeqId};
 use crate::log_info;
+use crate::obs::{self, FlightRecorder, RequestTimeline, TickRecord};
 use crate::prefill::{ChunkPlanner, PrefillConfig, SlotDemand};
 use crate::prefixcache::PrefixTree;
 use crate::runtime::{
@@ -141,6 +142,9 @@ pub struct EngineConfig {
     pub prefill: PrefillConfig,
     /// Speculative-decoding knobs (`[engine.spec]`); disabled by default.
     pub spec: SpecConfig,
+    /// Flight-recorder ring capacity in ticks; 0 (default) disables the
+    /// recorder entirely — the hot path then never touches it.
+    pub flight_recorder_ticks: usize,
 }
 
 impl Default for EngineConfig {
@@ -154,6 +158,7 @@ impl Default for EngineConfig {
             prefix_cache: true,
             prefill: PrefillConfig::default(),
             spec: SpecConfig::default(),
+            flight_recorder_ticks: 0,
         }
     }
 }
@@ -193,9 +198,11 @@ pub struct Engine {
     seq_of: HashMap<RequestId, SeqId>,
     /// Tokens already synced into the paged store, per request.
     synced: HashMap<RequestId, usize>,
-    /// Engine step count at submission, per queued/active request (for the
-    /// steps-based TTFT proxy).
-    submit_step: HashMap<RequestId, u64>,
+    /// Tick-stamped lifecycle record per request (submitted / admitted /
+    /// first token / finished, plus per-pipeline activity).  Kept after
+    /// termination so [`timeline`](Self::timeline) answers post-run; the
+    /// steps-based TTFT/e2e metrics read their submit stamps from here.
+    timelines: HashMap<RequestId, RequestTimeline>,
     /// Requests whose prompt prefix is already in the tree.
     inserted: HashSet<RequestId>,
     runners: HashMap<(usize, usize), Box<dyn StepRunner>>,
@@ -236,6 +243,9 @@ pub struct Engine {
     /// pipeline the test suites drive.
     #[cfg(debug_assertions)]
     kv_written: HashMap<RequestId, Vec<u32>>,
+    /// Flight recorder (None = disabled): one [`TickRecord`] per executed
+    /// tick, capacity-bounded; see `docs/observability.md`.
+    recorder: Option<FlightRecorder>,
     pub sync_cost: Welford,
 }
 
@@ -359,7 +369,7 @@ impl Engine {
             prefix,
             seq_of: HashMap::new(),
             synced: HashMap::new(),
-            submit_step: HashMap::new(),
+            timelines: HashMap::new(),
             inserted: HashSet::new(),
             runners: HashMap::new(),
             live: None,
@@ -380,6 +390,8 @@ impl Engine {
             last_plan: Vec::new(),
             #[cfg(debug_assertions)]
             kv_written: HashMap::new(),
+            recorder: (cfg.flight_recorder_ticks > 0)
+                .then(|| FlightRecorder::new(cfg.flight_recorder_ticks)),
             sync_cost: Welford::new(),
             cfg,
         })
@@ -411,7 +423,11 @@ impl Engine {
         if self.spec.enabled && !r.sampling.is_greedy() {
             self.metrics.spec_disabled_sampling += 1;
         }
-        self.submit_step.insert(id, self.metrics.steps);
+        self.timelines
+            .insert(id, RequestTimeline::new(id, self.metrics.steps));
+        obs::event_with("engine", "submit", || {
+            format!("id={id} prompt={} max_new={}", r.prompt.len(), r.max_new_tokens)
+        });
         self.batcher.submit(r);
         RequestHandle::new(id)
     }
@@ -432,6 +448,7 @@ impl Engine {
     /// already cancelled.
     pub fn cancel(&mut self, id: RequestId) -> bool {
         if let Some(mut r) = self.batcher.remove_queued(id) {
+            obs::event_with("engine", "cancel", || format!("id={id} queued"));
             r.finish(FinishReason::Cancelled);
             self.metrics.requests_cancelled += 1;
             self.retire_unstarted(
@@ -452,6 +469,7 @@ impl Engine {
         let had_prefilled = r.state == RequestState::Decoding;
         let prompt = r.prompt.clone();
         r.finish(FinishReason::Cancelled);
+        obs::event_with("engine", "cancel", || format!("id={id} running"));
         self.metrics.requests_cancelled += 1;
         if had_prefilled {
             self.insert_prompt_prefix(id, &prompt);
@@ -486,8 +504,26 @@ impl Engine {
     /// empty output, the event, and the finished buffer.
     fn retire_unstarted(&mut self, r: Request, event: StepEvent) {
         self.metrics.on_finish(&r);
-        if let Some(s0) = self.submit_step.remove(&r.id) {
-            self.metrics.on_request_done_steps(self.metrics.steps - s0);
+        if let Some(t) = self.timelines.get_mut(&r.id) {
+            if t.finished_step.is_none() {
+                t.finished_step = Some(self.metrics.steps);
+                t.outcome = Some(format!(
+                    "{:?}",
+                    r.finish_reason.expect("retired request has a reason")
+                ));
+                self.metrics
+                    .on_request_done_steps(self.metrics.steps - t.submitted_step);
+            }
+        }
+        match &event {
+            StepEvent::Rejected { id, reason } => {
+                let (id, reason) = (*id, *reason);
+                obs::event_with("engine", "rejected", || format!("id={id} reason={reason:?}"));
+            }
+            _ => {
+                let id = r.id;
+                obs::event_with("engine", "retired", || format!("id={id}"));
+            }
         }
         self.events.push_back(event);
         self.finished_buf.push(FinishedRequest {
@@ -583,6 +619,12 @@ impl Engine {
     /// One engine step: reap, admit, (maybe) recompose, execute, advance.
     pub fn step(&mut self) -> anyhow::Result<bool> {
         let t0 = Instant::now();
+        // Publish the tick this call would execute as (`steps` counts
+        // completed ticks; idle polls don't advance it, so an idle poll's
+        // records share the number of the next executed tick).
+        obs::set_tick(self.metrics.steps + 1);
+        let _step_span = obs::span("engine", "step");
+        let events_before = self.events.len();
 
         // 1. Reap finished requests (natural finishes and running
         // cancellations alike — `cancel` only marks; the blocks are freed
@@ -595,8 +637,14 @@ impl Engine {
                 self.store.free_seq(seq);
             }
             self.synced.remove(&r.id);
-            if let Some(s0) = self.submit_step.remove(&r.id) {
-                self.metrics.on_request_done_steps(self.metrics.steps - s0);
+            if let Some(t) = self.timelines.get_mut(&r.id) {
+                if t.finished_step.is_none() {
+                    t.finished_step = Some(self.metrics.steps);
+                    t.outcome = r.finish_reason.map(|f| format!("{f:?}"));
+                    t.tokens = r.generated.len();
+                    self.metrics
+                        .on_request_done_steps(self.metrics.steps - t.submitted_step);
+                }
             }
             self.inserted.remove(&r.id);
             self.drafters.remove(&r.id);
@@ -605,6 +653,9 @@ impl Engine {
             #[cfg(debug_assertions)]
             self.kv_written.remove(&r.id);
             let reason = r.finish_reason.expect("finished request has a reason");
+            obs::event_with("engine", "finished", || {
+                format!("id={} reason={reason:?} tokens={}", r.id, r.generated.len())
+            });
             self.events.push_back(StepEvent::Finished { id: r.id, reason });
             self.finished_buf.push(FinishedRequest {
                 id: r.id,
@@ -701,8 +752,17 @@ impl Engine {
         if admitted > 0 {
             composition_changed = true;
             let active = self.batcher.active();
+            let step_now = self.metrics.steps;
+            let mut admitted_ids: Vec<RequestId> = Vec::with_capacity(admitted);
             for r in &active[active.len() - admitted..] {
                 self.events.push_back(StepEvent::Admitted { id: r.id });
+                admitted_ids.push(r.id);
+            }
+            for id in admitted_ids {
+                if let Some(t) = self.timelines.get_mut(&id) {
+                    t.admitted_step = Some(step_now);
+                }
+                obs::event_with("engine", "admitted", || format!("id={id}"));
             }
         }
 
@@ -724,6 +784,7 @@ impl Engine {
         // per-position argmaxes — but a sampled slot needs its full
         // logits row to draw from.  Greedy co-residents resume drafting
         // the tick after the last sampled request leaves.
+        let mut spec_suppressed = false;
         if self.spec.enabled {
             let any_sampled = self.batcher.active().iter().any(|r| !r.sampling.is_greedy());
             if any_sampled {
@@ -737,6 +798,8 @@ impl Engine {
                     .any(|r| r.state == RequestState::Decoding && r.sampling.is_greedy());
                 if suppressible {
                     self.metrics.spec_suppressed_ticks += 1;
+                    spec_suppressed = true;
+                    obs::event("spec", "suppressed");
                 }
                 for r in self.batcher.active_mut() {
                     r.draft.clear();
@@ -770,10 +833,16 @@ impl Engine {
                     let room = r.max_new_tokens - r.generated.len();
                     draft.truncate(room.saturating_sub(1));
                     r.draft = draft;
+                    if !r.draft.is_empty() {
+                        obs::event_with("spec", "draft", || {
+                            format!("id={} len={}", r.id, r.draft.len())
+                        });
+                    }
                 }
             }
         }
 
+        let plan_span = obs::span("engine", "plan");
         // 3. Determine buckets; recompose if needed.  Bucket choice
         // anticipates both prefix adoption (a newly admitted request may
         // start its write frontier at the cached prefix length rather than
@@ -904,6 +973,8 @@ impl Engine {
             }
         }
 
+        drop(plan_span);
+
         // 5. Execute the whole mixed batch in one multi-token step.  Ticks
         // carrying draft tokens go through `verify_chunk`, whose cache
         // effects are contractually bit-identical to `prefill_chunk` but
@@ -918,6 +989,7 @@ impl Engine {
         // A spec tick returns per-position argmaxes (all slots are greedy
         // — drafting was suppressed otherwise); a plain tick keeps the
         // raw logits rows so each slot's request samples its own token.
+        let exec_span = obs::span("engine", "execute");
         let (argmaxes, logits, new_cache) = if spec_tick {
             let (am, cache) = runner.verify_chunk(&chunks, &live.cache, &start_pos)?;
             (am, Vec::new(), cache)
@@ -925,6 +997,7 @@ impl Engine {
             let (lg, cache) = runner.prefill_chunk(&chunks, &live.cache, &start_pos)?;
             (Vec::new(), lg, cache)
         };
+        drop(exec_span);
 
         // 6. Advance request state machines.  Each slot's next token comes
         // from its *last* consumed position: on a spec tick the final
@@ -942,12 +1015,15 @@ impl Engine {
         let mut rollbacks: Vec<(RequestId, usize)> = Vec::new();
         // Same `batcher.active` order the plan was built from above (no
         // reap/admit between), so `plan[i]` still lines up.
+        let advance_span = obs::span("engine", "advance");
         let samplers = &mut self.samplers;
         let events = &mut self.events;
+        let timelines = &mut self.timelines;
         for (i, r) in self.batcher.active_mut().iter_mut().enumerate() {
             let slot = by_id[&r.id];
             let k = plan[i];
             let before = r.generated.len();
+            let was_prefilling = r.state == RequestState::Prefilling;
             if r.state == RequestState::Prefilling {
                 let completes = r.prefill_pos + k == r.prompt.len();
                 // The sampler only runs — and only consumes PRNG state —
@@ -987,6 +1063,12 @@ impl Engine {
             for &t in &r.generated[before..] {
                 events.push_back(StepEvent::Token { id: r.id, token: t });
             }
+            if let Some(t) = timelines.get_mut(&r.id) {
+                if was_prefilling {
+                    t.prefill_chunks += 1;
+                }
+                t.tokens += r.generated.len() - before;
+            }
         }
         self.live.as_mut().unwrap().cache = new_cache;
 
@@ -1014,14 +1096,25 @@ impl Engine {
                 *s = (*s).min(ctx);
             }
         }
+        let (mut tick_drafted, mut tick_accepted) = (0usize, 0usize);
         for (rid, drafted, accepted) in verified {
+            tick_drafted += drafted;
+            tick_accepted += accepted;
             self.metrics.on_verify(drafted, accepted);
+            if let Some(t) = self.timelines.get_mut(&rid) {
+                t.spec_drafted += drafted;
+                t.spec_accepted += accepted;
+            }
+            obs::event_with("spec", "verified", || {
+                format!("id={rid} accepted={accepted}/{drafted}")
+            });
             if self.spec.adaptive {
                 if let Some(a) = self.adaptive.get_mut(&rid) {
                     a.on_verify(drafted, accepted);
                 }
             }
         }
+        drop(advance_span);
         #[cfg(debug_assertions)]
         self.debug_check_kv_occupancy();
 
@@ -1034,11 +1127,15 @@ impl Engine {
             &chunk_sizes,
         );
         for id in first_tokens {
-            // `submit_step` survives until the request terminates (it also
-            // feeds the e2e-steps histogram at reap).
-            if let Some(&s0) = self.submit_step.get(&id) {
-                self.metrics.on_first_token_step(self.metrics.steps - s0);
+            // The timeline survives until the request terminates (its
+            // submit stamp also feeds the e2e-steps histogram at reap).
+            if let Some(t) = self.timelines.get_mut(&id) {
+                if t.first_token_step.is_none() {
+                    t.first_token_step = Some(self.metrics.steps);
+                    self.metrics.on_first_token_step(self.metrics.steps - t.submitted_step);
+                }
             }
+            obs::event_with("engine", "first_token", || format!("id={id}"));
         }
         if let Some(tree) = &self.prefix {
             self.metrics.prefix = tree.stats();
@@ -1046,6 +1143,54 @@ impl Engine {
         }
         self.last_demands = demands;
         self.last_plan = plan;
+
+        // 7. Flight recorder: one record per executed tick, built from the
+        // same state the live accessors report (`last_plan_summary`,
+        // batcher composition, pool pressure) so a dumped ring replays the
+        // run exactly.  `wall_us` is the only nondeterministic field.
+        if self.recorder.is_some() {
+            let plan_s = self.last_plan_summary();
+            let (mut decode_slots, mut prefill_slots, mut verify_slots) = (0usize, 0usize, 0usize);
+            for d in &self.last_demands {
+                if d.is_prefill() {
+                    prefill_slots += 1;
+                } else if d.is_verify() {
+                    verify_slots += 1;
+                } else {
+                    decode_slots += 1;
+                }
+            }
+            let rec = TickRecord {
+                tick: self.metrics.steps,
+                wall_us: t0.elapsed().as_secs_f64() * 1e6,
+                plan: plan_s,
+                active,
+                queued: self.batcher.queued(),
+                decode_slots,
+                prefill_slots,
+                verify_slots,
+                batch_bucket: b,
+                kv_bucket,
+                budget_used: self.last_plan.iter().sum(),
+                budget: self
+                    .planner
+                    .config()
+                    .step_token_budget
+                    .max(self.last_demands.len()),
+                new_tokens,
+                prefill_tokens: chunk_sizes.iter().sum(),
+                kv_free_blocks: self.store.free_blocks(),
+                kv_total_blocks: self.cfg.kv_blocks,
+                prefix_hits: self.metrics.prefix.hits,
+                prefix_lookups: self.metrics.prefix.lookups,
+                spec_drafted: tick_drafted,
+                spec_accepted: tick_accepted,
+                spec_suppressed,
+                recomposed: needs_rebuild,
+                events: self.events.len() - events_before,
+            };
+            self.recorder.as_mut().expect("checked above").record(rec);
+        }
         Ok(true)
     }
 
@@ -1053,9 +1198,11 @@ impl Engine {
     /// for the new bucket shape.
     fn recompose(&mut self, batch_bucket: usize, kv_bucket: usize) -> anyhow::Result<()> {
         let t0 = Instant::now();
+        let _span = obs::span("engine", "recompose");
         self.recompositions += 1;
 
         // (a) Sync: pull the live literal once and append unsynced tokens.
+        let kv_sync_span = obs::span("engine", "kv_sync");
         if let Some(live) = self.live.take() {
             let host: Vec<f32> = live
                 .cache
@@ -1090,6 +1237,7 @@ impl Engine {
                 self.synced.insert(*rid, ctx);
             }
         }
+        drop(kv_sync_span);
 
         // (a2) Feed completed prefills back into the prefix tree: once a
         // request is decoding, its prompt's whole blocks are synced and
@@ -1133,6 +1281,12 @@ impl Engine {
                         // Adopt the shared chain: prefill for the matched
                         // tokens is skipped entirely.
                         r.prefill_pos = m.tokens;
+                        if let Some(t) = self.timelines.get_mut(&r.id) {
+                            t.adopted_prefix_tokens += m.tokens;
+                        }
+                        obs::event_with("prefix", "adopt", || {
+                            format!("id={} tokens={}", r.id, m.tokens)
+                        });
                         self.store.adopt_chain(&m.blocks, m.tokens)
                     } else {
                         self.store.new_seq()
@@ -1239,24 +1393,58 @@ impl Engine {
     /// rewrite by the next correct token registers as the real write.
     #[cfg(debug_assertions)]
     fn debug_check_kv_occupancy(&mut self) {
+        // Detect first with immutable borrows only (every active request
+        // got its ledger entry in the marking pass of section 4, so `get`
+        // cannot miss), so a violation can dump the flight recorder before
+        // panicking; truncation below happens only on the clean path.
+        let mut violation: Option<String> = None;
         for r in self.batcher.active() {
             let kv = r.kv_len();
-            let w = self.kv_written.entry(r.id).or_default();
-            assert!(
-                w.len() >= kv,
-                "request {}: write ledger covers {} positions, kv_len is {kv}",
-                r.id,
-                w.len()
-            );
-            for (pos, &n) in w.iter().take(kv).enumerate() {
-                assert!(
-                    n == 1,
+            let w = self.kv_written.get(&r.id).map(Vec::as_slice).unwrap_or(&[]);
+            if w.len() < kv {
+                violation = Some(format!(
+                    "request {}: write ledger covers {} positions, kv_len is {kv}",
+                    r.id,
+                    w.len()
+                ));
+                break;
+            }
+            if let Some((pos, &n)) = w.iter().take(kv).enumerate().find(|&(_, &n)| n != 1) {
+                violation = Some(format!(
                     "request {}: cache position {pos} written {n} times \
                      (kv_len {kv}) — exact-occupancy violated",
                     r.id
-                );
+                ));
+                break;
             }
-            w.truncate(kv);
+        }
+        if let Some(msg) = violation {
+            self.dump_recorder_on_ledger_failure();
+            panic!("{msg}");
+        }
+        for r in self.batcher.active() {
+            let kv = r.kv_len();
+            if let Some(w) = self.kv_written.get_mut(&r.id) {
+                w.truncate(kv);
+            }
+        }
+    }
+
+    /// Best-effort flight-recorder dump when the debug KV ledger trips, so
+    /// the panic message comes with the per-tick history that led to it.
+    #[cfg(debug_assertions)]
+    fn dump_recorder_on_ledger_failure(&self) {
+        let Some(rec) = self.recorder.as_ref() else {
+            return;
+        };
+        let path = std::env::temp_dir().join("flashmla-flight-recorder-crash.json");
+        match rec.dump(&path) {
+            Ok(()) => crate::log_error!(
+                "engine",
+                "KV ledger violation — flight recorder dumped to {}",
+                path.display()
+            ),
+            Err(e) => crate::log_error!("engine", "flight recorder dump failed: {e}"),
         }
     }
 
@@ -1278,5 +1466,25 @@ impl Engine {
     /// Blocks currently pinned by the prefix tree (0 when disabled).
     pub fn prefix_cached_blocks(&self) -> usize {
         self.prefix.as_ref().map(|t| t.cached_blocks()).unwrap_or(0)
+    }
+
+    /// The flight recorder, when `flight_recorder_ticks > 0`.
+    pub fn flight_recorder(&self) -> Option<&FlightRecorder> {
+        self.recorder.as_ref()
+    }
+
+    /// Dump the flight recorder ring as JSON to `path`.
+    pub fn dump_flight_recorder(&self, path: &Path) -> anyhow::Result<()> {
+        match &self.recorder {
+            Some(rec) => rec.dump(path),
+            None => anyhow::bail!("flight recorder disabled (flight_recorder_ticks = 0)"),
+        }
+    }
+
+    /// Per-request tick-stamped timeline; survives request termination so
+    /// post-run queries (TTFT in ticks, spec acceptance, adopted prefix)
+    /// still resolve.
+    pub fn timeline(&self, h: RequestHandle) -> Option<&RequestTimeline> {
+        self.timelines.get(&h.id())
     }
 }

@@ -1,13 +1,48 @@
 //! Serving metrics: TTFT, per-token latency, throughput, engine step
 //! timing, KV utilization.
+//!
+//! The struct is the hot-path accumulator (plain fields, no lookups per
+//! tick); [`ServingMetrics::registry`] enumerates it into the named
+//! [`MetricsRegistry`] on demand, which is what the Prometheus and JSON
+//! exporters render.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::obs::{MetricsRegistry, Summary};
 use crate::prefixcache::PrefixStats;
+use crate::util::json::Json;
 use crate::util::stats::{LatencyHistogram, Welford};
 
 use super::request::Request;
+
+/// Export a latency histogram as a summary with approximate quantiles.
+fn hist_summary(h: &LatencyHistogram) -> Summary {
+    let count = h.count();
+    Summary {
+        count,
+        sum: h.mean_us() * count as f64,
+        mean: h.mean_us(),
+        p50: Some(h.percentile_us(50.0)),
+        p99: Some(h.percentile_us(99.0)),
+        min: h.percentile_us(0.0),
+        max: h.percentile_us(100.0),
+    }
+}
+
+/// Export a Welford accumulator as a summary.  Exact moments, no
+/// quantiles (Welford keeps no distribution).
+fn welford_summary(w: &Welford) -> Summary {
+    Summary {
+        count: w.count(),
+        sum: w.mean() * w.count() as f64,
+        mean: w.mean(),
+        p50: None,
+        p99: None,
+        min: w.min(),
+        max: w.max(),
+    }
+}
 
 /// Aggregated serving metrics.
 #[derive(Default)]
@@ -292,6 +327,233 @@ impl ServingMetrics {
         self.prefix.hit_tokens
     }
 
+    /// Enumerate every metric into the named registry.  Counters carry
+    /// the mergeable totals (`…_total`); gauges carry the derived rates,
+    /// recomputed from totals so a merged registry equals the registry of
+    /// the merged metrics.
+    pub fn registry(&self) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        // Counters: monotone totals, sum under `merge`.
+        r.counter(
+            "flashmla_requests_finished_total",
+            "Requests that terminated normally.",
+            self.requests_finished,
+        );
+        r.counter(
+            "flashmla_requests_rejected_total",
+            "Requests refused server-side.",
+            self.requests_rejected,
+        );
+        r.counter(
+            "flashmla_requests_cancelled_total",
+            "Requests cancelled by the client.",
+            self.requests_cancelled,
+        );
+        r.counter(
+            "flashmla_tokens_generated_total",
+            "Output tokens produced.",
+            self.tokens_generated,
+        );
+        r.counter(
+            "flashmla_prefill_tokens_total",
+            "Prompt tokens consumed by prefill chunks.",
+            self.prefill_tokens,
+        );
+        r.counter(
+            "flashmla_prefill_steps_total",
+            "Engine steps that consumed at least one prompt token.",
+            self.prefill_steps,
+        );
+        r.counter(
+            "flashmla_prefill_chunks_total",
+            "Prefill chunks executed.",
+            self.prefill_chunks,
+        );
+        r.counter(
+            "flashmla_engine_steps_total",
+            "Engine ticks executed.",
+            self.steps,
+        );
+        r.counter(
+            "flashmla_spec_drafted_total",
+            "Draft tokens fed through verification.",
+            self.spec_drafted,
+        );
+        r.counter(
+            "flashmla_spec_accepted_total",
+            "Draft tokens accepted (decode steps saved).",
+            self.spec_accepted,
+        );
+        r.counter(
+            "flashmla_spec_verify_chunks_total",
+            "Speculative verification chunks executed.",
+            self.spec_verify_chunks,
+        );
+        r.counter(
+            "flashmla_spec_disabled_sampling_total",
+            "Requests whose speculation was auto-disabled (sampling).",
+            self.spec_disabled_sampling,
+        );
+        r.counter(
+            "flashmla_spec_suppressed_ticks_total",
+            "Ticks where a sampled co-resident suppressed drafting.",
+            self.spec_suppressed_ticks,
+        );
+        r.counter(
+            "flashmla_kv_slots_committed_total",
+            "KV positions occupied at termination (peak).",
+            self.kv_slots_committed,
+        );
+        r.counter(
+            "flashmla_context_tokens_total",
+            "Tokens terminated requests spanned.",
+            self.context_tokens,
+        );
+        r.counter(
+            "flashmla_prefix_lookups_total",
+            "Prefix-cache lookups.",
+            self.prefix.lookups,
+        );
+        r.counter(
+            "flashmla_prefix_hits_total",
+            "Prefix-cache lookups matching at least one block.",
+            self.prefix.hits,
+        );
+        r.counter(
+            "flashmla_prefix_hit_tokens_total",
+            "Prompt tokens served from the prefix cache.",
+            self.prefix.hit_tokens,
+        );
+        r.counter(
+            "flashmla_prefix_hit_blocks_total",
+            "KV blocks adopted from the prefix cache.",
+            self.prefix.hit_blocks,
+        );
+        r.counter(
+            "flashmla_prefix_inserted_blocks_total",
+            "KV blocks inserted into the prefix cache.",
+            self.prefix.inserted_blocks,
+        );
+        r.counter(
+            "flashmla_prefix_evicted_blocks_total",
+            "KV blocks evicted from the prefix cache.",
+            self.prefix.evicted_blocks,
+        );
+        r.counter(
+            "flashmla_prefix_evictions_total",
+            "Prefix-cache eviction passes.",
+            self.prefix.evictions,
+        );
+        r.counter_f64(
+            "flashmla_busy_us_total",
+            "Engine-busy wall time (µs).",
+            self.elapsed.as_secs_f64() * 1e6,
+        );
+        // Gauges: instantaneous values and rates derived from the totals.
+        r.gauge(
+            "flashmla_prefix_cached_blocks",
+            "Blocks currently pinned by the prefix tree.",
+            self.prefix_cached_blocks as f64,
+        );
+        r.gauge(
+            "flashmla_acceptance_rate",
+            "Fraction of drafted tokens accepted.",
+            self.acceptance_rate(),
+        );
+        r.gauge(
+            "flashmla_prefill_tokens_per_step",
+            "Mean prompt tokens per prefill-bearing step.",
+            self.prefill_tokens_per_step(),
+        );
+        r.gauge(
+            "flashmla_kv_slots_per_token",
+            "Cache slots consumed per token served.",
+            self.kv_slots_per_token(),
+        );
+        r.gauge(
+            "flashmla_decode_tokens_per_s",
+            "Decode throughput over engine-busy time.",
+            self.decode_tokens_per_s(),
+        );
+        r.gauge(
+            "flashmla_total_tokens_per_s",
+            "Total token throughput (prefill + decode).",
+            self.total_tokens_per_s(),
+        );
+        r.gauge(
+            "flashmla_prefix_hit_rate",
+            "Fraction of prefix lookups that matched.",
+            self.prefix_hit_rate(),
+        );
+        r.gauge(
+            "flashmla_occupancy_mean",
+            "Mean batch occupancy (active / slots).",
+            self.occupancy.mean(),
+        );
+        // Summaries: histogram-backed carry approximate quantiles,
+        // Welford-backed carry exact moments only.
+        r.summary(
+            "flashmla_ttft_us",
+            "Time to first token (µs).",
+            hist_summary(&self.ttft),
+        );
+        r.summary(
+            "flashmla_tpot_us",
+            "Per-output-token latency (µs).",
+            hist_summary(&self.tpot),
+        );
+        r.summary(
+            "flashmla_e2e_us",
+            "End-to-end request latency (µs).",
+            hist_summary(&self.e2e),
+        );
+        r.summary(
+            "flashmla_step_us",
+            "Engine step wall time (µs).",
+            hist_summary(&self.step),
+        );
+        r.summary(
+            "flashmla_ttft_steps",
+            "Engine ticks from submit to first token.",
+            welford_summary(&self.ttft_steps),
+        );
+        r.summary(
+            "flashmla_e2e_steps",
+            "Engine ticks from submit to termination.",
+            welford_summary(&self.e2e_steps),
+        );
+        r.summary(
+            "flashmla_occupancy",
+            "Batch occupancy per step.",
+            welford_summary(&self.occupancy),
+        );
+        // Series: the integer-labeled histogram families.
+        r.series(
+            "flashmla_prefill_chunk_tokens",
+            "Prefill chunk size distribution.",
+            "tokens",
+            &self.chunk_hist,
+        );
+        r.series(
+            "flashmla_spec_accepted_per_verify",
+            "Accepted-per-verification distribution.",
+            "accepted",
+            &self.accept_hist,
+        );
+        r
+    }
+
+    /// Prometheus text exposition of [`registry`](Self::registry).
+    pub fn to_prometheus(&self) -> String {
+        self.registry().to_prometheus()
+    }
+
+    /// JSON snapshot of [`registry`](Self::registry) — the schema the
+    /// bench harness embeds in every `BENCH_*.json`.
+    pub fn snapshot_json(&self) -> Json {
+        self.registry().to_json()
+    }
+
     /// Human-readable dump.
     pub fn report(&self) -> String {
         let mut s = format!(
@@ -525,10 +787,100 @@ mod tests {
         assert_eq!(merged.chunk_hist_summary(), "3×1 5×1 8×1");
         // Histogram-backed latencies count every step.
         assert_eq!(merged.step.count(), 3);
+
+        // Registry parity, for every registry-backed metric: merged
+        // counters are the sums of the per-engine counters, and merged
+        // gauges equal the rates recomputed from those summed totals —
+        // the registry of the merge is the merge of the registries.
+        let (ra, rb, rm) = (a.registry(), b.registry(), merged.registry());
+        assert_eq!(ra.entries().len(), rm.entries().len());
+        for e in rm.entries() {
+            use crate::obs::MetricValue;
+            let (va, vb) = (
+                ra.get(&e.name).expect("metric in a"),
+                rb.get(&e.name).expect("metric in b"),
+            );
+            match (&e.value, va, vb) {
+                (MetricValue::Counter(m), MetricValue::Counter(x), MetricValue::Counter(y)) => {
+                    assert!((m - (x + y)).abs() < 1e-6, "{}: {m} != {x} + {y}", e.name);
+                }
+                (MetricValue::Summary(m), MetricValue::Summary(x), MetricValue::Summary(y)) => {
+                    assert_eq!(m.count, x.count + y.count, "{} count", e.name);
+                    assert!(
+                        (m.sum - (x.sum + y.sum)).abs() < 1e-6 * m.sum.abs().max(1.0),
+                        "{} sum", e.name
+                    );
+                }
+                (MetricValue::Series { points: m, .. }, MetricValue::Series { points: x, .. },
+                 MetricValue::Series { points: y, .. }) => {
+                    let total = |pts: &[(u64, u64)]| pts.iter().map(|&(_, n)| n).sum::<u64>();
+                    assert_eq!(total(m), total(x) + total(y), "{} samples", e.name);
+                }
+                (MetricValue::Gauge(_), _, _) => {
+                    // Gauges are derived; checked against recomputation below.
+                }
+                _ => panic!("metric {} changed kind across merge", e.name),
+            }
+        }
+        let gauge = |name: &str| match rm.get(name) {
+            Some(crate::obs::MetricValue::Gauge(v)) => *v,
+            other => panic!("{name}: {other:?}"),
+        };
+        assert!((gauge("flashmla_acceptance_rate") - merged.acceptance_rate()).abs() < 1e-12);
+        assert!((gauge("flashmla_prefix_hit_rate") - merged.prefix_hit_rate()).abs() < 1e-12);
+        assert!(
+            (gauge("flashmla_kv_slots_per_token") - merged.kv_slots_per_token()).abs() < 1e-12
+        );
+        assert!(
+            (gauge("flashmla_prefill_tokens_per_step") - merged.prefill_tokens_per_step()).abs()
+                < 1e-12
+        );
+        assert!((gauge("flashmla_occupancy_mean") - merged.occupancy.mean()).abs() < 1e-12);
+
         // Merging an empty stream changes nothing.
         let snapshot = merged.report();
         merged.merge(&ServingMetrics::new());
         assert_eq!(merged.report(), snapshot);
+    }
+
+    #[test]
+    fn exporters_render_the_registry() {
+        let mut m = ServingMetrics::new();
+        m.on_step(Duration::from_millis(10), 2, 4, 3, &[8]);
+        m.on_verify(4, 2);
+        m.on_first_token_step(3);
+        let prom = m.to_prometheus();
+        assert!(prom.contains("# TYPE flashmla_tokens_generated_total counter"));
+        assert!(prom.contains("flashmla_tokens_generated_total 3\n"));
+        assert!(prom.contains("flashmla_step_us_count 1\n"));
+        assert!(prom.contains("flashmla_prefill_chunk_tokens{tokens=\"8\"} 1\n"));
+        let snap =
+            crate::util::json::parse(&m.snapshot_json().dump()).expect("snapshot parses");
+        assert_eq!(
+            snap.get("counters")
+                .get("flashmla_spec_accepted_total")
+                .as_usize(),
+            Some(2)
+        );
+        assert_eq!(
+            snap.get("summaries")
+                .get("flashmla_ttft_steps")
+                .get("count")
+                .as_usize(),
+            Some(1)
+        );
+        // Welford-backed summaries export no quantiles.
+        assert_eq!(
+            snap.get("summaries").get("flashmla_ttft_steps").get("p50"),
+            &Json::Null
+        );
+        assert_eq!(
+            snap.get("series")
+                .get("flashmla_spec_accepted_per_verify")
+                .get("2")
+                .as_usize(),
+            Some(1)
+        );
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub mod config;
 pub mod coordinator;
 pub mod hardware;
 pub mod kvcache;
+pub mod obs;
 pub mod prefill;
 pub mod prefixcache;
 pub mod runtime;

@@ -1,0 +1,35 @@
+//! Observability: structured tracing, the engine flight recorder, the
+//! metrics registry, and per-request timelines.
+//!
+//! Zero external dependencies — the JSON exporters ride on
+//! [`crate::util::json`], the narrative rides on [`crate::util::logging`].
+//! Four pieces, layered from cheapest to richest:
+//!
+//! * [`trace`] — span/event API stamped with both the wall clock and the
+//!   deterministic engine tick clock.  Disabled cost is one relaxed atomic
+//!   load; tests install a per-thread [`TraceCollector`] and assert the
+//!   trace shape bit-for-bit via [`TraceRecord::key`].
+//! * [`recorder`] — the flight recorder: a fixed-capacity ring of
+//!   per-tick [`TickRecord`]s (plan summary, batch composition, budget,
+//!   KV pressure, spec + prefix activity), dumpable as JSON on demand or
+//!   when the debug KV ledger trips.
+//! * [`registry`] — the named metric registry `ServingMetrics` exports
+//!   into, with Prometheus-text and JSON snapshot exporters.
+//! * [`timeline`] — per-request tick-stamped lifecycle records,
+//!   queryable through `RequestHandle`.
+//!
+//! The tick-clock/wall-clock contract, span taxonomy, and exporter
+//! schemas are documented in `docs/observability.md`.
+
+pub mod recorder;
+pub mod registry;
+pub mod timeline;
+pub mod trace;
+
+pub use recorder::{FlightRecorder, TickRecord};
+pub use registry::{MetricEntry, MetricValue, MetricsRegistry, Summary};
+pub use timeline::RequestTimeline;
+pub use trace::{
+    active, collect, current_tick, event, event_with, set_narrative, set_tick, span, SpanGuard,
+    TraceCollector, TraceKind, TraceRecord,
+};

@@ -1,0 +1,239 @@
+//! The engine flight recorder: a fixed-capacity ring of per-tick records.
+//!
+//! Every completed engine tick appends one [`TickRecord`] — the plan
+//! summary the engine reported live, batch composition, token budget use,
+//! KV pool pressure, speculation and prefix-cache activity.  When a
+//! scheduling pathology happens (a starved cold prompt, a spec-suppressed
+//! tick storm, pressure evictions) the recorder answers *which ticks* did
+//! it and *why*, without a debugger attached.
+//!
+//! The ring is bounded ([`FlightRecorder::capacity`]): old ticks fall off
+//! the front and are counted in [`dropped`](FlightRecorder::dropped), so a
+//! long-running server pays fixed memory.  Records are deterministic for a
+//! deterministic workload **modulo the `wall_us` field** — the dump-
+//! determinism test strips exactly that key and asserts bit-equality.
+//!
+//! Dumps go through [`crate::util::json`]: on demand
+//! (`Engine::dump_flight_recorder`), and automatically when the
+//! debug-build KV-occupancy ledger trips (the crash dump that makes the
+//! assertion message actionable).
+
+use std::collections::VecDeque;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One engine tick, as the recorder saw it.
+#[derive(Clone, Debug)]
+pub struct TickRecord {
+    /// 1-based engine step count after this tick (`ServingMetrics::steps`).
+    pub tick: u64,
+    /// Tick wall duration in µs — the only non-deterministic field.
+    pub wall_us: f64,
+    /// The plan summary the engine reported live
+    /// (`Engine::last_plan_summary`).
+    pub plan: String,
+    /// Active requests after the tick.
+    pub active: usize,
+    /// Requests still queued after the tick.
+    pub queued: usize,
+    /// Batch composition: slots that consumed exactly one decode token…
+    pub decode_slots: usize,
+    /// …slots that consumed a prefill chunk…
+    pub prefill_slots: usize,
+    /// …and slots that ran a speculative verification chunk.
+    pub verify_slots: usize,
+    /// Executed (batch, kv) bucket shape.
+    pub batch_bucket: usize,
+    pub kv_bucket: usize,
+    /// Tokens the plan consumed vs. the effective per-tick budget.
+    pub budget_used: usize,
+    pub budget: usize,
+    /// Tokens appended to outputs this tick (decode + accepted drafts +
+    /// prefill-completion firsts).
+    pub new_tokens: usize,
+    /// Prompt tokens consumed by prefill chunks this tick.
+    pub prefill_tokens: usize,
+    /// KV pool pressure after the tick.
+    pub kv_free_blocks: usize,
+    pub kv_total_blocks: usize,
+    /// Cumulative prefix-cache counters after the tick.
+    pub prefix_hits: u64,
+    pub prefix_lookups: u64,
+    /// Speculation this tick: draft tokens fed / accepted, and whether a
+    /// sampled co-resident suppressed drafting batch-wide.
+    pub spec_drafted: usize,
+    pub spec_accepted: usize,
+    pub spec_suppressed: bool,
+    /// Did this tick rebuild the live batch (sync + regather)?
+    pub recomposed: bool,
+    /// Step events emitted this tick.
+    pub events: usize,
+}
+
+impl TickRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tick", Json::num(self.tick as f64)),
+            ("wall_us", Json::num(self.wall_us)),
+            ("plan", Json::str(self.plan.clone())),
+            ("active", Json::num(self.active as f64)),
+            ("queued", Json::num(self.queued as f64)),
+            ("decode_slots", Json::num(self.decode_slots as f64)),
+            ("prefill_slots", Json::num(self.prefill_slots as f64)),
+            ("verify_slots", Json::num(self.verify_slots as f64)),
+            ("batch_bucket", Json::num(self.batch_bucket as f64)),
+            ("kv_bucket", Json::num(self.kv_bucket as f64)),
+            ("budget_used", Json::num(self.budget_used as f64)),
+            ("budget", Json::num(self.budget as f64)),
+            ("new_tokens", Json::num(self.new_tokens as f64)),
+            ("prefill_tokens", Json::num(self.prefill_tokens as f64)),
+            ("kv_free_blocks", Json::num(self.kv_free_blocks as f64)),
+            ("kv_total_blocks", Json::num(self.kv_total_blocks as f64)),
+            ("prefix_hits", Json::num(self.prefix_hits as f64)),
+            ("prefix_lookups", Json::num(self.prefix_lookups as f64)),
+            ("spec_drafted", Json::num(self.spec_drafted as f64)),
+            ("spec_accepted", Json::num(self.spec_accepted as f64)),
+            ("spec_suppressed", Json::Bool(self.spec_suppressed)),
+            ("recomposed", Json::Bool(self.recomposed)),
+            ("events", Json::num(self.events as f64)),
+        ])
+    }
+}
+
+/// Fixed-capacity ring buffer of [`TickRecord`]s.
+pub struct FlightRecorder {
+    capacity: usize,
+    ring: VecDeque<TickRecord>,
+    dropped: u64,
+}
+
+impl FlightRecorder {
+    /// `capacity` must be ≥ 1 (the engine maps capacity 0 to "no
+    /// recorder" before construction).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "flight recorder needs capacity ≥ 1");
+        FlightRecorder {
+            capacity,
+            ring: VecDeque::with_capacity(capacity),
+            dropped: 0,
+        }
+    }
+
+    /// Append one tick, evicting the oldest when full.
+    pub fn record(&mut self, rec: TickRecord) {
+        if self.ring.len() == self.capacity {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(rec);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Ticks that fell off the front of the ring.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retained records, oldest first.
+    pub fn records(&self) -> impl Iterator<Item = &TickRecord> {
+        self.ring.iter()
+    }
+
+    /// Whole-recorder JSON document: `{"capacity", "dropped", "ticks"}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("capacity", Json::num(self.capacity as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            (
+                "ticks",
+                Json::Arr(self.ring.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn dump(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().dump())
+            .map_err(|e| anyhow::anyhow!("flight recorder dump {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(tick: u64) -> TickRecord {
+        TickRecord {
+            tick,
+            wall_us: 123.4,
+            plan: format!("plan[used 1/8] s0=d1 ({tick})"),
+            active: 1,
+            queued: 0,
+            decode_slots: 1,
+            prefill_slots: 0,
+            verify_slots: 0,
+            batch_bucket: 1,
+            kv_bucket: 32,
+            budget_used: 1,
+            budget: 8,
+            new_tokens: 1,
+            prefill_tokens: 0,
+            kv_free_blocks: 60,
+            kv_total_blocks: 64,
+            prefix_hits: 0,
+            prefix_lookups: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            spec_suppressed: false,
+            recomposed: tick == 1,
+            events: 1,
+        }
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut fr = FlightRecorder::new(3);
+        for t in 1..=7 {
+            fr.record(rec(t));
+        }
+        assert_eq!(fr.len(), 3);
+        assert_eq!(fr.dropped(), 4);
+        let ticks: Vec<u64> = fr.records().map(|r| r.tick).collect();
+        assert_eq!(ticks, vec![5, 6, 7], "oldest evicted first");
+    }
+
+    #[test]
+    fn json_round_trips_through_parser() {
+        let mut fr = FlightRecorder::new(8);
+        fr.record(rec(1));
+        fr.record(rec(2));
+        let doc = crate::util::json::parse(&fr.to_json().dump()).unwrap();
+        assert_eq!(doc.get("capacity").as_usize(), Some(8));
+        assert_eq!(doc.get("dropped").as_usize(), Some(0));
+        let ticks = doc.get("ticks").as_arr().unwrap();
+        assert_eq!(ticks.len(), 2);
+        assert_eq!(ticks[1].get("tick").as_usize(), Some(2));
+        assert!(ticks[0].get("plan").as_str().unwrap().starts_with("plan["));
+        assert_eq!(ticks[0].get("recomposed").as_bool(), Some(true));
+        assert_eq!(ticks[1].get("recomposed").as_bool(), Some(false));
+        assert_eq!(ticks[0].get("kv_total_blocks").as_usize(), Some(64));
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_rejected() {
+        FlightRecorder::new(0);
+    }
+}

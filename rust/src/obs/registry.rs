@@ -1,0 +1,334 @@
+//! Named metrics registry with Prometheus-text and JSON exporters.
+//!
+//! `ServingMetrics` stays the engine's hot-path accumulator (plain struct
+//! fields, no name lookups per tick); this registry is the *export* shape
+//! it enumerates into on demand (`ServingMetrics::registry`).  Four value
+//! kinds cover everything the engine counts:
+//!
+//! * **Counter** — monotone total (`…_total` names).  Merging two engines'
+//!   metrics sums these, which is what makes the merge-parity test below
+//!   checkable mechanically.
+//! * **Gauge** — instantaneous or derived value (rates recompute from the
+//!   merged totals, never average).
+//! * **Summary** — count/sum/mean plus min/max, with approximate p50/p99
+//!   when the source is a latency histogram (a Welford source has exact
+//!   moments but no quantiles).
+//! * **Series** — a labeled counter family (chunk-size and acceptance
+//!   histograms: one sample count per integer label).
+//!
+//! Exporters: [`MetricsRegistry::to_prometheus`] renders the standard
+//! text exposition format; [`MetricsRegistry::to_json`] renders the
+//! snapshot schema the bench harness embeds in every `BENCH_*.json`
+//! (`{"counters", "gauges", "summaries", "series"}`).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Summary statistics of a distribution-valued metric.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub count: u64,
+    pub sum: f64,
+    pub mean: f64,
+    /// Approximate quantiles — histogram-backed sources only.
+    pub p50: Option<f64>,
+    pub p99: Option<f64>,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// A metric's exported value.
+#[derive(Clone, Debug)]
+pub enum MetricValue {
+    Counter(f64),
+    Gauge(f64),
+    Summary(Summary),
+    /// Labeled counter family: (label value, count) pairs, ascending.
+    Series {
+        label: &'static str,
+        points: Vec<(u64, u64)>,
+    },
+}
+
+/// One named, documented metric.
+#[derive(Clone, Debug)]
+pub struct MetricEntry {
+    pub name: String,
+    pub help: String,
+    pub value: MetricValue,
+}
+
+/// An ordered collection of uniquely named metrics.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    entries: Vec<MetricEntry>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(&mut self, name: &str, help: &str, value: MetricValue) {
+        assert!(
+            self.entries.iter().all(|e| e.name != name),
+            "duplicate metric name `{name}`"
+        );
+        self.entries.push(MetricEntry {
+            name: name.to_string(),
+            help: help.to_string(),
+            value,
+        });
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, v: u64) {
+        self.push(name, help, MetricValue::Counter(v as f64));
+    }
+
+    /// Counter with a fractional total (e.g. busy-time in µs).
+    pub fn counter_f64(&mut self, name: &str, help: &str, v: f64) {
+        self.push(name, help, MetricValue::Counter(v));
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.push(name, help, MetricValue::Gauge(v));
+    }
+
+    pub fn summary(&mut self, name: &str, help: &str, s: Summary) {
+        self.push(name, help, MetricValue::Summary(s));
+    }
+
+    pub fn series(
+        &mut self,
+        name: &str,
+        help: &str,
+        label: &'static str,
+        points: &BTreeMap<usize, u64>,
+    ) {
+        self.push(
+            name,
+            help,
+            MetricValue::Series {
+                label,
+                points: points.iter().map(|(&k, &n)| (k as u64, n)).collect(),
+            },
+        );
+    }
+
+    pub fn entries(&self) -> &[MetricEntry] {
+        &self.entries
+    }
+
+    /// Look a metric up by name (tests, checkers).
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .map(|e| &e.value)
+    }
+
+    /// Render the Prometheus text exposition format.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for e in &self.entries {
+            out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+            match &e.value {
+                MetricValue::Counter(v) => {
+                    out.push_str(&format!("# TYPE {} counter\n", e.name));
+                    out.push_str(&format!("{} {}\n", e.name, fmt_num(*v)));
+                }
+                MetricValue::Gauge(v) => {
+                    out.push_str(&format!("# TYPE {} gauge\n", e.name));
+                    out.push_str(&format!("{} {}\n", e.name, fmt_num(*v)));
+                }
+                MetricValue::Summary(s) => {
+                    out.push_str(&format!("# TYPE {} summary\n", e.name));
+                    if let Some(p50) = s.p50 {
+                        out.push_str(&format!(
+                            "{}{{quantile=\"0.5\"}} {}\n",
+                            e.name,
+                            fmt_num(p50)
+                        ));
+                    }
+                    if let Some(p99) = s.p99 {
+                        out.push_str(&format!(
+                            "{}{{quantile=\"0.99\"}} {}\n",
+                            e.name,
+                            fmt_num(p99)
+                        ));
+                    }
+                    out.push_str(&format!("{}_sum {}\n", e.name, fmt_num(s.sum)));
+                    out.push_str(&format!("{}_count {}\n", e.name, s.count));
+                }
+                MetricValue::Series { label, points } => {
+                    out.push_str(&format!("# TYPE {} counter\n", e.name));
+                    for (k, n) in points {
+                        out.push_str(&format!("{}{{{label}=\"{k}\"}} {n}\n", e.name));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Render the JSON snapshot schema (the one the bench harness embeds
+    /// under `serving_metrics` in `BENCH_*.json`).
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut summaries = BTreeMap::new();
+        let mut series = BTreeMap::new();
+        for e in &self.entries {
+            match &e.value {
+                MetricValue::Counter(v) => {
+                    counters.insert(e.name.clone(), Json::num(*v));
+                }
+                MetricValue::Gauge(v) => {
+                    gauges.insert(e.name.clone(), Json::num(*v));
+                }
+                MetricValue::Summary(s) => {
+                    let mut o = vec![
+                        ("count", Json::num(s.count as f64)),
+                        ("sum", Json::num(s.sum)),
+                        ("mean", Json::num(s.mean)),
+                        ("min", Json::num(s.min)),
+                        ("max", Json::num(s.max)),
+                    ];
+                    if let Some(p50) = s.p50 {
+                        o.push(("p50", Json::num(p50)));
+                    }
+                    if let Some(p99) = s.p99 {
+                        o.push(("p99", Json::num(p99)));
+                    }
+                    summaries.insert(e.name.clone(), Json::obj(o));
+                }
+                MetricValue::Series { points, .. } => {
+                    series.insert(
+                        e.name.clone(),
+                        Json::Obj(
+                            points
+                                .iter()
+                                .map(|(k, n)| (k.to_string(), Json::num(*n as f64)))
+                                .collect(),
+                        ),
+                    );
+                }
+            }
+        }
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("summaries", Json::Obj(summaries)),
+            ("series", Json::Obj(series)),
+        ])
+    }
+}
+
+/// Compact number formatting: integers without a trailing `.0`, everything
+/// else as shortest-round-trip f64 (matches `util::json`'s convention).
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        r.counter("flashmla_requests_finished_total", "Requests finished.", 3);
+        r.gauge("flashmla_occupancy_mean", "Mean batch occupancy.", 0.875);
+        r.summary(
+            "flashmla_ttft_us",
+            "Time to first token (µs).",
+            Summary {
+                count: 2,
+                sum: 300.0,
+                mean: 150.0,
+                p50: Some(140.0),
+                p99: Some(260.0),
+                min: 100.0,
+                max: 200.0,
+            },
+        );
+        let mut hist = BTreeMap::new();
+        hist.insert(3usize, 1u64);
+        hist.insert(8usize, 2u64);
+        r.series(
+            "flashmla_prefill_chunk_tokens",
+            "Prefill chunk sizes.",
+            "tokens",
+            &hist,
+        );
+        r
+    }
+
+    #[test]
+    fn prometheus_text_format() {
+        let text = sample().to_prometheus();
+        assert!(text.contains("# TYPE flashmla_requests_finished_total counter\n"));
+        assert!(text.contains("flashmla_requests_finished_total 3\n"));
+        assert!(text.contains("# TYPE flashmla_occupancy_mean gauge\n"));
+        assert!(text.contains("flashmla_occupancy_mean 0.875\n"));
+        assert!(text.contains("flashmla_ttft_us{quantile=\"0.5\"} 140\n"));
+        assert!(text.contains("flashmla_ttft_us_sum 300\n"));
+        assert!(text.contains("flashmla_ttft_us_count 2\n"));
+        assert!(text.contains("flashmla_prefill_chunk_tokens{tokens=\"8\"} 2\n"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (_, value) = line.rsplit_once(' ').expect("name value");
+            value.parse::<f64>().unwrap_or_else(|_| {
+                panic!("non-numeric sample value in line: {line}")
+            });
+        }
+    }
+
+    #[test]
+    fn json_snapshot_schema() {
+        let doc =
+            crate::util::json::parse(&sample().to_json().dump()).expect("snapshot parses");
+        assert_eq!(
+            doc.get("counters")
+                .get("flashmla_requests_finished_total")
+                .as_usize(),
+            Some(3)
+        );
+        assert_eq!(
+            doc.get("gauges").get("flashmla_occupancy_mean").as_f64(),
+            Some(0.875)
+        );
+        let ttft = doc.get("summaries").get("flashmla_ttft_us");
+        assert_eq!(ttft.get("count").as_usize(), Some(2));
+        assert_eq!(ttft.get("p99").as_f64(), Some(260.0));
+        assert_eq!(
+            doc.get("series")
+                .get("flashmla_prefill_chunk_tokens")
+                .get("8")
+                .as_usize(),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn get_finds_by_name() {
+        let r = sample();
+        assert!(matches!(
+            r.get("flashmla_requests_finished_total"),
+            Some(MetricValue::Counter(v)) if *v == 3.0
+        ));
+        assert!(r.get("nope").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate metric name")]
+    fn duplicate_names_rejected() {
+        let mut r = MetricsRegistry::new();
+        r.counter("x", "one", 1);
+        r.counter("x", "two", 2);
+    }
+}

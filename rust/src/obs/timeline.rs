@@ -1,0 +1,133 @@
+//! Per-request lifecycle timelines.
+//!
+//! One [`RequestTimeline`] per request, keyed by the request id and
+//! maintained by the engine as ticks execute: when the request was
+//! submitted, when it was admitted into the live batch, when its first
+//! token landed, when (and how) it finished, and what the pipelines did
+//! for it along the way — prefill chunks consumed, prefix-cache tokens
+//! adopted, speculative tokens drafted and accepted.
+//!
+//! All stamps are **engine ticks** (the deterministic step clock), not
+//! wall time, so timelines are bit-reproducible for a deterministic
+//! workload and queryable through `RequestHandle` after the run.
+
+use crate::util::json::Json;
+
+/// Tick-stamped lifecycle record for one request.
+#[derive(Clone, Debug)]
+pub struct RequestTimeline {
+    /// Raw request id (`RequestId`'s integer value).
+    pub id: u64,
+    /// `ServingMetrics::steps` at submit time.
+    pub submitted_step: u64,
+    /// Step count when the request entered the live batch.
+    pub admitted_step: Option<u64>,
+    /// Step count after the tick that produced the first output token.
+    pub first_token_step: Option<u64>,
+    /// Step count when the request left the engine.
+    pub finished_step: Option<u64>,
+    /// Terminal outcome (`FinishReason` debug form), once finished.
+    pub outcome: Option<String>,
+    /// Output tokens produced.
+    pub tokens: usize,
+    /// Prefill chunks executed for this request.
+    pub prefill_chunks: usize,
+    /// Prompt tokens skipped via prefix-cache adoption.
+    pub adopted_prefix_tokens: usize,
+    /// Speculative draft tokens fed to verification / accepted.
+    pub spec_drafted: usize,
+    pub spec_accepted: usize,
+}
+
+impl RequestTimeline {
+    pub fn new(id: u64, submitted_step: u64) -> Self {
+        RequestTimeline {
+            id,
+            submitted_step,
+            admitted_step: None,
+            first_token_step: None,
+            finished_step: None,
+            outcome: None,
+            tokens: 0,
+            prefill_chunks: 0,
+            adopted_prefix_tokens: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+        }
+    }
+
+    /// Ticks spent queued before admission (once admitted).
+    pub fn queue_steps(&self) -> Option<u64> {
+        self.admitted_step.map(|a| a - self.submitted_step)
+    }
+
+    /// Ticks from submit to first token (once produced).
+    pub fn ttft_steps(&self) -> Option<u64> {
+        self.first_token_step.map(|f| f - self.submitted_step)
+    }
+
+    /// Ticks from submit to completion (once finished).
+    pub fn e2e_steps(&self) -> Option<u64> {
+        self.finished_step.map(|f| f - self.submitted_step)
+    }
+
+    fn opt_step(v: Option<u64>) -> Json {
+        v.map(|s| Json::num(s as f64)).unwrap_or(Json::Null)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("submitted_step", Json::num(self.submitted_step as f64)),
+            ("admitted_step", Self::opt_step(self.admitted_step)),
+            ("first_token_step", Self::opt_step(self.first_token_step)),
+            ("finished_step", Self::opt_step(self.finished_step)),
+            (
+                "outcome",
+                self.outcome
+                    .as_ref()
+                    .map(|o| Json::str(o.clone()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("prefill_chunks", Json::num(self.prefill_chunks as f64)),
+            (
+                "adopted_prefix_tokens",
+                Json::num(self.adopted_prefix_tokens as f64),
+            ),
+            ("spec_drafted", Json::num(self.spec_drafted as f64)),
+            ("spec_accepted", Json::num(self.spec_accepted as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_intervals() {
+        let mut t = RequestTimeline::new(7, 4);
+        assert_eq!(t.queue_steps(), None);
+        t.admitted_step = Some(5);
+        t.first_token_step = Some(9);
+        t.finished_step = Some(14);
+        assert_eq!(t.queue_steps(), Some(1));
+        assert_eq!(t.ttft_steps(), Some(5));
+        assert_eq!(t.e2e_steps(), Some(10));
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut t = RequestTimeline::new(3, 0);
+        t.admitted_step = Some(1);
+        t.tokens = 6;
+        t.outcome = Some("Eos".to_string());
+        let doc = crate::util::json::parse(&t.to_json().dump()).unwrap();
+        assert_eq!(doc.get("id").as_usize(), Some(3));
+        assert_eq!(doc.get("admitted_step").as_usize(), Some(1));
+        assert_eq!(doc.get("first_token_step"), &Json::Null);
+        assert_eq!(doc.get("outcome").as_str(), Some("Eos"));
+        assert_eq!(doc.get("tokens").as_usize(), Some(6));
+    }
+}

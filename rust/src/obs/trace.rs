@@ -1,0 +1,393 @@
+//! Structured tracing: spans and events stamped with the engine tick clock.
+//!
+//! The design centers on two clocks and one gate:
+//!
+//! * **Tick clock** — the engine publishes its deterministic step counter
+//!   via [`set_tick`] before each tick; every record carries it, so two
+//!   runs of the same workload produce bit-identical record *keys*
+//!   ([`TraceRecord::key`]) and tests can assert on trace shape exactly.
+//! * **Wall clock** — every record also carries a wall-time stamp
+//!   (`wall_us`: µs since process start for `Enter`/`Event`, span duration
+//!   for `Exit`).  Wall fields are explicitly non-deterministic and are
+//!   excluded from [`TraceRecord::key`].
+//! * **The gate** — a single process-global atomic ([`active`]).  When no
+//!   collector is installed and trace-level logging is off, [`span`] and
+//!   [`event`] cost exactly one relaxed atomic load and **allocate
+//!   nothing** (`rust/tests/obs_overhead.rs` asserts this with a counting
+//!   allocator).  Detail strings are built lazily via [`event_with`]'s
+//!   closure, so disabled call sites never pay for formatting either.
+//!
+//! Sinks are **thread-local**: the engine runs on its caller's thread, so
+//! a [`collect`]-ed test observes only its own engine and parallel tests
+//! never race on a shared buffer.  With no collector but `FLASHMLA_LOG=
+//! trace`, records are narrated through the stderr logger instead, giving
+//! the interleaved `engine`/`batcher`/`planner`/`spec`/`prefix` story.
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::time::Instant;
+
+use crate::util::logging::{self, Level};
+
+/// Bit 0 of the gate: narrate records through the stderr logger.
+const NARRATIVE: u32 = 1;
+/// Each installed collector adds this to the gate (any thread's collector
+/// flips every thread onto the slow path; threads without a sink then
+/// no-op after the thread-local check).
+const COLLECTOR_UNIT: u32 = 2;
+/// Sentinel: the gate has not consulted `FLASHMLA_LOG` yet.
+const UNINIT: u32 = u32::MAX;
+
+static ACTIVE: AtomicU32 = AtomicU32::new(UNINIT);
+
+#[cold]
+fn init_active() -> u32 {
+    let base = if logging::enabled(Level::Trace) {
+        NARRATIVE
+    } else {
+        0
+    };
+    // First writer wins; a racing `collect()` may already have bumped the
+    // counter past UNINIT, in which case its value stands.
+    match ACTIVE.compare_exchange(UNINIT, base, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => base,
+        Err(cur) => cur,
+    }
+}
+
+/// Is any tracing consumer (collector or trace-level narrative) live?
+/// This is the whole disabled-path cost: one relaxed atomic load.
+#[inline]
+pub fn active() -> bool {
+    let v = ACTIVE.load(Ordering::Relaxed);
+    if v == UNINIT {
+        return init_active() != 0;
+    }
+    v != 0
+}
+
+/// Force the stderr narrative on or off programmatically (tests, CLI
+/// `--verbose`), overriding what `FLASHMLA_LOG` implied.  Narration still
+/// goes through the logger, so the level must admit `Trace` for lines to
+/// actually print ([`logging::set_level`]).
+pub fn set_narrative(on: bool) {
+    active(); // force init so the bit ops see a real value
+    if on {
+        ACTIVE.fetch_or(NARRATIVE, Ordering::Relaxed);
+    } else {
+        ACTIVE.fetch_and(!NARRATIVE, Ordering::Relaxed);
+    }
+}
+
+thread_local! {
+    /// The engine's deterministic step clock, stamped into every record.
+    static TICK: Cell<u64> = const { Cell::new(0) };
+    /// At most one collector per thread (see [`collect`]).
+    static COLLECTOR: RefCell<Option<Rc<RefCell<Vec<TraceRecord>>>>> =
+        const { RefCell::new(None) };
+}
+
+/// Publish the current engine tick for this thread; subsequent records are
+/// stamped with it.  The engine calls this at the top of every `step`.
+pub fn set_tick(tick: u64) {
+    TICK.with(|t| t.set(tick));
+}
+
+/// The tick most recently published via [`set_tick`] on this thread.
+pub fn current_tick() -> u64 {
+    TICK.with(|t| t.get())
+}
+
+fn t0() -> Instant {
+    static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+fn wall_us() -> f64 {
+    t0().elapsed().as_secs_f64() * 1e6
+}
+
+/// What a record marks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Span opened.
+    Enter,
+    /// Span closed (`wall_us` holds the span duration, not a timestamp).
+    Exit,
+    /// Point event.
+    Event,
+}
+
+/// One trace record.  Everything except `wall_us` is deterministic for a
+/// deterministic workload.
+#[derive(Clone, Debug)]
+pub struct TraceRecord {
+    /// Engine tick clock at emission ([`set_tick`]).
+    pub tick: u64,
+    /// Subsystem target (`engine`, `batcher`, `planner`, `spec`,
+    /// `prefix`, `runtime`).
+    pub target: &'static str,
+    /// Span or event name within the target.
+    pub name: &'static str,
+    pub kind: TraceKind,
+    /// Lazily built detail string (empty for plain spans/events).
+    pub detail: String,
+    /// Wall stamp: µs since process start, or span duration for `Exit`.
+    /// The one non-deterministic field; excluded from [`key`](Self::key).
+    pub wall_us: f64,
+}
+
+impl TraceRecord {
+    /// Deterministic rendering for bit-for-bit test assertions: every
+    /// field except the wall clock.
+    pub fn key(&self) -> String {
+        let sigil = match self.kind {
+            TraceKind::Enter => " >",
+            TraceKind::Exit => " <",
+            TraceKind::Event => "",
+        };
+        if self.detail.is_empty() {
+            format!("[t{}] {}.{}{}", self.tick, self.target, self.name, sigil)
+        } else {
+            format!(
+                "[t{}] {}.{}{} {}",
+                self.tick, self.target, self.name, sigil, self.detail
+            )
+        }
+    }
+}
+
+fn emit(kind: TraceKind, target: &'static str, name: &'static str, detail: String, wall: f64) {
+    let rec = TraceRecord {
+        tick: current_tick(),
+        target,
+        name,
+        kind,
+        detail,
+        wall_us: wall,
+    };
+    if ACTIVE.load(Ordering::Relaxed) & NARRATIVE != 0 {
+        let sigil = match rec.kind {
+            TraceKind::Enter => " >",
+            TraceKind::Exit => " <",
+            TraceKind::Event => "",
+        };
+        logging::log(
+            Level::Trace,
+            rec.target,
+            format_args!("[t{}] {}{} {}", rec.tick, rec.name, sigil, rec.detail),
+        );
+    }
+    COLLECTOR.with(|c| {
+        if let Some(sink) = c.borrow().as_ref() {
+            sink.borrow_mut().push(rec);
+        }
+    });
+}
+
+struct SpanInner {
+    target: &'static str,
+    name: &'static str,
+    t0: Instant,
+}
+
+/// RAII span guard: records `Enter` at creation, `Exit` (with duration)
+/// on drop.  When tracing is disabled the guard is inert and allocates
+/// nothing.
+pub struct SpanGuard {
+    inner: Option<SpanInner>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(s) = self.inner.take() {
+            emit(
+                TraceKind::Exit,
+                s.target,
+                s.name,
+                String::new(),
+                s.t0.elapsed().as_secs_f64() * 1e6,
+            );
+        }
+    }
+}
+
+/// Open a span.  `target` and `name` must be `'static` literals so the
+/// disabled path moves nothing to the heap.
+#[inline]
+pub fn span(target: &'static str, name: &'static str) -> SpanGuard {
+    if !active() {
+        return SpanGuard { inner: None };
+    }
+    span_slow(target, name)
+}
+
+#[cold]
+fn span_slow(target: &'static str, name: &'static str) -> SpanGuard {
+    emit(TraceKind::Enter, target, name, String::new(), wall_us());
+    SpanGuard {
+        inner: Some(SpanInner {
+            target,
+            name,
+            t0: Instant::now(),
+        }),
+    }
+}
+
+/// Record a point event with no detail.
+#[inline]
+pub fn event(target: &'static str, name: &'static str) {
+    if active() {
+        emit(TraceKind::Event, target, name, String::new(), wall_us());
+    }
+}
+
+/// Record a point event whose detail string is built only when tracing is
+/// live — disabled call sites never pay for the formatting.
+#[inline]
+pub fn event_with(target: &'static str, name: &'static str, detail: impl FnOnce() -> String) {
+    if active() {
+        emit(TraceKind::Event, target, name, detail(), wall_us());
+    }
+}
+
+/// Handle over an installed per-thread record sink.  Records emitted on
+/// this thread while the handle lives are appended to its buffer; dropping
+/// the handle uninstalls the sink and decrements the global gate.
+pub struct TraceCollector {
+    sink: Rc<RefCell<Vec<TraceRecord>>>,
+}
+
+/// Install a collector on the current thread (at most one per thread;
+/// panics on a double install so tests fail loudly instead of splitting
+/// their records).
+pub fn collect() -> TraceCollector {
+    active(); // force gate init before arithmetic on it
+    let sink = Rc::new(RefCell::new(Vec::new()));
+    COLLECTOR.with(|c| {
+        let mut cur = c.borrow_mut();
+        assert!(
+            cur.is_none(),
+            "a trace collector is already installed on this thread"
+        );
+        *cur = Some(sink.clone());
+    });
+    ACTIVE.fetch_add(COLLECTOR_UNIT, Ordering::Relaxed);
+    TraceCollector { sink }
+}
+
+impl TraceCollector {
+    /// Snapshot of the records collected so far.
+    pub fn records(&self) -> Vec<TraceRecord> {
+        self.sink.borrow().clone()
+    }
+
+    /// Drain the collected records.
+    pub fn take(&self) -> Vec<TraceRecord> {
+        std::mem::take(&mut *self.sink.borrow_mut())
+    }
+
+    /// Deterministic keys of the records collected so far
+    /// ([`TraceRecord::key`]): the bit-for-bit assertable trace shape.
+    pub fn keys(&self) -> Vec<String> {
+        self.sink.borrow().iter().map(|r| r.key()).collect()
+    }
+}
+
+impl Drop for TraceCollector {
+    fn drop(&mut self) {
+        COLLECTOR.with(|c| {
+            *c.borrow_mut() = None;
+        });
+        ACTIVE.fetch_sub(COLLECTOR_UNIT, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collector_captures_spans_events_and_ticks() {
+        let c = collect();
+        set_tick(7);
+        {
+            let _s = span("engine", "step");
+            event_with("engine", "submit", || "id=1 prompt=4".to_string());
+            set_tick(8);
+            event("batcher", "reap");
+        }
+        let keys = c.keys();
+        assert_eq!(
+            keys,
+            vec![
+                "[t7] engine.step >",
+                "[t7] engine.submit id=1 prompt=4",
+                "[t8] batcher.reap",
+                "[t8] engine.step <",
+            ]
+        );
+        // Wall stamps exist but are excluded from the deterministic key.
+        for r in c.records() {
+            assert!(r.wall_us >= 0.0);
+            assert!(!r.key().contains("wall"), "key leaks wall time: {}", r.key());
+        }
+        set_tick(0);
+    }
+
+    #[test]
+    fn exit_carries_span_duration() {
+        let c = collect();
+        {
+            let _s = span("runtime", "prefill_chunk");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let recs = c.take();
+        let exit = recs
+            .iter()
+            .find(|r| r.kind == TraceKind::Exit)
+            .expect("exit record");
+        assert!(exit.wall_us >= 1000.0, "duration {} µs", exit.wall_us);
+    }
+
+    #[test]
+    fn collector_drop_uninstalls() {
+        {
+            let c = collect();
+            event("engine", "alive");
+            assert_eq!(c.records().len(), 1);
+        }
+        // No collector on this thread anymore: events land nowhere, and a
+        // fresh collector starts empty.
+        event("engine", "lost");
+        let c = collect();
+        assert!(c.records().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "already installed")]
+    fn double_install_panics() {
+        let _a = collect();
+        let _b = collect();
+    }
+
+    #[test]
+    fn event_with_is_lazy_when_disabled() {
+        // No collector on this thread, narrative forced off: the detail
+        // closure must never run.
+        set_narrative(false);
+        if active() {
+            // Another test's collector (other thread) holds the gate open;
+            // the thread-local check still keeps our closure… running.
+            // Only assert laziness when the gate is actually closed.
+            return;
+        }
+        let mut ran = false;
+        event_with("engine", "noop", || {
+            ran = true;
+            String::new()
+        });
+        assert!(!ran, "detail closure ran while tracing was disabled");
+    }
+}

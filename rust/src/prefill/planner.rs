@@ -5,6 +5,8 @@
 //! estimate).  All invariants the engine and the property tests rely on
 //! are listed on [`ChunkPlanner::plan`].
 
+use crate::obs;
+
 use super::{FairnessPolicy, PrefillConfig, SpecPriority};
 
 /// What one active slot wants this tick.
@@ -119,6 +121,14 @@ impl ChunkPlanner {
     /// whether verify or prefill chunks are served first); within a class
     /// the fairness policy divides it.
     pub fn plan(&self, demands: &[SlotDemand]) -> Vec<usize> {
+        let plan = self.plan_inner(demands);
+        // Fires twice per engine tick (bucket-sizing estimate + final);
+        // both are deterministic, and the pair shows adoption shifts.
+        obs::event_with("planner", "plan", || self.plan_summary(demands, &plan));
+        plan
+    }
+
+    fn plan_inner(&self, demands: &[SlotDemand]) -> Vec<usize> {
         let n = demands.len();
         let mut plan = vec![0usize; n];
         if n == 0 {

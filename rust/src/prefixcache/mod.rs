@@ -35,6 +35,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
 use crate::kvcache::{BlockId, PagedLatentCache};
+use crate::obs;
 
 /// Counters the tree maintains; surfaced through `ServingMetrics`.
 #[derive(Clone, Copy, Debug, Default)]
@@ -285,6 +286,11 @@ impl PrefixTree {
             self.stats.hits += 1;
             self.stats.hit_tokens += w.matched_tokens as u64;
             self.stats.hit_blocks += w.blocks.len() as u64;
+            obs::event_with("prefix", "hit", || {
+                format!("tokens={} blocks={}", w.matched_tokens, w.blocks.len())
+            });
+        } else {
+            obs::event("prefix", "miss");
         }
         PrefixMatch {
             tokens: w.matched_tokens,
@@ -366,6 +372,9 @@ impl PrefixTree {
         let adopted = new_blocks.len();
         self.cached_blocks += adopted;
         self.stats.inserted_blocks += adopted as u64;
+        obs::event_with("prefix", "insert", || {
+            format!("tokens={} blocks={adopted}", tokens.len() - w.matched_tokens)
+        });
         let idx = self.alloc_node(Node {
             key: tokens[w.matched_tokens..].to_vec(),
             blocks: new_blocks,
@@ -478,6 +487,9 @@ impl PrefixTree {
             self.stats.evictions += 1;
         }
         self.lru.extend(deferred);
+        if released > 0 {
+            obs::event_with("prefix", "evict", || format!("blocks={released}"));
+        }
         released
     }
 

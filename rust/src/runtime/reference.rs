@@ -34,6 +34,7 @@
 
 use std::sync::Arc;
 
+use crate::obs;
 use crate::util::rng::Rng;
 
 use super::backend::StepRunner;
@@ -265,6 +266,7 @@ impl StepRunner for ReferenceRunner {
         cache: &xla::Literal,
         lengths: &[i32],
     ) -> anyhow::Result<(Vec<f32>, xla::Literal)> {
+        let _span = obs::span("runtime", "step");
         let v = self.model.cfg.vocab;
         let b = self.batch;
         anyhow::ensure!(tokens.len() == b, "tokens len {} != batch {b}", tokens.len());
@@ -294,6 +296,7 @@ impl StepRunner for ReferenceRunner {
         cache: &xla::Literal,
         start_pos: &[i32],
     ) -> anyhow::Result<(Vec<f32>, xla::Literal)> {
+        let _span = obs::span("runtime", "prefill_chunk");
         let v = self.model.cfg.vocab;
         let b = self.batch;
         anyhow::ensure!(chunks.len() == b, "chunks len {} != batch {b}", chunks.len());
@@ -331,6 +334,7 @@ impl StepRunner for ReferenceRunner {
         cache: &xla::Literal,
         start_pos: &[i32],
     ) -> anyhow::Result<(Vec<Vec<i32>>, xla::Literal)> {
+        let _span = obs::span("runtime", "verify_chunk");
         let v = self.model.cfg.vocab;
         let b = self.batch;
         anyhow::ensure!(chunks.len() == b, "chunks len {} != batch {b}", chunks.len());

@@ -1,8 +1,9 @@
 //! Leveled stderr logger (tracing/env_logger substitute).
 //!
-//! Level comes from `FLASHMLA_LOG` (error|warn|info|debug|trace), default
-//! `info`.  Cheap enough for the request path: a disabled level is one
-//! relaxed atomic load.
+//! Level comes from `FLASHMLA_LOG` (error|warn|info|debug|trace, case
+//! insensitive; `warning` accepted), default `info`; an unrecognized value
+//! warns once and falls back to `info`.  Cheap enough for the request
+//! path: a disabled level is one relaxed atomic load.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
@@ -19,16 +20,43 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
 
+/// Parse a `FLASHMLA_LOG` value.  Empty means "unset" (default info);
+/// anything unrecognized is an error the caller reports.
+fn parse_level(s: &str) -> Result<Level, ()> {
+    match s.to_ascii_lowercase().as_str() {
+        "error" => Ok(Level::Error),
+        "warn" | "warning" => Ok(Level::Warn),
+        "info" | "" => Ok(Level::Info),
+        "debug" => Ok(Level::Debug),
+        "trace" => Ok(Level::Trace),
+        _ => Err(()),
+    }
+}
+
+#[cold]
 fn init_level() -> u8 {
-    let lvl = match std::env::var("FLASHMLA_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
-    } as u8;
-    LEVEL.store(lvl, Ordering::Relaxed);
-    lvl
+    let raw = std::env::var("FLASHMLA_LOG").unwrap_or_default();
+    let (lvl, bad) = match parse_level(&raw) {
+        Ok(l) => (l, false),
+        Err(()) => (Level::Info, true),
+    };
+    // First initializer wins, so the unrecognized-value warning fires at
+    // most once per process even with concurrent first loggers.
+    match LEVEL.compare_exchange(u8::MAX, lvl as u8, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => {
+            if bad {
+                log(
+                    Level::Warn,
+                    "logging",
+                    format_args!(
+                        "unrecognized FLASHMLA_LOG value `{raw}`; defaulting to info"
+                    ),
+                );
+            }
+            lvl as u8
+        }
+        Err(cur) => cur,
+    }
 }
 
 /// Is `level` enabled?
@@ -101,6 +129,13 @@ macro_rules! log_debug {
     };
 }
 
+#[macro_export]
+macro_rules! log_trace {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Trace, $target, format_args!($($arg)*))
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +155,19 @@ mod tests {
         set_level(Level::Error);
         log_info!("test", "hidden {}", 1);
         log_error!("test", "shown {}", 2);
+        log_trace!("test", "hidden {}", 3);
+    }
+
+    // parse_level is tested directly rather than through FLASHMLA_LOG so
+    // parallel tests never race on process-global env state.
+    #[test]
+    fn parse_level_case_insensitive_with_aliases() {
+        assert_eq!(parse_level("TRACE"), Ok(Level::Trace));
+        assert_eq!(parse_level("Debug"), Ok(Level::Debug));
+        assert_eq!(parse_level("warning"), Ok(Level::Warn));
+        assert_eq!(parse_level("WARN"), Ok(Level::Warn));
+        assert_eq!(parse_level(""), Ok(Level::Info));
+        assert_eq!(parse_level("verbose"), Err(()));
+        assert_eq!(parse_level("2"), Err(()));
     }
 }

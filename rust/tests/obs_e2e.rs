@@ -1,0 +1,283 @@
+//! End-to-end observability tests over the deterministic reference
+//! backend: the flight recorder must replay the exact per-tick plan
+//! summaries the engine reported live, dumps must be deterministic modulo
+//! wall-clock fields, traces must be bit-for-bit reproducible across
+//! identical runs, and none of it may perturb the token stream.  The
+//! workload is a mixed one on purpose — chunked prefill, speculative
+//! verification (small-vocab cyclic model, seed 21), and a mid-decode
+//! cancellation — so every recorder column gets exercised.  Runs
+//! everywhere tier-1 runs (no artifacts).
+
+use std::collections::HashMap;
+
+use flashmla_etap::coordinator::{
+    Engine, EngineConfig, GenerationRequest, RequestHandle, StepEvent,
+};
+use flashmla_etap::obs;
+use flashmla_etap::runtime::ReferenceModelConfig;
+use flashmla_etap::spec::SpecConfig;
+use flashmla_etap::util::json;
+
+const BLOCK: usize = 8;
+const PROMPT_LEN: usize = 12;
+const BUDGET: usize = 24;
+const CANCEL_AT: u64 = 6;
+
+/// Small-vocab model whose greedy decode cycles quickly, so prompt-lookup
+/// drafts get accepted (same regime as the speculative e2e tests).
+fn cyclic_model() -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab: 16,
+        n_layers: 2,
+        latent_dim: 8,
+        seed: 21,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+fn engine(flight_recorder_ticks: usize) -> Engine {
+    Engine::reference(
+        cyclic_model(),
+        EngineConfig {
+            max_slots: 2,
+            kv_blocks: 256,
+            block_size: BLOCK,
+            spec: SpecConfig {
+                enabled: true,
+                lookback: 64,
+                max_draft: 4,
+                ..SpecConfig::default()
+            },
+            flight_recorder_ticks,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Three deterministic prompts: two that decode into the model's cycle
+/// (spec accepts) and a third that queues behind the two slots.
+fn prompts() -> Vec<Vec<i32>> {
+    (0..3u8)
+        .map(|j| {
+            (0..PROMPT_LEN)
+                .map(|i| 1 + ((i as i32 * 5 + j as i32 * 3) % 14))
+                .collect()
+        })
+        .collect()
+}
+
+/// Drive the mixed workload manually: submit three requests, cancel the
+/// second mid-decode at `CANCEL_AT`, collect each executed tick's live
+/// `last_plan_summary` and every streamed token.
+fn run_mixed(
+    flight_recorder_ticks: usize,
+) -> (Engine, Vec<String>, HashMap<u64, Vec<i32>>, Vec<RequestHandle>) {
+    let mut e = engine(flight_recorder_ticks);
+    let handles: Vec<RequestHandle> = prompts()
+        .into_iter()
+        .map(|p| e.submit(GenerationRequest::new(p, BUDGET)))
+        .collect();
+    let mut live: Vec<String> = Vec::new();
+    let mut streamed: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut tick = 0u64;
+    while e.has_work() {
+        if tick == CANCEL_AT {
+            assert!(e.cancel(handles[1].id()), "request B is live at tick 6");
+        }
+        if e.step().unwrap() {
+            live.push(e.last_plan_summary());
+        }
+        tick += 1;
+        for ev in e.poll_events() {
+            if let StepEvent::Token { id, token } = ev {
+                streamed.entry(id).or_default().push(token);
+            }
+        }
+        e.take_finished();
+        assert!(tick < 10_000, "runaway serving loop");
+    }
+    (e, live, streamed, handles)
+}
+
+#[test]
+fn flight_recorder_replays_live_plan_summaries_bit_identically() {
+    let (e_on, live_on, out_on, _) = run_mixed(512);
+    let (_e_off, live_off, out_off, _) = run_mixed(0);
+
+    // The recorder must be a pure observer: token streams and live plan
+    // summaries are bit-identical with it on or off.
+    assert_eq!(out_on, out_off, "recorder perturbed the token stream");
+    assert_eq!(live_on, live_off, "recorder perturbed planning");
+
+    let rec = e_on.flight_recorder().expect("recorder enabled");
+    assert_eq!(rec.dropped(), 0, "512-tick ring holds the whole run");
+    assert_eq!(rec.len(), live_on.len(), "one record per executed tick");
+    for (r, plan) in rec.records().zip(live_on.iter()) {
+        assert_eq!(&r.plan, plan, "tick {} plan diverges from live", r.tick);
+    }
+
+    // The mixed workload exercised every column at least once.
+    assert!(rec.records().any(|r| r.prefill_tokens > 0), "prefill seen");
+    assert!(rec.records().any(|r| r.spec_drafted > 0), "drafting seen");
+    assert!(rec.records().any(|r| r.spec_accepted > 0), "acceptance seen");
+    assert!(rec.records().any(|r| r.recomposed), "recompose seen");
+    assert!(rec.records().all(|r| r.kv_total_blocks == 256));
+    assert!(rec.records().all(|r| r.budget_used <= r.budget));
+
+    // The dumped JSON reconstructs the same per-tick plan summaries.
+    let path = std::env::temp_dir().join("flashmla-obs-e2e-replay.json");
+    e_on.dump_flight_recorder(&path).unwrap();
+    let doc = json::parse_file(&path).unwrap();
+    let ticks = doc.get("ticks").as_arr().expect("ticks array");
+    assert_eq!(ticks.len(), live_on.len());
+    for (t, plan) in ticks.iter().zip(live_on.iter()) {
+        assert_eq!(t.get("plan").as_str(), Some(plan.as_str()));
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn recorder_wraparound_keeps_the_last_ticks() {
+    let (e, live, _, _) = run_mixed(4);
+    let rec = e.flight_recorder().expect("recorder enabled");
+    assert!(live.len() > 4, "workload must outlast the tiny ring");
+    assert_eq!(rec.len(), 4);
+    assert_eq!(rec.dropped() as usize, live.len() - 4);
+    let plans: Vec<String> = rec.records().map(|r| r.plan.clone()).collect();
+    assert_eq!(plans, live[live.len() - 4..], "ring keeps the newest ticks");
+    let ticks: Vec<u64> = rec.records().map(|r| r.tick).collect();
+    assert!(
+        ticks.windows(2).all(|w| w[1] == w[0] + 1),
+        "executed ticks are consecutive: {ticks:?}"
+    );
+    assert_eq!(*ticks.last().unwrap() as usize, live.len());
+}
+
+#[test]
+fn dumps_are_deterministic_modulo_wall_time() {
+    let (e1, ..) = run_mixed(512);
+    let (e2, ..) = run_mixed(512);
+    let p1 = std::env::temp_dir().join("flashmla-obs-e2e-det-a.json");
+    let p2 = std::env::temp_dir().join("flashmla-obs-e2e-det-b.json");
+    e1.dump_flight_recorder(&p1).unwrap();
+    e2.dump_flight_recorder(&p2).unwrap();
+    let (d1, d2) = (json::parse_file(&p1).unwrap(), json::parse_file(&p2).unwrap());
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+
+    assert_eq!(d1.get("capacity").as_usize(), d2.get("capacity").as_usize());
+    assert_eq!(d1.get("dropped").as_usize(), d2.get("dropped").as_usize());
+    let (t1, t2) = (
+        d1.get("ticks").as_arr().unwrap(),
+        d2.get("ticks").as_arr().unwrap(),
+    );
+    assert_eq!(t1.len(), t2.len());
+    for (a, b) in t1.iter().zip(t2.iter()) {
+        let (oa, ob) = (a.as_obj().unwrap(), b.as_obj().unwrap());
+        let keys: Vec<&String> = oa.keys().collect();
+        assert_eq!(keys, ob.keys().collect::<Vec<_>>(), "schema mismatch");
+        for (k, va) in oa {
+            if k == "wall_us" {
+                continue; // the documented nondeterministic field
+            }
+            assert_eq!(
+                va.dump(),
+                ob[k].dump(),
+                "field `{k}` differs across identical runs"
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_shape_is_reproducible_and_covers_the_lifecycle() {
+    // The tick clock is thread-local and survives a finished engine;
+    // reset it so both collected runs start from the same stamp.
+    obs::set_tick(0);
+    let collector = obs::collect();
+    let (_, live, _, handles) = run_mixed(0);
+    let keys = collector.keys();
+    drop(collector);
+
+    // Same workload, fresh collector: the trace is bit-for-bit identical
+    // (keys exclude the wall-clock field by construction).
+    obs::set_tick(0);
+    let collector = obs::collect();
+    let _ = run_mixed(0);
+    let keys2 = collector.keys();
+    drop(collector);
+    assert_eq!(keys, keys2, "trace must be deterministic");
+
+    // Submits land before the first step, stamped with tick 0.
+    assert!(keys[0].starts_with("[t0] engine.submit id=1"), "got {}", keys[0]);
+
+    // Every executed tick opens and closes exactly one engine.step span.
+    let enters = keys.iter().filter(|k| k.contains("engine.step >")).count();
+    let exits = keys.iter().filter(|k| k.contains("engine.step <")).count();
+    assert_eq!(enters, live.len());
+    assert_eq!(exits, live.len());
+
+    // The planner runs twice per executed tick (estimate + final).
+    let plans = keys.iter().filter(|k| k.contains("planner.plan")).count();
+    assert_eq!(plans, 2 * live.len());
+
+    // Lifecycle ordering for the surviving first request.
+    let a = handles[0].id();
+    let pos = |needle: String| {
+        keys.iter()
+            .position(|k| k.contains(&needle))
+            .unwrap_or_else(|| panic!("trace lacks `{needle}`"))
+    };
+    let submitted = pos(format!("engine.submit id={a}"));
+    let queued = pos(format!("batcher.queued id={a}"));
+    let admitted = pos(format!("engine.admitted id={a}"));
+    let first_token = pos(format!("engine.first_token id={a}"));
+    let finished = pos(format!("engine.finished id={a}"));
+    assert!(submitted < queued && queued < admitted, "submit → queue → admit");
+    assert!(admitted < first_token && first_token < finished, "admit → TTFT → finish");
+
+    // The cancellation of the running second request is traced.
+    let b = handles[1].id();
+    assert!(
+        keys.iter().any(|k| k.contains(&format!("engine.cancel id={b} running"))),
+        "mid-decode cancel must be traced"
+    );
+
+    // Speculation and the runtime spans appear.
+    assert!(keys.iter().any(|k| k.contains("spec.draft ")));
+    assert!(keys.iter().any(|k| k.contains("spec.verified ")));
+    assert!(keys.iter().any(|k| k.contains("runtime.prefill_chunk >")));
+    assert!(keys.iter().any(|k| k.contains("runtime.verify_chunk >")));
+}
+
+#[test]
+fn timelines_survive_termination_and_stamp_the_lifecycle() {
+    let (e, _, streamed, handles) = run_mixed(0);
+
+    let a = e.timeline(handles[0]).expect("kept after finish");
+    assert_eq!(a.submitted_step, 0);
+    assert_eq!(a.admitted_step, Some(0), "admitted during the first tick");
+    let ft = a.first_token_step.expect("A produced tokens");
+    let done = a.finished_step.expect("A finished");
+    assert!(ft <= done);
+    assert_eq!(a.ttft_steps(), Some(ft));
+    assert_eq!(a.e2e_steps(), Some(done));
+    assert_eq!(a.tokens, streamed[&handles[0].id()].len());
+    assert_eq!(a.tokens, BUDGET, "A ran to its budget");
+    assert!(a.prefill_chunks >= 1);
+    assert!(a.spec_accepted <= a.spec_drafted);
+    assert_eq!(a.outcome.as_deref(), Some("Length"));
+
+    let b = e.timeline(handles[1]).expect("kept after cancellation");
+    assert_eq!(b.outcome.as_deref(), Some("Cancelled"));
+    assert!(b.tokens < BUDGET, "B was cut short");
+
+    let c = e.timeline(handles[2]).expect("third request");
+    assert!(
+        c.admitted_step.unwrap() > 0,
+        "C queued behind the two slots before admission"
+    );
+    assert!(c.queue_steps().unwrap() > 0);
+}

@@ -1,0 +1,49 @@
+//! Disabled-path cost of the tracing layer: with no collector installed
+//! and the narrative off, `span`/`event`/`event_with` must be one relaxed
+//! atomic load — in particular, zero heap allocation.  A counting global
+//! allocator makes that a hard assertion; the test lives alone in this
+//! binary so no concurrent test thread can allocate mid-measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use flashmla_etap::obs;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_obs_path_does_not_allocate() {
+    // Force the gate shut regardless of FLASHMLA_LOG in the environment,
+    // then warm it so initialization cost is outside the window.
+    obs::set_narrative(false);
+    assert!(!obs::active(), "no collector, no narrative: gate is closed");
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..10_000u64 {
+        let _span = obs::span("engine", "step");
+        obs::event("engine", "tick");
+        obs::event_with("engine", "detail", || format!("i={i}"));
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "disabled span/event path must not touch the heap"
+    );
+}
