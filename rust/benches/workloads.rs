@@ -1,0 +1,93 @@
+//! Bench: workload scenario suite — the observatory's measurement run.
+//!
+//! Runs every scenario in `workload::registry()` at the env-selected
+//! scale (`FLASHMLA_BENCH_QUICK` → quick), with the span profiler on so
+//! the emitted document carries a hot-path profile (`flashmla_span_*`
+//! summaries inside `serving_metrics`).  Per scenario it records:
+//!
+//! * a timed case (`scenario <name>`) — wall time of one full replay;
+//! * the deterministic stat columns from `ScenarioStats::metric_pairs`
+//!   (TTFT/e2e/queue steps, tokens/step, `kv_slots_per_token`, …) —
+//!   these are what `bench_compare` gates on;
+//! * the scenario's declared config snapshot, name-prefixed.
+//!
+//! Emits `BENCH_workloads.json` (to `$FLASHMLA_BENCH_OUT` or `.`).  When
+//! `$FLASHMLA_TRAJECTORY_OUT` names a file, also writes a trajectory
+//! entry there — the small per-commit summary checked in under
+//! `BENCH_trajectory/` (see `docs/benchmarking.md` for the append
+//! workflow).
+//!
+//!     FLASHMLA_BENCH_QUICK=1 cargo bench --bench workloads
+
+use std::collections::BTreeMap;
+
+use flashmla_etap::bench::Bencher;
+use flashmla_etap::coordinator::ServingMetrics;
+use flashmla_etap::obs::profiler;
+use flashmla_etap::util::json::Json;
+use flashmla_etap::workload::{registry, run_setup, RunOptions, Scale, ScenarioStats};
+
+/// Scenario stats as a flat metric object for the trajectory entry:
+/// the `metric_pairs` columns with the scenario prefix stripped.
+/// Deterministic by construction — no wall clock in the pairs.
+fn trajectory_metrics(stats: &ScenarioStats) -> Json {
+    let mut obj = BTreeMap::new();
+    for (key, value) in stats.metric_pairs() {
+        let bare = key.rsplit('.').next().unwrap_or(&key).to_string();
+        obj.insert(bare, Json::num(value));
+    }
+    Json::Obj(obj)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    let scale = Scale::from_env();
+    // Hot-path profile rides into serving_metrics via the exporters.
+    profiler::enable();
+
+    let mut merged = ServingMetrics::default();
+    let mut scenario_stats: Vec<ScenarioStats> = Vec::new();
+    for scenario in registry() {
+        let setup = scenario.build(scale);
+        // Timed case: one full replay per iteration.
+        b.bench(&format!("scenario {}", scenario.name), || {
+            run_setup(scenario.name, &setup, &RunOptions::default())
+                .expect("scenario must run")
+                .stats
+                .tokens
+        });
+        // One more (untimed) replay for the stat columns — same seed,
+        // same numbers as every timed iteration.
+        let outcome = run_setup(scenario.name, &setup, &RunOptions::default())?;
+        for (key, value) in outcome.stats.metric_pairs() {
+            b.record_metric(&key, value);
+        }
+        for (key, value) in &setup.config {
+            b.record_config(&format!("{}.{}", scenario.name, key), value.clone());
+        }
+        merged.merge(&outcome.metrics);
+        scenario_stats.push(outcome.stats);
+    }
+    profiler::disable();
+    b.record_serving_metrics(&merged);
+
+    let path = b.emit_json("workloads")?;
+    eprintln!("wrote {}", path.display());
+
+    if let Ok(out) = std::env::var("FLASHMLA_TRAJECTORY_OUT") {
+        if !out.is_empty() {
+            let scenarios: BTreeMap<String, Json> = scenario_stats
+                .iter()
+                .map(|s| (s.scenario.clone(), trajectory_metrics(s)))
+                .collect();
+            let entry = Json::obj(vec![
+                ("commit", Json::str(Bencher::git_commit())),
+                ("quick", Json::Bool(scale.quick)),
+                ("scenarios", Json::Obj(scenarios)),
+            ]);
+            std::fs::write(&out, entry.dump())?;
+            eprintln!("wrote trajectory entry {out}");
+        }
+    }
+    Ok(())
+}

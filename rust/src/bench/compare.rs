@@ -1,0 +1,693 @@
+//! bench-compare: align `BENCH_*.json` documents and render Markdown
+//! regression reports (the `bench_compare` binary's engine).
+//!
+//! Pure data → data: this module parses bench documents ([`BenchDoc`])
+//! and trajectory entries ([`TrajectoryEntry`]) out of
+//! [`crate::util::json::Json`] values, aligns cases and metrics *by
+//! name*, and produces a [`CompareReport`] — a Markdown table with
+//! baseline/current/delta/ratio columns plus the list of threshold
+//! breaches.  No file I/O here; the binary loads files and maps
+//! `CompareReport::exit_code` onto the process exit status.
+//!
+//! Alignment policy — **no silent drops**: a case or metric present on
+//! only one side gets an explicit ⚠ row (`missing in current` / `new`)
+//! and a warning, never omission.  Gating policy: wall-time columns gate
+//! on `Thresholds::time_ratio` only when *both* sides have enough
+//! samples ([`BenchResult::LOW_CONFIDENCE_ITERS`]; low-n rows are
+//! flagged ⚠ and never gate); derived metric columns gate on
+//! `Thresholds::metric_ratio` in the direction [`metric_direction`]
+//! infers from the name (TTFT/e2e/queue/`kv_slots_per_token`/`*_us`
+//! up = worse, throughput down = worse, anything else informational).
+//!
+//! [`BenchResult::LOW_CONFIDENCE_ITERS`]: super::harness::BenchResult::LOW_CONFIDENCE_ITERS
+
+use crate::util::json::Json;
+
+use super::harness::BenchResult;
+
+/// Regression thresholds (ratios are `worse/better` multipliers).
+#[derive(Clone, Copy, Debug)]
+pub struct Thresholds {
+    /// Max allowed `current/baseline` for case wall times (mean µs).
+    /// Generous by default: CI boxes are noisy and the deterministic
+    /// step-count metrics are the precise signal.
+    pub time_ratio: f64,
+    /// Max allowed worsening ratio for derived metrics (TTFT steps,
+    /// tokens/step, `kv_slots_per_token`, …).
+    pub metric_ratio: f64,
+    /// Treat a case/metric that disappeared from the current run as a
+    /// breach (new columns are always just ⚠).
+    pub fail_on_missing: bool,
+}
+
+impl Default for Thresholds {
+    fn default() -> Self {
+        Thresholds {
+            time_ratio: 2.0,
+            metric_ratio: 1.10,
+            fail_on_missing: false,
+        }
+    }
+}
+
+/// Which direction of change is a regression for a metric column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    HigherWorse,
+    LowerWorse,
+    /// Reported but never gated (counts, identities).
+    Informational,
+}
+
+/// Infer gating direction from a metric name.  Scenario prefixes
+/// (`bursty_poisson.ttft_steps_mean`) are stripped before matching.
+pub fn metric_direction(name: &str) -> Direction {
+    let base = name.rsplit('.').next().unwrap_or(name);
+    if base.contains("per_s") || base.contains("throughput") || base.contains("tokens_per_step") {
+        Direction::LowerWorse
+    } else if base.starts_with("ttft")
+        || base.starts_with("e2e")
+        || base.starts_with("queue")
+        || base == "kv_slots_per_token"
+        || base.ends_with("_us")
+    {
+        Direction::HigherWorse
+    } else {
+        Direction::Informational
+    }
+}
+
+/// One case's stats, as read back from `BENCH_*.json`.
+#[derive(Clone, Copy, Debug)]
+pub struct CaseStats {
+    pub iters: usize,
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub p99_us: f64,
+}
+
+impl CaseStats {
+    fn low_confidence(&self) -> bool {
+        self.iters < BenchResult::LOW_CONFIDENCE_ITERS
+    }
+}
+
+/// Parsed view of one `BENCH_*.json` document.
+#[derive(Clone, Debug)]
+pub struct BenchDoc {
+    /// Where it came from (file stem) — report attribution.
+    pub label: String,
+    pub bench: String,
+    pub commit: String,
+    pub quick: bool,
+    pub cases: Vec<(String, CaseStats)>,
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// Parse and schema-check one bench document.  Errors name the missing
+/// or mistyped field so a malformed file fails loudly in CI.
+pub fn parse_bench_doc(label: &str, doc: &Json) -> anyhow::Result<BenchDoc> {
+    let bench = doc
+        .get("bench")
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("{label}: missing string field `bench`"))?
+        .to_string();
+    let meta = doc.get("meta");
+    let commit = meta
+        .get("git_commit")
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("{label}: missing `meta.git_commit`"))?
+        .to_string();
+    let quick = meta
+        .get("quick")
+        .as_bool()
+        .ok_or_else(|| anyhow::anyhow!("{label}: missing bool `meta.quick`"))?;
+    let cases_json = doc
+        .get("cases")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{label}: missing array `cases`"))?;
+    let mut cases = Vec::with_capacity(cases_json.len());
+    for (i, c) in cases_json.iter().enumerate() {
+        let name = c
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("{label}: cases[{i}] missing `name`"))?
+            .to_string();
+        let num = |field: &str| -> anyhow::Result<f64> {
+            c.get(field)
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("{label}: case `{name}` missing `{field}`"))
+        };
+        cases.push((
+            name.clone(),
+            CaseStats {
+                iters: num("iters")? as usize,
+                mean_us: num("mean_us")?,
+                median_us: num("median_us")?,
+                p99_us: num("p99_us")?,
+            },
+        ));
+    }
+    let metrics_json = doc
+        .get("metrics")
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("{label}: missing object `metrics`"))?;
+    let mut metrics = Vec::with_capacity(metrics_json.len());
+    for (k, v) in metrics_json {
+        let v = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("{label}: metric `{k}` is not a number"))?;
+        metrics.push((k.clone(), v));
+    }
+    Ok(BenchDoc {
+        label: label.to_string(),
+        bench,
+        commit,
+        quick,
+        cases,
+        metrics,
+    })
+}
+
+/// The outcome of a comparison: the rendered report plus what gated.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    pub markdown: String,
+    /// Threshold breaches — non-empty makes [`exit_code`](Self::exit_code)
+    /// non-zero.
+    pub breaches: Vec<String>,
+    /// Non-gating anomalies (missing/new/low-confidence columns).
+    pub warnings: Vec<String>,
+}
+
+impl CompareReport {
+    /// Process exit status the binary maps this to: 0 clean, 1 breached.
+    pub fn exit_code(&self) -> i32 {
+        if self.breaches.is_empty() { 0 } else { 1 }
+    }
+}
+
+fn fmt(v: f64) -> String {
+    if !v.is_finite() {
+        return "—".into();
+    }
+    if v == 0.0 {
+        return "0".into();
+    }
+    let a = v.abs();
+    if a >= 1000.0 {
+        format!("{v:.0}")
+    } else if a >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+fn fmt_ratio(cur: f64, base: f64) -> String {
+    if base == 0.0 {
+        "—".into()
+    } else {
+        format!("{:.3}x", cur / base)
+    }
+}
+
+/// Names from both sides, baseline order first, current-only appended —
+/// the no-silent-drops alignment.
+fn aligned_names<T>(base: &[(String, T)], cur: &[(String, T)]) -> Vec<String> {
+    let mut names: Vec<String> = base.iter().map(|(n, _)| n.clone()).collect();
+    for (n, _) in cur {
+        if !names.contains(n) {
+            names.push(n.clone());
+        }
+    }
+    names
+}
+
+fn lookup<'a, T>(list: &'a [(String, T)], name: &str) -> Option<&'a T> {
+    list.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+}
+
+/// Compare two bench documents and render the Markdown report.
+pub fn compare(baseline: &BenchDoc, current: &BenchDoc, th: &Thresholds) -> CompareReport {
+    let mut breaches = Vec::new();
+    let mut warnings = Vec::new();
+    let mut md = String::new();
+    md.push_str(&format!("# Bench compare — `{}`\n\n", current.bench));
+    if baseline.bench != current.bench {
+        warnings.push(format!(
+            "comparing different benches: `{}` vs `{}`",
+            baseline.bench, current.bench
+        ));
+        md.push_str(&format!(
+            "> ⚠ baseline is a different bench (`{}`)\n\n",
+            baseline.bench
+        ));
+    }
+    md.push_str("| | label | commit | quick |\n|---|---|---|---|\n");
+    md.push_str(&format!(
+        "| baseline | `{}` | `{}` | {} |\n",
+        baseline.label, baseline.commit, baseline.quick
+    ));
+    md.push_str(&format!(
+        "| current | `{}` | `{}` | {} |\n\n",
+        current.label, current.commit, current.quick
+    ));
+
+    // Cases: wall-time columns.
+    md.push_str("## Cases (wall time)\n\n");
+    md.push_str(
+        "| case | baseline mean µs | current mean µs | Δ µs | ratio | n (base→cur) | status |\n\
+         |---|---:|---:|---:|---:|---:|---|\n",
+    );
+    for name in aligned_names(&baseline.cases, &current.cases) {
+        let b = lookup(&baseline.cases, &name);
+        let c = lookup(&current.cases, &name);
+        match (b, c) {
+            (Some(b), Some(c)) => {
+                let delta = c.mean_us - b.mean_us;
+                let low = b.low_confidence() || c.low_confidence();
+                let status = if low {
+                    warnings.push(format!(
+                        "case `{name}`: low confidence (n {} → {}), delta not gated",
+                        b.iters, c.iters
+                    ));
+                    "⚠ low-n".to_string()
+                } else if b.mean_us > 0.0 && c.mean_us / b.mean_us > th.time_ratio {
+                    let msg = format!(
+                        "case `{name}`: mean {} µs → {} µs exceeds {:.2}x time threshold",
+                        fmt(b.mean_us),
+                        fmt(c.mean_us),
+                        th.time_ratio
+                    );
+                    breaches.push(msg);
+                    "✗ regression".to_string()
+                } else {
+                    "ok".to_string()
+                };
+                md.push_str(&format!(
+                    "| {name} | {} | {} | {:+.2} | {} | {}→{} | {status} |\n",
+                    fmt(b.mean_us),
+                    fmt(c.mean_us),
+                    delta,
+                    fmt_ratio(c.mean_us, b.mean_us),
+                    b.iters,
+                    c.iters
+                ));
+            }
+            (Some(b), None) => {
+                let msg = format!("case `{name}` missing in current run");
+                if th.fail_on_missing {
+                    breaches.push(msg);
+                } else {
+                    warnings.push(msg);
+                }
+                md.push_str(&format!(
+                    "| {name} | {} | — | — | — | {}→— | ⚠ missing in current |\n",
+                    fmt(b.mean_us),
+                    b.iters
+                ));
+            }
+            (None, Some(c)) => {
+                warnings.push(format!("case `{name}` is new (no baseline)"));
+                md.push_str(&format!(
+                    "| {name} | — | {} | — | — | —→{} | ⚠ new |\n",
+                    fmt(c.mean_us),
+                    c.iters
+                ));
+            }
+            (None, None) => unreachable!("aligned name from neither side"),
+        }
+    }
+
+    // Metrics: derived columns (step counts, ratios, throughputs).
+    md.push_str("\n## Metrics\n\n");
+    md.push_str(
+        "| metric | baseline | current | Δ | ratio | status |\n|---|---:|---:|---:|---:|---|\n",
+    );
+    for name in aligned_names(&baseline.metrics, &current.metrics) {
+        let b = lookup(&baseline.metrics, &name).copied();
+        let c = lookup(&current.metrics, &name).copied();
+        match (b, c) {
+            (Some(b), Some(c)) => {
+                let dir = metric_direction(&name);
+                let worse_ratio = match dir {
+                    Direction::HigherWorse if b != 0.0 => Some(c / b),
+                    Direction::LowerWorse if c != 0.0 => Some(b / c),
+                    _ => None,
+                };
+                let status = match worse_ratio {
+                    Some(r) if r > th.metric_ratio => {
+                        let msg = format!(
+                            "metric `{name}`: {} → {} worsens beyond {:.2}x threshold",
+                            fmt(b),
+                            fmt(c),
+                            th.metric_ratio
+                        );
+                        breaches.push(msg);
+                        "✗ regression".to_string()
+                    }
+                    Some(_) => "ok".to_string(),
+                    None if dir == Direction::Informational => "info".to_string(),
+                    None => {
+                        warnings.push(format!("metric `{name}`: zero baseline, no ratio"));
+                        "⚠ zero".to_string()
+                    }
+                };
+                md.push_str(&format!(
+                    "| {name} | {} | {} | {:+.4} | {} | {status} |\n",
+                    fmt(b),
+                    fmt(c),
+                    c - b,
+                    fmt_ratio(c, b)
+                ));
+            }
+            (Some(b), None) => {
+                let msg = format!("metric `{name}` missing in current run");
+                if th.fail_on_missing {
+                    breaches.push(msg);
+                } else {
+                    warnings.push(msg);
+                }
+                md.push_str(&format!(
+                    "| {name} | {} | — | — | — | ⚠ missing in current |\n",
+                    fmt(b)
+                ));
+            }
+            (None, Some(c)) => {
+                warnings.push(format!("metric `{name}` is new (no baseline)"));
+                md.push_str(&format!("| {name} | — | {} | — | — | ⚠ new |\n", fmt(c)));
+            }
+            (None, None) => unreachable!(),
+        }
+    }
+
+    if !breaches.is_empty() {
+        md.push_str("\n## Breaches\n\n");
+        for b in &breaches {
+            md.push_str(&format!("- ✗ {b}\n"));
+        }
+    }
+    if !warnings.is_empty() {
+        md.push_str("\n## Warnings\n\n");
+        for w in &warnings {
+            md.push_str(&format!("- ⚠ {w}\n"));
+        }
+    }
+    CompareReport {
+        markdown: md,
+        breaches,
+        warnings,
+    }
+}
+
+/// One checked-in trajectory entry (`BENCH_trajectory/*.json`): a small
+/// per-commit summary of the quick-mode scenario suite.
+#[derive(Clone, Debug)]
+pub struct TrajectoryEntry {
+    pub label: String,
+    pub commit: String,
+    pub quick: bool,
+    /// scenario → (metric, value), deterministic metrics only.
+    pub scenarios: Vec<(String, Vec<(String, f64)>)>,
+}
+
+/// Parse and schema-check one trajectory entry.
+pub fn parse_trajectory_entry(label: &str, doc: &Json) -> anyhow::Result<TrajectoryEntry> {
+    let commit = doc
+        .get("commit")
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("{label}: missing string field `commit`"))?
+        .to_string();
+    let quick = doc
+        .get("quick")
+        .as_bool()
+        .ok_or_else(|| anyhow::anyhow!("{label}: missing bool `quick`"))?;
+    let scen_json = doc
+        .get("scenarios")
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("{label}: missing object `scenarios`"))?;
+    let mut scenarios = Vec::with_capacity(scen_json.len());
+    for (name, entry) in scen_json {
+        let obj = entry
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("{label}: scenario `{name}` is not an object"))?;
+        let mut metrics = Vec::with_capacity(obj.len());
+        for (k, v) in obj {
+            let v = v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("{label}: scenario `{name}` metric `{k}` is not a number")
+            })?;
+            metrics.push((k.clone(), v));
+        }
+        scenarios.push((name.clone(), metrics));
+    }
+    Ok(TrajectoryEntry {
+        label: label.to_string(),
+        commit,
+        quick,
+        scenarios,
+    })
+}
+
+/// Render the trajectory as one Markdown table per scenario: one row per
+/// metric, one column per entry (oldest → newest).  Informational — the
+/// trajectory shows drift; gating happens in same-job compares.
+pub fn trajectory_report(entries: &[TrajectoryEntry]) -> String {
+    let mut md = String::from("# Perf trajectory\n\n");
+    if entries.is_empty() {
+        md.push_str("(no entries)\n");
+        return md;
+    }
+    md.push_str("Entries (oldest → newest): ");
+    md.push_str(
+        &entries
+            .iter()
+            .map(|e| format!("`{}`", e.commit))
+            .collect::<Vec<_>>()
+            .join(", "),
+    );
+    md.push_str("\n\n");
+    // Union of scenario names across entries, first-seen order.
+    let mut scenario_names: Vec<String> = Vec::new();
+    for e in entries {
+        for (name, _) in &e.scenarios {
+            if !scenario_names.contains(name) {
+                scenario_names.push(name.clone());
+            }
+        }
+    }
+    for sname in &scenario_names {
+        md.push_str(&format!("## {sname}\n\n| metric |"));
+        for e in entries {
+            md.push_str(&format!(" {} |", e.commit));
+        }
+        md.push_str("\n|---|");
+        for _ in entries {
+            md.push_str("---:|");
+        }
+        md.push('\n');
+        // Union of metric names for this scenario, first-seen order.
+        let mut metric_names: Vec<String> = Vec::new();
+        for e in entries {
+            if let Some(ms) = lookup(&e.scenarios, sname) {
+                for (m, _) in ms {
+                    if !metric_names.contains(m) {
+                        metric_names.push(m.clone());
+                    }
+                }
+            }
+        }
+        for m in &metric_names {
+            md.push_str(&format!("| {m} |"));
+            for e in entries {
+                let v = lookup(&e.scenarios, sname).and_then(|ms| lookup(ms, m));
+                match v {
+                    Some(v) => md.push_str(&format!(" {} |", fmt(*v))),
+                    None => md.push_str(" — |"),
+                }
+            }
+            md.push('\n');
+        }
+        md.push('\n');
+    }
+    md
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn doc(label: &str, mean_a: f64, iters: usize, ttft: f64) -> BenchDoc {
+        let text = format!(
+            r#"{{
+              "bench": "workloads",
+              "meta": {{"git_commit": "{label}", "quick": true, "config": {{}}}},
+              "cases": [
+                {{"name": "scenario bursty", "iters": {iters}, "mean_us": {mean_a},
+                  "median_us": {mean_a}, "p99_us": {mean_a}, "stddev_us": 0.5, "min_us": 1.0}}
+              ],
+              "metrics": {{
+                "bursty_poisson.ttft_steps_mean": {ttft},
+                "bursty_poisson.tokens_per_step": 0.8,
+                "bursty_poisson.kv_slots_per_token": 0.96,
+                "bursty_poisson.finished": 8
+              }},
+              "serving_metrics": null
+            }}"#
+        );
+        parse_bench_doc(label, &parse(&text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn identical_runs_are_clean() {
+        let a = doc("aaa", 100.0, 20, 6.0);
+        let b = doc("bbb", 100.0, 20, 6.0);
+        let r = compare(&a, &b, &Thresholds::default());
+        assert_eq!(r.exit_code(), 0, "breaches: {:?}", r.breaches);
+        assert!(r.markdown.contains("| scenario bursty |"));
+        assert!(r.markdown.contains("ttft_steps_mean"));
+        assert!(r.markdown.contains("kv_slots_per_token"));
+        assert!(r.markdown.contains("20→20"), "iters reported");
+    }
+
+    #[test]
+    fn injected_regression_breaches() {
+        let base = doc("aaa", 100.0, 20, 6.0);
+        // 3x slower and TTFT up 50%: both past the default thresholds.
+        let cur = doc("bbb", 300.0, 20, 9.0);
+        let r = compare(&base, &cur, &Thresholds::default());
+        assert_eq!(r.exit_code(), 1);
+        assert!(r.breaches.iter().any(|b| b.contains("scenario bursty")));
+        assert!(r
+            .breaches
+            .iter()
+            .any(|b| b.contains("ttft_steps_mean")));
+        assert!(r.markdown.contains("✗ regression"));
+    }
+
+    #[test]
+    fn improvements_do_not_breach() {
+        let base = doc("aaa", 100.0, 20, 6.0);
+        let cur = doc("bbb", 50.0, 20, 3.0); // 2x faster, TTFT halved
+        let r = compare(&base, &cur, &Thresholds::default());
+        assert_eq!(r.exit_code(), 0, "breaches: {:?}", r.breaches);
+    }
+
+    #[test]
+    fn throughput_direction_is_lower_worse() {
+        assert_eq!(
+            metric_direction("bursty_poisson.tokens_per_step"),
+            Direction::LowerWorse
+        );
+        assert_eq!(metric_direction("decode_tok_per_s_greedy"), Direction::LowerWorse);
+        assert_eq!(
+            metric_direction("long_context_ladder.ttft_steps_p99"),
+            Direction::HigherWorse
+        );
+        assert_eq!(
+            metric_direction("shared_prefix_tenants.kv_slots_per_token"),
+            Direction::HigherWorse
+        );
+        assert_eq!(metric_direction("steps_greedy"), Direction::Informational);
+
+        // A tokens/step collapse gates.
+        let base = doc("aaa", 100.0, 20, 6.0);
+        let mut cur = doc("bbb", 100.0, 20, 6.0);
+        for (k, v) in cur.metrics.iter_mut() {
+            if k.ends_with("tokens_per_step") {
+                *v = 0.4; // halved throughput
+            }
+        }
+        let r = compare(&base, &cur, &Thresholds::default());
+        assert_eq!(r.exit_code(), 1);
+        assert!(r.breaches.iter().any(|b| b.contains("tokens_per_step")));
+    }
+
+    #[test]
+    fn low_confidence_flags_instead_of_gating() {
+        let base = doc("aaa", 100.0, 1, 6.0);
+        let cur = doc("bbb", 300.0, 1, 6.0); // 3x "slower" on n=1: noise
+        let r = compare(&base, &cur, &Thresholds::default());
+        assert!(
+            !r.breaches.iter().any(|b| b.contains("scenario bursty")),
+            "n=1 deltas must not gate"
+        );
+        assert!(r.markdown.contains("⚠ low-n"));
+        assert!(r.warnings.iter().any(|w| w.contains("low confidence")));
+    }
+
+    #[test]
+    fn missing_and_new_columns_are_explicit() {
+        let base = doc("aaa", 100.0, 20, 6.0);
+        let mut cur = doc("bbb", 100.0, 20, 6.0);
+        cur.cases[0].0 = "scenario renamed".into();
+        cur.metrics.push(("brand_new_metric".into(), 1.0));
+        let r = compare(&base, &cur, &Thresholds::default());
+        assert!(r.markdown.contains("⚠ missing in current"));
+        assert!(r.markdown.contains("⚠ new"));
+        assert!(r.warnings.iter().any(|w| w.contains("missing in current")));
+        assert_eq!(r.exit_code(), 0, "missing is a warning by default");
+        let strict = compare(
+            &base,
+            &cur,
+            &Thresholds {
+                fail_on_missing: true,
+                ..Thresholds::default()
+            },
+        );
+        assert_eq!(strict.exit_code(), 1, "strict mode gates on missing");
+    }
+
+    #[test]
+    fn malformed_documents_fail_loudly() {
+        let missing_bench = parse(r#"{"meta": {}, "cases": [], "metrics": {}}"#).unwrap();
+        assert!(parse_bench_doc("x", &missing_bench).is_err());
+        let bad_case = parse(
+            r#"{"bench": "b", "meta": {"git_commit": "c", "quick": true},
+                "cases": [{"name": "a"}], "metrics": {}}"#,
+        )
+        .unwrap();
+        let err = parse_bench_doc("x", &bad_case).unwrap_err().to_string();
+        assert!(err.contains("iters"), "names the missing field: {err}");
+        let bad_metric = parse(
+            r#"{"bench": "b", "meta": {"git_commit": "c", "quick": true},
+                "cases": [], "metrics": {"m": "nope"}}"#,
+        )
+        .unwrap();
+        assert!(parse_bench_doc("x", &bad_metric).is_err());
+    }
+
+    #[test]
+    fn trajectory_entries_parse_and_render() {
+        let e1 = parse_trajectory_entry(
+            "0001",
+            &parse(
+                r#"{"commit": "abc1234", "quick": true,
+                    "scenarios": {"bursty_poisson": {"ttft_steps_mean": 6.0, "tokens_per_step": 0.8}}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let e2 = parse_trajectory_entry(
+            "0002",
+            &parse(
+                r#"{"commit": "def5678", "quick": true,
+                    "scenarios": {"bursty_poisson": {"ttft_steps_mean": 5.0, "tokens_per_step": 0.9},
+                                   "cancel_storm": {"cancelled": 7}}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let md = trajectory_report(&[e1, e2]);
+        assert!(md.contains("## bursty_poisson"));
+        assert!(md.contains("## cancel_storm"));
+        assert!(md.contains("abc1234") && md.contains("def5678"));
+        assert!(md.contains("ttft_steps_mean"));
+        // Metric absent from the older entry renders as a gap, not a drop.
+        assert!(md.contains("— |"));
+
+        let bad = parse(r#"{"commit": "x", "quick": true, "scenarios": []}"#).unwrap();
+        assert!(parse_trajectory_entry("bad", &bad).is_err());
+    }
+}

@@ -31,6 +31,16 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Below this many samples, comparing two runs of a case is mostly
+    /// noise; `bench_compare` flags (and refuses to gate on) such deltas.
+    pub const LOW_CONFIDENCE_ITERS: usize = 5;
+
+    /// Too few samples for a trustworthy delta (`iters` is emitted in the
+    /// JSON so the compare layer can re-derive this).
+    pub fn low_confidence(&self) -> bool {
+        self.iters < Self::LOW_CONFIDENCE_ITERS
+    }
+
     pub fn line(&self) -> String {
         format!(
             "{:<42} {:>10.2} µs/iter (median {:>9.2}, p99 {:>9.2}, σ {:>8.2}, n={})",
@@ -82,9 +92,16 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Quick mode for CI: `FLASHMLA_BENCH_QUICK=1` (parsed like other
+    /// boolean flags — `0`/`false`/`off` disable it, so an explicitly
+    /// zeroed variable no longer counts as "set" the way the old
+    /// `is_ok()` check made it).
+    pub fn quick_mode() -> bool {
+        crate::util::logging::env_flag("FLASHMLA_BENCH_QUICK").unwrap_or(false)
+    }
+
     pub fn new() -> Self {
-        // Honor a quick mode for CI: FLASHMLA_BENCH_QUICK=1.
-        let quick = std::env::var("FLASHMLA_BENCH_QUICK").is_ok();
+        let quick = Self::quick_mode();
         Bencher {
             warmup: if quick {
                 Duration::from_millis(10)
@@ -128,14 +145,27 @@ impl Bencher {
             std::hint::black_box(f());
             samples_us.push(s.elapsed().as_secs_f64() * 1e6);
         }
+        // Degenerate sample counts (possible under an aggressive quick
+        // budget): with n < 2 a spread statistic is meaningless, so report
+        // zero spread and the single observation for every location stat
+        // instead of interpolating percentiles off a one-point "curve".
+        let (p99_us, stddev_us) = if samples_us.len() < 2 {
+            (samples_us.first().copied().unwrap_or(0.0), 0.0)
+        } else {
+            (percentile(&samples_us, 99.0), stddev(&samples_us))
+        };
         let result = BenchResult {
             name: name.to_string(),
             iters: samples_us.len(),
             mean_us: mean(&samples_us),
             median_us: median(&samples_us),
-            p99_us: percentile(&samples_us, 99.0),
-            stddev_us: stddev(&samples_us),
-            min_us: samples_us.iter().cloned().fold(f64::INFINITY, f64::min),
+            p99_us,
+            stddev_us,
+            min_us: if samples_us.is_empty() {
+                0.0
+            } else {
+                samples_us.iter().cloned().fold(f64::INFINITY, f64::min)
+            },
         };
         println!("{}", result.line());
         self.results.push(result);
@@ -178,7 +208,9 @@ impl Bencher {
     }
 
     /// Short git commit of the working tree, or "unknown" outside a repo.
-    fn git_commit() -> String {
+    /// Public so benches can stamp trajectory entries with the same id
+    /// that `emit_json` records in `meta.git_commit`.
+    pub fn git_commit() -> String {
         std::process::Command::new("git")
             .args(["rev-parse", "--short", "HEAD"])
             .output()
@@ -203,10 +235,7 @@ impl Bencher {
                 "meta",
                 Json::obj(vec![
                     ("git_commit", Json::str(Self::git_commit())),
-                    (
-                        "quick",
-                        Json::Bool(std::env::var("FLASHMLA_BENCH_QUICK").is_ok()),
-                    ),
+                    ("quick", Json::Bool(Self::quick_mode())),
                     (
                         "config",
                         Json::Obj(
@@ -309,6 +338,25 @@ mod tests {
         let mut b = Bencher::new();
         b.record_config("k", "1");
         b.record_config("k", "2");
+    }
+
+    #[test]
+    fn low_confidence_threshold() {
+        let r = BenchResult {
+            name: "n1".into(),
+            iters: 1,
+            mean_us: 5.0,
+            median_us: 5.0,
+            p99_us: 5.0,
+            stddev_us: 0.0,
+            min_us: 5.0,
+        };
+        assert!(r.low_confidence());
+        let trusted = BenchResult {
+            iters: BenchResult::LOW_CONFIDENCE_ITERS,
+            ..r.clone()
+        };
+        assert!(!trusted.low_confidence());
     }
 
     #[test]

@@ -1,9 +1,15 @@
 //! Bench harness (criterion substitute): warmup, adaptive iteration count,
-//! robust summary stats, and table output for the paper-reproduction
-//! benches under `rust/benches/`.
+//! robust summary stats, table output for the paper-reproduction benches
+//! under `rust/benches/`, and the bench-compare engine behind the
+//! `bench_compare` binary (`docs/benchmarking.md`).
 
+pub mod compare;
 pub mod harness;
 pub mod table;
 
+pub use compare::{
+    compare, metric_direction, parse_bench_doc, parse_trajectory_entry, trajectory_report,
+    BenchDoc, CompareReport, Direction, Thresholds, TrajectoryEntry,
+};
 pub use harness::{BenchResult, Bencher};
 pub use table::Table;

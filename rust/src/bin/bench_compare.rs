@@ -1,0 +1,197 @@
+//! `bench_compare` — diff `BENCH_*.json` documents and render a Markdown
+//! regression report (see `docs/benchmarking.md`).
+//!
+//! Modes:
+//!
+//! * `bench_compare <baseline.json> <current.json>` — align cases and
+//!   metrics by name, print the report, exit 1 on a threshold breach.
+//! * `bench_compare --trajectory BENCH_trajectory` — render the
+//!   checked-in per-PR history as one table per scenario (informational;
+//!   never gates).
+//! * `bench_compare --validate <path>` — schema-check a `BENCH_*.json`
+//!   file or a trajectory directory; exit 2 if anything is malformed.
+//!
+//! Exit codes: 0 clean, 1 threshold breach, 2 usage error or malformed
+//! input.  Missing/new columns are never dropped silently — they get ⚠
+//! rows (and gate only under `--fail-on-missing`).
+
+use std::path::{Path, PathBuf};
+
+use flashmla_etap::bench::{
+    compare, parse_bench_doc, parse_trajectory_entry, trajectory_report, BenchDoc, Thresholds,
+    TrajectoryEntry,
+};
+use flashmla_etap::util::argparse::ArgParser;
+use flashmla_etap::util::json::parse_file;
+
+fn main() {
+    let p = ArgParser::new(
+        "bench_compare",
+        "diff BENCH_*.json documents and gate on regression thresholds",
+    )
+    .positional("baseline.json", "baseline bench document")
+    .positional("current.json", "current bench document")
+    .opt("tol-time", Some("2.0"), "max current/baseline wall-time ratio")
+    .opt("tol-metric", Some("1.10"), "max worsening ratio for derived metrics")
+    .opt("out", None, "write the Markdown report here (default: stdout)")
+    .opt("trajectory", None, "render a trajectory directory instead of comparing")
+    .opt("validate", None, "schema-check a bench file or trajectory directory")
+    .flag("fail-on-missing", "treat columns missing from current as breaches");
+    let a = p.parse_or_exit();
+    std::process::exit(run(&a));
+}
+
+fn run(a: &flashmla_etap::util::argparse::Args) -> i32 {
+    if let Some(path) = a.get("validate") {
+        return validate(Path::new(path));
+    }
+    if let Some(dir) = a.get("trajectory") {
+        return trajectory(Path::new(dir), a.get("out"));
+    }
+
+    let pos = a.positionals();
+    if pos.len() != 2 {
+        eprintln!(
+            "bench_compare: need exactly two positional files (baseline, current), \
+             got {}; see --help",
+            pos.len()
+        );
+        return 2;
+    }
+    let th = match thresholds(a) {
+        Ok(th) => th,
+        Err(msg) => {
+            eprintln!("bench_compare: {msg}");
+            return 2;
+        }
+    };
+    let baseline = match load_doc(Path::new(&pos[0])) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("bench_compare: {e:#}");
+            return 2;
+        }
+    };
+    let current = match load_doc(Path::new(&pos[1])) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("bench_compare: {e:#}");
+            return 2;
+        }
+    };
+    let report = compare(&baseline, &current, &th);
+    if emit(&report.markdown, a.get("out")).is_err() {
+        return 2;
+    }
+    for b in &report.breaches {
+        eprintln!("bench_compare: BREACH: {b}");
+    }
+    report.exit_code()
+}
+
+fn thresholds(a: &flashmla_etap::util::argparse::Args) -> Result<Thresholds, String> {
+    Ok(Thresholds {
+        time_ratio: a.get_f64("tol-time")?,
+        metric_ratio: a.get_f64("tol-metric")?,
+        fail_on_missing: a.has("fail-on-missing"),
+    })
+}
+
+fn label_of(path: &Path) -> String {
+    path.file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| path.display().to_string())
+}
+
+fn load_doc(path: &Path) -> anyhow::Result<BenchDoc> {
+    let json = parse_file(path)?;
+    parse_bench_doc(&label_of(path), &json)
+}
+
+/// Entry files in a trajectory directory, sorted by file name — entries
+/// are named `NNNN_<commit>.json` so lexical order is chronological.
+fn trajectory_files(dir: &Path) -> anyhow::Result<Vec<PathBuf>> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|e| e == "json"))
+        .collect();
+    anyhow::ensure!(
+        !files.is_empty(),
+        "{}: no .json trajectory entries",
+        dir.display()
+    );
+    files.sort();
+    Ok(files)
+}
+
+fn load_trajectory(dir: &Path) -> anyhow::Result<Vec<TrajectoryEntry>> {
+    let mut entries = Vec::new();
+    for path in trajectory_files(dir)? {
+        let json = parse_file(&path)?;
+        entries.push(parse_trajectory_entry(&label_of(&path), &json)?);
+    }
+    Ok(entries)
+}
+
+fn trajectory(dir: &Path, out: Option<&str>) -> i32 {
+    let entries = match load_trajectory(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("bench_compare: {e:#}");
+            return 2;
+        }
+    };
+    let md = trajectory_report(&entries);
+    if emit(&md, out).is_err() {
+        return 2;
+    }
+    0
+}
+
+/// Schema-check a single bench document, or every entry of a trajectory
+/// directory.  Prints what passed; any malformed file is exit 2.
+fn validate(path: &Path) -> i32 {
+    let outcome: anyhow::Result<String> = if path.is_dir() {
+        load_trajectory(path).map(|entries| {
+            format!(
+                "{}: {} trajectory entr{} valid",
+                path.display(),
+                entries.len(),
+                if entries.len() == 1 { "y" } else { "ies" }
+            )
+        })
+    } else {
+        load_doc(path).map(|doc| {
+            format!(
+                "{}: bench `{}` valid ({} cases, {} metrics)",
+                path.display(),
+                doc.bench,
+                doc.cases.len(),
+                doc.metrics.len()
+            )
+        })
+    };
+    match outcome {
+        Ok(msg) => {
+            println!("{msg}");
+            0
+        }
+        Err(e) => {
+            eprintln!("bench_compare: {e:#}");
+            2
+        }
+    }
+}
+
+fn emit(markdown: &str, out: Option<&str>) -> Result<(), ()> {
+    match out {
+        Some(path) => std::fs::write(path, markdown).map_err(|e| {
+            eprintln!("bench_compare: cannot write {path}: {e}");
+        }),
+        None => {
+            print!("{markdown}");
+            Ok(())
+        }
+    }
+}

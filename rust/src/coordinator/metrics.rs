@@ -543,15 +543,28 @@ impl ServingMetrics {
         r
     }
 
-    /// Prometheus text exposition of [`registry`](Self::registry).
+    /// [`registry`](Self::registry) plus the process-global span-duration
+    /// profile (`flashmla_span_*`, see `obs::profiler`) — the export
+    /// shape.  Kept out of `registry()` itself because the profile is
+    /// process state, not per-engine state: it would break the
+    /// merged-equals-sum-of-parts contract the registry guarantees.
+    fn export_registry(&self) -> MetricsRegistry {
+        let mut r = self.registry();
+        crate::obs::profiler::export_into(&mut r);
+        r
+    }
+
+    /// Prometheus text exposition of [`registry`](Self::registry), plus
+    /// the span-duration profile when `obs::profiler` collected one.
     pub fn to_prometheus(&self) -> String {
-        self.registry().to_prometheus()
+        self.export_registry().to_prometheus()
     }
 
     /// JSON snapshot of [`registry`](Self::registry) — the schema the
-    /// bench harness embeds in every `BENCH_*.json`.
+    /// bench harness embeds in every `BENCH_*.json` — plus the
+    /// span-duration profile when `obs::profiler` collected one.
     pub fn snapshot_json(&self) -> Json {
-        self.registry().to_json()
+        self.export_registry().to_json()
     }
 
     /// Human-readable dump.

@@ -39,6 +39,7 @@ pub mod sim;
 pub mod spec;
 pub mod testing;
 pub mod util;
+pub mod workload;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -13,6 +13,9 @@
 //!   per-tick [`TickRecord`]s (plan summary, batch composition, budget,
 //!   KV pressure, spec + prefix activity), dumpable as JSON on demand or
 //!   when the debug KV ledger trips.
+//! * [`profiler`] — opt-in span-duration aggregation per `target.name`
+//!   (count/total/mean/p99), exported as `flashmla_span_*` summaries so
+//!   bench JSON and Prometheus dumps carry a hot-path profile.
 //! * [`registry`] — the named metric registry `ServingMetrics` exports
 //!   into, with Prometheus-text and JSON snapshot exporters.
 //! * [`timeline`] — per-request tick-stamped lifecycle records,
@@ -21,11 +24,13 @@
 //! The tick-clock/wall-clock contract, span taxonomy, and exporter
 //! schemas are documented in `docs/observability.md`.
 
+pub mod profiler;
 pub mod recorder;
 pub mod registry;
 pub mod timeline;
 pub mod trace;
 
+pub use profiler::SpanProfile;
 pub use recorder::{FlightRecorder, TickRecord};
 pub use registry::{MetricEntry, MetricValue, MetricsRegistry, Summary};
 pub use timeline::RequestTimeline;

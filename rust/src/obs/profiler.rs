@@ -1,0 +1,222 @@
+//! Span-duration profiler: aggregate span wall times per `target.name`.
+//!
+//! The tracing layer already stamps every span `Exit` with its duration
+//! ([`super::trace::TraceRecord::wall_us`]); this module folds those
+//! durations into a process-global per-span aggregate (count, total,
+//! mean, approximate p99 via [`LatencyHistogram`], exact min/max) so a
+//! bench or a long-running server can export a hot-path profile without
+//! keeping — or even installing — a record collector.
+//!
+//! Cost model, matching the rest of `obs`:
+//!
+//! * **Disabled** (default): nothing.  [`enable`] sets a bit in the same
+//!   gate `span`/`event` already consult, so the disabled path stays one
+//!   relaxed atomic load and zero allocation
+//!   (`rust/tests/obs_overhead.rs` asserts this with a counting
+//!   allocator, including after an enable → disable round trip).
+//! * **Enabled**: each span exit takes a mutex and updates one
+//!   `BTreeMap` entry keyed by the `'static` target/name pair — no
+//!   per-record allocation after a span's first observation.
+//!
+//! Export: [`export_into`] writes one `flashmla_span_<target>_<name>_us`
+//! summary per observed span into a [`MetricsRegistry`];
+//! `ServingMetrics::registry` calls it, so every `BENCH_*.json` snapshot
+//! and `metrics.prom` dump automatically carries the profile when
+//! profiling was on.  The aggregate is process-global (spans from every
+//! engine in the process fold together), which is exactly what a bench
+//! run wants and what `docs/benchmarking.md` documents.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::registry::{MetricsRegistry, Summary};
+use super::trace;
+use crate::util::stats::LatencyHistogram;
+
+struct SpanAgg {
+    count: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+    hist: LatencyHistogram,
+}
+
+static PROFILE: Mutex<BTreeMap<(&'static str, &'static str), SpanAgg>> =
+    Mutex::new(BTreeMap::new());
+
+/// Start profiling span durations (idempotent).  Opens the tracing gate,
+/// so spans on every thread begin reporting their exit durations here.
+pub fn enable() {
+    trace::set_profiling(true);
+}
+
+/// Stop profiling (idempotent).  Accumulated aggregates survive until
+/// [`reset`] so they can still be exported after the measured region.
+pub fn disable() {
+    trace::set_profiling(false);
+}
+
+/// Is the profiler currently recording?
+pub fn enabled() -> bool {
+    trace::profiling()
+}
+
+/// Drop all accumulated aggregates (typically paired with [`enable`] at
+/// the start of a measured region).
+pub fn reset() {
+    PROFILE.lock().unwrap().clear();
+}
+
+/// Fold one span exit into the aggregate.  Called by the trace layer
+/// only while the profiler bit is set.
+pub(crate) fn record(target: &'static str, name: &'static str, dur_us: f64) {
+    let mut map = PROFILE.lock().unwrap();
+    let agg = map.entry((target, name)).or_insert_with(|| SpanAgg {
+        count: 0,
+        sum_us: 0.0,
+        min_us: f64::INFINITY,
+        max_us: 0.0,
+        hist: LatencyHistogram::new(),
+    });
+    agg.count += 1;
+    agg.sum_us += dur_us;
+    agg.min_us = agg.min_us.min(dur_us);
+    agg.max_us = agg.max_us.max(dur_us);
+    agg.hist.record_us(dur_us);
+}
+
+/// One span's aggregated profile.
+#[derive(Clone, Debug)]
+pub struct SpanProfile {
+    pub target: &'static str,
+    pub name: &'static str,
+    pub count: u64,
+    pub total_us: f64,
+    pub mean_us: f64,
+    /// Approximate (log-bucketed histogram, ≤ ~4 % relative error).
+    pub p50_us: f64,
+    /// Approximate (log-bucketed histogram, ≤ ~4 % relative error).
+    pub p99_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+}
+
+/// Snapshot of every span observed so far, ordered by `target.name`.
+pub fn snapshot() -> Vec<SpanProfile> {
+    let map = PROFILE.lock().unwrap();
+    map.iter()
+        .map(|(&(target, name), agg)| SpanProfile {
+            target,
+            name,
+            count: agg.count,
+            total_us: agg.sum_us,
+            mean_us: if agg.count == 0 {
+                0.0
+            } else {
+                agg.sum_us / agg.count as f64
+            },
+            p50_us: agg.hist.percentile_us(50.0),
+            p99_us: agg.hist.percentile_us(99.0),
+            min_us: if agg.count == 0 { 0.0 } else { agg.min_us },
+            max_us: agg.max_us,
+        })
+        .collect()
+}
+
+/// Metric-name-safe rendering of a span component (`kv_sync` stays,
+/// anything exotic maps to `_`).
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+/// Export every aggregated span as a
+/// `flashmla_span_<target>_<name>_us` summary.  No-op when nothing was
+/// profiled, so registries built with profiling off are unchanged.
+pub fn export_into(r: &mut MetricsRegistry) {
+    for p in snapshot() {
+        r.summary(
+            &format!(
+                "flashmla_span_{}_{}_us",
+                sanitize(p.target),
+                sanitize(p.name)
+            ),
+            &format!("Wall time of `{}.{}` spans (µs).", p.target, p.name),
+            Summary {
+                count: p.count,
+                sum: p.total_us,
+                mean: p.mean_us,
+                p50: Some(p.p50_us),
+                p99: Some(p.p99_us),
+                min: p.min_us,
+                max: p.max_us,
+            },
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test fn only: the profiler state and gate are process-global,
+    // and Rust runs tests in this module on separate threads.
+    #[test]
+    fn profiler_round_trip() {
+        reset();
+        // Disabled: spans leave no aggregate.
+        disable();
+        {
+            let _s = trace::span("profiler_test", "cold");
+        }
+        assert!(
+            snapshot()
+                .iter()
+                .all(|p| !(p.target == "profiler_test" && p.name == "cold")),
+            "disabled profiler must not record"
+        );
+
+        enable();
+        assert!(enabled());
+        for _ in 0..3 {
+            let _s = trace::span("profiler_test", "hot");
+        }
+        disable();
+        assert!(!enabled());
+        {
+            let _s = trace::span("profiler_test", "late");
+        }
+
+        let snap = snapshot();
+        let hot = snap
+            .iter()
+            .find(|p| p.target == "profiler_test" && p.name == "hot")
+            .expect("profiled span present");
+        assert_eq!(hot.count, 3);
+        assert!(hot.total_us >= hot.max_us);
+        assert!(hot.min_us <= hot.mean_us && hot.mean_us <= hot.max_us + 1e-9);
+        assert!(
+            !snap
+                .iter()
+                .any(|p| p.target == "profiler_test" && p.name == "late"),
+            "spans after disable must not record"
+        );
+
+        // Export shape: sanitized summary name with count/sum/p99.
+        let mut r = MetricsRegistry::new();
+        export_into(&mut r);
+        match r.get("flashmla_span_profiler_test_hot_us") {
+            Some(crate::obs::registry::MetricValue::Summary(s)) => {
+                assert_eq!(s.count, 3);
+                assert!(s.p99.is_some());
+            }
+            other => panic!("expected summary, got {other:?}"),
+        }
+
+        reset();
+        assert!(snapshot()
+            .iter()
+            .all(|p| p.target != "profiler_test"));
+    }
+}

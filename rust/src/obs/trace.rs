@@ -32,10 +32,13 @@ use crate::util::logging::{self, Level};
 
 /// Bit 0 of the gate: narrate records through the stderr logger.
 const NARRATIVE: u32 = 1;
+/// Bit 1 of the gate: feed span `Exit` durations to the span profiler
+/// ([`crate::obs::profiler`]).
+const PROFILER: u32 = 2;
 /// Each installed collector adds this to the gate (any thread's collector
 /// flips every thread onto the slow path; threads without a sink then
 /// no-op after the thread-local check).
-const COLLECTOR_UNIT: u32 = 2;
+const COLLECTOR_UNIT: u32 = 4;
 /// Sentinel: the gate has not consulted `FLASHMLA_LOG` yet.
 const UNINIT: u32 = u32::MAX;
 
@@ -78,6 +81,27 @@ pub fn set_narrative(on: bool) {
     } else {
         ACTIVE.fetch_and(!NARRATIVE, Ordering::Relaxed);
     }
+}
+
+/// Flip the span-profiler bit of the gate (see
+/// [`crate::obs::profiler::enable`], the public entry point).  While set,
+/// every span `Exit` also lands in the profiler's per-`target.name`
+/// aggregate; the disabled path is untouched — still the one relaxed load
+/// in [`active`].
+pub(crate) fn set_profiling(on: bool) {
+    active(); // force init so the bit ops see a real value
+    if on {
+        ACTIVE.fetch_or(PROFILER, Ordering::Relaxed);
+    } else {
+        ACTIVE.fetch_and(!PROFILER, Ordering::Relaxed);
+    }
+}
+
+/// Is the span-profiler bit set?  (Callers are already past the [`active`]
+/// gate, so the load here never races initialization.)
+pub(crate) fn profiling() -> bool {
+    let v = ACTIVE.load(Ordering::Relaxed);
+    v != UNINIT && v & PROFILER != 0
 }
 
 thread_local! {
@@ -159,6 +183,10 @@ impl TraceRecord {
 }
 
 fn emit(kind: TraceKind, target: &'static str, name: &'static str, detail: String, wall: f64) {
+    if kind == TraceKind::Exit && profiling() {
+        // `wall` is the span duration for Exit records.
+        crate::obs::profiler::record(target, name, wall);
+    }
     let rec = TraceRecord {
         tick: current_tick(),
         target,

@@ -20,6 +20,51 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
 
+/// Parse a boolean-ish env value, case insensitively.  `Ok(None)` means
+/// "unset" (empty string); `Err(())` is an unrecognized value the caller
+/// reports.
+pub fn parse_flag(s: &str) -> Result<Option<bool>, ()> {
+    match s.to_ascii_lowercase().as_str() {
+        "" => Ok(None),
+        "1" | "true" | "on" | "yes" => Ok(Some(true)),
+        "0" | "false" | "off" | "no" => Ok(Some(false)),
+        _ => Err(()),
+    }
+}
+
+/// Read a boolean env flag (`FLASHMLA_BENCH_QUICK` and friends):
+/// `1`/`true`/`on`/`yes` enable, `0`/`false`/`off`/`no` disable, unset or
+/// empty returns `None` so the caller picks its default.  An unrecognized
+/// value counts as *set* (the historical `is_ok()` behaviour, so e.g.
+/// `FLASHMLA_BENCH_QUICK=quick` still means quick) but warns once per
+/// variable per process, like an unrecognized `FLASHMLA_LOG`.
+pub fn env_flag(name: &str) -> Option<bool> {
+    let raw = std::env::var(name).unwrap_or_default();
+    match parse_flag(&raw) {
+        Ok(v) => v,
+        Err(()) => {
+            warn_bad_flag_once(name, &raw);
+            Some(true)
+        }
+    }
+}
+
+#[cold]
+fn warn_bad_flag_once(name: &str, raw: &str) {
+    use std::sync::Mutex;
+    static WARNED: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let mut warned = WARNED.lock().unwrap();
+    if warned.iter().any(|w| w == name) {
+        return;
+    }
+    warned.push(name.to_string());
+    log(
+        Level::Warn,
+        "logging",
+        format_args!("unrecognized {name} value `{raw}`; treating as enabled"),
+    );
+}
+
 /// Parse a `FLASHMLA_LOG` value.  Empty means "unset" (default info);
 /// anything unrecognized is an error the caller reports.
 fn parse_level(s: &str) -> Result<Level, ()> {
@@ -156,6 +201,23 @@ mod tests {
         log_info!("test", "hidden {}", 1);
         log_error!("test", "shown {}", 2);
         log_trace!("test", "hidden {}", 3);
+    }
+
+    // parse_flag is tested directly rather than through env vars so
+    // parallel tests never race on process-global env state.
+    #[test]
+    fn parse_flag_truthiness() {
+        assert_eq!(parse_flag(""), Ok(None));
+        assert_eq!(parse_flag("1"), Ok(Some(true)));
+        assert_eq!(parse_flag("TRUE"), Ok(Some(true)));
+        assert_eq!(parse_flag("on"), Ok(Some(true)));
+        assert_eq!(parse_flag("Yes"), Ok(Some(true)));
+        assert_eq!(parse_flag("0"), Ok(Some(false)));
+        assert_eq!(parse_flag("False"), Ok(Some(false)));
+        assert_eq!(parse_flag("OFF"), Ok(Some(false)));
+        assert_eq!(parse_flag("no"), Ok(Some(false)));
+        assert_eq!(parse_flag("quick"), Err(()));
+        assert_eq!(parse_flag("2"), Err(()));
     }
 
     // parse_level is tested directly rather than through FLASHMLA_LOG so

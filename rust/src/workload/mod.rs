@@ -1,0 +1,30 @@
+//! Scenario-driven workload layer: deterministic serving traces, a
+//! registry of named scenarios, and a runner that derives per-scenario
+//! stats from the observability surface.
+//!
+//! This is the measurement substrate of the bench observatory
+//! (`docs/benchmarking.md`):
+//!
+//! * [`trace`] — seeded trace generation (bursty Poisson arrivals,
+//!   random prompts) and the [`WorkloadTrace`] data model.  Same seed ⇒
+//!   byte-identical trace.
+//! * [`scenario`] — the named-scenario registry ([`registry`]): each
+//!   [`Scenario`] declares its trace seed, engine shape, and config
+//!   snapshot, scaled by [`Scale`] (quick CI mode vs full).
+//! * [`runner`] — replays a trace against a live engine over the
+//!   serving API and derives [`ScenarioStats`] (TTFT / e2e / queue in
+//!   engine ticks, tokens per step, `kv_slots_per_token`,
+//!   prefill/prefix/spec attribution) from `Engine::timeline` +
+//!   `ServingMetrics`.
+//!
+//! `rust/benches/workloads.rs` runs every registered scenario and emits
+//! `BENCH_workloads.json`; `bench_compare` diffs those files across
+//! runs; `BENCH_trajectory/` keeps the per-PR history.
+
+pub mod runner;
+pub mod scenario;
+pub mod trace;
+
+pub use runner::{run, run_setup, RunOptions, ScenarioOutcome, ScenarioStats};
+pub use scenario::{find, registry, Scale, Scenario, ScenarioSetup};
+pub use trace::{bursty_poisson_arrivals, random_prompt, TraceRequest, WorkloadTrace};

@@ -1,0 +1,367 @@
+//! Scenario runner: replay a [`WorkloadTrace`] against a live engine and
+//! derive per-scenario stats from the observability surface.
+//!
+//! The runner is the only piece of the workload layer that touches an
+//! engine.  It drives the manual serving loop (`submit` → `step` →
+//! `poll_events` → `take_finished`), honoring each request's arrival
+//! tick and cancellation intent, then derives [`ScenarioStats`] from two
+//! sources PR 6 built exactly for this: per-request
+//! [`RequestTimeline`]s (TTFT / e2e / queue in engine ticks, exact
+//! per-request) and the engine's `ServingMetrics` (tokens, steps,
+//! `kv_slots_per_token`, prefill/prefix/spec attribution).
+//!
+//! Time model: the trace's `arrive_tick` counts *engine steps*.  A
+//! request is submitted once the engine has stepped that many times;
+//! when the engine goes idle with arrivals still pending, the clock
+//! fast-forwards to the next arrival (idle wall time is not simulated —
+//! queueing behaviour under pressure is what the scenarios probe).
+//! Everything except `wall_us` is deterministic for a given trace.
+//!
+//! [`RequestTimeline`]: crate::obs::RequestTimeline
+//! [`WorkloadTrace`]: super::trace::WorkloadTrace
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::coordinator::{
+    Engine, FinishedRequest, GenerationRequest, RequestHandle, ServingMetrics, StepEvent,
+};
+use crate::prefill::PrefillConfig;
+use crate::util::json::Json;
+use crate::util::stats::{mean, percentile};
+
+use super::scenario::{Scale, Scenario, ScenarioSetup};
+
+/// Per-run overrides on top of the scenario's declared engine shape.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunOptions {
+    /// Override the prefill planner (`PrefillConfig::per_token()` replays
+    /// the scenario on the pre-chunking pipeline — the
+    /// scheduler-invariance axis of the determinism suite).
+    pub prefill: Option<PrefillConfig>,
+    /// Override the flight-recorder ring size (`Some(0)` forces it off).
+    pub flight_recorder_ticks: Option<usize>,
+}
+
+/// Everything a scenario run produced.
+pub struct ScenarioOutcome {
+    pub stats: ScenarioStats,
+    /// Terminal results sorted by request id — the bit-identity surface
+    /// (tokens and finish reasons) the determinism tests compare.
+    pub outputs: Vec<FinishedRequest>,
+    /// Final engine metrics (for `Bencher::record_serving_metrics` or
+    /// cross-scenario merges).
+    pub metrics: ServingMetrics,
+}
+
+/// Derived per-scenario statistics.  All step-denominated (wall time is
+/// confined to `wall_us`), so two same-seed runs agree on every other
+/// field — `deterministic_json` is the comparable rendering.
+#[derive(Clone, Debug)]
+pub struct ScenarioStats {
+    pub scenario: String,
+    pub requests: usize,
+    pub finished: u64,
+    pub cancelled: u64,
+    pub rejected: u64,
+    pub steps: u64,
+    pub tokens: u64,
+    pub tokens_per_step: f64,
+    pub ttft_steps_mean: f64,
+    pub ttft_steps_p99: f64,
+    pub e2e_steps_mean: f64,
+    pub e2e_steps_p99: f64,
+    pub queue_steps_mean: f64,
+    pub kv_slots_per_token: f64,
+    pub prefill_tokens: u64,
+    pub prefill_chunks: u64,
+    pub prefix_hit_tokens: u64,
+    pub spec_drafted: u64,
+    pub spec_accepted: u64,
+    /// Wall-clock run time — the one non-deterministic field.
+    pub wall_us: f64,
+}
+
+impl ScenarioStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::str(self.scenario.clone())),
+            ("requests", Json::num(self.requests as f64)),
+            ("finished", Json::num(self.finished as f64)),
+            ("cancelled", Json::num(self.cancelled as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("tokens_per_step", Json::num(self.tokens_per_step)),
+            ("ttft_steps_mean", Json::num(self.ttft_steps_mean)),
+            ("ttft_steps_p99", Json::num(self.ttft_steps_p99)),
+            ("e2e_steps_mean", Json::num(self.e2e_steps_mean)),
+            ("e2e_steps_p99", Json::num(self.e2e_steps_p99)),
+            ("queue_steps_mean", Json::num(self.queue_steps_mean)),
+            ("kv_slots_per_token", Json::num(self.kv_slots_per_token)),
+            ("prefill_tokens", Json::num(self.prefill_tokens as f64)),
+            ("prefill_chunks", Json::num(self.prefill_chunks as f64)),
+            (
+                "prefix_hit_tokens",
+                Json::num(self.prefix_hit_tokens as f64),
+            ),
+            ("spec_drafted", Json::num(self.spec_drafted as f64)),
+            ("spec_accepted", Json::num(self.spec_accepted as f64)),
+            ("wall_us", Json::num(self.wall_us)),
+        ])
+    }
+
+    /// [`to_json`](Self::to_json) with the wall clock zeroed — byte-equal
+    /// across same-seed runs.
+    pub fn deterministic_json(&self) -> Json {
+        let mut s = self.clone();
+        s.wall_us = 0.0;
+        s.to_json()
+    }
+
+    /// `(name, value)` pairs for `Bencher::record_metric`, prefixed with
+    /// the scenario name (`bursty_poisson.ttft_steps_mean`, …).  These
+    /// are the columns `bench_compare` aligns across runs.
+    pub fn metric_pairs(&self) -> Vec<(String, f64)> {
+        let p = |k: &str| format!("{}.{}", self.scenario, k);
+        vec![
+            (p("ttft_steps_mean"), self.ttft_steps_mean),
+            (p("ttft_steps_p99"), self.ttft_steps_p99),
+            (p("e2e_steps_mean"), self.e2e_steps_mean),
+            (p("e2e_steps_p99"), self.e2e_steps_p99),
+            (p("queue_steps_mean"), self.queue_steps_mean),
+            (p("tokens_per_step"), self.tokens_per_step),
+            (p("kv_slots_per_token"), self.kv_slots_per_token),
+            (p("steps"), self.steps as f64),
+            (p("tokens"), self.tokens as f64),
+            (p("finished"), self.finished as f64),
+            (p("cancelled"), self.cancelled as f64),
+            (p("rejected"), self.rejected as f64),
+        ]
+    }
+}
+
+/// Build and run a registered scenario at the given scale.
+pub fn run(
+    scenario: &Scenario,
+    scale: Scale,
+    opts: &RunOptions,
+) -> anyhow::Result<ScenarioOutcome> {
+    let setup = scenario.build(scale);
+    run_setup(scenario.name, &setup, opts)
+}
+
+/// Replay an already-built setup (used by the determinism tests to pin
+/// one setup while varying [`RunOptions`]).
+pub fn run_setup(
+    name: &str,
+    setup: &ScenarioSetup,
+    opts: &RunOptions,
+) -> anyhow::Result<ScenarioOutcome> {
+    let mut cfg = setup.engine.clone();
+    if let Some(p) = opts.prefill {
+        cfg.prefill = p;
+    }
+    if let Some(n) = opts.flight_recorder_ticks {
+        cfg.flight_recorder_ticks = n;
+    }
+    let mut engine = Engine::reference(setup.model.clone(), cfg)?;
+
+    let t0 = Instant::now();
+    let mut pending = setup.trace.requests.clone();
+    pending.reverse(); // pop() from the back = earliest arrival first
+    let mut handles: Vec<RequestHandle> = Vec::with_capacity(pending.len());
+    // Cancellation intents: request id → cancel-after-token threshold.
+    let mut cancel_at: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut streamed: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut outputs: Vec<FinishedRequest> = Vec::new();
+
+    let mut tick: u64 = 0;
+    let mut guard: u64 = 0;
+    loop {
+        // Submit everything whose arrival tick has come; queued cancels
+        // (`cancel_after_tokens == 0`) fire immediately after submit.
+        while pending.last().is_some_and(|r| r.arrive_tick <= tick) {
+            let r = pending.pop().unwrap();
+            let mut req = GenerationRequest::new(r.prompt, r.max_new_tokens);
+            if !r.stop_tokens.is_empty() {
+                req = req.stop_tokens(&r.stop_tokens);
+            }
+            if let Some(params) = r.sampling {
+                req = req.sampling(params);
+            }
+            let h = engine.submit(req);
+            handles.push(h);
+            match r.cancel_after_tokens {
+                Some(0) => {
+                    engine.cancel(h.id());
+                }
+                Some(n) => {
+                    cancel_at.insert(h.id(), n);
+                }
+                None => {}
+            }
+        }
+
+        if !engine.has_work() {
+            match pending.last() {
+                // Idle with arrivals still due: fast-forward the clock.
+                Some(r) => {
+                    tick = r.arrive_tick;
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        engine.step()?;
+        tick += 1;
+        guard += 1;
+        anyhow::ensure!(
+            guard < 10_000_000,
+            "scenario `{name}` did not drain (runaway loop)"
+        );
+
+        for ev in engine.poll_events() {
+            if let StepEvent::Token { id, .. } = ev {
+                let n = streamed.entry(id).or_insert(0);
+                *n += 1;
+                if cancel_at.get(&id) == Some(&*n) {
+                    engine.cancel(id);
+                }
+            }
+        }
+        outputs.extend(engine.take_finished());
+    }
+    outputs.extend(engine.take_finished());
+    let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    // Per-request step intervals from the surviving timelines.
+    let mut ttft: Vec<f64> = Vec::new();
+    let mut e2e: Vec<f64> = Vec::new();
+    let mut queue: Vec<f64> = Vec::new();
+    for &h in &handles {
+        if let Some(tl) = engine.timeline(h) {
+            if let Some(v) = tl.ttft_steps() {
+                ttft.push(v as f64);
+            }
+            if let Some(v) = tl.e2e_steps() {
+                e2e.push(v as f64);
+            }
+            if let Some(v) = tl.queue_steps() {
+                queue.push(v as f64);
+            }
+        }
+    }
+
+    outputs.sort_by_key(|f| f.id);
+    let requests = handles.len();
+    let report = engine.into_report();
+    let m = report.metrics;
+    let stats = ScenarioStats {
+        scenario: name.to_string(),
+        requests,
+        finished: m.requests_finished,
+        cancelled: m.requests_cancelled,
+        rejected: m.requests_rejected,
+        steps: m.steps,
+        tokens: m.tokens_generated,
+        tokens_per_step: if m.steps == 0 {
+            0.0
+        } else {
+            m.tokens_generated as f64 / m.steps as f64
+        },
+        ttft_steps_mean: mean(&ttft),
+        ttft_steps_p99: percentile(&ttft, 99.0),
+        e2e_steps_mean: mean(&e2e),
+        e2e_steps_p99: percentile(&e2e, 99.0),
+        queue_steps_mean: mean(&queue),
+        kv_slots_per_token: m.kv_slots_per_token(),
+        prefill_tokens: m.prefill_tokens,
+        prefill_chunks: m.prefill_chunks,
+        prefix_hit_tokens: m.prefix.hit_tokens,
+        spec_drafted: m.spec_drafted,
+        spec_accepted: m.spec_accepted,
+        wall_us,
+    };
+    Ok(ScenarioOutcome {
+        stats,
+        outputs,
+        metrics: m,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::scenario;
+
+    #[test]
+    fn bursty_scenario_runs_and_reports() {
+        let s = scenario::find("bursty_poisson").unwrap();
+        let out = run(&s, Scale::quick(), &RunOptions::default()).unwrap();
+        assert_eq!(out.stats.requests, 8);
+        assert_eq!(out.outputs.len(), 8, "every request terminates");
+        assert!(out.stats.tokens > 0);
+        assert!(out.stats.steps > 0);
+        assert!(out.stats.tokens_per_step > 0.0);
+        assert!(out.stats.ttft_steps_mean >= 1.0, "first token needs a step");
+        assert!(
+            out.stats.e2e_steps_mean >= out.stats.ttft_steps_mean,
+            "e2e dominates ttft"
+        );
+        // Exact-KV convention: strictly below one slot per token.
+        assert!(out.stats.kv_slots_per_token < 1.0);
+        assert!(out.stats.kv_slots_per_token > 0.0);
+    }
+
+    #[test]
+    fn cancel_storm_cancels() {
+        let s = scenario::find("cancel_storm").unwrap();
+        let out = run(&s, Scale::quick(), &RunOptions::default()).unwrap();
+        assert!(out.stats.cancelled > 0, "cancel mix must cancel something");
+        assert!(out.stats.finished > 0, "survivors finish");
+        assert_eq!(
+            out.stats.finished + out.stats.cancelled + out.stats.rejected,
+            out.stats.requests as u64,
+            "every request accounted for"
+        );
+    }
+
+    #[test]
+    fn stop_tokens_shorten_streams() {
+        let s = scenario::find("stop_token_mix").unwrap();
+        let out = run(&s, Scale::quick(), &RunOptions::default()).unwrap();
+        let budget: usize = 32 * out.stats.requests;
+        assert!(
+            (out.stats.tokens as usize) < budget,
+            "stop sets must end at least one stream early ({} vs {})",
+            out.stats.tokens,
+            budget
+        );
+    }
+
+    #[test]
+    fn shared_prefix_hits_cache() {
+        let s = scenario::find("shared_prefix_tenants").unwrap();
+        let out = run(&s, Scale::quick(), &RunOptions::default()).unwrap();
+        assert!(
+            out.stats.prefix_hit_tokens > 0,
+            "tenant mix must re-hit its system prefixes"
+        );
+    }
+
+    #[test]
+    fn stats_json_round_trips() {
+        let s = scenario::find("bursty_poisson").unwrap();
+        let out = run(&s, Scale::quick(), &RunOptions::default()).unwrap();
+        let doc = crate::util::json::parse(&out.stats.to_json().dump()).expect("stats parse");
+        assert_eq!(doc.get("scenario").as_str(), Some("bursty_poisson"));
+        assert!(doc.get("wall_us").as_f64().unwrap() > 0.0);
+        assert_eq!(doc.get("tokens").as_f64(), Some(out.stats.tokens as f64));
+        // Deterministic rendering zeroes exactly the wall clock.
+        let det = out.stats.deterministic_json();
+        assert_eq!(det.get("wall_us").as_f64(), Some(0.0));
+        assert_eq!(det.get("tokens").as_f64(), Some(out.stats.tokens as f64));
+    }
+}

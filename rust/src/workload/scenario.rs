@@ -1,0 +1,426 @@
+//! Named workload scenarios: seeded trace + engine shape + config
+//! snapshot, registered in [`registry`].
+//!
+//! Each scenario captures one serving regime the ROADMAP cares about —
+//! bursty open-loop arrival pressure, shared-prefix tenant traffic,
+//! long-context documents on the paper's kv_len ladder, cancellation
+//! storms, and stop-token-heavy mixes.  A scenario is *pure data about a
+//! run*: a deterministic [`WorkloadTrace`] plus the
+//! `ReferenceModelConfig`/`EngineConfig` to serve it under, plus the
+//! knob snapshot the bench harness stamps into `BENCH_*.json`.  The
+//! [`super::runner`] executes it; nothing here steps an engine.
+//!
+//! Quick mode ([`Scale::quick`], from `FLASHMLA_BENCH_QUICK`) shrinks
+//! request counts and the context ladder so CI replays every scenario in
+//! milliseconds.  Full mode caps the ladder at 4096 tokens rather than
+//! the paper's 64K: the scalar reference backend is a step-count proxy,
+//! not a wall-clock device, and the ladder's *shape* (geometric in
+//! kv_len) is what the trajectory tracks (ROADMAP item 3 is the fast
+//! kernel that will make 64K feasible).
+
+use crate::coordinator::EngineConfig;
+use crate::prefill::PrefillConfig;
+use crate::runtime::ReferenceModelConfig;
+use crate::spec::SpecConfig;
+use crate::util::rng::Rng;
+
+use super::trace::{bursty_poisson_arrivals, random_prompt, TraceRequest, WorkloadTrace};
+
+/// Workload scale: quick (CI) or full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Scale {
+    pub quick: bool,
+}
+
+impl Scale {
+    pub fn quick() -> Self {
+        Scale { quick: true }
+    }
+
+    pub fn full() -> Self {
+        Scale { quick: false }
+    }
+
+    /// Resolve from `FLASHMLA_BENCH_QUICK`, like the bench harness.
+    pub fn from_env() -> Self {
+        Scale {
+            quick: crate::bench::Bencher::quick_mode(),
+        }
+    }
+
+    fn n(&self, quick: usize, full: usize) -> usize {
+        if self.quick { quick } else { full }
+    }
+
+    /// The kv_len ladder for the long-context scenario (geometric, after
+    /// the paper's Figure-1 sweep; scaled to the reference backend).
+    pub fn kv_ladder(&self) -> Vec<usize> {
+        if self.quick {
+            vec![128, 256]
+        } else {
+            vec![512, 1024, 2048, 4096]
+        }
+    }
+}
+
+/// Everything the runner needs to execute one scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioSetup {
+    pub model: ReferenceModelConfig,
+    pub engine: EngineConfig,
+    pub trace: WorkloadTrace,
+    /// Declared knob snapshot (knob → value) for `BENCH_*.json` meta.
+    pub config: Vec<(String, String)>,
+}
+
+/// A named, seeded workload scenario.
+#[derive(Clone, Copy)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub seed: u64,
+    build: fn(Scale, u64) -> ScenarioSetup,
+}
+
+impl Scenario {
+    /// Materialize the trace + engine shape at the given scale.
+    pub fn build(&self, scale: Scale) -> ScenarioSetup {
+        let mut setup = (self.build)(scale, self.seed);
+        setup
+            .config
+            .push(("scenario".into(), self.name.to_string()));
+        setup.config.push(("seed".into(), self.seed.to_string()));
+        setup
+            .config
+            .push(("quick".into(), scale.quick.to_string()));
+        setup
+    }
+}
+
+/// All registered scenarios, in report order.
+pub fn registry() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "bursty_poisson",
+            about: "open-loop bursty Poisson arrivals against a small slot pool",
+            seed: 0xB0_0001,
+            build: build_bursty_poisson,
+        },
+        Scenario {
+            name: "shared_prefix_tenants",
+            about: "tenant mix sharing per-tenant system prefixes (prefix cache on)",
+            seed: 0xB0_0002,
+            build: build_shared_prefix,
+        },
+        Scenario {
+            name: "long_context_ladder",
+            about: "one long-context document per kv_len rung (chunked prefill)",
+            seed: 0xB0_0003,
+            build: build_long_context,
+        },
+        Scenario {
+            name: "cancel_storm",
+            about: "cancel-heavy mix: queued cancels, mid-stream cancels, survivors",
+            seed: 0xB0_0004,
+            build: build_cancel_storm,
+        },
+        Scenario {
+            name: "stop_token_mix",
+            about: "stop-token-heavy mix: per-request stop sets end streams early",
+            seed: 0xB0_0005,
+            build: build_stop_tokens,
+        },
+    ]
+}
+
+/// Look a scenario up by name.
+pub fn find(name: &str) -> Option<Scenario> {
+    registry().into_iter().find(|s| s.name == name)
+}
+
+const VOCAB: usize = 64;
+
+fn small_model(seed: u64) -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab: VOCAB,
+        n_layers: 2,
+        latent_dim: 8,
+        seed,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+fn build_bursty_poisson(scale: Scale, seed: u64) -> ScenarioSetup {
+    let n = scale.n(8, 24);
+    let mut rng = Rng::new(seed);
+    let arrivals = bursty_poisson_arrivals(&mut rng, n, 0.15, 1.5, 24);
+    let requests = arrivals
+        .into_iter()
+        .map(|t| {
+            let len = rng.range(8, 17) as usize;
+            TraceRequest::new(t, random_prompt(&mut rng, len, VOCAB), 16)
+        })
+        .collect();
+    ScenarioSetup {
+        model: small_model(29),
+        engine: EngineConfig {
+            max_slots: 4,
+            kv_blocks: 128,
+            block_size: 8,
+            prefix_cache: false,
+            ..EngineConfig::default()
+        },
+        trace: WorkloadTrace { requests }.sorted(),
+        config: vec![
+            ("requests".into(), n.to_string()),
+            ("arrivals".into(), "poisson base=0.15 burst=1.5 phase=24".into()),
+            ("max_new".into(), "16".into()),
+        ],
+    }
+}
+
+fn build_shared_prefix(scale: Scale, seed: u64) -> ScenarioSetup {
+    const TENANTS: usize = 4;
+    const BLOCK: usize = 8;
+    let per_tenant = scale.n(2, 6);
+    let mut rng = Rng::new(seed);
+    // One fixed system prefix per tenant, three blocks long so the radix
+    // tree has whole blocks to share.
+    let prefixes: Vec<Vec<i32>> = (0..TENANTS)
+        .map(|_| random_prompt(&mut rng, 3 * BLOCK, VOCAB))
+        .collect();
+    // Steady (non-bursty) trickle: a tenant's first request has time to
+    // finish prefilling — and insert its prefix blocks into the tree —
+    // before the tenant's next request arrives to re-hit them.
+    let arrivals =
+        bursty_poisson_arrivals(&mut rng, TENANTS * per_tenant, 0.25, 0.25, 1_000_000);
+    let requests = arrivals
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let tenant = i % TENANTS;
+            let mut prompt = prefixes[tenant].clone();
+            prompt.extend(random_prompt(&mut rng, BLOCK, VOCAB));
+            TraceRequest::new(t, prompt, 12)
+        })
+        .collect();
+    ScenarioSetup {
+        model: small_model(31),
+        engine: EngineConfig {
+            max_slots: 4,
+            kv_blocks: 128,
+            block_size: BLOCK,
+            prefix_cache: true,
+            ..EngineConfig::default()
+        },
+        trace: WorkloadTrace { requests }.sorted(),
+        config: vec![
+            ("tenants".into(), TENANTS.to_string()),
+            ("per_tenant".into(), per_tenant.to_string()),
+            ("prefix_tokens".into(), (3 * BLOCK).to_string()),
+            ("max_new".into(), "12".into()),
+        ],
+    }
+}
+
+fn build_long_context(scale: Scale, seed: u64) -> ScenarioSetup {
+    const MAX_NEW: usize = 8;
+    const BLOCK: usize = 16;
+    let ladder = scale.kv_ladder();
+    let mut rng = Rng::new(seed);
+    // One document per rung, arriving back to back: context (prompt +
+    // generation) lands exactly on the rung, so each request exercises
+    // its kv bucket edge.
+    let requests = ladder
+        .iter()
+        .enumerate()
+        .map(|(i, &rung)| {
+            TraceRequest::new(
+                i as u64,
+                random_prompt(&mut rng, rung - MAX_NEW, VOCAB),
+                MAX_NEW,
+            )
+        })
+        .collect();
+    let total_tokens: usize = ladder.iter().sum();
+    let kv_blocks = (total_tokens / BLOCK) * 2 + 16;
+    ScenarioSetup {
+        model: ReferenceModelConfig {
+            kv_buckets: ladder.clone(),
+            batch_buckets: vec![1, 2],
+            ..small_model(37)
+        },
+        engine: EngineConfig {
+            max_slots: 2,
+            kv_blocks,
+            block_size: BLOCK,
+            prefix_cache: false,
+            // Big chunks: a 4096-token prompt should cost ~64 ticks of
+            // prefill, not 4096 — this is the chunked-prefill workload.
+            prefill: PrefillConfig {
+                step_token_budget: 128,
+                chunk_tokens: 64,
+                ..PrefillConfig::default()
+            },
+            ..EngineConfig::default()
+        },
+        trace: WorkloadTrace { requests }.sorted(),
+        config: vec![
+            (
+                "kv_ladder".into(),
+                ladder
+                    .iter()
+                    .map(|l| l.to_string())
+                    .collect::<Vec<_>>()
+                    .join(","),
+            ),
+            ("max_new".into(), MAX_NEW.to_string()),
+            ("chunk_tokens".into(), "64".into()),
+        ],
+    }
+}
+
+fn build_cancel_storm(scale: Scale, seed: u64) -> ScenarioSetup {
+    let n = scale.n(9, 21);
+    let mut rng = Rng::new(seed);
+    let arrivals = bursty_poisson_arrivals(&mut rng, n, 0.3, 3.0, 16);
+    let requests = arrivals
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let mut req =
+                TraceRequest::new(t, random_prompt(&mut rng, 10, VOCAB), 24);
+            // Deterministic thirds: queued cancel, mid-stream cancel,
+            // survivor.
+            req.cancel_after_tokens = match i % 3 {
+                0 => Some(0),
+                1 => Some(4),
+                _ => None,
+            };
+            req
+        })
+        .collect();
+    ScenarioSetup {
+        model: small_model(41),
+        engine: EngineConfig {
+            // Two slots under a burst: cancels happen while queued.
+            max_slots: 2,
+            kv_blocks: 96,
+            block_size: 8,
+            prefix_cache: false,
+            ..EngineConfig::default()
+        },
+        trace: WorkloadTrace { requests }.sorted(),
+        config: vec![
+            ("requests".into(), n.to_string()),
+            ("cancel_mix".into(), "1/3 queued, 1/3 after 4 tokens".into()),
+            ("max_new".into(), "24".into()),
+        ],
+    }
+}
+
+fn build_stop_tokens(scale: Scale, seed: u64) -> ScenarioSetup {
+    let n = scale.n(6, 16);
+    let mut rng = Rng::new(seed);
+    let arrivals = bursty_poisson_arrivals(&mut rng, n, 0.5, 0.5, 1_000_000);
+    let requests = arrivals
+        .into_iter()
+        .map(|t| {
+            let mut req =
+                TraceRequest::new(t, random_prompt(&mut rng, 12, VOCAB), 32);
+            // Eight distinct stop tokens per request: with a 64-token
+            // vocab, greedy streams routinely hit one well before the
+            // 32-token budget, exercising the early-stop path.
+            let mut stops: Vec<i32> = Vec::new();
+            while stops.len() < 8 {
+                let t = rng.range(1, VOCAB as u64 - 1) as i32;
+                if !stops.contains(&t) {
+                    stops.push(t);
+                }
+            }
+            req.stop_tokens = stops;
+            req
+        })
+        .collect();
+    ScenarioSetup {
+        model: small_model(43),
+        engine: EngineConfig {
+            max_slots: 4,
+            kv_blocks: 128,
+            block_size: 8,
+            prefix_cache: false,
+            spec: SpecConfig::default(),
+            ..EngineConfig::default()
+        },
+        trace: WorkloadTrace { requests }.sorted(),
+        config: vec![
+            ("requests".into(), n.to_string()),
+            ("stop_tokens_per_request".into(), "8".into()),
+            ("max_new".into(), "32".into()),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique_and_sufficient() {
+        let scenarios = registry();
+        assert!(scenarios.len() >= 4, "compare reports need ≥ 4 scenarios");
+        let mut names: Vec<_> = scenarios.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), scenarios.len(), "duplicate scenario name");
+        assert!(find("bursty_poisson").is_some());
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn every_scenario_fits_its_engine() {
+        for scale in [Scale::quick(), Scale::full()] {
+            for s in registry() {
+                let setup = s.build(scale);
+                assert!(
+                    !setup.trace.requests.is_empty(),
+                    "{}: empty trace",
+                    s.name
+                );
+                let max_kv = *setup.model.kv_buckets.iter().max().unwrap();
+                let capacity = setup.engine.kv_blocks * setup.engine.block_size;
+                for r in &setup.trace.requests {
+                    let peak = r.prompt.len() + r.max_new_tokens;
+                    assert!(
+                        peak <= max_kv,
+                        "{}: request peak {} exceeds kv bucket {}",
+                        s.name,
+                        peak,
+                        max_kv
+                    );
+                    assert!(
+                        peak <= capacity,
+                        "{}: request peak {} exceeds paged capacity {}",
+                        s.name,
+                        peak,
+                        capacity
+                    );
+                }
+                // Declared snapshot always carries the attribution keys.
+                let keys: Vec<_> =
+                    setup.config.iter().map(|(k, _)| k.as_str()).collect();
+                assert!(keys.contains(&"scenario") && keys.contains(&"seed"));
+            }
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        for s in registry() {
+            let a = s.build(Scale::quick()).trace.to_json().dump();
+            let b = s.build(Scale::quick()).trace.to_json().dump();
+            assert_eq!(a, b, "{}: trace not reproducible", s.name);
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Deterministic workload traces: seeded request streams replayed
+//! against the serving API.
+//!
+//! A [`WorkloadTrace`] is pure data — arrival ticks, prompts, stop sets,
+//! sampling and cancellation intents — generated from a [`Rng`] seed and
+//! nothing else, so the same seed reproduces the same trace byte for
+//! byte ([`WorkloadTrace::to_json`] is the canonical rendering the
+//! determinism tests compare).  The [`super::runner`] replays a trace
+//! against an engine; this module never touches one.
+
+use crate::coordinator::SamplingParams;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One request in a trace.
+#[derive(Clone, Debug)]
+pub struct TraceRequest {
+    /// Virtual engine tick at which the request is submitted.  The runner
+    /// submits every request whose tick has come before stepping; when
+    /// the engine idles, it fast-forwards to the next arrival.
+    pub arrive_tick: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Early-stop token set (empty = length-only stopping).
+    pub stop_tokens: Vec<i32>,
+    /// `None` = greedy decoding.
+    pub sampling: Option<SamplingParams>,
+    /// Cancel once this many tokens have streamed (`Some(0)` cancels
+    /// right after submission — the queued-cancel path).
+    pub cancel_after_tokens: Option<usize>,
+}
+
+impl TraceRequest {
+    /// A plain greedy request arriving at `tick`.
+    pub fn new(arrive_tick: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        TraceRequest {
+            arrive_tick,
+            prompt,
+            max_new_tokens,
+            stop_tokens: Vec::new(),
+            sampling: None,
+            cancel_after_tokens: None,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let sampling = match &self.sampling {
+            None => Json::Null,
+            Some(p) => Json::obj(vec![
+                ("temperature", Json::num(p.temperature as f64)),
+                ("top_k", Json::num(p.top_k as f64)),
+                ("top_p", Json::num(p.top_p as f64)),
+                (
+                    "seed",
+                    p.seed.map(|s| Json::num(s as f64)).unwrap_or(Json::Null),
+                ),
+            ]),
+        };
+        Json::obj(vec![
+            ("arrive_tick", Json::num(self.arrive_tick as f64)),
+            (
+                "prompt",
+                Json::Arr(self.prompt.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
+            (
+                "stop_tokens",
+                Json::Arr(
+                    self.stop_tokens
+                        .iter()
+                        .map(|&t| Json::num(t as f64))
+                        .collect(),
+                ),
+            ),
+            ("sampling", sampling),
+            (
+                "cancel_after_tokens",
+                self.cancel_after_tokens
+                    .map(|n| Json::num(n as f64))
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// An arrival-ordered request stream.
+#[derive(Clone, Debug, Default)]
+pub struct WorkloadTrace {
+    pub requests: Vec<TraceRequest>,
+}
+
+impl WorkloadTrace {
+    /// Sort by arrival tick (stable, so equal-tick requests keep their
+    /// generation order) and return self — generators call this last.
+    pub fn sorted(mut self) -> Self {
+        self.requests.sort_by_key(|r| r.arrive_tick);
+        self
+    }
+
+    /// Total prompt tokens across the trace.
+    pub fn prompt_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.prompt.len()).sum()
+    }
+
+    /// Canonical JSON rendering — fully deterministic for a given seed;
+    /// the determinism suite compares `to_json().dump()` byte for byte.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "requests",
+            Json::Arr(self.requests.iter().map(|r| r.to_json()).collect()),
+        )])
+    }
+}
+
+/// Bursty Poisson arrival ticks: exponential inter-arrivals whose rate
+/// alternates between `burst_rate` and `base_rate` every `phase_ticks`
+/// of virtual time — the classic open-loop bursty client.  Returns `n`
+/// non-decreasing ticks.
+pub fn bursty_poisson_arrivals(
+    rng: &mut Rng,
+    n: usize,
+    base_rate: f64,
+    burst_rate: f64,
+    phase_ticks: u64,
+) -> Vec<u64> {
+    assert!(base_rate > 0.0 && burst_rate > 0.0 && phase_ticks > 0);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let in_burst = (t as u64 / phase_ticks) % 2 == 0;
+        let rate = if in_burst { burst_rate } else { base_rate };
+        t += rng.exponential(rate);
+        out.push(t as u64);
+    }
+    out
+}
+
+/// Uniform random prompt over `[1, vocab - 1)` — token 0 is left out so
+/// prompts never collide with a padding-style id, and the top id stays
+/// free for stop-token scenarios.
+pub fn random_prompt(rng: &mut Rng, len: usize, vocab: usize) -> Vec<i32> {
+    assert!(vocab >= 4, "vocab too small for prompt generation");
+    (0..len)
+        .map(|_| rng.range(1, vocab as u64 - 1) as i32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_trace_bytes() {
+        let build = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let arrivals = bursty_poisson_arrivals(&mut rng, 8, 0.2, 2.0, 16);
+            let requests = arrivals
+                .into_iter()
+                .map(|t| TraceRequest::new(t, random_prompt(&mut rng, 6, 64), 4))
+                .collect();
+            WorkloadTrace { requests }.sorted()
+        };
+        assert_eq!(build(7).to_json().dump(), build(7).to_json().dump());
+        assert_ne!(build(7).to_json().dump(), build(8).to_json().dump());
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_bursty() {
+        let mut rng = Rng::new(3);
+        let a = bursty_poisson_arrivals(&mut rng, 64, 0.05, 4.0, 32);
+        assert_eq!(a.len(), 64);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "non-decreasing");
+        // A burst phase at 80x the base rate must pack arrivals tighter
+        // than the trace-wide average somewhere.
+        let gaps: Vec<u64> = a.windows(2).map(|w| w[1] - w[0]).collect();
+        let min = *gaps.iter().min().unwrap();
+        let max = *gaps.iter().max().unwrap();
+        assert!(min < max, "rate alternation shows up in the gaps");
+    }
+
+    #[test]
+    fn prompts_stay_in_vocab() {
+        let mut rng = Rng::new(11);
+        let p = random_prompt(&mut rng, 256, 64);
+        assert!(p.iter().all(|&t| (1..63).contains(&t)));
+    }
+}

@@ -1,0 +1,196 @@
+//! End-to-end tests for the `bench_compare` binary: exit codes, report
+//! content, validate mode, and trajectory rendering — the same contract
+//! CI relies on (`docs/benchmarking.md`).
+//!
+//! Each test spawns the real binary (`CARGO_BIN_EXE_bench_compare`)
+//! against documents written to a private temp directory, so the
+//! exit-code mapping (0 clean / 1 breach / 2 malformed-or-usage) is
+//! exercised at the process boundary, not just in the library.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_bench_compare")
+}
+
+/// Private temp dir per test — parallel tests must not share files.
+fn scratch(test: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "flashmla_bench_compare_{}_{test}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A schema-complete bench document with one case and the four headline
+/// scenario metric columns.
+fn bench_doc(commit: &str, mean_us: f64, iters: u64, ttft: f64) -> String {
+    format!(
+        r#"{{
+  "bench": "workloads",
+  "meta": {{"git_commit": "{commit}", "quick": true, "config": {{}}}},
+  "cases": [
+    {{"name": "scenario bursty_poisson", "iters": {iters}, "mean_us": {mean_us},
+      "median_us": {mean_us}, "p99_us": {mean_us}, "stddev_us": 1.0, "min_us": 1.0}}
+  ],
+  "metrics": {{
+    "bursty_poisson.ttft_steps_mean": {ttft},
+    "bursty_poisson.e2e_steps_mean": 40.0,
+    "bursty_poisson.tokens_per_step": 0.8,
+    "bursty_poisson.kv_slots_per_token": 0.96
+  }},
+  "serving_metrics": null
+}}"#
+    )
+}
+
+fn write(dir: &Path, name: &str, contents: &str) -> PathBuf {
+    let path = dir.join(name);
+    std::fs::write(&path, contents).unwrap();
+    path
+}
+
+fn run(args: &[&str]) -> Output {
+    Command::new(bin()).args(args).output().unwrap()
+}
+
+fn stdout(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stdout).into_owned()
+}
+
+#[test]
+fn identical_runs_exit_zero_with_full_report() {
+    let dir = scratch("clean");
+    let base = write(&dir, "base.json", &bench_doc("aaa1111", 100.0, 20, 6.0));
+    let cur = write(&dir, "cur.json", &bench_doc("bbb2222", 100.0, 20, 6.0));
+    let out = run(&[base.to_str().unwrap(), cur.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {:?}", out.stderr);
+    let md = stdout(&out);
+    // The report carries the headline columns the issue names.
+    assert!(md.contains("ttft_steps_mean"), "report: {md}");
+    assert!(md.contains("e2e_steps_mean"));
+    assert!(md.contains("tokens_per_step"));
+    assert!(md.contains("kv_slots_per_token"));
+    assert!(md.contains("scenario bursty_poisson"));
+    assert!(md.contains("20→20"), "iters are reported: {md}");
+}
+
+#[test]
+fn injected_regression_exits_nonzero() {
+    let dir = scratch("regression");
+    let base = write(&dir, "base.json", &bench_doc("aaa1111", 100.0, 20, 6.0));
+    // 3x slower wall time and a 50% TTFT regression.
+    let cur = write(&dir, "cur.json", &bench_doc("bbb2222", 300.0, 20, 9.0));
+    let out = run(&[base.to_str().unwrap(), cur.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(err.contains("BREACH"), "stderr: {err}");
+    assert!(stdout(&out).contains("✗ regression"));
+}
+
+#[test]
+fn loose_thresholds_unbreach_the_same_delta() {
+    let dir = scratch("thresholds");
+    let base = write(&dir, "base.json", &bench_doc("aaa1111", 100.0, 20, 6.0));
+    let cur = write(&dir, "cur.json", &bench_doc("bbb2222", 300.0, 20, 9.0));
+    let out = run(&[
+        base.to_str().unwrap(),
+        cur.to_str().unwrap(),
+        "--tol-time",
+        "5.0",
+        "--tol-metric",
+        "2.0",
+    ]);
+    assert_eq!(out.status.code(), Some(0));
+}
+
+#[test]
+fn malformed_document_exits_two() {
+    let dir = scratch("malformed");
+    let base = write(&dir, "base.json", &bench_doc("aaa1111", 100.0, 20, 6.0));
+    let bad = write(&dir, "bad.json", r#"{"meta": {}, "cases": []}"#);
+    let out = run(&[base.to_str().unwrap(), bad.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(2));
+    let missing = dir.join("nope.json");
+    let out = run(&[base.to_str().unwrap(), missing.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(2), "missing file is exit 2");
+}
+
+#[test]
+fn out_flag_writes_the_report_file() {
+    let dir = scratch("outfile");
+    let base = write(&dir, "base.json", &bench_doc("aaa1111", 100.0, 20, 6.0));
+    let cur = write(&dir, "cur.json", &bench_doc("bbb2222", 100.0, 20, 6.0));
+    let report = dir.join("report.md");
+    let out = run(&[
+        base.to_str().unwrap(),
+        cur.to_str().unwrap(),
+        "--out",
+        report.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(0));
+    let md = std::fs::read_to_string(&report).unwrap();
+    assert!(md.contains("# Bench compare"));
+}
+
+#[test]
+fn validate_accepts_bench_docs_and_trajectory_dirs() {
+    let dir = scratch("validate");
+    let doc = write(&dir, "BENCH_workloads.json", &bench_doc("aaa1111", 100.0, 20, 6.0));
+    let out = run(&["--validate", doc.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {:?}", out.stderr);
+
+    let traj = dir.join("BENCH_trajectory");
+    std::fs::create_dir_all(&traj).unwrap();
+    write(
+        &traj,
+        "0001_aaa1111.json",
+        r#"{"commit": "aaa1111", "quick": true,
+            "scenarios": {"bursty_poisson": {"ttft_steps_mean": 6.0}}}"#,
+    );
+    let out = run(&["--validate", traj.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {:?}", out.stderr);
+
+    // One malformed entry poisons the directory: exit 2, loudly.
+    write(&traj, "0002_bad.json", r#"{"quick": true, "scenarios": {}}"#);
+    let out = run(&["--validate", traj.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("commit"));
+}
+
+#[test]
+fn trajectory_mode_renders_one_column_per_entry() {
+    let dir = scratch("trajectory");
+    let traj = dir.join("BENCH_trajectory");
+    std::fs::create_dir_all(&traj).unwrap();
+    write(
+        &traj,
+        "0001_aaa1111.json",
+        r#"{"commit": "aaa1111", "quick": true,
+            "scenarios": {"bursty_poisson": {"ttft_steps_mean": 6.0, "tokens_per_step": 0.8}}}"#,
+    );
+    write(
+        &traj,
+        "0002_bbb2222.json",
+        r#"{"commit": "bbb2222", "quick": true,
+            "scenarios": {"bursty_poisson": {"ttft_steps_mean": 5.0, "tokens_per_step": 0.9},
+                           "cancel_storm": {"cancelled": 7.0}}}"#,
+    );
+    let out = run(&["--trajectory", traj.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {:?}", out.stderr);
+    let md = stdout(&out);
+    assert!(md.contains("aaa1111") && md.contains("bbb2222"));
+    assert!(md.contains("## bursty_poisson"));
+    assert!(md.contains("## cancel_storm"));
+}
+
+#[test]
+fn usage_errors_exit_two() {
+    let out = run(&["only-one-file.json"]);
+    assert_eq!(out.status.code(), Some(2));
+    let out = run(&["--no-such-flag"]);
+    assert_eq!(out.status.code(), Some(2));
+}

@@ -46,4 +46,36 @@ fn disabled_obs_path_does_not_allocate() {
         0,
         "disabled span/event path must not touch the heap"
     );
+
+    // The span profiler shares the same gate: enabling it opens the slow
+    // path (spans record, allocations allowed), and disabling it must
+    // return the call sites to the zero-alloc single-load fast path — an
+    // enable → disable round trip may not leave residue on the gate.
+    obs::profiler::enable();
+    assert!(obs::active(), "profiler holds the gate open");
+    {
+        let _span = obs::span("overhead_test", "profiled");
+    }
+    obs::profiler::disable();
+    assert!(!obs::active(), "gate closed again after profiler disable");
+    let profiled = obs::profiler::snapshot();
+    assert!(
+        profiled
+            .iter()
+            .any(|p| p.target == "overhead_test" && p.name == "profiled" && p.count == 1),
+        "enabled profiler observed the span"
+    );
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..10_000u64 {
+        let _span = obs::span("engine", "step");
+        obs::event("engine", "tick");
+        obs::event_with("engine", "detail", || format!("i={i}"));
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "disabled span/event path must stay heap-free after a profiler round trip"
+    );
 }

@@ -1,0 +1,138 @@
+//! Workload determinism suite (`docs/benchmarking.md`): the bench
+//! observatory is only trustworthy if its numbers are reproducible, so
+//! this file pins the three invariance axes down:
+//!
+//! 1. **Trace determinism** — same seed ⇒ byte-identical arrival trace.
+//! 2. **Run determinism** — same seed ⇒ identical scenario stats modulo
+//!    the wall clock, and identical terminal outputs.
+//! 3. **Observer/scheduler invariance** — greedy outputs are bit-identical
+//!    with the flight recorder on or off, and across prefill-planner
+//!    configs (`per_token()` vs chunked); only the step-denominated
+//!    metrics may move, never the tokens.
+//!
+//! Cancel-bearing scenarios are excluded from the planner axis on
+//! purpose: `cancel_after_tokens` fires on a stream position whose tick
+//! depends on planner cadence, so a mid-stream cancel may legitimately
+//! land mid-prefill under one planner and mid-decode under another.
+
+use flashmla_etap::coordinator::FinishedRequest;
+use flashmla_etap::prefill::PrefillConfig;
+use flashmla_etap::workload::{find, registry, run_setup, RunOptions, Scale};
+
+/// The bit-identity surface: (id, tokens, reason) per terminal request.
+fn identity(outputs: &[FinishedRequest]) -> Vec<(u64, Vec<i32>, String)> {
+    outputs
+        .iter()
+        .map(|f| (f.id, f.tokens.clone(), format!("{:?}", f.reason)))
+        .collect()
+}
+
+#[test]
+fn same_seed_builds_byte_identical_traces() {
+    for scenario in registry() {
+        let a = scenario.build(Scale::quick()).trace.to_json().dump();
+        let b = scenario.build(Scale::quick()).trace.to_json().dump();
+        assert_eq!(a, b, "{}: trace must be seed-deterministic", scenario.name);
+        // The two scales are genuinely different workloads.
+        let full = scenario.build(Scale::full()).trace.to_json().dump();
+        assert_ne!(a, full, "{}: scales must differ", scenario.name);
+    }
+}
+
+#[test]
+fn same_seed_runs_agree_on_stats_and_outputs() {
+    for scenario in registry() {
+        let setup = scenario.build(Scale::quick());
+        let a = run_setup(scenario.name, &setup, &RunOptions::default()).unwrap();
+        let b = run_setup(scenario.name, &setup, &RunOptions::default()).unwrap();
+        assert_eq!(
+            a.stats.deterministic_json().dump(),
+            b.stats.deterministic_json().dump(),
+            "{}: stats must agree modulo wall_us",
+            scenario.name
+        );
+        assert_eq!(
+            identity(&a.outputs),
+            identity(&b.outputs),
+            "{}: terminal outputs must be bit-identical",
+            scenario.name
+        );
+    }
+}
+
+#[test]
+fn flight_recorder_does_not_perturb_outputs() {
+    // cancel_storm included deliberately: observation must never change
+    // behaviour, even on the cancel-heavy path.
+    for scenario in registry() {
+        let setup = scenario.build(Scale::quick());
+        let off = run_setup(scenario.name, &setup, &RunOptions::default()).unwrap();
+        let on = run_setup(
+            scenario.name,
+            &setup,
+            &RunOptions {
+                flight_recorder_ticks: Some(64),
+                ..RunOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            identity(&off.outputs),
+            identity(&on.outputs),
+            "{}: flight recorder must be a pure observer",
+            scenario.name
+        );
+        assert_eq!(
+            off.stats.deterministic_json().dump(),
+            on.stats.deterministic_json().dump(),
+            "{}: recorder must not move any stat",
+            scenario.name
+        );
+    }
+}
+
+#[test]
+fn prefill_planner_config_does_not_change_greedy_outputs() {
+    // Cancel-free scenarios only (see module docs for why).
+    for name in ["bursty_poisson", "stop_token_mix", "long_context_ladder"] {
+        let scenario = find(name).unwrap();
+        let setup = scenario.build(Scale::quick());
+        let chunked = run_setup(name, &setup, &RunOptions::default()).unwrap();
+        let per_token = run_setup(
+            name,
+            &setup,
+            &RunOptions {
+                prefill: Some(PrefillConfig::per_token()),
+                ..RunOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            identity(&chunked.outputs),
+            identity(&per_token.outputs),
+            "{name}: greedy tokens must not depend on prefill chunking"
+        );
+
+        // Stats keep the same schema; only step-denominated metrics may
+        // move.  Token/terminal counts are planner-invariant.
+        let a = chunked.stats.to_json();
+        let b = per_token.stats.to_json();
+        let keys = |j: &flashmla_etap::util::json::Json| -> Vec<String> {
+            j.as_obj().unwrap().keys().cloned().collect()
+        };
+        assert_eq!(keys(&a), keys(&b), "{name}: stats schema is planner-invariant");
+        assert_eq!(chunked.stats.tokens, per_token.stats.tokens, "{name}");
+        assert_eq!(chunked.stats.finished, per_token.stats.finished, "{name}");
+        assert_eq!(chunked.stats.rejected, per_token.stats.rejected, "{name}");
+        assert!(chunked.stats.steps > 0 && per_token.stats.steps > 0);
+        // The per-token planner pays ≥ as many ticks of prefill: the
+        // step metrics are genuinely re-derived per config, not copied.
+        assert!(
+            per_token.stats.steps >= chunked.stats.steps,
+            "{name}: per-token planner cannot take fewer ticks \
+             ({} vs {})",
+            per_token.stats.steps,
+            chunked.stats.steps
+        );
+    }
+}
