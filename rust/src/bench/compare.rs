@@ -16,8 +16,14 @@
 //! samples ([`BenchResult::LOW_CONFIDENCE_ITERS`]; low-n rows are
 //! flagged ⚠ and never gate); derived metric columns gate on
 //! `Thresholds::metric_ratio` in the direction [`metric_direction`]
-//! infers from the name (TTFT/e2e/queue/`kv_slots_per_token`/`*_us`
-//! up = worse, throughput down = worse, anything else informational).
+//! infers from the name (TTFT/e2e/queue/`kv_slots_per_token`/`*_us`/
+//! `waste_fraction`/`*_pad_flops` up = worse, throughput and
+//! `effective_gflops*` down = worse, anything else informational).
+//!
+//! When either document embeds compute-ledger counters
+//! ([`ComputeSummary`]), the report grows a "Roofline (modeled, H20)"
+//! section placing each run's modeled FLOP/byte totals against
+//! [`crate::sim::roofline`] — informational, never gated.
 //!
 //! [`BenchResult::LOW_CONFIDENCE_ITERS`]: super::harness::BenchResult::LOW_CONFIDENCE_ITERS
 
@@ -63,12 +69,18 @@ pub enum Direction {
 /// (`bursty_poisson.ttft_steps_mean`) are stripped before matching.
 pub fn metric_direction(name: &str) -> Direction {
     let base = name.rsplit('.').next().unwrap_or(name);
-    if base.contains("per_s") || base.contains("throughput") || base.contains("tokens_per_step") {
+    if base.contains("per_s")
+        || base.contains("throughput")
+        || base.contains("tokens_per_step")
+        || base.starts_with("effective_gflops")
+    {
         Direction::LowerWorse
     } else if base.starts_with("ttft")
         || base.starts_with("e2e")
         || base.starts_with("queue")
         || base == "kv_slots_per_token"
+        || base == "waste_fraction"
+        || base.ends_with("_pad_flops")
         || base.ends_with("_us")
     {
         Direction::HigherWorse
@@ -92,6 +104,36 @@ impl CaseStats {
     }
 }
 
+/// Run-wide compute-ledger totals pulled from the document's embedded
+/// `serving_metrics` export (the `flashmla_compute_*` counter family
+/// from [`crate::obs::ledger`]).  Feeds the roofline cross-check section
+/// of the compare report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ComputeSummary {
+    pub useful_flops: f64,
+    pub bucket_pad_flops: f64,
+    pub chunk_refeed_flops: f64,
+    pub spec_rejected_flops: f64,
+    pub mask_pad_flops: f64,
+    /// Sum of the four modeled-byte counters (mask padding moves none).
+    pub bytes_total: f64,
+    /// `flashmla_busy_us_total` — the run's engine-busy wall time.
+    pub busy_us: f64,
+    /// `flashmla_compute_waste_fraction` gauge as exported.
+    pub waste_fraction: f64,
+}
+
+impl ComputeSummary {
+    /// Everything the modeled kernels dispatched, waste included.
+    pub fn issued_flops(&self) -> f64 {
+        self.useful_flops
+            + self.bucket_pad_flops
+            + self.chunk_refeed_flops
+            + self.spec_rejected_flops
+            + self.mask_pad_flops
+    }
+}
+
 /// Parsed view of one `BENCH_*.json` document.
 #[derive(Clone, Debug)]
 pub struct BenchDoc {
@@ -102,6 +144,10 @@ pub struct BenchDoc {
     pub quick: bool,
     pub cases: Vec<(String, CaseStats)>,
     pub metrics: Vec<(String, f64)>,
+    /// Compute-ledger totals, when the run exported `serving_metrics`
+    /// with the ledger counters present (`None` for older documents or
+    /// ledger-off runs — lenient by design, roofline rows degrade to ⚠).
+    pub compute: Option<ComputeSummary>,
 }
 
 /// Parse and schema-check one bench document.  Errors name the missing
@@ -159,6 +205,7 @@ pub fn parse_bench_doc(label: &str, doc: &Json) -> anyhow::Result<BenchDoc> {
             .ok_or_else(|| anyhow::anyhow!("{label}: metric `{k}` is not a number"))?;
         metrics.push((k.clone(), v));
     }
+    let compute = parse_compute_summary(doc);
     Ok(BenchDoc {
         label: label.to_string(),
         bench,
@@ -166,6 +213,37 @@ pub fn parse_bench_doc(label: &str, doc: &Json) -> anyhow::Result<BenchDoc> {
         quick,
         cases,
         metrics,
+        compute,
+    })
+}
+
+/// Pull the compute-ledger counter family out of the embedded
+/// `serving_metrics` snapshot.  Lenient on purpose: documents written
+/// before the ledger existed (or with `serving_metrics: null`) yield
+/// `None`, and individual missing siblings default to 0 — but the
+/// anchor counter `flashmla_compute_useful_flops_total` must be present
+/// for the summary to exist at all.
+fn parse_compute_summary(doc: &Json) -> Option<ComputeSummary> {
+    let sm = doc.get("serving_metrics");
+    let counters = sm.get("counters");
+    let counter = |name: &str| counters.get(name).as_f64().unwrap_or(0.0);
+    let useful_flops = counters.get("flashmla_compute_useful_flops_total").as_f64()?;
+    Some(ComputeSummary {
+        useful_flops,
+        bucket_pad_flops: counter("flashmla_compute_bucket_pad_flops_total"),
+        chunk_refeed_flops: counter("flashmla_compute_chunk_refeed_flops_total"),
+        spec_rejected_flops: counter("flashmla_compute_spec_rejected_flops_total"),
+        mask_pad_flops: counter("flashmla_compute_mask_pad_flops_total"),
+        bytes_total: counter("flashmla_compute_useful_bytes_total")
+            + counter("flashmla_compute_bucket_pad_bytes_total")
+            + counter("flashmla_compute_chunk_refeed_bytes_total")
+            + counter("flashmla_compute_spec_rejected_bytes_total"),
+        busy_us: counter("flashmla_busy_us_total"),
+        waste_fraction: sm
+            .get("gauges")
+            .get("flashmla_compute_waste_fraction")
+            .as_f64()
+            .unwrap_or(0.0),
     })
 }
 
@@ -382,6 +460,12 @@ pub fn compare(baseline: &BenchDoc, current: &BenchDoc, th: &Thresholds) -> Comp
         }
     }
 
+    // Roofline cross-check: only when at least one side carried ledger
+    // counters, so pre-ledger baselines keep rendering byte-identically.
+    if baseline.compute.is_some() || current.compute.is_some() {
+        push_roofline_section(&mut md, &mut warnings, baseline, current);
+    }
+
     if !breaches.is_empty() {
         md.push_str("\n## Breaches\n\n");
         for b in &breaches {
@@ -398,6 +482,77 @@ pub fn compare(baseline: &BenchDoc, current: &BenchDoc, th: &Thresholds) -> Comp
         markdown: md,
         breaches,
         warnings,
+    }
+}
+
+/// Render the "Roofline (modeled, H20)" section: each run's ledger
+/// totals placed against the analytic H20 roofline from
+/// [`crate::sim::roofline`].  Informational, never gates — the achieved
+/// column divides *modeled* FLOPs by *measured* busy time on whatever
+/// backend ran (the reference CPU backend in CI), so the
+/// percent-of-attainable figure tracks trend across commits, not
+/// silicon utilization.
+fn push_roofline_section(
+    md: &mut String,
+    warnings: &mut Vec<String>,
+    baseline: &BenchDoc,
+    current: &BenchDoc,
+) {
+    use crate::hardware::GpuSpec;
+    use crate::sim::roofline;
+
+    md.push_str("\n## Roofline (modeled, H20)\n\n");
+    md.push_str(
+        "Ledger-modeled FLOPs/bytes vs. the analytic H20 roofline.  \
+         Achieved TFLOPS = modeled issued FLOPs / measured engine-busy \
+         time, so on the reference backend \"of attainable\" tracks \
+         trend, not silicon.\n\n",
+    );
+    md.push_str(
+        "| run | intensity FLOP/B | regime | attainable TFLOPS | \
+         achieved TFLOPS | of attainable | waste |\n\
+         |---|---:|---|---:|---:|---:|---:|\n",
+    );
+    let h20 = GpuSpec::h20();
+    for (tag, side) in [("baseline", baseline), ("current", current)] {
+        match side.compute {
+            Some(c) if c.issued_flops() > 0.0 && c.bytes_total > 0.0 => {
+                let intensity = c.issued_flops() / c.bytes_total;
+                let point = roofline::attainable(&h20, intensity, 1.0, 1.0);
+                let achieved = if c.busy_us > 0.0 {
+                    c.issued_flops() / (c.busy_us * 1e6)
+                } else {
+                    0.0
+                };
+                let of_attainable = if achieved > 0.0 {
+                    format!("{:.2}%", 100.0 * roofline::efficiency_ratio(achieved, &point))
+                } else {
+                    "—".to_string()
+                };
+                let regime = if point.memory_bound { "memory" } else { "compute" };
+                md.push_str(&format!(
+                    "| {tag} | {} | {regime} | {} | {} | {of_attainable} | {:.1}% |\n",
+                    fmt(intensity),
+                    fmt(point.attainable_tflops),
+                    fmt(achieved),
+                    100.0 * c.waste_fraction,
+                ));
+            }
+            Some(_) => {
+                warnings.push(format!(
+                    "{tag} `{}`: compute ledger exported but empty; roofline row blank",
+                    side.label
+                ));
+                md.push_str(&format!("| {tag} | — | — | — | — | — | — |\n"));
+            }
+            None => {
+                warnings.push(format!(
+                    "{tag} `{}` has no compute-ledger counters; roofline row blank",
+                    side.label
+                ));
+                md.push_str(&format!("| {tag} | — | — | — | — | — | — |\n"));
+            }
+        }
     }
 }
 
@@ -602,6 +757,127 @@ mod tests {
         let r = compare(&base, &cur, &Thresholds::default());
         assert_eq!(r.exit_code(), 1);
         assert!(r.breaches.iter().any(|b| b.contains("tokens_per_step")));
+    }
+
+    /// Like `doc`, but with a populated `serving_metrics` snapshot
+    /// carrying the compute-ledger counter family (1 GFLOP useful,
+    /// 3 GFLOP waste → waste fraction 0.75) and scenario waste metrics.
+    fn doc_with_compute(label: &str) -> BenchDoc {
+        let text = format!(
+            r#"{{
+              "bench": "workloads",
+              "meta": {{"git_commit": "{label}", "quick": true, "config": {{}}}},
+              "cases": [
+                {{"name": "scenario bursty", "iters": 20, "mean_us": 100.0,
+                  "median_us": 100.0, "p99_us": 100.0, "stddev_us": 0.5, "min_us": 1.0}}
+              ],
+              "metrics": {{
+                "bursty_poisson.ttft_steps_mean": 6.0,
+                "bursty_poisson.tokens_per_step": 0.8,
+                "bursty_poisson.effective_gflops_per_tick": 0.05,
+                "bursty_poisson.waste_fraction": 0.75
+              }},
+              "serving_metrics": {{
+                "counters": {{
+                  "flashmla_busy_us_total": 2000.0,
+                  "flashmla_compute_useful_flops_total": 1e9,
+                  "flashmla_compute_bucket_pad_flops_total": 5e8,
+                  "flashmla_compute_chunk_refeed_flops_total": 0.0,
+                  "flashmla_compute_spec_rejected_flops_total": 0.0,
+                  "flashmla_compute_mask_pad_flops_total": 2.5e9,
+                  "flashmla_compute_useful_bytes_total": 4e6,
+                  "flashmla_compute_bucket_pad_bytes_total": 2e6,
+                  "flashmla_compute_chunk_refeed_bytes_total": 0.0,
+                  "flashmla_compute_spec_rejected_bytes_total": 0.0
+                }},
+                "gauges": {{"flashmla_compute_waste_fraction": 0.75}}
+              }}
+            }}"#
+        );
+        parse_bench_doc(label, &parse(&text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn waste_and_efficiency_directions() {
+        assert_eq!(
+            metric_direction("bursty_poisson.waste_fraction"),
+            Direction::HigherWorse
+        );
+        assert_eq!(
+            metric_direction("long_context_ladder.bucket_pad_flops"),
+            Direction::HigherWorse
+        );
+        assert_eq!(metric_direction("mask_pad_flops"), Direction::HigherWorse);
+        assert_eq!(
+            metric_direction("bursty_poisson.effective_gflops_per_tick"),
+            Direction::LowerWorse
+        );
+
+        // Waste doubling gates…
+        let base = doc_with_compute("aaa");
+        let mut cur = doc_with_compute("bbb");
+        for (k, v) in cur.metrics.iter_mut() {
+            if k.ends_with("waste_fraction") {
+                *v = 0.9; // 1.2x the baseline 0.75: past the 1.10 default
+            }
+        }
+        let r = compare(&base, &cur, &Thresholds::default());
+        assert_eq!(r.exit_code(), 1);
+        assert!(r.breaches.iter().any(|b| b.contains("waste_fraction")));
+
+        // …and so does an effective-throughput collapse.
+        let mut cur = doc_with_compute("ccc");
+        for (k, v) in cur.metrics.iter_mut() {
+            if k.ends_with("effective_gflops_per_tick") {
+                *v = 0.025; // halved
+            }
+        }
+        let r = compare(&base, &cur, &Thresholds::default());
+        assert_eq!(r.exit_code(), 1);
+        assert!(r
+            .breaches
+            .iter()
+            .any(|b| b.contains("effective_gflops_per_tick")));
+    }
+
+    #[test]
+    fn compute_summary_parses_and_roofline_renders() {
+        let d = doc_with_compute("aaa");
+        let c = d.compute.expect("ledger counters present → Some");
+        assert_eq!(c.useful_flops, 1e9);
+        assert_eq!(c.issued_flops(), 4e9);
+        assert_eq!(c.bytes_total, 6e6);
+        assert_eq!(c.busy_us, 2000.0);
+        assert_eq!(c.waste_fraction, 0.75);
+
+        let r = compare(&d, &doc_with_compute("bbb"), &Thresholds::default());
+        assert_eq!(r.exit_code(), 0, "roofline never gates: {:?}", r.breaches);
+        assert!(r.markdown.contains("## Roofline (modeled, H20)"));
+        // intensity 4e9/6e6 ≈ 667 F/B → compute-bound on H20 (ridge ≈ 37).
+        assert!(r.markdown.contains("| compute |"), "{}", r.markdown);
+        // achieved = 4e9 / (2000 µs · 1e6) = 2 TFLOPS.
+        assert!(r.markdown.contains("| 2.00 |"), "{}", r.markdown);
+        assert!(r.markdown.contains("75.0%"), "{}", r.markdown);
+    }
+
+    #[test]
+    fn docs_without_ledger_have_no_roofline_section() {
+        let base = doc("aaa", 100.0, 20, 6.0);
+        let cur = doc("bbb", 100.0, 20, 6.0);
+        assert!(base.compute.is_none(), "serving_metrics: null → None");
+        let r = compare(&base, &cur, &Thresholds::default());
+        assert!(!r.markdown.contains("Roofline"));
+
+        // Mixed: one side with ledger data gets a real row, the other a
+        // blank ⚠ row — never silent omission.
+        let r = compare(&base, &doc_with_compute("ccc"), &Thresholds::default());
+        assert!(r.markdown.contains("## Roofline (modeled, H20)"));
+        assert!(r.markdown.contains("| baseline | — |"), "{}", r.markdown);
+        assert!(r
+            .warnings
+            .iter()
+            .any(|w| w.contains("no compute-ledger counters")));
+        assert_eq!(r.exit_code(), 0, "missing ledger warns, never gates");
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod table;
 
 pub use compare::{
     compare, metric_direction, parse_bench_doc, parse_trajectory_entry, trajectory_report,
-    BenchDoc, CompareReport, Direction, Thresholds, TrajectoryEntry,
+    BenchDoc, CompareReport, ComputeSummary, Direction, Thresholds, TrajectoryEntry,
 };
 pub use harness::{BenchResult, Bencher};
 pub use table::Table;

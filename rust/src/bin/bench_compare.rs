@@ -10,6 +10,13 @@
 //!   never gates).
 //! * `bench_compare --validate <path>` — schema-check a `BENCH_*.json`
 //!   file or a trajectory directory; exit 2 if anything is malformed.
+//!   Trajectory entries with `commit: "pending"` get a stderr warning
+//!   (not a failure) so a PR can land the placeholder and stamp it
+//!   post-merge.
+//! * `bench_compare --stamp-commit <entry.json> [--commit <sha>]` —
+//!   replace a trajectory entry's `commit: "pending"` with the given
+//!   sha (default: `git rev-parse --short HEAD`), preserving the file's
+//!   formatting.  Refuses (exit 2) if the entry is already stamped.
 //!
 //! Exit codes: 0 clean, 1 threshold breach, 2 usage error or malformed
 //! input.  Missing/new columns are never dropped silently — they get ⚠
@@ -18,8 +25,8 @@
 use std::path::{Path, PathBuf};
 
 use flashmla_etap::bench::{
-    compare, parse_bench_doc, parse_trajectory_entry, trajectory_report, BenchDoc, Thresholds,
-    TrajectoryEntry,
+    compare, parse_bench_doc, parse_trajectory_entry, trajectory_report, BenchDoc, Bencher,
+    Thresholds, TrajectoryEntry,
 };
 use flashmla_etap::util::argparse::ArgParser;
 use flashmla_etap::util::json::parse_file;
@@ -36,12 +43,17 @@ fn main() {
     .opt("out", None, "write the Markdown report here (default: stdout)")
     .opt("trajectory", None, "render a trajectory directory instead of comparing")
     .opt("validate", None, "schema-check a bench file or trajectory directory")
+    .opt("stamp-commit", None, "replace a trajectory entry's pending commit")
+    .opt("commit", None, "sha for --stamp-commit (default: git HEAD)")
     .flag("fail-on-missing", "treat columns missing from current as breaches");
     let a = p.parse_or_exit();
     std::process::exit(run(&a));
 }
 
 fn run(a: &flashmla_etap::util::argparse::Args) -> i32 {
+    if let Some(path) = a.get("stamp-commit") {
+        return stamp_commit(Path::new(path), a.get("commit"));
+    }
     if let Some(path) = a.get("validate") {
         return validate(Path::new(path));
     }
@@ -154,6 +166,18 @@ fn trajectory(dir: &Path, out: Option<&str>) -> i32 {
 fn validate(path: &Path) -> i32 {
     let outcome: anyhow::Result<String> = if path.is_dir() {
         load_trajectory(path).map(|entries| {
+            // A pending commit is a workflow state, not a schema error:
+            // the entry lands with the PR and gets stamped post-merge
+            // (`--stamp-commit`).  Warn so it isn't forgotten.
+            for e in &entries {
+                if e.commit == "pending" {
+                    eprintln!(
+                        "bench_compare: WARNING: trajectory entry `{}` has commit \
+                         \"pending\" — stamp it with --stamp-commit",
+                        e.label
+                    );
+                }
+            }
             format!(
                 "{}: {} trajectory entr{} valid",
                 path.display(),
@@ -182,6 +206,84 @@ fn validate(path: &Path) -> i32 {
             2
         }
     }
+}
+
+/// `--stamp-commit`: rewrite a trajectory entry's `"commit": "pending"`
+/// to a real sha.  The replacement is textual (the one `"pending"`
+/// token after the `"commit"` key) so the checked-in file keeps its
+/// hand formatting; the entry is schema-checked first so we never stamp
+/// a malformed file.
+fn stamp_commit(path: &Path, sha: Option<&str>) -> i32 {
+    let entry = match parse_file(path).and_then(|j| parse_trajectory_entry(&label_of(path), &j)) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("bench_compare: {e:#}");
+            return 2;
+        }
+    };
+    if entry.commit != "pending" {
+        eprintln!(
+            "bench_compare: {}: commit is already `{}`, refusing to re-stamp",
+            path.display(),
+            entry.commit
+        );
+        return 2;
+    }
+    let sha = match sha {
+        Some(s) if !s.is_empty() => s.to_string(),
+        _ => {
+            let head = Bencher::git_commit();
+            if head == "unknown" {
+                eprintln!(
+                    "bench_compare: not in a git repo and no --commit given; cannot stamp"
+                );
+                return 2;
+            }
+            head
+        }
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bench_compare: cannot read {}: {e}", path.display());
+            return 2;
+        }
+    };
+    let Some(stamped) = replace_pending_commit(&text, &sha) else {
+        eprintln!(
+            "bench_compare: {}: could not locate `\"commit\": \"pending\"` textually",
+            path.display()
+        );
+        return 2;
+    };
+    if std::fs::write(path, &stamped).is_err() {
+        eprintln!("bench_compare: cannot write {}", path.display());
+        return 2;
+    }
+    println!("{}: stamped commit `{sha}`", path.display());
+    0
+}
+
+/// Replace the `"pending"` value of the top `"commit"` key in raw JSON
+/// text, tolerating arbitrary whitespace around the colon.  Returns
+/// `None` if the pattern isn't found (caller reports it).
+fn replace_pending_commit(text: &str, sha: &str) -> Option<String> {
+    let key_at = text.find("\"commit\"")?;
+    let rest = &text[key_at + "\"commit\"".len()..];
+    let after_ws = rest.trim_start();
+    let after_colon = after_ws.strip_prefix(':')?.trim_start();
+    if !after_colon.starts_with("\"pending\"") {
+        return None;
+    }
+    // Byte offset of the `"pending"` token within `text`.
+    let offset = text.len() - after_colon.len();
+    let mut out = String::with_capacity(text.len());
+    out.push_str(&text[..offset]);
+    out.push('"');
+    out.push_str(sha);
+    out.push('"');
+    out.push_str(&text[offset + "\"pending\"".len()..]);
+    Some(out)
 }
 
 fn emit(markdown: &str, out: Option<&str>) -> Result<(), ()> {

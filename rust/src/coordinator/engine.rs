@@ -989,12 +989,30 @@ impl Engine {
         // A spec tick returns per-position argmaxes (all slots are greedy
         // — drafting was suppressed otherwise); a plain tick keeps the
         // raw logits rows so each slot's request samples its own token.
+        // The compute ledger observes the dispatch through the
+        // `run_*_chunk` wrappers (shape-only, backend-agnostic); draft
+        // positions are recorded useful and reclassified below once
+        // verification outcomes are known.  All of it is inert behind one
+        // relaxed atomic load when no `LedgerGuard` is live.
+        obs::ledger::begin_tick();
         let exec_span = obs::span("engine", "execute");
         let (argmaxes, logits, new_cache) = if spec_tick {
-            let (am, cache) = runner.verify_chunk(&chunks, &live.cache, &start_pos)?;
+            let (am, cache) = crate::runtime::run_verify_chunk(
+                runner.as_ref(),
+                &chunks,
+                &live.cache,
+                &start_pos,
+                kv_bucket,
+            )?;
             (am, Vec::new(), cache)
         } else {
-            let (lg, cache) = runner.prefill_chunk(&chunks, &live.cache, &start_pos)?;
+            let (lg, cache) = crate::runtime::run_prefill_chunk(
+                runner.as_ref(),
+                &chunks,
+                &live.cache,
+                &start_pos,
+                kv_bucket,
+            )?;
             (Vec::new(), lg, cache)
         };
         drop(exec_span);
@@ -1100,6 +1118,17 @@ impl Engine {
         for (rid, drafted, accepted) in verified {
             tick_drafted += drafted;
             tick_accepted += accepted;
+            // Ledger reattribution: draft `d` was dispatched as chunk
+            // token `d + 1` (after the slot's real next token), attending
+            // rows `0 ..= start + d + 1`.  Rejected positions move from
+            // `useful` to `spec_rejected`; exact because per-token
+            // quantities are integer-valued f64s (see `obs::ledger`).
+            if obs::ledger::enabled() {
+                let start = start_pos[by_id[&rid]].max(0) as usize;
+                for d in accepted..drafted {
+                    obs::ledger::reclassify_rejected(start + d + 2, kv_bucket);
+                }
+            }
             self.metrics.on_verify(drafted, accepted);
             if let Some(t) = self.timelines.get_mut(&rid) {
                 t.spec_drafted += drafted;
@@ -1117,6 +1146,11 @@ impl Engine {
         drop(advance_span);
         #[cfg(debug_assertions)]
         self.debug_check_kv_occupancy();
+
+        // Fold the tick's compute attribution into the run totals (zeros
+        // when no ledger guard is live).
+        let tick_compute = obs::ledger::take_tick();
+        self.metrics.on_compute(&tick_compute);
 
         let active = self.batcher.active().len();
         self.metrics.on_step(
@@ -1188,6 +1222,12 @@ impl Engine {
                 spec_suppressed,
                 recomposed: needs_rebuild,
                 events: self.events.len() - events_before,
+                useful_flops: tick_compute.useful_flops,
+                bucket_pad_flops: tick_compute.bucket_pad_flops,
+                chunk_refeed_flops: tick_compute.chunk_refeed_flops,
+                spec_rejected_flops: tick_compute.spec_rejected_flops,
+                mask_pad_flops: tick_compute.mask_pad_flops,
+                bytes_moved: tick_compute.total_bytes(),
             };
             self.recorder.as_mut().expect("checked above").record(rec);
         }

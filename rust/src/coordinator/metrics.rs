@@ -9,7 +9,7 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-use crate::obs::{MetricsRegistry, Summary};
+use crate::obs::{ComputeTally, MetricsRegistry, Summary};
 use crate::prefixcache::PrefixStats;
 use crate::util::json::Json;
 use crate::util::stats::{LatencyHistogram, Welford};
@@ -117,6 +117,10 @@ pub struct ServingMetrics {
     /// same ≥ 1-generated-token filter) — the denominator of
     /// [`kv_slots_per_token`](Self::kv_slots_per_token).
     pub context_tokens: u64,
+    /// Accumulated compute-ledger attribution ([`crate::obs::ledger`]):
+    /// modeled FLOPs/bytes per waste category across every tick.  All
+    /// zero unless a `LedgerGuard` was live during the run.
+    pub compute: ComputeTally,
     elapsed: Duration,
 }
 
@@ -163,6 +167,13 @@ impl ServingMetrics {
     /// `steps_waited` engine ticks after submission.
     pub fn on_request_done_steps(&mut self, steps_waited: u64) {
         self.e2e_steps.push(steps_waited as f64);
+    }
+
+    /// Fold one tick's compute-ledger attribution into the run totals.
+    /// The engine calls this every tick; the tally is all-zero when no
+    /// ledger guard is live, so the disabled cost is nine f64 adds.
+    pub fn on_compute(&mut self, tick: &ComputeTally) {
+        self.compute.add(tick);
     }
 
     /// Record one speculative verification: `drafted` tokens were fed,
@@ -242,6 +253,7 @@ impl ServingMetrics {
         self.spec_suppressed_ticks += other.spec_suppressed_ticks;
         self.kv_slots_committed += other.kv_slots_committed;
         self.context_tokens += other.context_tokens;
+        self.compute.add(&other.compute);
         self.elapsed += other.elapsed;
     }
 
@@ -449,7 +461,60 @@ impl ServingMetrics {
             "Engine-busy wall time (µs).",
             self.elapsed.as_secs_f64() * 1e6,
         );
+        // Compute-ledger counters: modeled FLOPs/bytes per waste
+        // category (`obs::ledger`); f64 but integer-valued, sum under
+        // `merge` like every other counter.
+        r.counter_f64(
+            "flashmla_compute_useful_flops_total",
+            "Modeled FLOPs over real KV rows of live tokens.",
+            self.compute.useful_flops,
+        );
+        r.counter_f64(
+            "flashmla_compute_bucket_pad_flops_total",
+            "Modeled FLOPs over KV-bucket rows past kv_len (incl. scratch).",
+            self.compute.bucket_pad_flops,
+        );
+        r.counter_f64(
+            "flashmla_compute_chunk_refeed_flops_total",
+            "Modeled FLOPs of fallback wavefront re-feeds.",
+            self.compute.chunk_refeed_flops,
+        );
+        r.counter_f64(
+            "flashmla_compute_spec_rejected_flops_total",
+            "Modeled FLOPs of verified-but-rejected draft positions.",
+            self.compute.spec_rejected_flops,
+        );
+        r.counter_f64(
+            "flashmla_compute_mask_pad_flops_total",
+            "Modeled M-dimension WGMMA tile-padding FLOPs.",
+            self.compute.mask_pad_flops,
+        );
+        r.counter_f64(
+            "flashmla_compute_useful_bytes_total",
+            "Modeled HBM bytes moved for useful work.",
+            self.compute.useful_bytes,
+        );
+        r.counter_f64(
+            "flashmla_compute_bucket_pad_bytes_total",
+            "Modeled HBM bytes moved for bucket padding and scratch.",
+            self.compute.bucket_pad_bytes,
+        );
+        r.counter_f64(
+            "flashmla_compute_chunk_refeed_bytes_total",
+            "Modeled HBM bytes moved by fallback re-feeds.",
+            self.compute.chunk_refeed_bytes,
+        );
+        r.counter_f64(
+            "flashmla_compute_spec_rejected_bytes_total",
+            "Modeled HBM bytes moved for rejected draft positions.",
+            self.compute.spec_rejected_bytes,
+        );
         // Gauges: instantaneous values and rates derived from the totals.
+        r.gauge(
+            "flashmla_compute_waste_fraction",
+            "Wasted share of issued modeled FLOPs, in [0, 1).",
+            self.compute.waste_fraction(),
+        );
         r.gauge(
             "flashmla_prefix_cached_blocks",
             "Blocks currently pinned by the prefix tree.",
@@ -636,6 +701,19 @@ impl ServingMetrics {
                 self.spec_disabled_sampling, self.spec_suppressed_ticks,
             ));
         }
+        if self.compute.issued_flops() > 0.0 {
+            s.push_str(&format!(
+                " | compute {:.2}/{:.2} GFLOP useful/issued (waste {:.0}%: \
+                 pad {:.2} + refeed {:.2} + spec {:.2} + mask {:.2})",
+                self.compute.useful_flops / 1e9,
+                self.compute.issued_flops() / 1e9,
+                self.compute.waste_fraction() * 100.0,
+                self.compute.bucket_pad_flops / 1e9,
+                self.compute.chunk_refeed_flops / 1e9,
+                self.compute.spec_rejected_flops / 1e9,
+                self.compute.mask_pad_flops / 1e9,
+            ));
+        }
         s
     }
 }
@@ -761,6 +839,23 @@ mod tests {
         b.prefix_cached_blocks = 7;
         b.kv_slots_committed = 5;
         b.context_tokens = 6;
+        a.on_compute(&ComputeTally {
+            useful_flops: 100.0,
+            bucket_pad_flops: 50.0,
+            mask_pad_flops: 25.0,
+            useful_bytes: 1000.0,
+            bucket_pad_bytes: 500.0,
+            ..ComputeTally::ZERO
+        });
+        b.on_compute(&ComputeTally {
+            useful_flops: 40.0,
+            chunk_refeed_flops: 10.0,
+            spec_rejected_flops: 5.0,
+            useful_bytes: 400.0,
+            chunk_refeed_bytes: 100.0,
+            spec_rejected_bytes: 50.0,
+            ..ComputeTally::ZERO
+        });
 
         let mut merged = ServingMetrics::new();
         merged.merge(&a);
@@ -849,6 +944,16 @@ mod tests {
                 < 1e-12
         );
         assert!((gauge("flashmla_occupancy_mean") - merged.occupancy.mean()).abs() < 1e-12);
+        // Compute totals add, and the waste gauge recomputes from the
+        // merged totals: (issued − useful) / issued = (230 − 140) / 230.
+        assert_eq!(merged.compute.useful_flops, 140.0);
+        assert_eq!(merged.compute.issued_flops(), 230.0);
+        assert_eq!(merged.compute.total_bytes(), 2050.0);
+        assert!(
+            (gauge("flashmla_compute_waste_fraction") - merged.compute.waste_fraction()).abs()
+                < 1e-12
+        );
+        assert!((merged.compute.waste_fraction() - 90.0 / 230.0).abs() < 1e-12);
 
         // Merging an empty stream changes nothing.
         let snapshot = merged.report();
@@ -893,6 +998,42 @@ mod tests {
                 .get("2")
                 .as_usize(),
             Some(1)
+        );
+    }
+
+    #[test]
+    fn compute_counters_export_and_surface_in_report() {
+        let mut m = ServingMetrics::new();
+        assert!(!m.report().contains("compute"), "quiet with no ledger data");
+        m.on_compute(&ComputeTally {
+            useful_flops: 1e9,
+            bucket_pad_flops: 2e9,
+            mask_pad_flops: 1e9,
+            useful_bytes: 1e6,
+            bucket_pad_bytes: 2e6,
+            ..ComputeTally::ZERO
+        });
+        let s = m.report();
+        assert!(s.contains("compute 1.00/4.00 GFLOP useful/issued"), "report: {s}");
+        assert!(s.contains("waste 75%"), "report: {s}");
+        let snap =
+            crate::util::json::parse(&m.snapshot_json().dump()).expect("snapshot parses");
+        assert_eq!(
+            snap.get("counters")
+                .get("flashmla_compute_useful_flops_total")
+                .as_f64(),
+            Some(1e9)
+        );
+        assert_eq!(
+            snap.get("gauges")
+                .get("flashmla_compute_waste_fraction")
+                .as_f64(),
+            Some(0.75)
+        );
+        let prom = m.to_prometheus();
+        assert!(
+            prom.contains("# TYPE flashmla_compute_useful_flops_total counter"),
+            "prometheus: {prom}"
         );
     }
 

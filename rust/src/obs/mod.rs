@@ -20,16 +20,22 @@
 //!   into, with Prometheus-text and JSON snapshot exporters.
 //! * [`timeline`] — per-request tick-stamped lifecycle records,
 //!   queryable through `RequestHandle`.
+//! * [`ledger`] — the per-tick compute ledger: attributes every modeled
+//!   FLOP/byte of the engine hot path to useful vs. waste categories
+//!   with the same atom math as `sim/gemm.rs`, gated by the shared
+//!   one-atomic-load `obs` gate.
 //!
 //! The tick-clock/wall-clock contract, span taxonomy, and exporter
 //! schemas are documented in `docs/observability.md`.
 
+pub mod ledger;
 pub mod profiler;
 pub mod recorder;
 pub mod registry;
 pub mod timeline;
 pub mod trace;
 
+pub use ledger::{ComputeTally, LedgerGuard};
 pub use profiler::SpanProfile;
 pub use recorder::{FlightRecorder, TickRecord};
 pub use registry::{MetricEntry, MetricValue, MetricsRegistry, Summary};

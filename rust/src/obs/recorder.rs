@@ -69,6 +69,15 @@ pub struct TickRecord {
     pub recomposed: bool,
     /// Step events emitted this tick.
     pub events: usize,
+    /// Compute-ledger attribution for this tick ([`crate::obs::ledger`]):
+    /// modeled FLOPs by category and total modeled HBM bytes.  All zero
+    /// when no `LedgerGuard` was live.
+    pub useful_flops: f64,
+    pub bucket_pad_flops: f64,
+    pub chunk_refeed_flops: f64,
+    pub spec_rejected_flops: f64,
+    pub mask_pad_flops: f64,
+    pub bytes_moved: f64,
 }
 
 impl TickRecord {
@@ -97,6 +106,12 @@ impl TickRecord {
             ("spec_suppressed", Json::Bool(self.spec_suppressed)),
             ("recomposed", Json::Bool(self.recomposed)),
             ("events", Json::num(self.events as f64)),
+            ("useful_flops", Json::num(self.useful_flops)),
+            ("bucket_pad_flops", Json::num(self.bucket_pad_flops)),
+            ("chunk_refeed_flops", Json::num(self.chunk_refeed_flops)),
+            ("spec_rejected_flops", Json::num(self.spec_rejected_flops)),
+            ("mask_pad_flops", Json::num(self.mask_pad_flops)),
+            ("bytes_moved", Json::num(self.bytes_moved)),
         ])
     }
 }
@@ -199,6 +214,12 @@ mod tests {
             spec_suppressed: false,
             recomposed: tick == 1,
             events: 1,
+            useful_flops: 1_114_112.0,
+            bucket_pad_flops: 2_228_224.0,
+            chunk_refeed_flops: 0.0,
+            spec_rejected_flops: 0.0,
+            mask_pad_flops: 3_342_336.0,
+            bytes_moved: 73_728.0,
         }
     }
 
@@ -229,6 +250,8 @@ mod tests {
         assert_eq!(ticks[0].get("recomposed").as_bool(), Some(true));
         assert_eq!(ticks[1].get("recomposed").as_bool(), Some(false));
         assert_eq!(ticks[0].get("kv_total_blocks").as_usize(), Some(64));
+        assert_eq!(ticks[0].get("useful_flops").as_f64(), Some(1_114_112.0));
+        assert_eq!(ticks[0].get("bytes_moved").as_f64(), Some(73_728.0));
     }
 
     #[test]

@@ -39,6 +39,13 @@ const PROFILER: u32 = 2;
 /// flips every thread onto the slow path; threads without a sink then
 /// no-op after the thread-local check).
 const COLLECTOR_UNIT: u32 = 4;
+/// Each live compute-ledger guard ([`crate::obs::ledger::LedgerGuard`])
+/// adds this to the gate.  A refcount (not a bit) so concurrent runs in
+/// parallel test threads can each hold the ledger open without one run's
+/// drop disabling recording mid-run in another — that would make per-run
+/// compute totals nondeterministic.  Sitting at bit 16, the collector
+/// refcount below would need >16384 simultaneous collectors to collide.
+const LEDGER_UNIT: u32 = 1 << 16;
 /// Sentinel: the gate has not consulted `FLASHMLA_LOG` yet.
 const UNINIT: u32 = u32::MAX;
 
@@ -61,13 +68,19 @@ fn init_active() -> u32 {
 
 /// Is any tracing consumer (collector or trace-level narrative) live?
 /// This is the whole disabled-path cost: one relaxed atomic load.
+///
+/// Masks off the compute-ledger refcount (bits ≥ 16): a live
+/// [`crate::obs::ledger::LedgerGuard`] must not open the span/event slow
+/// path — the ledger consumes shapes at the runtime boundary, never
+/// trace records, and ledger-on runs keep the zero-alloc tracing fast
+/// path (`rust/tests/obs_overhead.rs` asserts this too).
 #[inline]
 pub fn active() -> bool {
     let v = ACTIVE.load(Ordering::Relaxed);
     if v == UNINIT {
         return init_active() != 0;
     }
-    v != 0
+    v & (LEDGER_UNIT - 1) != 0
 }
 
 /// Force the stderr narrative on or off programmatically (tests, CLI
@@ -102,6 +115,28 @@ pub(crate) fn set_profiling(on: bool) {
 pub(crate) fn profiling() -> bool {
     let v = ACTIVE.load(Ordering::Relaxed);
     v != UNINIT && v & PROFILER != 0
+}
+
+/// Take a compute-ledger reference on the gate (see
+/// [`crate::obs::ledger::LedgerGuard`], the public entry point).
+pub(crate) fn ledger_add() {
+    active(); // force init so the arithmetic sees a real value
+    ACTIVE.fetch_add(LEDGER_UNIT, Ordering::Relaxed);
+}
+
+/// Release a compute-ledger reference taken by [`ledger_add`].
+pub(crate) fn ledger_sub() {
+    ACTIVE.fetch_sub(LEDGER_UNIT, Ordering::Relaxed);
+}
+
+/// Is at least one compute-ledger guard live?  One relaxed atomic load —
+/// the whole disabled-path cost, mirroring [`active`].  Everything below
+/// `LEDGER_UNIT` is narrative/profiler bits plus the collector refcount,
+/// so `v >= LEDGER_UNIT` means "ledger refcount nonzero".
+#[inline]
+pub(crate) fn ledger_on() -> bool {
+    let v = ACTIVE.load(Ordering::Relaxed);
+    v != UNINIT && v >= LEDGER_UNIT
 }
 
 thread_local! {

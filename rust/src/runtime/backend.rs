@@ -118,11 +118,103 @@ pub trait StepRunner {
         verify_chunk_fallback(self, chunks, cache, start_pos)
     }
 
+    /// Does this backend execute multi-token chunks natively (one pass
+    /// over each slot's tokens), or via the per-token wavefront fallbacks
+    /// above (re-feeding short slots while the longest chunk drains)?
+    ///
+    /// Purely informational — execution is identical either way under the
+    /// write-purity contract.  The compute ledger
+    /// ([`crate::obs::ledger`]) uses it to attribute fallback re-feed
+    /// dispatches to the `chunk_refeed` waste category.  Backends that
+    /// override both [`prefill_chunk`](Self::prefill_chunk) and
+    /// [`verify_chunk`](Self::verify_chunk) with single-pass
+    /// implementations return `true`.
+    fn native_chunking(&self) -> bool {
+        false
+    }
+
     /// Vocabulary size (logits row width).
     fn vocab(&self) -> usize;
 
     /// Human-readable runner name (for logs).
     fn name(&self) -> &str;
+}
+
+/// Ledger-instrumented wrapper over [`StepRunner::step`]: records each
+/// slot as one useful token attending `lengths[b] + 1` rows (the row
+/// being written included) over the dispatched `kv_bucket`, then
+/// delegates.  Costs one relaxed atomic load when the ledger is off.
+///
+/// `step` has no padded-slot signal (the engine encodes padding as
+/// token 0 / length 0, indistinguishable from a real first token), so
+/// every slot is attributed as useful; the engine's chunked hot path
+/// goes through [`run_prefill_chunk`]/[`run_verify_chunk`], which do
+/// see padding.
+pub fn run_step(
+    runner: &dyn StepRunner,
+    tokens: &[i32],
+    cache: &xla::Literal,
+    lengths: &[i32],
+    kv_bucket: usize,
+) -> anyhow::Result<(Vec<f32>, xla::Literal)> {
+    if crate::obs::ledger::enabled() {
+        use crate::obs::ledger::{record_token, TokenKind};
+        for &len in lengths {
+            let rows = len.max(0) as usize + 1;
+            record_token(TokenKind::Useful, rows, kv_bucket);
+        }
+    }
+    runner.step(tokens, cache, lengths)
+}
+
+/// Walk one chunked call's shapes into the compute ledger.  Shared by
+/// [`run_prefill_chunk`] and [`run_verify_chunk`] — the two entry points
+/// have identical dispatch structure.  Inner fallback calls
+/// (`prefill_chunk_fallback` looping `step`, `verify_chunk_fallback`
+/// looping `prefill_chunk`) invoke trait methods directly, never these
+/// wrappers, so nothing is double-counted.
+fn record_chunk_shapes(chunks: &[Vec<i32>], start_pos: &[i32], kv_bucket: usize, native: bool) {
+    if !crate::obs::ledger::enabled() {
+        return;
+    }
+    let max_k = chunks.iter().map(|c| c.len().max(1)).max().unwrap_or(1);
+    for (slot, chunk) in chunks.iter().enumerate() {
+        let start = start_pos.get(slot).copied().unwrap_or(0).max(0) as usize;
+        crate::obs::ledger::record_slot(chunk.len(), start, max_k, kv_bucket, native);
+    }
+}
+
+/// Ledger-instrumented wrapper over [`StepRunner::prefill_chunk`]: the
+/// engine hot path calls this instead of the trait method so every
+/// backend — reference, fallback, PJRT — is costed from shape
+/// information alone, without touching kernel internals.  `kv_bucket` is
+/// the KV bucket the engine dispatched (rows every query logically
+/// covers).  One relaxed atomic load when the ledger is off.
+pub fn run_prefill_chunk(
+    runner: &dyn StepRunner,
+    chunks: &[Vec<i32>],
+    cache: &xla::Literal,
+    start_pos: &[i32],
+    kv_bucket: usize,
+) -> anyhow::Result<(Vec<f32>, xla::Literal)> {
+    record_chunk_shapes(chunks, start_pos, kv_bucket, runner.native_chunking());
+    runner.prefill_chunk(chunks, cache, start_pos)
+}
+
+/// Ledger-instrumented wrapper over [`StepRunner::verify_chunk`]; see
+/// [`run_prefill_chunk`].  Draft positions are recorded as useful here —
+/// the call boundary can't know verification outcomes — and the engine
+/// reclassifies rejected positions via
+/// [`crate::obs::ledger::reclassify_rejected`] once it has them.
+pub fn run_verify_chunk(
+    runner: &dyn StepRunner,
+    chunks: &[Vec<i32>],
+    cache: &xla::Literal,
+    start_pos: &[i32],
+    kv_bucket: usize,
+) -> anyhow::Result<(Vec<Vec<i32>>, xla::Literal)> {
+    record_chunk_shapes(chunks, start_pos, kv_bucket, runner.native_chunking());
+    runner.verify_chunk(chunks, cache, start_pos)
 }
 
 /// The per-token multi-token-step fallback (the default body of

@@ -18,7 +18,10 @@ pub mod reference;
 
 pub use artifact::{ArtifactMeta, Dtype, Manifest, ModelMeta, TensorSpec};
 pub use attention::AttentionRunner;
-pub use backend::{prefill_chunk_fallback, verify_chunk_fallback, StepRunner};
+pub use backend::{
+    prefill_chunk_fallback, run_prefill_chunk, run_step, run_verify_chunk, verify_chunk_fallback,
+    StepRunner,
+};
 pub use client::Runtime;
 pub use decode::DecodeRunner;
 pub use reference::{ReferenceModel, ReferenceModelConfig, ReferenceRunner};

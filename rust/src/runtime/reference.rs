@@ -362,6 +362,13 @@ impl StepRunner for ReferenceRunner {
         Ok((out, self.pack_cache(&host)?))
     }
 
+    /// Both chunk entry points above are single-pass: no wavefront
+    /// re-feeds, so the compute ledger records no `chunk_refeed` waste
+    /// for this backend.
+    fn native_chunking(&self) -> bool {
+        true
+    }
+
     fn vocab(&self) -> usize {
         self.model.cfg.vocab
     }

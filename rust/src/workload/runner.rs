@@ -78,6 +78,12 @@ pub struct ScenarioStats {
     pub prefix_hit_tokens: u64,
     pub spec_drafted: u64,
     pub spec_accepted: u64,
+    /// Useful modeled GFLOPs per engine tick ([`crate::obs::ledger`] at
+    /// the paper kernel shape) — the "effective compute" the scenario
+    /// actually delivered; deterministic.
+    pub effective_gflops_per_tick: f64,
+    /// Wasted share of issued modeled FLOPs, in `[0, 1)`; deterministic.
+    pub waste_fraction: f64,
     /// Wall-clock run time — the one non-deterministic field.
     pub wall_us: f64,
 }
@@ -107,6 +113,11 @@ impl ScenarioStats {
             ),
             ("spec_drafted", Json::num(self.spec_drafted as f64)),
             ("spec_accepted", Json::num(self.spec_accepted as f64)),
+            (
+                "effective_gflops_per_tick",
+                Json::num(self.effective_gflops_per_tick),
+            ),
+            ("waste_fraction", Json::num(self.waste_fraction)),
             ("wall_us", Json::num(self.wall_us)),
         ])
     }
@@ -137,6 +148,11 @@ impl ScenarioStats {
             (p("finished"), self.finished as f64),
             (p("cancelled"), self.cancelled as f64),
             (p("rejected"), self.rejected as f64),
+            (
+                p("effective_gflops_per_tick"),
+                self.effective_gflops_per_tick,
+            ),
+            (p("waste_fraction"), self.waste_fraction),
         ]
     }
 }
@@ -165,6 +181,11 @@ pub fn run_setup(
     if let Some(n) = opts.flight_recorder_ticks {
         cfg.flight_recorder_ticks = n;
     }
+    // Keep the compute ledger live for the whole run: every scenario's
+    // stats carry deterministic FLOP/byte attribution.  A pure observer —
+    // tokens and plans are bit-identical with the guard absent (asserted
+    // in `rust/tests/workload_determinism.rs`).
+    let _ledger = crate::obs::ledger::LedgerGuard::new();
     let mut engine = Engine::reference(setup.model.clone(), cfg)?;
 
     let t0 = Instant::now();
@@ -282,6 +303,12 @@ pub fn run_setup(
         prefix_hit_tokens: m.prefix.hit_tokens,
         spec_drafted: m.spec_drafted,
         spec_accepted: m.spec_accepted,
+        effective_gflops_per_tick: if m.steps == 0 {
+            0.0
+        } else {
+            m.compute.useful_flops / m.steps as f64 / 1e9
+        },
+        waste_fraction: m.compute.waste_fraction(),
         wall_us,
     };
     Ok(ScenarioOutcome {
@@ -313,6 +340,16 @@ mod tests {
         // Exact-KV convention: strictly below one slot per token.
         assert!(out.stats.kv_slots_per_token < 1.0);
         assert!(out.stats.kv_slots_per_token > 0.0);
+        // Compute ledger: a real run delivers useful FLOPs every tick,
+        // wastes some (bucket + mask padding at minimum), never all.
+        assert!(out.stats.effective_gflops_per_tick > 0.0);
+        assert!(out.stats.waste_fraction > 0.0);
+        assert!(out.stats.waste_fraction < 1.0);
+        assert!(out.metrics.compute.useful_flops > 0.0);
+        assert_eq!(
+            out.metrics.compute.chunk_refeed_flops, 0.0,
+            "reference backend chunks natively — no wavefront re-feeds"
+        );
     }
 
     #[test]
@@ -363,5 +400,11 @@ mod tests {
         let det = out.stats.deterministic_json();
         assert_eq!(det.get("wall_us").as_f64(), Some(0.0));
         assert_eq!(det.get("tokens").as_f64(), Some(out.stats.tokens as f64));
+        assert_eq!(
+            det.get("waste_fraction").as_f64(),
+            Some(out.stats.waste_fraction),
+            "ledger stats are part of the deterministic surface"
+        );
+        assert!(det.get("effective_gflops_per_tick").as_f64().unwrap() > 0.0);
     }
 }

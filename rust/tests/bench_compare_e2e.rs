@@ -162,6 +162,61 @@ fn validate_accepts_bench_docs_and_trajectory_dirs() {
 }
 
 #[test]
+fn validate_warns_on_pending_commit_without_failing() {
+    let dir = scratch("pending");
+    let traj = dir.join("BENCH_trajectory");
+    std::fs::create_dir_all(&traj).unwrap();
+    write(
+        &traj,
+        "0001_pending.json",
+        r#"{"commit": "pending", "quick": true,
+            "scenarios": {"bursty_poisson": {"ttft_steps_mean": 6.0}}}"#,
+    );
+    let out = run(&["--validate", traj.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(0), "pending is a warning, not a failure");
+    let err = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(err.contains("WARNING"), "stderr: {err}");
+    assert!(err.contains("pending") && err.contains("stamp-commit"));
+}
+
+#[test]
+fn stamp_commit_replaces_pending_and_preserves_formatting() {
+    let dir = scratch("stamp");
+    let entry = write(
+        &dir,
+        "0001_pending.json",
+        "{\n  \"commit\": \"pending\",\n  \"quick\": true,\n  \"scenarios\": {\n    \"bursty_poisson\": {\"ttft_steps_mean\": 6.0}\n  }\n}\n",
+    );
+    let out = run(&[
+        "--stamp-commit",
+        entry.to_str().unwrap(),
+        "--commit",
+        "cafe123",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {:?}", out.stderr);
+    let text = std::fs::read_to_string(&entry).unwrap();
+    assert!(
+        text.starts_with("{\n  \"commit\": \"cafe123\",\n  \"quick\": true,"),
+        "formatting preserved: {text}"
+    );
+
+    // Re-stamping an already-stamped entry refuses with exit 2.
+    let out = run(&[
+        "--stamp-commit",
+        entry.to_str().unwrap(),
+        "--commit",
+        "beef456",
+    ]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("already"));
+
+    // A malformed entry never gets stamped.
+    let bad = write(&dir, "bad.json", r#"{"quick": true}"#);
+    let out = run(&["--stamp-commit", bad.to_str().unwrap(), "--commit", "c0ffee1"]);
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
 fn trajectory_mode_renders_one_column_per_entry() {
     let dir = scratch("trajectory");
     let traj = dir.join("BENCH_trajectory");

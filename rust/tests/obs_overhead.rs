@@ -78,4 +78,45 @@ fn disabled_obs_path_does_not_allocate() {
         0,
         "disabled span/event path must stay heap-free after a profiler round trip"
     );
+
+    // The compute ledger shares the gate word (as a refcount above the
+    // tracing bits).  Off: record calls are one relaxed load, zero
+    // allocation.  This lives in the same test fn because the counting
+    // allocator is process-global — a parallel test would pollute the
+    // measurement windows.
+    assert!(!obs::ledger::enabled(), "no guard yet: ledger off");
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..10_000usize {
+        obs::ledger::record_token(obs::ledger::TokenKind::Useful, 1 + i % 32, 64);
+        obs::ledger::record_slot(4, i % 8, 4, 64, false);
+        obs::ledger::reclassify_rejected(1 + i % 32, 64);
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(after - before, 0, "ledger-off recording must not allocate");
+
+    // On: the guard must open ONLY the ledger (the tracing gate stays
+    // closed — a ledger run must not start formatting event details),
+    // and recording into the thread-local tally is still allocation-free.
+    {
+        let _ledger = obs::LedgerGuard::new();
+        assert!(obs::ledger::enabled(), "guard holds the ledger open");
+        assert!(
+            !obs::active(),
+            "a ledger guard must not open the span/event slow path"
+        );
+        obs::ledger::begin_tick();
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for i in 0..10_000usize {
+            obs::ledger::record_token(obs::ledger::TokenKind::Useful, 1 + i % 32, 64);
+            obs::ledger::record_slot(4, i % 8, 4, 64, false);
+            let _span = obs::span("engine", "step");
+            obs::event_with("engine", "detail", || format!("i={i}"));
+        }
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert_eq!(after - before, 0, "ledger-on recording must not allocate");
+        let tally = obs::ledger::take_tick();
+        assert!(tally.useful_flops > 0.0, "recording landed in the tally");
+    }
+    assert!(!obs::ledger::enabled(), "guard drop closes the ledger");
+    assert!(!obs::active(), "gate fully closed after the ledger run");
 }

@@ -15,9 +15,10 @@
 //! depends on planner cadence, so a mid-stream cancel may legitimately
 //! land mid-prefill under one planner and mid-decode under another.
 
-use flashmla_etap::coordinator::FinishedRequest;
+use flashmla_etap::coordinator::{Engine, FinishedRequest, GenerationRequest};
+use flashmla_etap::obs::LedgerGuard;
 use flashmla_etap::prefill::PrefillConfig;
-use flashmla_etap::workload::{find, registry, run_setup, RunOptions, Scale};
+use flashmla_etap::workload::{find, registry, run_setup, RunOptions, Scale, ScenarioSetup};
 
 /// The bit-identity surface: (id, tokens, reason) per terminal request.
 fn identity(outputs: &[FinishedRequest]) -> Vec<(u64, Vec<i32>, String)> {
@@ -135,4 +136,120 @@ fn prefill_planner_config_does_not_change_greedy_outputs() {
             chunked.stats.steps
         );
     }
+}
+
+/// Scheduler invariance of the compute ledger: *useful* FLOPs count
+/// exactly the (request, position) pairs the model must process, so the
+/// per-token, chunked-prefill, and speculative pipelines — which differ
+/// wildly in padding, refeed, and rejected-draft waste — must report
+/// bit-identical `useful` totals.  Speculation's extra work lands in
+/// `spec_rejected` (reclassified at verification), never in `useful`.
+///
+/// Greedy, cancel-free scenarios with the prefix cache off: cache
+/// adoption timing is planner-dependent and legitimately changes which
+/// positions are recomputed, which is waste-shape, not usefulness.
+#[test]
+fn useful_flops_are_scheduler_invariant() {
+    for name in ["bursty_poisson", "long_context_ladder"] {
+        let scenario = find(name).unwrap();
+        let mut setup = scenario.build(Scale::quick());
+        setup.engine.prefix_cache = false;
+        let chunked = run_setup(name, &setup, &RunOptions::default()).unwrap();
+        let per_token = run_setup(
+            name,
+            &setup,
+            &RunOptions {
+                prefill: Some(PrefillConfig::per_token()),
+                ..RunOptions::default()
+            },
+        )
+        .unwrap();
+        let mut spec_setup = setup.clone();
+        spec_setup.engine.spec.enabled = true;
+        let spec = run_setup(name, &spec_setup, &RunOptions::default()).unwrap();
+
+        // Same greedy tokens first — usefulness is only comparable when
+        // the three pipelines did the same logical work.
+        assert_eq!(identity(&chunked.outputs), identity(&per_token.outputs), "{name}");
+        assert_eq!(identity(&chunked.outputs), identity(&spec.outputs), "{name}");
+
+        let useful = |o: &flashmla_etap::workload::ScenarioOutcome| {
+            (
+                o.metrics.compute.useful_flops.to_bits(),
+                o.metrics.compute.useful_bytes.to_bits(),
+            )
+        };
+        assert_eq!(
+            useful(&chunked),
+            useful(&per_token),
+            "{name}: useful FLOPs/bytes must not depend on prefill planning"
+        );
+        assert_eq!(
+            useful(&chunked),
+            useful(&spec),
+            "{name}: rejected drafts must reclassify out of useful"
+        );
+
+        // The waste categories are where the pipelines genuinely differ.
+        assert!(chunked.metrics.compute.useful_flops > 0.0, "{name}");
+        assert!(chunked.metrics.compute.bucket_pad_flops > 0.0, "{name}");
+        assert!(chunked.metrics.compute.mask_pad_flops > 0.0, "{name}");
+        // spec_rejected tracks the drafted-minus-accepted counter
+        // exactly: every fed-but-unaccepted draft reclassifies a
+        // positive amount, and nothing else ever lands there.
+        let rejected_tokens = spec.metrics.spec_drafted - spec.metrics.spec_accepted;
+        assert_eq!(
+            rejected_tokens > 0,
+            spec.metrics.compute.spec_rejected_flops > 0.0,
+            "{name}: spec_rejected FLOPs must mirror the rejected-draft count"
+        );
+        assert_eq!(
+            chunked.metrics.compute.spec_rejected_flops, 0.0,
+            "{name}: no speculation ⇒ no rejected-draft waste"
+        );
+    }
+}
+
+/// Drive one engine tick-by-tick, capturing plan summaries and terminal
+/// outputs — the ledger-invariance surface (`run_setup` always holds a
+/// guard, so this bypasses it to get a genuinely ledger-off run).
+fn drive_engine(setup: &ScenarioSetup) -> (Vec<String>, Vec<(u64, Vec<i32>, String)>) {
+    let mut engine = Engine::reference(setup.model.clone(), setup.engine.clone()).unwrap();
+    for r in &setup.trace.requests {
+        let mut req = GenerationRequest::new(r.prompt.clone(), r.max_new_tokens);
+        if !r.stop_tokens.is_empty() {
+            req = req.stop_tokens(&r.stop_tokens);
+        }
+        if let Some(params) = r.sampling {
+            req = req.sampling(params);
+        }
+        engine.submit(req);
+    }
+    let mut plans = Vec::new();
+    let mut outputs = Vec::new();
+    while engine.has_work() {
+        engine.step().unwrap();
+        plans.push(engine.last_plan_summary());
+        outputs.extend(engine.take_finished());
+    }
+    outputs.extend(engine.take_finished());
+    outputs.sort_by_key(|f| f.id);
+    (plans, identity(&outputs))
+}
+
+/// The compute ledger must be a pure observer: with the guard held the
+/// engine's per-tick plans AND tokens are bit-identical to a ledger-off
+/// run.  (Plans are the stronger claim — identical tokens could survive
+/// a scheduling perturbation; identical plan strings cannot.)
+#[test]
+fn compute_ledger_does_not_perturb_plans_or_tokens() {
+    let scenario = find("bursty_poisson").unwrap();
+    let setup = scenario.build(Scale::quick());
+    let off = drive_engine(&setup);
+    let on = {
+        let _ledger = LedgerGuard::new();
+        drive_engine(&setup)
+    };
+    assert_eq!(off.0, on.0, "per-tick plan summaries must be bit-identical");
+    assert_eq!(off.1, on.1, "terminal outputs must be bit-identical");
 }
