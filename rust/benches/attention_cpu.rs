@@ -1,60 +1,121 @@
-//! Bench: the pure-Rust attention kernels (the coordinator's fallback path
-//! and the numerics substrate).  Compares naive vs online vs ETAP order
-//! and block-size sensitivity — the CPU mirror of the paper's L1 tuning.
+//! Bench: CPU attention kernel sweep — the scalar baselines vs the
+//! blocked 8-lane fast path from `flashmla_etap::kernels`.
 //!
-//!     cargo bench --bench attention_cpu
+//! Sweeps the paper geometry (16 heads, d=576, dv=512) up the context
+//! ladder and reports GFLOP/s per variant, where the FLOP numerator is
+//! the compute ledger's `logical_flops` attribution — the same model
+//! the roofline section of `bench_compare` uses, so measured and
+//! modeled throughput land on one axis.  Emits
+//! `BENCH_attention_cpu.json` with an `attention_gflops_<variant>_n<N>`
+//! metric per cell plus `attention_gflops_measured` (the fast path at
+//! the largest context) for the modeled-vs-measured cross-report.
+//!
+//! Quick mode stops at n=2048 so CI can gate `blocked >= naive` there;
+//! full mode climbs to the paper's 64K.
+//!
+//!     FLASHMLA_BENCH_QUICK=1 cargo bench --bench attention_cpu
 
 use flashmla_etap::attention::{etap_f32, naive_f32, online_f32, AttnShape};
 use flashmla_etap::bench::Bencher;
+use flashmla_etap::kernels::attn::{blocked_f32, blocked_parallel_f32, naive8_f32};
+use flashmla_etap::obs::ledger;
 use flashmla_etap::util::rng::Rng;
 
-fn main() {
+/// KV rows per tile — big enough to amortize the tile loop, small
+/// enough that a tile of latent rows stays cache-resident.
+const BLOCK_KV: usize = 512;
+
+/// Record one cell: GFLOP/s from the ledger-modeled FLOP count over the
+/// measured wall time.
+fn report(b: &mut Bencher, n: usize, variant: &str, mean_us: f64) -> f64 {
+    let gflops = ledger::modeled_gflops_at(n, mean_us);
+    b.record_metric(&format!("attention_gflops_{variant}_n{n}"), gflops);
+    println!("  {variant:<17} {gflops:9.2} GFLOP/s  (mean {mean_us:.0} µs)");
+    gflops
+}
+
+fn main() -> anyhow::Result<()> {
     let mut b = Bencher::new();
-
-    // Paper geometry at a CPU-feasible context.
-    let shape = AttnShape::paper(1024);
-    let mut rng = Rng::new(3);
-    let q = rng.normal_vec(shape.q_len());
-    let c = rng.normal_vec(shape.cache_len());
+    let contexts: Vec<usize> = if Bencher::quick_mode() {
+        vec![512, 1024, 2048]
+    } else {
+        vec![512, 2048, 8192, 32768, 65536]
+    };
+    let largest = *contexts.last().unwrap();
     let scale = 1.0 / (192.0f32).sqrt();
-
-    println!("paper geometry (16 heads, d=576, dv=512, n=1024):");
-    let naive = b.bench("naive_f32", || naive_f32(&shape, &q, &c, scale)).mean_us;
-    let online = b
-        .bench("online_f32 (Bc=64)", || online_f32(&shape, &q, &c, scale, 64))
-        .mean_us;
-    let etap = b
-        .bench("etap_f32   (Bc=64)", || etap_f32(&shape, &q, &c, scale, 64))
-        .mean_us;
-    println!(
-        "  online/naive {:.2}x, etap/naive {:.2}x (CPU has no WGMMA: parity expected, \
-         the GPU-side gap lives in the simulator)\n",
-        naive / online,
-        naive / etap
+    b.record_config("shape", "paper (h=16, d=576, dv=512)");
+    b.record_config("block_kv", BLOCK_KV.to_string());
+    b.record_config("threads", "auto");
+    b.record_config(
+        "contexts",
+        contexts
+            .iter()
+            .map(|n| n.to_string())
+            .collect::<Vec<_>>()
+            .join(","),
     );
 
-    println!("block-size sweep (etap_f32, n=2048):");
-    let shape2 = AttnShape::paper(2048);
-    let q2 = rng.normal_vec(shape2.q_len());
-    let c2 = rng.normal_vec(shape2.cache_len());
-    for bc in [32usize, 64, 128, 256] {
-        b.bench(&format!("etap_f32 Bc={bc}"), || {
-            etap_f32(&shape2, &q2, &c2, scale, bc)
-        });
+    let mut rng = Rng::new(3);
+    let mut naive_at_largest = 0.0f64;
+    let mut fast_at_largest = 0.0f64;
+    for &n in &contexts {
+        let shape = AttnShape::paper(n);
+        let q = rng.normal_vec(shape.q_len());
+        let c = rng.normal_vec(shape.cache_len());
+        println!("context n={n}:");
+        let m = b
+            .bench(&format!("naive n={n}"), || naive_f32(&shape, &q, &c, scale))
+            .mean_us;
+        let g_naive = report(&mut b, n, "naive", m);
+        let m = b
+            .bench(&format!("online n={n}"), || {
+                online_f32(&shape, &q, &c, scale, BLOCK_KV)
+            })
+            .mean_us;
+        report(&mut b, n, "online", m);
+        let m = b
+            .bench(&format!("etap n={n}"), || {
+                etap_f32(&shape, &q, &c, scale, BLOCK_KV)
+            })
+            .mean_us;
+        report(&mut b, n, "etap", m);
+        let m = b
+            .bench(&format!("naive8 n={n}"), || naive8_f32(&shape, &q, &c, scale))
+            .mean_us;
+        report(&mut b, n, "naive8", m);
+        let m = b
+            .bench(&format!("blocked n={n}"), || {
+                blocked_f32(&shape, &q, &c, scale, BLOCK_KV)
+            })
+            .mean_us;
+        report(&mut b, n, "blocked", m);
+        let m = b
+            .bench(&format!("blocked_parallel n={n}"), || {
+                blocked_parallel_f32(&shape, &q, &c, scale, BLOCK_KV, 0)
+            })
+            .mean_us;
+        let g_fast = report(&mut b, n, "blocked_parallel", m);
+        println!("  blocked_parallel/naive: {:.2}x", g_fast / g_naive);
+        if n == largest {
+            naive_at_largest = g_naive;
+            fast_at_largest = g_fast;
+        }
     }
 
-    println!("\ncontext scaling (etap_f32, Bc=64):");
-    for n in [256usize, 512, 1024, 2048] {
-        let s = AttnShape::paper(n);
-        let qq = rng.normal_vec(s.q_len());
-        let cc = rng.normal_vec(s.cache_len());
-        let r = b.bench(&format!("etap_f32 n={n}"), || {
-            etap_f32(&s, &qq, &cc, scale, 64)
-        });
-        let flops = 2.0 * 16.0 * n as f64 * (576.0 + 512.0);
-        println!(
-            "    → {:.2} GFLOP/s effective",
-            flops / r.mean_us / 1e3
-        );
-    }
+    // Cross-report anchors: the fast path's measured GFLOP/s at the
+    // largest context (the roofline's `meas/modeled` numerator) and the
+    // headline speedup the acceptance gate reads.
+    b.record_metric("attention_gflops_measured", fast_at_largest);
+    b.record_metric(
+        &format!("attention_speedup_blocked_parallel_vs_naive_n{largest}"),
+        fast_at_largest / naive_at_largest,
+    );
+    println!(
+        "\nblocked_parallel vs naive at n={largest}: {:.2}x",
+        fast_at_largest / naive_at_largest
+    );
+
+    let path = b.emit_json("attention_cpu")?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
 }

@@ -11,6 +11,11 @@
 //!   these are what `bench_compare` gates on;
 //! * the scenario's declared config snapshot, name-prefixed.
 //!
+//! After the scenario loop it times one paper-shape call of the
+//! blocked-parallel CPU kernel and records `attention_gflops_measured`,
+//! so the document carries measured kernel throughput alongside the
+//! ledger's modeled counters (the roofline's `meas/modeled` column).
+//!
 //! Emits `BENCH_workloads.json` (to `$FLASHMLA_BENCH_OUT` or `.`).  When
 //! `$FLASHMLA_TRAJECTORY_OUT` names a file, also writes a trajectory
 //! entry there — the small per-commit summary checked in under
@@ -21,10 +26,13 @@
 
 use std::collections::BTreeMap;
 
+use flashmla_etap::attention::AttnShape;
 use flashmla_etap::bench::Bencher;
 use flashmla_etap::coordinator::ServingMetrics;
-use flashmla_etap::obs::profiler;
+use flashmla_etap::kernels::attn::blocked_parallel_f32;
+use flashmla_etap::obs::{ledger, profiler};
 use flashmla_etap::util::json::Json;
+use flashmla_etap::util::rng::Rng;
 use flashmla_etap::workload::{registry, run_setup, RunOptions, Scale, ScenarioStats};
 
 /// Scenario stats as a flat metric object for the trajectory entry:
@@ -70,6 +78,27 @@ fn main() -> anyhow::Result<()> {
     }
     profiler::disable();
     b.record_serving_metrics(&merged);
+
+    // Measured-vs-modeled cross-report: time one paper-shape call of
+    // the blocked-parallel fast path so this document carries a
+    // *measured* kernel GFLOP/s next to the ledger's modeled counters —
+    // `bench_compare`'s roofline section renders the ratio side by
+    // side.  Median-derived to resist box jitter.
+    let n = if scale.quick { 512 } else { 1024 };
+    let shape = AttnShape::paper(n);
+    let mut rng = Rng::new(11);
+    let q = rng.normal_vec(shape.q_len());
+    let cache = rng.normal_vec(shape.cache_len());
+    let kscale = 1.0 / (192.0f32).sqrt();
+    let median_us = b
+        .bench(&format!("attention blocked_parallel n={n}"), || {
+            blocked_parallel_f32(&shape, &q, &cache, kscale, 128, 0)
+        })
+        .median_us;
+    b.record_metric(
+        "attention_gflops_measured",
+        ledger::modeled_gflops_at(n, median_us),
+    );
 
     let path = b.emit_json("workloads")?;
     eprintln!("wrote {}", path.display());

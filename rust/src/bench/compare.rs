@@ -17,8 +17,10 @@
 //! flagged ⚠ and never gate); derived metric columns gate on
 //! `Thresholds::metric_ratio` in the direction [`metric_direction`]
 //! infers from the name (TTFT/e2e/queue/`kv_slots_per_token`/`*_us`/
-//! `waste_fraction`/`*_pad_flops` up = worse, throughput and
-//! `effective_gflops*` down = worse, anything else informational).
+//! `waste_fraction`/`*_pad_flops` up = worse, throughput,
+//! `effective_gflops*` and `attention_gflops*` down = worse, anything
+//! else informational).  The wall-clock-derived `attention_gflops*`
+//! family gates on the generous `time_ratio` instead, like case times.
 //!
 //! When either document embeds compute-ledger counters
 //! ([`ComputeSummary`]), the report grows a "Roofline (modeled, H20)"
@@ -56,6 +58,16 @@ impl Default for Thresholds {
     }
 }
 
+/// True for metrics whose value is wall-clock-derived (the CPU kernel
+/// GFLOP/s family from `benches/attention_cpu.rs` and the workloads
+/// bench): these jitter with the box like case times do, so they gate
+/// on the generous [`Thresholds::time_ratio`] instead of the tight
+/// step-count `metric_ratio`.
+fn wall_clock_metric(name: &str) -> bool {
+    let base = name.rsplit('.').next().unwrap_or(name);
+    base.starts_with("attention_gflops")
+}
+
 /// Which direction of change is a regression for a metric column.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Direction {
@@ -73,6 +85,7 @@ pub fn metric_direction(name: &str) -> Direction {
         || base.contains("throughput")
         || base.contains("tokens_per_step")
         || base.starts_with("effective_gflops")
+        || base.starts_with("attention_gflops")
     {
         Direction::LowerWorse
     } else if base.starts_with("ttft")
@@ -414,13 +427,18 @@ pub fn compare(baseline: &BenchDoc, current: &BenchDoc, th: &Thresholds) -> Comp
                     Direction::LowerWorse if c != 0.0 => Some(b / c),
                     _ => None,
                 };
+                let limit = if wall_clock_metric(&name) {
+                    th.time_ratio
+                } else {
+                    th.metric_ratio
+                };
                 let status = match worse_ratio {
-                    Some(r) if r > th.metric_ratio => {
+                    Some(r) if r > limit => {
                         let msg = format!(
                             "metric `{name}`: {} → {} worsens beyond {:.2}x threshold",
                             fmt(b),
                             fmt(c),
-                            th.metric_ratio
+                            limit
                         );
                         breaches.push(msg);
                         "✗ regression".to_string()
@@ -492,6 +510,13 @@ pub fn compare(baseline: &BenchDoc, current: &BenchDoc, th: &Thresholds) -> Comp
 /// backend ran (the reference CPU backend in CI), so the
 /// percent-of-attainable figure tracks trend across commits, not
 /// silicon utilization.
+///
+/// When a document also carries an `attention_gflops_measured` metric
+/// (emitted by the CPU-kernel sweep in `benches/attention_cpu.rs` and
+/// the workloads bench), a `meas/modeled` column reports how the
+/// *measured* kernel throughput compares to the run's modeled GFLOP/s —
+/// the modeled-vs-measured cross-report.  Blank ("—") for documents
+/// predating the kernel subsystem; ⚠-only, never gating.
 fn push_roofline_section(
     md: &mut String,
     warnings: &mut Vec<String>,
@@ -510,11 +535,18 @@ fn push_roofline_section(
     );
     md.push_str(
         "| run | intensity FLOP/B | regime | attainable TFLOPS | \
-         achieved TFLOPS | of attainable | waste |\n\
-         |---|---:|---|---:|---:|---:|---:|\n",
+         achieved TFLOPS | of attainable | meas/modeled | waste |\n\
+         |---|---:|---|---:|---:|---:|---:|---:|\n",
     );
     let h20 = GpuSpec::h20();
     for (tag, side) in [("baseline", baseline), ("current", current)] {
+        // Measured CPU-kernel GFLOP/s, when the run carried the sweep's
+        // cross-report metric (scenario-prefixed or bare).
+        let measured = side
+            .metrics
+            .iter()
+            .find(|(n, _)| n.rsplit('.').next().unwrap_or(n) == "attention_gflops_measured")
+            .map(|(_, v)| *v);
         match side.compute {
             Some(c) if c.issued_flops() > 0.0 && c.bytes_total > 0.0 => {
                 let intensity = c.issued_flops() / c.bytes_total;
@@ -529,9 +561,17 @@ fn push_roofline_section(
                 } else {
                     "—".to_string()
                 };
+                // measured GFLOP/s over modeled GFLOP/s (achieved TFLOPS
+                // × 1000) — how the real kernel compares to the ledger's
+                // busy-time attribution on the same box.
+                let meas_ratio = match measured {
+                    Some(m) if achieved > 0.0 => format!("{:.2}x", m / (achieved * 1e3)),
+                    _ => "—".to_string(),
+                };
                 let regime = if point.memory_bound { "memory" } else { "compute" };
                 md.push_str(&format!(
-                    "| {tag} | {} | {regime} | {} | {} | {of_attainable} | {:.1}% |\n",
+                    "| {tag} | {} | {regime} | {} | {} | {of_attainable} | {meas_ratio} \
+                     | {:.1}% |\n",
                     fmt(intensity),
                     fmt(point.attainable_tflops),
                     fmt(achieved),
@@ -543,14 +583,14 @@ fn push_roofline_section(
                     "{tag} `{}`: compute ledger exported but empty; roofline row blank",
                     side.label
                 ));
-                md.push_str(&format!("| {tag} | — | — | — | — | — | — |\n"));
+                md.push_str(&format!("| {tag} | — | — | — | — | — | — | — |\n"));
             }
             None => {
                 warnings.push(format!(
                     "{tag} `{}` has no compute-ledger counters; roofline row blank",
                     side.label
                 ));
-                md.push_str(&format!("| {tag} | — | — | — | — | — | — |\n"));
+                md.push_str(&format!("| {tag} | — | — | — | — | — | — | — |\n"));
             }
         }
     }
@@ -858,6 +898,57 @@ mod tests {
         // achieved = 4e9 / (2000 µs · 1e6) = 2 TFLOPS.
         assert!(r.markdown.contains("| 2.00 |"), "{}", r.markdown);
         assert!(r.markdown.contains("75.0%"), "{}", r.markdown);
+    }
+
+    #[test]
+    fn attention_gflops_gates_on_time_ratio() {
+        assert_eq!(
+            metric_direction("attention_gflops_blocked_n2048"),
+            Direction::LowerWorse
+        );
+        assert_eq!(
+            metric_direction("attention_gflops_measured"),
+            Direction::LowerWorse
+        );
+        let base_doc = |v: f64| {
+            let mut d = doc("aaa", 100.0, 20, 6.0);
+            d.metrics.push(("attention_gflops_blocked_n2048".into(), v));
+            d
+        };
+        // A 1.5x drop is past metric_ratio (1.10) but inside the
+        // wall-clock time_ratio (2.0): flagged nowhere, never gates.
+        let r = compare(&base_doc(12.0), &base_doc(8.0), &Thresholds::default());
+        assert_eq!(r.exit_code(), 0, "breaches: {:?}", r.breaches);
+        // A 3x collapse is past even the generous threshold: gates.
+        let r = compare(&base_doc(12.0), &base_doc(4.0), &Thresholds::default());
+        assert_eq!(r.exit_code(), 1);
+        assert!(r
+            .breaches
+            .iter()
+            .any(|b| b.contains("attention_gflops_blocked_n2048")));
+    }
+
+    #[test]
+    fn roofline_measured_vs_modeled_column() {
+        // With the cross-report metric present: achieved is 2 TFLOPS
+        // (= 2000 modeled GFLOP/s), measured 1000 GFLOP/s → 0.50x.
+        let mut with_measured = doc_with_compute("aaa");
+        with_measured
+            .metrics
+            .push(("attention_gflops_measured".into(), 1000.0));
+        let plain = doc_with_compute("bbb");
+        let r = compare(&with_measured, &plain, &Thresholds::default());
+        assert_eq!(r.exit_code(), 0, "cross-report never gates: {:?}", r.breaches);
+        assert!(r.markdown.contains("meas/modeled"), "{}", r.markdown);
+        assert!(r.markdown.contains("0.50x"), "{}", r.markdown);
+        // The side without the metric renders a blank cell, not a drop —
+        // lenient for documents predating the kernel subsystem.
+        let cur_row = r
+            .markdown
+            .lines()
+            .find(|l| l.starts_with("| current |") && l.contains("compute"))
+            .expect("current roofline row");
+        assert!(cur_row.contains("| — |"), "{cur_row}");
     }
 
     #[test]

@@ -5,6 +5,7 @@ use std::path::Path;
 
 use crate::coordinator::{ClusterConfig, EngineConfig};
 use crate::hardware::GpuSpec;
+use crate::kernels::KernelMode;
 use crate::prefill::{FairnessPolicy, SpecPriority};
 use crate::util::json::Json;
 use crate::util::{json, toml};
@@ -126,6 +127,17 @@ impl Config {
             c.engine.spec.adaptive = b;
         }
         c.engine.spec.validate()?;
+        let kn = e.get("kernels");
+        if let Some(s) = kn.get("mode").as_str() {
+            c.engine.kernels.mode = KernelMode::parse(s)?;
+        }
+        if let Some(n) = kn.get("threads").as_usize() {
+            c.engine.kernels.threads = n;
+        }
+        if let Some(n) = kn.get("block_kv").as_usize() {
+            c.engine.kernels.block_kv = n;
+        }
+        c.engine.kernels.validate()?;
         let cl = t.get("cluster");
         if let Some(n) = cl.get("gpus").as_usize() {
             c.cluster.gpus = n;
@@ -281,6 +293,35 @@ adaptive = true
         assert_eq!(c.engine.spec.max_draft, 6);
         assert!(c.engine.spec.adaptive);
         assert_eq!(c.engine.prefill.spec_priority, SpecPriority::Prefill);
+    }
+
+    #[test]
+    fn kernels_section_parsed() {
+        let d = Config::default().engine.kernels;
+        assert_eq!(d.mode, KernelMode::Naive, "seed path by default");
+        assert_eq!(d.threads, 0);
+        assert_eq!(d.block_kv, 64);
+        let doc = r#"
+[engine.kernels]
+mode = "blocked_parallel"
+threads = 4
+block_kv = 128
+"#;
+        let tree = crate::util::toml::parse(doc).unwrap();
+        let c = Config::from_tree(&tree).unwrap();
+        assert_eq!(c.engine.kernels.mode, KernelMode::BlockedParallel);
+        assert_eq!(c.engine.kernels.threads, 4);
+        assert_eq!(c.engine.kernels.block_kv, 128);
+    }
+
+    #[test]
+    fn kernels_rejects_bad_values() {
+        let bad = crate::util::toml::parse("[engine.kernels]\nmode = \"fast\"").unwrap();
+        assert!(Config::from_tree(&bad).is_err());
+        let bad = crate::util::toml::parse("[engine.kernels]\nblock_kv = 0").unwrap();
+        assert!(Config::from_tree(&bad).is_err());
+        let bad = crate::util::toml::parse("[engine.kernels]\nthreads = 100").unwrap();
+        assert!(Config::from_tree(&bad).is_err());
     }
 
     #[test]

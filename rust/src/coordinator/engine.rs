@@ -103,6 +103,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::kernels::{KernelConfig, KernelDispatch};
 use crate::kvcache::{CacheConfig, PagedLatentCache, SeqId};
 use crate::log_info;
 use crate::obs::{self, FlightRecorder, RequestTimeline, TickRecord};
@@ -142,6 +143,10 @@ pub struct EngineConfig {
     pub prefill: PrefillConfig,
     /// Speculative-decoding knobs (`[engine.spec]`); disabled by default.
     pub spec: SpecConfig,
+    /// Fast-path kernel selection (`[engine.kernels]`); the seed-order
+    /// `naive` dispatch by default.  Applies to the reference backend;
+    /// PJRT executes compiled artifacts and ignores it.
+    pub kernels: KernelConfig,
     /// Flight-recorder ring capacity in ticks; 0 (default) disables the
     /// recorder entirely — the hot path then never touches it.
     pub flight_recorder_ticks: usize,
@@ -158,6 +163,7 @@ impl Default for EngineConfig {
             prefix_cache: true,
             prefill: PrefillConfig::default(),
             spec: SpecConfig::default(),
+            kernels: KernelConfig::default(),
             flight_recorder_ticks: 0,
         }
     }
@@ -246,6 +252,9 @@ pub struct Engine {
     /// Flight recorder (None = disabled): one [`TickRecord`] per executed
     /// tick, capacity-bounded; see `docs/observability.md`.
     recorder: Option<FlightRecorder>,
+    /// Fast-path kernel selector handed to reference-backend runners;
+    /// owns the slot-parallelism pool in `blocked_parallel` mode.
+    kernels: Arc<KernelDispatch>,
     pub sync_cost: Welford,
 }
 
@@ -323,6 +332,7 @@ impl Engine {
             .then(|| PrefixTree::new(cfg.block_size, None));
         cfg.prefill.validate()?;
         cfg.spec.validate()?;
+        let kernels = KernelDispatch::new(cfg.kernels.clone())?;
         // Multi-token scheduling only pays on backends that execute chunks
         // natively.  On PJRT the fallback would emulate a chunk with k
         // step dispatches, so a co-resident *decoding* slot's inter-token
@@ -392,6 +402,7 @@ impl Engine {
             kv_written: HashMap::new(),
             recorder: (cfg.flight_recorder_ticks > 0)
                 .then(|| FlightRecorder::new(cfg.flight_recorder_ticks)),
+            kernels,
             sync_cost: Welford::new(),
             cfg,
         })
@@ -1351,9 +1362,11 @@ impl Engine {
                     batch_bucket,
                     kv_bucket,
                 )?),
-                EngineBackend::Reference(model) => {
-                    Box::new(model.runner(batch_bucket, kv_bucket))
-                }
+                EngineBackend::Reference(model) => Box::new(model.runner_with(
+                    batch_bucket,
+                    kv_bucket,
+                    Arc::clone(&self.kernels),
+                )),
             };
             log_info!(
                 "engine",

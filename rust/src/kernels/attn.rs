@@ -1,0 +1,358 @@
+//! Blocked, cache-tiled, 8-lane-vectorized f32 decode attention — the
+//! CPU fast-path family behind [`super::KernelDispatch`].
+//!
+//! Three variants share one arithmetic skeleton and are **bitwise
+//! identical** to each other by construction (the family parity that
+//! `rust/tests/kernel_parity.rs` enforces):
+//!
+//! * [`naive8_f32`] — per-head, query-major, full-softmax order exactly
+//!   mirroring [`crate::attention::naive_f32`], with the sequential
+//!   scalar dot replaced by the fixed-order [`dot8`].  This is the
+//!   family's readable baseline and its parity anchor.
+//! * [`blocked_f32`] — KV-major ETAP blocking lifted from
+//!   [`crate::attention::etap_f32`]: the KV tile is the outer loop, a
+//!   materialized `S^T` (`[n × h]`) keeps heads on the inner column
+//!   axis, and the per-*column* softmax max is merged tile-by-tile
+//!   exactly as Algorithm 1 does.  Unlike the GPU kernel it defers the
+//!   normalizer to a second sequential pass instead of rescaling the
+//!   accumulator online: the online `r = exp(m_old − m_new)` rescale
+//!   changes the FP reduction order, and the CPU family trades that
+//!   last bit of fusion for a bitwise determinism contract
+//!   (`docs/attention-kernels.md`).  The win over `naive8` is memory
+//!   traffic: one streaming pass over the KV cache for scores and one
+//!   for values, versus one of each *per head*.
+//! * [`blocked_parallel_f32`] — the same passes decomposed across
+//!   threads along axes whose FP result is order-independent: disjoint
+//!   `S^T` row ranges in the score pass (per-column maxes merge by the
+//!   associative `max`), disjoint value-dimension bands in the output
+//!   pass (each `(head, v-dim)` accumulator lives entirely on one
+//!   thread, ascending-`j` order preserved).  `std::thread::scope` is
+//!   used rather than [`crate::util::threadpool::ThreadPool`] because
+//!   scoped workers can borrow the multi-hundred-MB cache slice; the
+//!   pool's `'static` jobs would have to copy it.
+//!
+//! Layouts follow [`AttnShape`]: `q [h × d]`, `cache [n × d]` (K = full
+//! row, V = first `dv` dims), output `[h × dv]`.
+
+use crate::attention::AttnShape;
+
+use super::simd::{axpy8, dot8};
+
+/// Per-head query-major attention with [`dot8`] scores — the family's
+/// bitwise baseline (loop structure of [`crate::attention::naive_f32`]).
+pub fn naive8_f32(shape: &AttnShape, q: &[f32], cache: &[f32], scale: f32) -> Vec<f32> {
+    shape.validate(q, cache);
+    let (h, d, dv, n) = (shape.h, shape.d, shape.dv, shape.n);
+    let mut out = vec![0.0f32; h * dv];
+    let mut scores = vec![0.0f32; n];
+    for hi in 0..h {
+        let qrow = &q[hi * d..(hi + 1) * d];
+        let mut m = f32::NEG_INFINITY;
+        for (j, s) in scores.iter_mut().enumerate() {
+            *s = dot8(qrow, &cache[j * d..(j + 1) * d]) * scale;
+            m = m.max(*s);
+        }
+        let mut l = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            l += *s;
+        }
+        let orow = &mut out[hi * dv..(hi + 1) * dv];
+        for (j, &p) in scores.iter().enumerate() {
+            axpy8(p / l, &cache[j * d..j * d + dv], orow);
+        }
+    }
+    out
+}
+
+/// KV-major blocked fast path, single-threaded.  Bitwise equal to
+/// [`naive8_f32`] (see the module docs for the order argument).
+pub fn blocked_f32(
+    shape: &AttnShape,
+    q: &[f32],
+    cache: &[f32],
+    scale: f32,
+    block_kv: usize,
+) -> Vec<f32> {
+    blocked_impl(shape, q, cache, scale, block_kv, 1)
+}
+
+/// KV-major blocked fast path across `threads` workers (0 = all
+/// available cores, capped at 8).  Bitwise equal to [`blocked_f32`] at
+/// every thread count.
+pub fn blocked_parallel_f32(
+    shape: &AttnShape,
+    q: &[f32],
+    cache: &[f32],
+    scale: f32,
+    block_kv: usize,
+    threads: usize,
+) -> Vec<f32> {
+    blocked_impl(shape, q, cache, scale, block_kv, resolve_threads(threads))
+}
+
+/// 0 → autodetect (capped so tiny machines and huge ones behave alike).
+pub(crate) fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8)
+    }
+}
+
+fn blocked_impl(
+    shape: &AttnShape,
+    q: &[f32],
+    cache: &[f32],
+    scale: f32,
+    block_kv: usize,
+    threads: usize,
+) -> Vec<f32> {
+    shape.validate(q, cache);
+    assert!(block_kv >= 1, "block_kv must be positive");
+    assert!(threads >= 1);
+    let (h, d, dv, n) = (shape.h, shape.d, shape.dv, shape.n);
+
+    // Pass 1 — S^T [n × h]: KV-major score tiles, per-column max.
+    // Parallel split: disjoint tile-aligned row ranges of S^T; each
+    // worker's local column maxes fold in ascending-j order, and the
+    // ascending cross-worker merge below equals the global ascending
+    // fold because `max` is associative and commutative.
+    let mut s_t = vec![0.0f32; n * h];
+    let tiles = n.div_ceil(block_kv);
+    let t1 = threads.min(tiles);
+    let chunk_rows = tiles.div_ceil(t1) * block_kv;
+    let worker_maxes: Vec<Vec<f32>> = if t1 == 1 {
+        vec![score_rows(shape, q, cache, scale, block_kv, 0, &mut s_t)]
+    } else {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = s_t
+                .chunks_mut(chunk_rows * h)
+                .enumerate()
+                .map(|(w, rows)| {
+                    scope.spawn(move || {
+                        score_rows(shape, q, cache, scale, block_kv, w * chunk_rows, rows)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|hdl| hdl.join().expect("score worker panicked"))
+                .collect()
+        })
+    };
+    let mut m = vec![f32::NEG_INFINITY; h];
+    for wm in &worker_maxes {
+        for (mh, &x) in m.iter_mut().zip(wm) {
+            *mh = mh.max(x);
+        }
+    }
+
+    // Pass 2 — sequential: p = exp(s − m), column sums in ascending-j
+    // order (the one reduction whose order the contract pins and f32
+    // addition cannot reassociate, so it stays on one thread; it is
+    // O(n·h) against the passes' O(n·h·d) — Amdahl-negligible).
+    let mut l = vec![0.0f32; h];
+    for srow in s_t.chunks_exact_mut(h) {
+        for ((s, &mh), lh) in srow.iter_mut().zip(&m).zip(l.iter_mut()) {
+            *s = (*s - mh).exp();
+            *lh += *s;
+        }
+    }
+
+    // Pass 3 — V^T · P accumulation over disjoint value-dim bands.
+    // Every (head, v-dim) element accumulates ascending-j inside a
+    // single worker, so the parallel split is bitwise-invisible; each
+    // worker streams only its contiguous band of every cache row, so
+    // total value traffic stays one pass.
+    let t3 = threads.min(dv).max(1);
+    let band = dv.div_ceil(t3).max(1);
+    let bands: Vec<(usize, usize)> = (0..dv)
+        .step_by(band)
+        .map(|vd0| (vd0, band.min(dv - vd0)))
+        .collect();
+    let accs: Vec<Vec<f32>> = if bands.len() <= 1 {
+        bands
+            .iter()
+            .map(|&(vd0, bw)| out_band(shape, cache, &s_t, &l, block_kv, vd0, bw))
+            .collect()
+    } else {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = bands
+                .iter()
+                .map(|&(vd0, bw)| {
+                    let (s_t, l) = (&s_t, &l);
+                    scope.spawn(move || out_band(shape, cache, s_t, l, block_kv, vd0, bw))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|hdl| hdl.join().expect("output worker panicked"))
+                .collect()
+        })
+    };
+
+    // Epilogue: scatter the [h × band] accumulators into [h × dv] — a
+    // pure copy, exact by definition (the ETAP final transpose, eq. 4).
+    let mut out = vec![0.0f32; h * dv];
+    for (&(vd0, bw), acc) in bands.iter().zip(&accs) {
+        for hi in 0..h {
+            out[hi * dv + vd0..hi * dv + vd0 + bw]
+                .copy_from_slice(&acc[hi * bw..(hi + 1) * bw]);
+        }
+    }
+    out
+}
+
+/// Pass-1 worker: fill `S^T` rows `j0 .. j0 + rows/h` tile by tile and
+/// return this range's per-column maxes (ascending-j fold).
+fn score_rows(
+    shape: &AttnShape,
+    q: &[f32],
+    cache: &[f32],
+    scale: f32,
+    block_kv: usize,
+    j0: usize,
+    s_rows: &mut [f32],
+) -> Vec<f32> {
+    let (h, d) = (shape.h, shape.d);
+    let rows = s_rows.len() / h;
+    let mut m = vec![f32::NEG_INFINITY; h];
+    let mut jj = 0;
+    while jj < rows {
+        let bc = block_kv.min(rows - jj);
+        let tile = &mut s_rows[jj * h..(jj + bc) * h];
+        for (r, srow) in tile.chunks_exact_mut(h).enumerate() {
+            let j = j0 + jj + r;
+            let krow = &cache[j * d..(j + 1) * d];
+            for (hi, s) in srow.iter_mut().enumerate() {
+                *s = dot8(&q[hi * d..(hi + 1) * d], krow) * scale;
+            }
+        }
+        for srow in tile.chunks_exact(h) {
+            for (mh, &s) in m.iter_mut().zip(srow) {
+                *mh = mh.max(s);
+            }
+        }
+        jj += bc;
+    }
+    m
+}
+
+/// Pass-3 worker: accumulate output columns `vd0 .. vd0 + bw` for every
+/// head into a local `[h × bw]` block, ascending-j, tile by tile.
+fn out_band(
+    shape: &AttnShape,
+    cache: &[f32],
+    s_t: &[f32],
+    l: &[f32],
+    block_kv: usize,
+    vd0: usize,
+    bw: usize,
+) -> Vec<f32> {
+    let (h, d, n) = (shape.h, shape.d, shape.n);
+    let mut acc = vec![0.0f32; h * bw];
+    let mut j0 = 0;
+    while j0 < n {
+        let bc = block_kv.min(n - j0);
+        for jj in 0..bc {
+            let j = j0 + jj;
+            let vrow = &cache[j * d + vd0..j * d + vd0 + bw];
+            let srow = &s_t[j * h..(j + 1) * h];
+            for (hi, (&p, &lh)) in srow.iter().zip(l).enumerate() {
+                axpy8(p / lh, vrow, &mut acc[hi * bw..(hi + 1) * bw]);
+            }
+        }
+        j0 += bc;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{naive_f32, naive_f64};
+    use crate::util::rng::Rng;
+
+    fn request(shape: &AttnShape, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (
+            rng.normal_vec(shape.q_len()),
+            rng.normal_vec(shape.cache_len()),
+        )
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn family_is_bitwise_identical() {
+        for (shape, seed) in [
+            (AttnShape { h: 3, d: 24, dv: 16, n: 37 }, 1u64),
+            (AttnShape { h: 4, d: 19, dv: 13, n: 64 }, 2), // non-multiple-of-8 dims
+            (AttnShape { h: 1, d: 8, dv: 8, n: 1 }, 3),
+            (AttnShape::paper(96), 4),
+        ] {
+            let (q, cache) = request(&shape, seed);
+            let scale = 1.0 / (shape.d as f32).sqrt();
+            let base = naive8_f32(&shape, &q, &cache, scale);
+            for block_kv in [1, 7, 16, 1024] {
+                let blk = blocked_f32(&shape, &q, &cache, scale, block_kv);
+                assert_eq!(bits(&base), bits(&blk), "blocked bk={block_kv} {shape:?}");
+                for threads in [2, 3, 5] {
+                    let par =
+                        blocked_parallel_f32(&shape, &q, &cache, scale, block_kv, threads);
+                    assert_eq!(
+                        bits(&base),
+                        bits(&par),
+                        "parallel bk={block_kv} t={threads} {shape:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn family_matches_scalar_naive_within_tolerance() {
+        let shape = AttnShape::paper(128);
+        let (q, cache) = request(&shape, 11);
+        let scale = 1.0 / (shape.d as f32).sqrt();
+        let want = naive_f32(&shape, &q, &cache, scale);
+        let got = blocked_f32(&shape, &q, &cache, scale, 32);
+        for (i, (&a, &b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-4, "elem {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn family_tracks_f64_oracle() {
+        let shape = AttnShape::paper(256);
+        let (q, cache) = request(&shape, 13);
+        let scale = 1.0 / (shape.d as f32).sqrt();
+        let oracle = naive_f64(&shape, &q, &cache, scale as f64);
+        let got = blocked_parallel_f32(&shape, &q, &cache, scale, 64, 3);
+        let rmse = (got
+            .iter()
+            .zip(&oracle)
+            .map(|(&a, &b)| (a as f64 - b).powi(2))
+            .sum::<f64>()
+            / oracle.len() as f64)
+            .sqrt();
+        assert!(rmse < 1e-5, "rmse vs f64 oracle: {rmse}");
+    }
+
+    #[test]
+    fn thread_count_never_changes_bits() {
+        let shape = AttnShape { h: 5, d: 40, dv: 24, n: 200 };
+        let (q, cache) = request(&shape, 17);
+        let one = blocked_parallel_f32(&shape, &q, &cache, 0.1, 16, 1);
+        for threads in 2..=6 {
+            let t = blocked_parallel_f32(&shape, &q, &cache, 0.1, 16, threads);
+            assert_eq!(bits(&one), bits(&t), "threads {threads}");
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! Fast-path CPU kernel subsystem: blocked/vectorized attention and
+//! GEMM primitives plus the dispatch layer that selects them.
+//!
+//! The paper's thesis is that kernel *restructuring* — not new math —
+//! recovers the throughput the hardware already offers (ETAP aligns KV
+//! with the WGMMA M dimension on H20).  This module applies the same
+//! discipline to the repo's CPU execution substrate:
+//!
+//! * [`simd`] — fixed-order 8-lane primitives (`dot8`, `axpy8`,
+//!   `matvec8`), portable-SIMD-style on stable Rust.
+//! * [`attn`] — the blocked/tiled attention family
+//!   (`naive8 | blocked | blocked_parallel`), bitwise-identical to each
+//!   other at every block size and thread count.
+//! * [`KernelDispatch`] — runtime selection via `[engine.kernels]`
+//!   config; the reference backend asks it for the execution mode and
+//!   the slot-parallelism pool, benches and the coordinator's fallback
+//!   ask it for whole attention calls.
+//!
+//! ## Determinism contract (docs/attention-kernels.md)
+//!
+//! Engine outputs are **bit-identical across every dispatch mode**.
+//! `naive` keeps the seed backend's sequential scalar order; `blocked`
+//! re-tiles the same arithmetic without reordering any f32 reduction;
+//! `blocked_parallel` adds slot-level parallelism, which the slot
+//! isolation contract makes bitwise-invisible.  The deep 8-lane
+//! vectorization lives in [`attn`] at the paper shape, where
+//! `benches/attention_cpu.rs` measures it; it uses a *different* (fixed,
+//! documented) reduction order than the scalar baseline, so it is
+//! tolerance-compared against `attention::naive_f32` and bitwise-compared
+//! only within its own family.
+
+pub mod attn;
+pub mod simd;
+
+use std::sync::Arc;
+
+use crate::attention::{self, AttnShape};
+use crate::util::threadpool::ThreadPool;
+
+/// Which execution path the dispatcher routes to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Seed behavior: sequential scalar loops, slot-by-slot.
+    Naive,
+    /// KV-tiled, bounds-check-free loops; still single-threaded.
+    Blocked,
+    /// `Blocked` per slot, slots fanned out over a [`ThreadPool`].
+    BlockedParallel,
+}
+
+impl KernelMode {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "naive" => Ok(KernelMode::Naive),
+            "blocked" => Ok(KernelMode::Blocked),
+            "blocked_parallel" => Ok(KernelMode::BlockedParallel),
+            other => anyhow::bail!(
+                "unknown kernels.mode {other:?} (naive | blocked | blocked_parallel)"
+            ),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelMode::Naive => "naive",
+            KernelMode::Blocked => "blocked",
+            KernelMode::BlockedParallel => "blocked_parallel",
+        }
+    }
+}
+
+/// `[engine.kernels]` — fast-path selection knobs.
+#[derive(Clone, Debug)]
+pub struct KernelConfig {
+    pub mode: KernelMode,
+    /// Worker threads for `blocked_parallel` (0 = autodetect, capped).
+    pub threads: usize,
+    /// KV rows per tile in the blocked kernels.
+    pub block_kv: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig {
+            mode: KernelMode::Naive,
+            threads: 0,
+            block_kv: 64,
+        }
+    }
+}
+
+impl KernelConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.block_kv >= 1, "kernels.block_kv must be >= 1");
+        anyhow::ensure!(
+            self.threads <= 64,
+            "kernels.threads {} is implausible (max 64, 0 = auto)",
+            self.threads
+        );
+        Ok(())
+    }
+}
+
+/// Runtime kernel selector.  Built once per engine (or per bench) from a
+/// validated [`KernelConfig`]; owns the slot-parallelism pool so worker
+/// threads are spawned once, not per tick.
+pub struct KernelDispatch {
+    cfg: KernelConfig,
+    pool: Option<ThreadPool>,
+}
+
+impl KernelDispatch {
+    pub fn new(cfg: KernelConfig) -> anyhow::Result<Arc<Self>> {
+        cfg.validate()?;
+        let pool = match cfg.mode {
+            KernelMode::BlockedParallel => {
+                Some(ThreadPool::new(attn::resolve_threads(cfg.threads)))
+            }
+            _ => None,
+        };
+        Ok(Arc::new(KernelDispatch { cfg, pool }))
+    }
+
+    /// The seed-equivalent dispatcher (`naive`, no pool) — what
+    /// `ReferenceModel::runner` uses so existing callers see the exact
+    /// pre-fast-path behavior.
+    pub fn naive() -> Arc<Self> {
+        Self::new(KernelConfig::default()).expect("default kernel config is valid")
+    }
+
+    pub fn mode(&self) -> KernelMode {
+        self.cfg.mode
+    }
+
+    pub fn block_kv(&self) -> usize {
+        self.cfg.block_kv
+    }
+
+    pub fn threads(&self) -> usize {
+        self.cfg.threads
+    }
+
+    /// The slot-parallelism pool — `Some` only in `blocked_parallel`
+    /// mode, so sequential modes never pay for idle workers.
+    pub fn pool(&self) -> Option<&ThreadPool> {
+        self.pool.as_ref()
+    }
+
+    /// One whole-request attention call routed by mode: the scalar
+    /// reference for `naive`, the 8-lane blocked family otherwise.
+    pub fn attention(&self, shape: &AttnShape, q: &[f32], cache: &[f32], scale: f32) -> Vec<f32> {
+        match self.cfg.mode {
+            KernelMode::Naive => attention::naive_f32(shape, q, cache, scale),
+            KernelMode::Blocked => attn::blocked_f32(shape, q, cache, scale, self.cfg.block_kv),
+            KernelMode::BlockedParallel => attn::blocked_parallel_f32(
+                shape,
+                q,
+                cache,
+                scale,
+                self.cfg.block_kv,
+                self.cfg.threads,
+            ),
+        }
+    }
+
+    /// Decode-side GEMM fast path: sequential scalar rows in `naive`
+    /// mode (seed order), [`simd::matvec8`] rows otherwise.
+    pub fn matvec(&self, w: &[f32], x: &[f32], out: &mut [f32]) {
+        match self.cfg.mode {
+            KernelMode::Naive => {
+                for (o, row) in out.iter_mut().zip(w.chunks_exact(x.len())) {
+                    let mut acc = 0.0f32;
+                    for (&wi, &xi) in row.iter().zip(x) {
+                        acc += wi * xi;
+                    }
+                    *o = acc;
+                }
+            }
+            KernelMode::Blocked | KernelMode::BlockedParallel => simd::matvec8(w, x, out),
+        }
+    }
+}
+
+impl std::fmt::Debug for KernelDispatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KernelDispatch")
+            .field("cfg", &self.cfg)
+            .field("pool", &self.pool.as_ref().map(ThreadPool::size))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mode_parsing_round_trips() {
+        for mode in [
+            KernelMode::Naive,
+            KernelMode::Blocked,
+            KernelMode::BlockedParallel,
+        ] {
+            assert_eq!(KernelMode::parse(mode.as_str()).unwrap(), mode);
+        }
+        assert!(KernelMode::parse("fast").is_err());
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_values() {
+        let bad_block = KernelConfig {
+            block_kv: 0,
+            ..KernelConfig::default()
+        };
+        assert!(bad_block.validate().is_err());
+        let bad_threads = KernelConfig {
+            threads: 65,
+            ..KernelConfig::default()
+        };
+        assert!(bad_threads.validate().is_err());
+        assert!(KernelConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn pool_exists_only_for_parallel_mode() {
+        let naive = KernelDispatch::naive();
+        assert!(naive.pool().is_none());
+        let par = KernelDispatch::new(KernelConfig {
+            mode: KernelMode::BlockedParallel,
+            threads: 2,
+            block_kv: 32,
+        })
+        .unwrap();
+        assert_eq!(par.pool().unwrap().size(), 2);
+    }
+
+    #[test]
+    fn dispatch_attention_routes_all_modes_consistently() {
+        let shape = AttnShape { h: 2, d: 16, dv: 8, n: 24 };
+        let mut rng = Rng::new(5);
+        let q = rng.normal_vec(shape.q_len());
+        let cache = rng.normal_vec(shape.cache_len());
+        let scale = 0.25f32;
+        let outs: Vec<Vec<f32>> = [
+            KernelMode::Naive,
+            KernelMode::Blocked,
+            KernelMode::BlockedParallel,
+        ]
+        .into_iter()
+        .map(|mode| {
+            let d = KernelDispatch::new(KernelConfig {
+                mode,
+                threads: 2,
+                block_kv: 7,
+            })
+            .unwrap();
+            d.attention(&shape, &q, &cache, scale)
+        })
+        .collect();
+        // Blocked family is bitwise-identical; naive agrees to tolerance.
+        assert_eq!(
+            outs[1].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            outs[2].iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        for (a, b) in outs[0].iter().zip(&outs[1]) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matvec_modes_agree_to_tolerance() {
+        let mut rng = Rng::new(6);
+        let (rows, cols) = (12, 40);
+        let w = rng.normal_vec(rows * cols);
+        let x = rng.normal_vec(cols);
+        let mut a = vec![0.0f32; rows];
+        let mut b = vec![0.0f32; rows];
+        KernelDispatch::naive().matvec(&w, &x, &mut a);
+        KernelDispatch::new(KernelConfig {
+            mode: KernelMode::Blocked,
+            ..KernelConfig::default()
+        })
+        .unwrap()
+        .matvec(&w, &x, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

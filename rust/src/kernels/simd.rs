@@ -1,0 +1,165 @@
+//! Fixed-order 8-lane vector primitives (portable-SIMD substitute).
+//!
+//! Stable Rust has no `std::simd`, so the fast-path kernels get their
+//! vectorization the portable way: manually unrolled inner loops over
+//! eight *independent* lane accumulators, which breaks the sequential
+//! FP dependence chain (the thing that actually caps a scalar dot
+//! product at ~1 FLOP per add-latency) and hands the autovectorizer a
+//! shape it reliably turns into SSE/AVX/NEON code.
+//!
+//! ## The fixed-reduction-order contract
+//!
+//! Every primitive here commits to one bit-reproducible evaluation
+//! order, documented per function.  This is what lets the kernel family
+//! in [`super::attn`] promise *bitwise* parity between its sequential
+//! and parallel variants (`docs/attention-kernels.md`): parallel
+//! decompositions only ever reorder work whose FP result is
+//! order-independent (disjoint elements, or merges of the associative
+//! `max`), never the accumulations below.
+//!
+//! * [`dot8`]: lane `l` accumulates elements `l, l+8, l+16, …` in
+//!   ascending order; lanes combine in the fixed tree
+//!   `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`; the scalar tail (length
+//!   `% 8`) is added last, ascending.  The result differs from a
+//!   sequential scalar dot (different association) but is identical on
+//!   every call, every thread count, every platform.
+//! * [`axpy8`]: elementwise, so unrolling is rounding-neutral — the
+//!   result is bit-identical to the textbook `y[i] += a * x[i]` loop.
+
+/// Unroll width of the manual vector primitives.
+pub const LANES: usize = 8;
+
+/// Fixed-order 8-lane dot product.  See the module docs for the exact
+/// reduction order; `a` and `b` must have equal length.
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len(), "dot8 operand lengths");
+    let mut lanes = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for (acc, (&x, &y)) in lanes.iter_mut().zip(xa.iter().zip(xb)) {
+            *acc += x * y;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    (((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7])))
+        + tail
+}
+
+/// `y += alpha * x`, unrolled 8 wide.  Elementwise, hence bit-identical
+/// to the scalar loop — unrolling only changes *which* independent
+/// elements are in flight, never how any one element rounds.
+#[inline]
+pub fn axpy8(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len(), "axpy8 operand lengths");
+    let mut cy = y.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (ya, xa) in cy.by_ref().zip(cx.by_ref()) {
+        for (o, &v) in ya.iter_mut().zip(xa) {
+            *o += alpha * v;
+        }
+    }
+    for (o, &v) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
+        *o += alpha * v;
+    }
+}
+
+/// Row-major matrix–vector product `out = W · x` with one [`dot8`] per
+/// row — the decode-side GEMM fast path (decode GEMMs are matvecs per
+/// token).  `w` is `[out.len() × x.len()]`.
+pub fn matvec8(w: &[f32], x: &[f32], out: &mut [f32]) {
+    assert!(!x.is_empty(), "matvec8 needs at least one column");
+    debug_assert_eq!(w.len(), out.len() * x.len(), "matvec8 matrix shape");
+    for (o, row) in out.iter_mut().zip(w.chunks_exact(x.len())) {
+        *o = dot8(row, x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vecs(len: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (rng.normal_vec(len), rng.normal_vec(len))
+    }
+
+    fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    #[test]
+    fn dot8_matches_f64_oracle_at_every_tail_length() {
+        for len in [0, 1, 7, 8, 9, 15, 16, 23, 64, 576, 577] {
+            let (a, b) = vecs(len, 0xD0_7000 + len as u64);
+            let got = dot8(&a, &b) as f64;
+            let want = dot_f64(&a, &b);
+            let tol = 1e-4 * (len.max(1) as f64).sqrt();
+            assert!(
+                (got - want).abs() <= tol,
+                "len {len}: dot8 {got} vs f64 {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot8_is_bit_reproducible() {
+        let (a, b) = vecs(576, 42);
+        let first = dot8(&a, &b).to_bits();
+        for _ in 0..8 {
+            assert_eq!(dot8(&a, &b).to_bits(), first);
+        }
+    }
+
+    #[test]
+    fn dot8_short_inputs_equal_sequential_scalar() {
+        // With fewer than LANES elements everything is tail: the fixed
+        // order degenerates to the plain ascending scalar dot.
+        let (a, b) = vecs(7, 9);
+        let mut seq = 0.0f32;
+        for (&x, &y) in a.iter().zip(&b) {
+            seq += x * y;
+        }
+        assert_eq!(dot8(&a, &b).to_bits(), seq.to_bits());
+    }
+
+    #[test]
+    fn axpy8_is_bitwise_the_scalar_loop() {
+        for len in [0, 1, 7, 8, 9, 31, 512, 515] {
+            let (x, y0) = vecs(len, 0xA9 + len as u64);
+            let alpha = 0.37f32;
+            let mut fast = y0.clone();
+            axpy8(alpha, &x, &mut fast);
+            let mut slow = y0.clone();
+            for (o, &v) in slow.iter_mut().zip(&x) {
+                *o += alpha * v;
+            }
+            assert_eq!(
+                fast.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                slow.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn matvec8_matches_f64_oracle() {
+        let rows = 33;
+        let cols = 20;
+        let mut rng = Rng::new(77);
+        let w = rng.normal_vec(rows * cols);
+        let x = rng.normal_vec(cols);
+        let mut out = vec![0.0f32; rows];
+        matvec8(&w, &x, &mut out);
+        for (r, &o) in out.iter().enumerate() {
+            let want = dot_f64(&w[r * cols..(r + 1) * cols], &x);
+            assert!((o as f64 - want).abs() < 1e-4, "row {r}");
+        }
+    }
+}

@@ -30,6 +30,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod hardware;
+pub mod kernels;
 pub mod kvcache;
 pub mod obs;
 pub mod prefill;

@@ -95,6 +95,19 @@ pub fn issued_flops(kv_rows: usize) -> f64 {
         .sum()
 }
 
+/// Modeled GFLOP/s for one attention call over `kv_rows` rows that took
+/// `mean_us` microseconds of wall clock: [`logical_flops`] divided by
+/// the measured time.  `benches/attention_cpu.rs` uses this to put the
+/// *measured* CPU kernel throughput on the same axis as the ledger's
+/// modeled numbers, which is what `bench_compare`'s roofline section
+/// cross-reports.
+pub fn modeled_gflops_at(kv_rows: usize, mean_us: f64) -> f64 {
+    if mean_us <= 0.0 {
+        return 0.0;
+    }
+    logical_flops(kv_rows) / (mean_us * 1e3)
+}
+
 /// HBM bytes to stream `kv_rows` KV latent rows for one token.
 pub fn kv_bytes(kv_rows: usize) -> f64 {
     (kv_rows * MODEL_D_QK * MODEL_ELEM_BYTES) as f64
@@ -374,6 +387,17 @@ mod tests {
 
     fn lock() -> std::sync::MutexGuard<'static, ()> {
         LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn modeled_gflops_at_inverts_logical_flops() {
+        // 1e9 logical FLOPs in 1000 us = 1000 GFLOP/s, by definition.
+        let n = 4096;
+        let flops = logical_flops(n);
+        let us = flops / 1e9 * 1e3;
+        assert!((modeled_gflops_at(n, us) - 1000.0).abs() < 1e-6);
+        assert_eq!(modeled_gflops_at(n, 0.0), 0.0, "degenerate time");
+        assert_eq!(modeled_gflops_at(0, 5.0), 0.0, "no rows, no flops");
     }
 
     #[test]

@@ -19,6 +19,17 @@
 //!   what makes it a real end-to-end check for paged-store and
 //!   prefix-cache plumbing rather than a mock.
 //!
+//! Execution is routed through the fast-path dispatcher
+//! ([`crate::kernels::KernelDispatch`], selected by `[engine.kernels]`):
+//! per-slot work is extracted into a `SlotKernel` that runs on a
+//! gathered per-slot cache buffer; `naive` keeps the seed's sequential
+//! scalar loop order bit-for-bit, `blocked` re-tiles the same
+//! arithmetic over KV tiles without reordering any f32 reduction, and
+//! `blocked_parallel` fans independent slots across
+//! [`crate::util::threadpool::ThreadPool::map`].  All three produce
+//! bit-identical outputs (`docs/attention-kernels.md`), which is why
+//! every pinned expectation below holds in every mode.
+//!
 //! Per slot with context length `t` and input token `x`:
 //!
 //! ```text
@@ -34,6 +45,7 @@
 
 use std::sync::Arc;
 
+use crate::kernels::{KernelDispatch, KernelMode};
 use crate::obs;
 use crate::util::rng::Rng;
 
@@ -105,13 +117,27 @@ impl ReferenceModel {
         &self.cfg
     }
 
-    /// A runner bound to one `(batch, kv_bucket)` shape.
+    /// A runner bound to one `(batch, kv_bucket)` shape, on the seed's
+    /// sequential scalar path (`naive` dispatch).
     pub fn runner(self: &Arc<Self>, batch: usize, kv_bucket: usize) -> ReferenceRunner {
+        self.runner_with(batch, kv_bucket, KernelDispatch::naive())
+    }
+
+    /// A runner bound to one `(batch, kv_bucket)` shape executing via
+    /// the given kernel dispatcher — how the engine threads its
+    /// `[engine.kernels]` selection down to the compute loops.
+    pub fn runner_with(
+        self: &Arc<Self>,
+        batch: usize,
+        kv_bucket: usize,
+        kernels: Arc<KernelDispatch>,
+    ) -> ReferenceRunner {
         ReferenceRunner {
             name: format!("reference_b{batch}_n{kv_bucket}"),
             model: Arc::clone(self),
             batch,
             kv_bucket,
+            kernels,
         }
     }
 }
@@ -122,6 +148,7 @@ pub struct ReferenceRunner {
     name: String,
     pub batch: usize,
     pub kv_bucket: usize,
+    kernels: Arc<KernelDispatch>,
 }
 
 impl ReferenceRunner {
@@ -139,24 +166,39 @@ impl ReferenceRunner {
     }
 }
 
-impl ReferenceRunner {
-    /// Process one token for one slot against the host cache: write the
-    /// new latent at position `t` and fill `logits_row`.  This is the
-    /// single shared per-slot kernel behind both [`StepRunner::step`] and
-    /// the native [`StepRunner::prefill_chunk`], which makes their
-    /// bit-identity structural rather than incidental (the chunked path
-    /// runs exactly this code once per token).
-    fn step_slot(
+/// The per-(slot, token) compute kernel, extracted from the runner so
+/// the parallel tick path can ship it to pool workers (`'static` +
+/// owned): weights via `Arc`, geometry by value, and the slot's cache
+/// as a gathered contiguous buffer `[L × n × d]` with row `(l, j)` at
+/// `(l·n + j)·d`.  Gather/scatter between this layout and the host
+/// literal's `[L × B × n × d]` is a pure copy, so running every mode on
+/// the gathered buffer changes no bits relative to the seed's in-place
+/// walk.
+#[derive(Clone)]
+struct SlotKernel {
+    model: Arc<ReferenceModel>,
+    /// KV bucket — rows per layer in the slot buffer.
+    n: usize,
+    mode: KernelMode,
+    block_kv: usize,
+}
+
+impl SlotKernel {
+    /// Process one token: write the new latent at position `t` and fill
+    /// `logits_row`.  This is the single shared kernel behind
+    /// [`StepRunner::step`], the native [`StepRunner::prefill_chunk`]
+    /// and [`StepRunner::verify_chunk`], which makes their bit-identity
+    /// structural rather than incidental.
+    fn step_token(
         &self,
-        host: &mut [f32],
-        slot: usize,
+        buf: &mut [f32],
         token: i32,
         t: usize,
         logits_row: &mut [f32],
     ) -> anyhow::Result<()> {
         let m = &*self.model;
         let (v, nl, d) = (m.cfg.vocab, m.cfg.n_layers, m.cfg.latent_dim);
-        let (b, n) = (self.batch, self.kv_bucket);
+        let n = self.n;
         anyhow::ensure!(
             t < n,
             "length {t} overflows bucket {n} (no room for this token)"
@@ -169,67 +211,234 @@ impl ReferenceRunner {
         let mut h: Vec<f32> = e.to_vec();
         let pos_scale = (t + 1) as f32 * 0.03125;
         for l in 0..nl {
-            // New latent from the hidden state, written at position t.
             let wl = &m.w_latent[l * d * d..(l + 1) * d * d];
             let pm = &m.pos_mix[l * d..(l + 1) * d];
-            let row = |j: usize| ((l * b + slot) * n + j) * d;
-            let base = row(t);
-            for i in 0..d {
-                let mut acc = pm[i] * pos_scale;
-                for (j, &hj) in h.iter().enumerate() {
-                    acc += wl[i * d + j] * hj;
-                }
-                host[base + i] = acc.tanh();
-            }
-            // Attention over positions 0..=t of this slot's rows.
             let wq = &m.w_query[l * d * d..(l + 1) * d * d];
-            let mut q = vec![0.0f32; d];
-            for i in 0..d {
-                let mut acc = 0.0f32;
-                for (j, &hj) in h.iter().enumerate() {
-                    acc += wq[i * d + j] * hj;
+            match self.mode {
+                KernelMode::Naive => self.layer_naive(buf, l, t, pos_scale, wl, pm, wq, &mut h),
+                KernelMode::Blocked | KernelMode::BlockedParallel => {
+                    self.layer_blocked(buf, l, t, pos_scale, wl, pm, wq, &mut h)
                 }
-                q[i] = acc;
-            }
-            let inv_sqrt_d = 1.0 / (d as f32).sqrt();
-            let mut scores = Vec::with_capacity(t + 1);
-            let mut max_s = f32::NEG_INFINITY;
-            for j in 0..=t {
-                let r = row(j);
-                let mut s = 0.0f32;
-                for i in 0..d {
-                    s += q[i] * host[r + i];
-                }
-                let s = s * inv_sqrt_d;
-                max_s = max_s.max(s);
-                scores.push(s);
-            }
-            let mut norm = 0.0f32;
-            for s in scores.iter_mut() {
-                *s = (*s - max_s).exp();
-                norm += *s;
-            }
-            let mut ctx = vec![0.0f32; d];
-            for (j, &w) in scores.iter().enumerate() {
-                let r = row(j);
-                let w = w / norm;
-                for i in 0..d {
-                    ctx[i] += w * host[r + i];
-                }
-            }
-            for i in 0..d {
-                h[i] = (h[i] + ctx[i]).tanh();
             }
         }
         for tok in 0..v {
             let o = &m.out_proj[tok * d..(tok + 1) * d];
             let mut acc = 0.0f32;
-            for i in 0..d {
-                acc += o[i] * h[i];
+            for (&oi, &hi) in o.iter().zip(&h) {
+                acc += oi * hi;
             }
             logits_row[tok] = acc;
         }
         Ok(())
+    }
+
+    /// Seed-order layer step: sequential scalar loops, indexed exactly
+    /// like the pre-dispatch `step_slot` (modulo the slot-buffer row
+    /// mapping, which only changes addresses, never FP operations).
+    #[allow(clippy::too_many_arguments)]
+    fn layer_naive(
+        &self,
+        buf: &mut [f32],
+        l: usize,
+        t: usize,
+        pos_scale: f32,
+        wl: &[f32],
+        pm: &[f32],
+        wq: &[f32],
+        h: &mut [f32],
+    ) {
+        let d = self.model.cfg.latent_dim;
+        let n = self.n;
+        let row = |j: usize| (l * n + j) * d;
+        // New latent from the hidden state, written at position t.
+        let base = row(t);
+        for i in 0..d {
+            let mut acc = pm[i] * pos_scale;
+            for (j, &hj) in h.iter().enumerate() {
+                acc += wl[i * d + j] * hj;
+            }
+            buf[base + i] = acc.tanh();
+        }
+        // Attention over positions 0..=t of this slot's rows.
+        let mut q = vec![0.0f32; d];
+        for i in 0..d {
+            let mut acc = 0.0f32;
+            for (j, &hj) in h.iter().enumerate() {
+                acc += wq[i * d + j] * hj;
+            }
+            q[i] = acc;
+        }
+        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+        let mut scores = Vec::with_capacity(t + 1);
+        let mut max_s = f32::NEG_INFINITY;
+        for j in 0..=t {
+            let r = row(j);
+            let mut s = 0.0f32;
+            for i in 0..d {
+                s += q[i] * buf[r + i];
+            }
+            let s = s * inv_sqrt_d;
+            max_s = max_s.max(s);
+            scores.push(s);
+        }
+        let mut norm = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - max_s).exp();
+            norm += *s;
+        }
+        let mut ctx = vec![0.0f32; d];
+        for (j, &w) in scores.iter().enumerate() {
+            let r = row(j);
+            let w = w / norm;
+            for i in 0..d {
+                ctx[i] += w * buf[r + i];
+            }
+        }
+        for i in 0..d {
+            h[i] = (h[i] + ctx[i]).tanh();
+        }
+    }
+
+    /// Fast-path layer step: the same FP operations in the same order as
+    /// [`layer_naive`](Self::layer_naive) — every reduction is still the
+    /// ascending sequential fold — re-expressed over tight row slices
+    /// (bounds-check-free iterator loops) and KV tiles of `block_kv`
+    /// rows.  Tiling a loop whose per-row work is independent reorders
+    /// nothing, so this arm is bitwise-identical to the naive arm; it is
+    /// just faster to execute.  The deep 8-lane kernels live in
+    /// [`crate::kernels::attn`] where bitwise parity with the seed is
+    /// not a constraint.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_blocked(
+        &self,
+        buf: &mut [f32],
+        l: usize,
+        t: usize,
+        pos_scale: f32,
+        wl: &[f32],
+        pm: &[f32],
+        wq: &[f32],
+        h: &mut [f32],
+    ) {
+        let d = self.model.cfg.latent_dim;
+        let n = self.n;
+        let base = (l * n + t) * d;
+        {
+            let dst = &mut buf[base..base + d];
+            for (i, o) in dst.iter_mut().enumerate() {
+                let mut acc = pm[i] * pos_scale;
+                for (&w, &hj) in wl[i * d..(i + 1) * d].iter().zip(h.iter()) {
+                    acc += w * hj;
+                }
+                *o = acc.tanh();
+            }
+        }
+        let mut q = vec![0.0f32; d];
+        for (i, qo) in q.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (&w, &hj) in wq[i * d..(i + 1) * d].iter().zip(h.iter()) {
+                acc += w * hj;
+            }
+            *qo = acc;
+        }
+        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+        let layer = &buf[l * n * d..(l + 1) * n * d];
+        let mut scores = Vec::with_capacity(t + 1);
+        let mut max_s = f32::NEG_INFINITY;
+        let mut j0 = 0;
+        while j0 <= t {
+            let bc = self.block_kv.min(t + 1 - j0);
+            for krow in layer[j0 * d..(j0 + bc) * d].chunks_exact(d) {
+                let mut s = 0.0f32;
+                for (&qi, &ki) in q.iter().zip(krow) {
+                    s += qi * ki;
+                }
+                let s = s * inv_sqrt_d;
+                max_s = max_s.max(s);
+                scores.push(s);
+            }
+            j0 += bc;
+        }
+        let mut norm = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - max_s).exp();
+            norm += *s;
+        }
+        let mut ctx = vec![0.0f32; d];
+        for (vrow, &p) in layer[..(t + 1) * d].chunks_exact(d).zip(scores.iter()) {
+            let w = p / norm;
+            for (c, &x) in ctx.iter_mut().zip(vrow) {
+                *c += w * x;
+            }
+        }
+        for (hi, &c) in h.iter_mut().zip(ctx.iter()) {
+            *hi = (*hi + c).tanh();
+        }
+    }
+
+    /// Run one slot's whole chunk in order: the empty chunk is the
+    /// padded-slot scratch step (token 0 at position 0), matching what
+    /// the per-token `step` path does for idle slots.  When `argmaxes`
+    /// is supplied, the greedy argmax after every consumed token is
+    /// recorded (the verification contract).
+    fn run_chunk(
+        &self,
+        buf: &mut [f32],
+        chunk: &[i32],
+        start: i32,
+        logits_row: &mut [f32],
+        mut argmaxes: Option<&mut Vec<i32>>,
+    ) -> anyhow::Result<()> {
+        if chunk.is_empty() {
+            // Padded slot: same scratch write `step` performs.
+            return self.step_token(buf, 0, 0, logits_row);
+        }
+        anyhow::ensure!(start >= 0, "negative start_pos");
+        let v = self.model.cfg.vocab;
+        for (j, &tok) in chunk.iter().enumerate() {
+            self.step_token(buf, tok, start as usize + j, logits_row)?;
+            if let Some(out) = argmaxes.as_deref_mut() {
+                out.push(super::DecodeRunner::argmax_row(logits_row, v, 0));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ReferenceRunner {
+    /// The owned, thread-shippable kernel for this runner's shape.
+    fn slot_kernel(&self) -> SlotKernel {
+        SlotKernel {
+            model: Arc::clone(&self.model),
+            n: self.kv_bucket,
+            mode: self.kernels.mode(),
+            block_kv: self.kernels.block_kv(),
+        }
+    }
+
+    /// Copy one slot's rows out of the `[L × B × n × d]` host literal
+    /// into a contiguous `[L × n × d]` buffer (one memcpy per layer).
+    fn gather_slot(&self, host: &[f32], slot: usize) -> Vec<f32> {
+        let c = &self.model.cfg;
+        let (nl, d) = (c.n_layers, c.latent_dim);
+        let (b, n) = (self.batch, self.kv_bucket);
+        let mut buf = vec![0.0f32; nl * n * d];
+        for l in 0..nl {
+            let src = (l * b + slot) * n * d;
+            buf[l * n * d..(l + 1) * n * d].copy_from_slice(&host[src..src + n * d]);
+        }
+        buf
+    }
+
+    /// Copy a slot buffer back into its host-literal rows.
+    fn scatter_slot(&self, host: &mut [f32], slot: usize, buf: &[f32]) {
+        let c = &self.model.cfg;
+        let (nl, d) = (c.n_layers, c.latent_dim);
+        let (b, n) = (self.batch, self.kv_bucket);
+        for l in 0..nl {
+            let dst = (l * b + slot) * n * d;
+            host[dst..dst + n * d].copy_from_slice(&buf[l * n * d..(l + 1) * n * d]);
+        }
     }
 
     /// Pull the cache literal to a host vector, validating its shape.
@@ -257,6 +466,55 @@ impl ReferenceRunner {
         ];
         super::client::literal_from_f32(host, &dims)
     }
+
+    /// Execute every slot's chunk — sequentially in slot order, or
+    /// fanned out over the dispatcher's pool in `blocked_parallel` mode.
+    /// Slot isolation plus the fixed per-slot reduction order inside
+    /// [`SlotKernel`] make the two schedules bit-identical; `map`
+    /// preserves input order, and errors surface in ascending slot
+    /// order either way.  Returns per-slot `(logits_row, argmaxes)`.
+    fn run_all_slots(
+        &self,
+        host: &mut [f32],
+        work: Vec<(Vec<i32>, i32)>,
+        want_argmaxes: bool,
+    ) -> anyhow::Result<Vec<(Vec<f32>, Vec<i32>)>> {
+        let v = self.model.cfg.vocab;
+        let kernel = self.slot_kernel();
+        if let Some(pool) = self.kernels.pool() {
+            let items: Vec<(usize, Vec<f32>, Vec<i32>, i32)> = work
+                .into_iter()
+                .enumerate()
+                .map(|(slot, (chunk, start))| (slot, self.gather_slot(host, slot), chunk, start))
+                .collect();
+            let results = pool.map(items, move |(slot, mut buf, chunk, start)| {
+                let mut row = vec![0.0f32; kernel.model.cfg.vocab];
+                let mut am = Vec::new();
+                let argm = if want_argmaxes { Some(&mut am) } else { None };
+                let r = kernel.run_chunk(&mut buf, &chunk, start, &mut row, argm);
+                (slot, buf, row, am, r)
+            });
+            let mut out = Vec::with_capacity(results.len());
+            for (slot, buf, row, am, r) in results {
+                r?;
+                self.scatter_slot(host, slot, &buf);
+                out.push((row, am));
+            }
+            Ok(out)
+        } else {
+            let mut out = Vec::with_capacity(work.len());
+            for (slot, (chunk, start)) in work.into_iter().enumerate() {
+                let mut buf = self.gather_slot(host, slot);
+                let mut row = vec![0.0f32; v];
+                let mut am = Vec::new();
+                let argm = if want_argmaxes { Some(&mut am) } else { None };
+                kernel.run_chunk(&mut buf, &chunk, start, &mut row, argm)?;
+                self.scatter_slot(host, slot, &buf);
+                out.push((row, am));
+            }
+            Ok(out)
+        }
+    }
 }
 
 impl StepRunner for ReferenceRunner {
@@ -271,25 +529,32 @@ impl StepRunner for ReferenceRunner {
         let b = self.batch;
         anyhow::ensure!(tokens.len() == b, "tokens len {} != batch {b}", tokens.len());
         anyhow::ensure!(lengths.len() == b, "lengths len {} != batch {b}", lengths.len());
-        let mut host = self.host_cache(cache)?;
-        let mut logits = vec![0.0f32; b * v];
-        for slot in 0..b {
-            let t = lengths[slot];
+        for &t in lengths {
             anyhow::ensure!(
                 t >= 0,
                 "length {t} overflows bucket {} (no room for this token)",
                 self.kv_bucket
             );
-            let (lo, hi) = (slot * v, (slot + 1) * v);
-            self.step_slot(&mut host, slot, tokens[slot], t as usize, &mut logits[lo..hi])?;
+        }
+        let mut host = self.host_cache(cache)?;
+        let work: Vec<(Vec<i32>, i32)> = tokens
+            .iter()
+            .zip(lengths)
+            .map(|(&tok, &t)| (vec![tok], t))
+            .collect();
+        let outs = self.run_all_slots(&mut host, work, false)?;
+        let mut logits = vec![0.0f32; b * v];
+        for (slot, (row, _)) in outs.into_iter().enumerate() {
+            logits[slot * v..(slot + 1) * v].copy_from_slice(&row);
         }
         Ok((logits, self.pack_cache(&host)?))
     }
 
     /// Native multi-token path: one host round-trip for the whole mixed
-    /// batch, then `step_slot` once per (slot, token) — bit-identical to
-    /// the per-token fallback because slots are isolated and both paths
-    /// run the identical per-slot kernel in the identical per-slot order.
+    /// batch, then [`SlotKernel::step_token`] once per (slot, token) —
+    /// bit-identical to the per-token fallback because slots are
+    /// isolated and both paths run the identical per-slot kernel in the
+    /// identical per-slot order.
     fn prefill_chunk(
         &self,
         chunks: &[Vec<i32>],
@@ -306,28 +571,24 @@ impl StepRunner for ReferenceRunner {
             start_pos.len()
         );
         let mut host = self.host_cache(cache)?;
+        let work: Vec<(Vec<i32>, i32)> = chunks
+            .iter()
+            .cloned()
+            .zip(start_pos.iter().copied())
+            .collect();
+        let outs = self.run_all_slots(&mut host, work, false)?;
         let mut logits = vec![0.0f32; b * v];
-        for slot in 0..b {
-            let (lo, hi) = (slot * v, (slot + 1) * v);
-            if chunks[slot].is_empty() {
-                // Padded slot: same scratch write `step` performs.
-                self.step_slot(&mut host, slot, 0, 0, &mut logits[lo..hi])?;
-                continue;
-            }
-            anyhow::ensure!(start_pos[slot] >= 0, "negative start_pos");
-            for (j, &tok) in chunks[slot].iter().enumerate() {
-                let t = start_pos[slot] as usize + j;
-                self.step_slot(&mut host, slot, tok, t, &mut logits[lo..hi])?;
-            }
+        for (slot, (row, _)) in outs.into_iter().enumerate() {
+            logits[slot * v..(slot + 1) * v].copy_from_slice(&row);
         }
         Ok((logits, self.pack_cache(&host)?))
     }
 
     /// Native verification: identical per-slot kernel walk to the native
-    /// [`prefill_chunk`](Self::prefill_chunk) — same `step_slot` calls in
-    /// the same order, hence bit-identical cache effects — recording the
-    /// greedy argmax after every consumed token instead of keeping only
-    /// the last logits row.
+    /// [`prefill_chunk`](Self::prefill_chunk) — same
+    /// [`SlotKernel::step_token`] calls in the same order, hence
+    /// bit-identical cache effects — recording the greedy argmax after
+    /// every consumed token instead of keeping only the last logits row.
     fn verify_chunk(
         &self,
         chunks: &[Vec<i32>],
@@ -335,7 +596,6 @@ impl StepRunner for ReferenceRunner {
         start_pos: &[i32],
     ) -> anyhow::Result<(Vec<Vec<i32>>, xla::Literal)> {
         let _span = obs::span("runtime", "verify_chunk");
-        let v = self.model.cfg.vocab;
         let b = self.batch;
         anyhow::ensure!(chunks.len() == b, "chunks len {} != batch {b}", chunks.len());
         anyhow::ensure!(
@@ -344,21 +604,13 @@ impl StepRunner for ReferenceRunner {
             start_pos.len()
         );
         let mut host = self.host_cache(cache)?;
-        let mut logits_row = vec![0.0f32; v];
-        let mut out: Vec<Vec<i32>> = vec![Vec::new(); b];
-        for slot in 0..b {
-            if chunks[slot].is_empty() {
-                // Padded slot: same scratch write `step` performs.
-                self.step_slot(&mut host, slot, 0, 0, &mut logits_row)?;
-                continue;
-            }
-            anyhow::ensure!(start_pos[slot] >= 0, "negative start_pos");
-            for (j, &tok) in chunks[slot].iter().enumerate() {
-                let t = start_pos[slot] as usize + j;
-                self.step_slot(&mut host, slot, tok, t, &mut logits_row)?;
-                out[slot].push(super::DecodeRunner::argmax_row(&logits_row, v, 0));
-            }
-        }
+        let work: Vec<(Vec<i32>, i32)> = chunks
+            .iter()
+            .cloned()
+            .zip(start_pos.iter().copied())
+            .collect();
+        let outs = self.run_all_slots(&mut host, work, true)?;
+        let out: Vec<Vec<i32>> = outs.into_iter().map(|(_, am)| am).collect();
         Ok((out, self.pack_cache(&host)?))
     }
 
@@ -617,6 +869,67 @@ mod tests {
                 super::super::DecodeRunner::argmax_row(&lg, StepRunner::vocab(&r), 0),
                 "argmax diverges at position {t}"
             );
+        }
+    }
+
+    fn dispatch(
+        mode: &str,
+        threads: usize,
+        block_kv: usize,
+    ) -> Arc<crate::kernels::KernelDispatch> {
+        crate::kernels::KernelDispatch::new(crate::kernels::KernelConfig {
+            mode: crate::kernels::KernelMode::parse(mode).unwrap(),
+            threads,
+            block_kv,
+        })
+        .unwrap()
+    }
+
+    /// Mixed prefill + decode + padded workload under one kernel mode:
+    /// returns (final logits, prefill cache, verify cache, argmaxes).
+    fn run_mixed(
+        mode: &str,
+        threads: usize,
+        block_kv: usize,
+    ) -> (Vec<u32>, Vec<u32>, Vec<u32>, Vec<Vec<i32>>) {
+        let m = small();
+        let r = m.runner_with(4, 16, dispatch(mode, threads, block_kv));
+        let mut cache = r.fresh_cache().unwrap();
+        for (t, tok) in [4i32, 6, 8].into_iter().enumerate() {
+            let (_, c) =
+                StepRunner::step(&r, &[0, tok, 0, 0], &cache, &[0, t as i32, 0, 0]).unwrap();
+            cache = c;
+        }
+        let chunks: Vec<Vec<i32>> = vec![vec![3, 5, 7, 11, 2], vec![12], Vec::new(), vec![9, 1]];
+        let start = [0, 3, 0, 0];
+        let (logits, pc) = r.prefill_chunk(&chunks, &cache, &start).unwrap();
+        let (am, vc) = r.verify_chunk(&chunks, &cache, &start).unwrap();
+        let bits = |v: Vec<f32>| v.into_iter().map(f32::to_bits).collect::<Vec<u32>>();
+        (
+            bits(logits),
+            bits(pc.to_vec::<f32>().unwrap()),
+            bits(vc.to_vec::<f32>().unwrap()),
+            am,
+        )
+    }
+
+    #[test]
+    fn kernel_modes_are_bit_identical() {
+        // The dispatcher's determinism contract at the runner level:
+        // naive, blocked (any tile size) and blocked_parallel (any
+        // thread count) produce bitwise-equal logits, caches and
+        // verification argmaxes on a mixed prefill/decode/padded batch.
+        let base = run_mixed("naive", 0, 64);
+        for (mode, threads, block_kv) in [
+            ("blocked", 0, 1),
+            ("blocked", 0, 4),
+            ("blocked", 0, 64),
+            ("blocked_parallel", 1, 4),
+            ("blocked_parallel", 2, 4),
+            ("blocked_parallel", 3, 16),
+        ] {
+            let got = run_mixed(mode, threads, block_kv);
+            assert_eq!(base, got, "mode {mode} t={threads} bk={block_kv}");
         }
     }
 

@@ -4,8 +4,19 @@
 //! Jobs are `FnOnce` closures dispatched over an MPMC channel built from
 //! `std::sync::mpsc` + a mutexed receiver; completion is tracked with a
 //! `WaitGroup`-style counter so callers can block on a batch of jobs.
+//!
+//! ## Panic propagation
+//!
+//! A panicking job must not hang the caller or kill a worker: each job
+//! runs under `catch_unwind`, the pending counter is decremented no
+//! matter how the job exits, and a sticky panic flag is re-raised from
+//! [`ThreadPool::wait`] on the *caller's* thread.  [`ThreadPool::map`]
+//! waits internally, so a panic inside any mapped closure propagates to
+//! the `map` caller instead of deadlocking the batch — the contract the
+//! engine's parallel tick path relies on.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -17,6 +28,7 @@ pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
     pending: Arc<(Mutex<usize>, Condvar)>,
+    panicked: Arc<AtomicBool>,
 }
 
 impl ThreadPool {
@@ -26,10 +38,12 @@ impl ThreadPool {
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let panicked = Arc::new(AtomicBool::new(false));
         let workers = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 let pending = Arc::clone(&pending);
+                let panicked = Arc::clone(&panicked);
                 std::thread::Builder::new()
                     .name(format!("pool-{i}"))
                     .spawn(move || loop {
@@ -39,7 +53,12 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
+                                // Catch the panic so the worker survives
+                                // and the decrement below always runs —
+                                // otherwise `wait()` hangs forever.
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panicked.store(true, Ordering::SeqCst);
+                                }
                                 let (lock, cv) = &*pending;
                                 let mut p = lock.lock().unwrap();
                                 *p -= 1;
@@ -57,6 +76,7 @@ impl ThreadPool {
             tx: Some(tx),
             workers,
             pending,
+            panicked,
         }
     }
 
@@ -73,12 +93,18 @@ impl ThreadPool {
             .expect("worker channel closed");
     }
 
-    /// Block until every submitted job has finished.
+    /// Block until every submitted job has finished.  If any job
+    /// panicked since the last `wait`, the panic is re-raised here (the
+    /// flag is cleared first, so the pool stays usable afterwards).
     pub fn wait(&self) {
         let (lock, cv) = &*self.pending;
         let mut p = lock.lock().unwrap();
         while *p > 0 {
             p = cv.wait(p).unwrap();
+        }
+        drop(p);
+        if self.panicked.swap(false, Ordering::SeqCst) {
+            panic!("thread pool job panicked (propagated by ThreadPool::wait)");
         }
     }
 
@@ -87,7 +113,13 @@ impl ThreadPool {
         self.workers.len()
     }
 
-    /// Map a function over items in parallel, preserving order.
+    /// Map a function over items in parallel, preserving input order.
+    ///
+    /// Order is structural, not scheduling-dependent: each job writes
+    /// its result into the slot for its *input index*, so however the
+    /// workers interleave, `out[i] == f(items[i])`.  A panic in any
+    /// `f(item)` propagates to this caller via the internal [`wait`]
+    /// (`Self::wait`) rather than hanging the batch.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -188,6 +220,51 @@ mod tests {
             });
         }
         drop(pool); // must not hang; jobs may or may not all run before close
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| pool.wait()));
+        assert!(err.is_err(), "wait() must re-raise the worker panic");
+        // The flag is cleared and the workers survived: the pool keeps
+        // executing jobs and a clean batch waits cleanly.
+        let counter = Arc::new(Counter::new());
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.add(1);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.get(), 8);
+    }
+
+    #[test]
+    fn map_propagates_worker_panic() {
+        let pool = ThreadPool::new(3);
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map((0..10).collect::<Vec<u64>>(), |x| {
+                if x == 7 {
+                    panic!("poisoned item");
+                }
+                x
+            })
+        }));
+        assert!(err.is_err(), "map must propagate the item panic");
+    }
+
+    #[test]
+    fn map_preserves_order_under_contention() {
+        // Deterministically jittered job durations force out-of-order
+        // completion; results must still land at their input index.
+        let pool = ThreadPool::new(4);
+        let out = pool.map((0..64).collect::<Vec<u64>>(), |x| {
+            std::thread::sleep(std::time::Duration::from_micros((x * 37) % 1100));
+            x * 3 + 1
+        });
+        assert_eq!(out, (0..64).map(|x| x * 3 + 1).collect::<Vec<u64>>());
     }
 
     #[test]

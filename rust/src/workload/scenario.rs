@@ -12,13 +12,14 @@
 //!
 //! Quick mode ([`Scale::quick`], from `FLASHMLA_BENCH_QUICK`) shrinks
 //! request counts and the context ladder so CI replays every scenario in
-//! milliseconds.  Full mode caps the ladder at 4096 tokens rather than
-//! the paper's 64K: the scalar reference backend is a step-count proxy,
-//! not a wall-clock device, and the ladder's *shape* (geometric in
-//! kv_len) is what the trajectory tracks (ROADMAP item 3 is the fast
-//! kernel that will make 64K feasible).
+//! milliseconds.  Full mode runs the ladder out to the paper's 64K:
+//! the `blocked_parallel` kernel fast path (`crate::kernels`, ROADMAP
+//! item 3) makes the top rungs feasible where the seed's scalar
+//! reference backend capped out at 4096.  Quick mode keeps the seed's
+//! `naive` dispatch so CI also replays the unoptimized path.
 
 use crate::coordinator::EngineConfig;
+use crate::kernels::{KernelConfig, KernelMode};
 use crate::prefill::PrefillConfig;
 use crate::runtime::ReferenceModelConfig;
 use crate::spec::SpecConfig;
@@ -53,12 +54,14 @@ impl Scale {
     }
 
     /// The kv_len ladder for the long-context scenario (geometric, after
-    /// the paper's Figure-1 sweep; scaled to the reference backend).
+    /// the paper's Figure-1 sweep).  Full mode reaches the paper's 64K
+    /// endpoint on the blocked-parallel fast path; quick keeps two tiny
+    /// rungs so CI replays the scenario in milliseconds.
     pub fn kv_ladder(&self) -> Vec<usize> {
         if self.quick {
             vec![128, 256]
         } else {
-            vec![512, 1024, 2048, 4096]
+            vec![512, 1024, 2048, 4096, 8192, 16384, 32768, 65536]
         }
     }
 }
@@ -228,6 +231,17 @@ fn build_long_context(scale: Scale, seed: u64) -> ScenarioSetup {
     const MAX_NEW: usize = 8;
     const BLOCK: usize = 16;
     let ladder = scale.kv_ladder();
+    // Full mode climbs to 64K contexts, which is only tractable on the
+    // blocked-parallel fast path; quick mode keeps the seed's naive
+    // dispatch so the unoptimized path stays exercised in CI.
+    let kernels = if scale.quick {
+        KernelConfig::default()
+    } else {
+        KernelConfig {
+            mode: KernelMode::BlockedParallel,
+            ..KernelConfig::default()
+        }
+    };
     let mut rng = Rng::new(seed);
     // One document per rung, arriving back to back: context (prompt +
     // generation) lands exactly on the rung, so each request exercises
@@ -263,6 +277,7 @@ fn build_long_context(scale: Scale, seed: u64) -> ScenarioSetup {
                 chunk_tokens: 64,
                 ..PrefillConfig::default()
             },
+            kernels: kernels.clone(),
             ..EngineConfig::default()
         },
         trace: WorkloadTrace { requests }.sorted(),
@@ -277,6 +292,7 @@ fn build_long_context(scale: Scale, seed: u64) -> ScenarioSetup {
             ),
             ("max_new".into(), MAX_NEW.to_string()),
             ("chunk_tokens".into(), "64".into()),
+            ("kernels".into(), kernels.mode.as_str().into()),
         ],
     }
 }
@@ -413,6 +429,17 @@ mod tests {
                 assert!(keys.contains(&"scenario") && keys.contains(&"seed"));
             }
         }
+    }
+
+    #[test]
+    fn long_context_ladder_reaches_64k_on_fast_path() {
+        let full = find("long_context_ladder").unwrap().build(Scale::full());
+        assert_eq!(*Scale::full().kv_ladder().last().unwrap(), 65536);
+        assert_eq!(full.engine.kernels.mode, KernelMode::BlockedParallel);
+        // Quick stays on the seed path with its tiny rungs.
+        let quick = find("long_context_ladder").unwrap().build(Scale::quick());
+        assert_eq!(quick.engine.kernels.mode, KernelMode::Naive);
+        assert_eq!(Scale::quick().kv_ladder(), vec![128, 256]);
     }
 
     #[test]

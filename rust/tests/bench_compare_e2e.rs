@@ -107,6 +107,47 @@ fn loose_thresholds_unbreach_the_same_delta() {
     assert_eq!(out.status.code(), Some(0));
 }
 
+/// A bench document carrying one wall-clock-derived kernel-throughput
+/// metric, as `benches/attention_cpu.rs` emits.
+fn gflops_doc(commit: &str, gflops: f64) -> String {
+    format!(
+        r#"{{
+  "bench": "attention_cpu",
+  "meta": {{"git_commit": "{commit}", "quick": true, "config": {{}}}},
+  "cases": [
+    {{"name": "blocked n=2048", "iters": 20, "mean_us": 100.0,
+      "median_us": 100.0, "p99_us": 100.0, "stddev_us": 1.0, "min_us": 1.0}}
+  ],
+  "metrics": {{
+    "attention_gflops_blocked_n2048": {gflops},
+    "attention_gflops_measured": {gflops}
+  }},
+  "serving_metrics": null
+}}"#
+    )
+}
+
+#[test]
+fn attention_gflops_collapse_breaches_but_jitter_does_not() {
+    // The GFLOP/s family is wall-clock-derived, so it gates on the
+    // generous time threshold (2.0x): run-to-run jitter inside that
+    // band must pass, a real collapse must fail.
+    let dir = scratch("gflops");
+    let base = write(&dir, "base.json", &gflops_doc("aaa1111", 12.0));
+    let jitter = write(&dir, "jitter.json", &gflops_doc("bbb2222", 8.0));
+    let out = run(&[base.to_str().unwrap(), jitter.to_str().unwrap()]);
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "1.5x gflops jitter must not gate: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let collapsed = write(&dir, "collapsed.json", &gflops_doc("ccc3333", 4.0));
+    let out = run(&[base.to_str().unwrap(), collapsed.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1), "3x gflops collapse must gate");
+    assert!(stdout(&out).contains("attention_gflops"));
+}
+
 #[test]
 fn malformed_document_exits_two() {
     let dir = scratch("malformed");

@@ -1,0 +1,218 @@
+//! Kernel parity suite: the fast-path attention family must agree with
+//! the scalar references everywhere — bitwise within the family, to
+//! tolerance against the seed kernels, and tightly against an f64
+//! oracle — and the engine's outputs must be bit-identical across every
+//! `[engine.kernels]` mode.  See docs/attention-kernels.md for the
+//! determinism contract these tests pin.
+
+use flashmla_etap::attention::{etap_f32, naive_f32, naive_f64, online_f32, AttnShape};
+use flashmla_etap::coordinator::{Engine, EngineConfig, EngineReport, GenerationRequest};
+use flashmla_etap::kernels::attn::{blocked_f32, blocked_parallel_f32, naive8_f32};
+use flashmla_etap::kernels::{KernelConfig, KernelMode};
+use flashmla_etap::prop_assert;
+use flashmla_etap::runtime::ReferenceModelConfig;
+use flashmla_etap::spec::SpecConfig;
+use flashmla_etap::testing::{forall, Config};
+use flashmla_etap::util::rng::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Random shape: dims deliberately straddle multiples of the 8-lane
+/// width so remainder paths stay covered.  `dv <= d` per the MLA latent
+/// layout contract (`AttnShape::validate`).
+fn random_shape(g: &mut flashmla_etap::testing::Gen) -> AttnShape {
+    let d = g.usize(1..40);
+    AttnShape {
+        h: g.usize(1..5),
+        d,
+        dv: g.usize(1..d + 1),
+        n: g.usize(1..200),
+    }
+}
+
+#[test]
+fn property_family_is_bitwise_identical() {
+    // naive8 ≡ blocked ≡ blocked_parallel, bit for bit, at every block
+    // size and thread count: the family shares one reduction order.
+    forall(Config::default().cases(60), |g| {
+        let shape = random_shape(g);
+        let mut rng = Rng::new(0xFA51 + g.case_index as u64);
+        let q = rng.normal_vec(shape.q_len());
+        let cache = rng.normal_vec(shape.cache_len());
+        let scale = g.f32(0.01..1.0);
+        let block_kv = g.usize(1..80);
+        let threads = g.usize(1..5);
+        let reference = naive8_f32(&shape, &q, &cache, scale);
+        let blocked = blocked_f32(&shape, &q, &cache, scale, block_kv);
+        let parallel = blocked_parallel_f32(&shape, &q, &cache, scale, block_kv, threads);
+        prop_assert!(
+            bits(&reference) == bits(&blocked),
+            "blocked diverged from naive8 (shape {shape:?}, block_kv {block_kv})"
+        );
+        prop_assert!(
+            bits(&reference) == bits(&parallel),
+            "blocked_parallel diverged (shape {shape:?}, block_kv {block_kv}, \
+             threads {threads})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn property_family_matches_scalar_kernels_within_tolerance() {
+    // The 8-lane family uses a different (fixed) reduction order than
+    // the scalar seed kernels, so cross-family comparison is tolerance,
+    // not bits: naive ≈ online ≈ etap ≈ blocked at 1e-4 everywhere.
+    forall(Config::default().cases(40), |g| {
+        let shape = random_shape(g);
+        let mut rng = Rng::new(0xFA52 + g.case_index as u64);
+        let q = rng.normal_vec(shape.q_len());
+        let cache = rng.normal_vec(shape.cache_len());
+        let scale = g.f32(0.01..1.0);
+        let block_kv = g.usize(1..80);
+        let scalar = naive_f32(&shape, &q, &cache, scale);
+        let online = online_f32(&shape, &q, &cache, scale, block_kv);
+        let etap = etap_f32(&shape, &q, &cache, scale, block_kv);
+        let fast = blocked_f32(&shape, &q, &cache, scale, block_kv);
+        for (i, s) in scalar.iter().enumerate() {
+            prop_assert!(
+                (s - online[i]).abs() < 1e-4,
+                "online[{i}] {} vs naive {} (shape {shape:?})",
+                online[i],
+                s
+            );
+            prop_assert!(
+                (s - etap[i]).abs() < 1e-4,
+                "etap[{i}] {} vs naive {} (shape {shape:?})",
+                etap[i],
+                s
+            );
+            prop_assert!(
+                (s - fast[i]).abs() < 1e-4,
+                "blocked[{i}] {} vs naive {} (shape {shape:?})",
+                fast[i],
+                s
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_family_tracks_f64_oracle() {
+    // RMSE against the f64 reference must stay at f32-roundoff scale —
+    // the blocked restructure must not amplify error.
+    forall(Config::default().cases(25), |g| {
+        let shape = random_shape(g);
+        let mut rng = Rng::new(0xFA53 + g.case_index as u64);
+        let q = rng.normal_vec(shape.q_len());
+        let cache = rng.normal_vec(shape.cache_len());
+        let scale = g.f32(0.01..1.0);
+        let oracle = naive_f64(&shape, &q, &cache, scale);
+        let fast = blocked_f32(&shape, &q, &cache, scale, g.usize(1..80));
+        let mut se = 0.0f64;
+        for (a, b) in fast.iter().zip(&oracle) {
+            se += (*a as f64 - b) * (*a as f64 - b);
+        }
+        let rmse = (se / oracle.len() as f64).sqrt();
+        prop_assert!(rmse < 1e-5, "RMSE {rmse:e} vs f64 oracle (shape {shape:?})");
+        Ok(())
+    });
+}
+
+#[test]
+fn paper_shape_parity_at_scale() {
+    // One deterministic large case at the paper geometry: all five
+    // kernels on the same inputs, family bitwise, cross-family 1e-4.
+    let shape = AttnShape::paper(384);
+    let mut rng = Rng::new(77);
+    let q = rng.normal_vec(shape.q_len());
+    let cache = rng.normal_vec(shape.cache_len());
+    let scale = 1.0 / (192.0f32).sqrt();
+    let scalar = naive_f32(&shape, &q, &cache, scale);
+    let fast = blocked_f32(&shape, &q, &cache, scale, 64);
+    let parallel = blocked_parallel_f32(&shape, &q, &cache, scale, 64, 3);
+    assert_eq!(bits(&fast), bits(&parallel));
+    assert_eq!(bits(&fast), bits(&naive8_f32(&shape, &q, &cache, scale)));
+    for (a, b) in scalar.iter().zip(&fast) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+// ---- engine-level bit-identity across `[engine.kernels]` modes ----
+
+fn model() -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab: 16,
+        n_layers: 2,
+        latent_dim: 8,
+        seed: 21,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+fn run_engine(kernels: KernelConfig) -> EngineReport {
+    // Mixed regime: chunked prefill plus speculation on a small-vocab
+    // cyclic model, several slots — the full tick pipeline.
+    let mut e = Engine::reference(
+        model(),
+        EngineConfig {
+            max_slots: 4,
+            kv_blocks: 256,
+            block_size: 8,
+            spec: SpecConfig {
+                enabled: true,
+                lookback: 64,
+                max_draft: 4,
+                ..SpecConfig::default()
+            },
+            kernels,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(0xE2E);
+    for _ in 0..6 {
+        let len = 8 + rng.range(0, 24) as usize;
+        let p: Vec<i32> = (0..len).map(|_| rng.range(1, 16) as i32).collect();
+        e.submit(GenerationRequest::new(p, 32));
+    }
+    e.run_to_completion().unwrap()
+}
+
+#[test]
+fn engine_outputs_bit_identical_across_kernel_modes() {
+    // The dispatcher's core contract: `naive`, `blocked` and
+    // `blocked_parallel` produce the same tokens, the same step count
+    // and the same speculation telemetry on a mixed prefill+spec
+    // workload — mode selection is invisible to serving behavior.
+    let base = run_engine(KernelConfig::default());
+    for (mode, threads, block_kv) in [
+        (KernelMode::Blocked, 0, 1),
+        (KernelMode::Blocked, 0, 64),
+        (KernelMode::BlockedParallel, 1, 16),
+        (KernelMode::BlockedParallel, 3, 4),
+    ] {
+        let other = run_engine(KernelConfig {
+            mode,
+            threads,
+            block_kv,
+        });
+        assert_eq!(
+            base.outputs, other.outputs,
+            "outputs diverged in {mode:?} (threads {threads}, block_kv {block_kv})"
+        );
+        assert_eq!(base.steps, other.steps, "step schedule diverged in {mode:?}");
+        assert_eq!(
+            base.metrics.spec_accepted, other.metrics.spec_accepted,
+            "speculation telemetry diverged in {mode:?}"
+        );
+        assert_eq!(
+            base.metrics.tokens_generated, other.metrics.tokens_generated,
+            "token accounting diverged in {mode:?}"
+        );
+    }
+}
