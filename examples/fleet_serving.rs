@@ -1,0 +1,309 @@
+//! Fleet serving: the multi-engine executor's headline demo.
+//!
+//! N requests over M hot system prompts run through a 4-engine
+//! [`FleetExecutor`] twice — replication off, then on — plus a solo
+//! oracle and an overload burst.  Four claims are asserted end to end:
+//!
+//! * **Bit-identity** — every fleet-served token stream equals the same
+//!   request served alone on a solo engine (fleet = pure placement).
+//! * **Replication adopts** — hot prefixes get copied to non-donor
+//!   engines (≥ 1 replication pass lands).
+//! * **Replication pays** — the replicated run spends strictly fewer
+//!   prefill tokens than the affinity-only run: spilled requests hit
+//!   replicas instead of re-prefilling the shared head.
+//! * **Overload sheds** — a burst past the queue bound surfaces as
+//!   `Rejected{Backpressure}` events, and the survivors still serve.
+//!
+//!     cargo run --release --example fleet_serving
+//!
+//! `FLASHMLA_BENCH_QUICK=1` caps the workload for CI smoke runs.
+
+use std::collections::BTreeMap;
+
+use flashmla_etap::coordinator::{
+    Engine, EngineConfig, GenerationRequest, RejectReason, StepEvent,
+};
+use flashmla_etap::fleet::{FleetConfig, FleetExecutor};
+use flashmla_etap::runtime::ReferenceModelConfig;
+use flashmla_etap::util::argparse::ArgParser;
+use flashmla_etap::util::rng::Rng;
+
+const BLOCK: usize = 8;
+const SYS_LEN: usize = 24; // 3 blocks
+const ENGINES: usize = 4;
+
+fn model() -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        kv_buckets: vec![32, 64, 128],
+        ..ReferenceModelConfig::default()
+    }
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        max_slots: 4,
+        kv_blocks: 128,
+        block_size: BLOCK,
+        prefix_cache: true,
+        ..EngineConfig::default()
+    }
+}
+
+fn fleet_cfg(replication: bool) -> FleetConfig {
+    FleetConfig {
+        engines: ENGINES,
+        engine: engine_cfg(),
+        replication,
+        replicate_hot_after: 2,
+        max_queue_per_engine: 64,
+        spill_threshold: Some(2),
+        ..FleetConfig::default()
+    }
+}
+
+struct Workload {
+    prompts: Vec<Vec<i32>>,
+    budgets: Vec<usize>,
+    tenants: Vec<&'static str>,
+}
+
+/// `n` requests round-robining over `m` hot system prompts, each with a
+/// unique user suffix and a tenant label.
+fn synth_workload(n: usize, m: usize, seed: u64, vocab: usize) -> Workload {
+    let mut rng = Rng::new(seed);
+    let systems: Vec<Vec<i32>> = (0..m)
+        .map(|_| {
+            (0..SYS_LEN)
+                .map(|_| rng.range(1, vocab as u64) as i32)
+                .collect()
+        })
+        .collect();
+    let tenant_names = ["acme", "globex", "initech"];
+    let mut w = Workload {
+        prompts: Vec::new(),
+        budgets: Vec::new(),
+        tenants: Vec::new(),
+    };
+    for i in 0..n {
+        let mut p = systems[i % m].clone();
+        let suffix = rng.range(3, 9) as usize;
+        p.extend((0..suffix).map(|_| rng.range(1, vocab as u64) as i32));
+        w.prompts.push(p);
+        w.budgets.push(rng.range(6, 12) as usize);
+        w.tenants.push(tenant_names[i % tenant_names.len()]);
+    }
+    w
+}
+
+/// Solo oracle: the token stream of one request served alone.
+fn solo_stream(prompt: &[i32], budget: usize) -> anyhow::Result<Vec<i32>> {
+    let mut e = Engine::reference(model(), engine_cfg())?;
+    let h = e.submit(GenerationRequest::new(prompt.to_vec(), budget));
+    let mut out = Vec::new();
+    while e.has_work() {
+        e.step()?;
+        for ev in e.poll_events() {
+            if let StepEvent::Token { id, token } = ev {
+                if id == h.id() {
+                    out.push(token);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+struct FleetRun {
+    /// Request index (submission order) → token stream.
+    streams: Vec<Vec<i32>>,
+    prefill_tokens: u64,
+    prefix_hit_tokens: u64,
+    replications: u64,
+    replication_hits: u64,
+    ticks: u64,
+}
+
+/// Serve the workload on a fleet: two warm-up waves (one request per
+/// template each — the second marks every template hot), then the rest
+/// as one burst so affinity spills engage.
+fn run_fleet(w: &Workload, replication: bool) -> anyhow::Result<FleetRun> {
+    let mut fleet = FleetExecutor::reference(model(), fleet_cfg(replication))?;
+    let m = w
+        .prompts
+        .iter()
+        .map(|p| &p[..SYS_LEN])
+        .collect::<std::collections::BTreeSet<_>>()
+        .len();
+    let mut id2idx: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut streams: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+    let mut ticks = 0u64;
+
+    let drive = |fleet: &mut FleetExecutor,
+                 streams: &mut BTreeMap<u64, Vec<i32>>,
+                 ticks: &mut u64|
+     -> anyhow::Result<()> {
+        while fleet.has_work() {
+            fleet.step()?;
+            *ticks += 1;
+            for ev in fleet.poll_events() {
+                if let StepEvent::Token { id, token } = ev.event {
+                    streams.entry(id).or_default().push(token);
+                }
+            }
+            anyhow::ensure!(*ticks < 1_000_000, "fleet did not drain");
+        }
+        Ok(())
+    };
+
+    // Waves 1 and 2: requests 0..m and m..2m, each drained to idle so
+    // the donors' chains land and the hot count crosses the threshold.
+    let waves = (2 * m).min(w.prompts.len());
+    for wave in 0..2 {
+        for i in (wave * m..(wave + 1) * m).take_while(|&i| i < w.prompts.len()) {
+            let h = fleet.submit_for(
+                w.tenants[i],
+                GenerationRequest::new(w.prompts[i].clone(), w.budgets[i]),
+            )?;
+            id2idx.insert(h.id(), i);
+        }
+        drive(&mut fleet, &mut streams, &mut ticks)?;
+    }
+    // The burst: everything else at once.
+    for i in waves..w.prompts.len() {
+        let h = fleet.submit_for(
+            w.tenants[i],
+            GenerationRequest::new(w.prompts[i].clone(), w.budgets[i]),
+        )?;
+        id2idx.insert(h.id(), i);
+    }
+    drive(&mut fleet, &mut streams, &mut ticks)?;
+    anyhow::ensure!(fleet.shed() == 0, "headroom config must not shed");
+
+    let mut by_idx = vec![Vec::new(); w.prompts.len()];
+    for (id, s) in streams {
+        by_idx[id2idx[&id]] = s;
+    }
+    let metrics = fleet.merged_metrics();
+    Ok(FleetRun {
+        streams: by_idx,
+        prefill_tokens: metrics.prefill_tokens,
+        prefix_hit_tokens: metrics.prefix.hit_tokens,
+        replications: fleet.replications(),
+        replication_hits: fleet.replication_hits(),
+        ticks,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let p = ArgParser::new(
+        "fleet_serving",
+        "multi-engine fleet demo: affinity routing, hot-prefix replication, QoS backpressure",
+    )
+    .opt("requests", Some("48"), "number of requests (≥ 8)")
+    .opt("system-prompts", Some("2"), "distinct hot system prompts")
+    .opt("seed", Some("42"), "rng seed");
+    let a = p.parse_or_exit();
+    let quick = std::env::var("FLASHMLA_BENCH_QUICK").is_ok();
+    let mut n = a.get_usize("requests").unwrap();
+    if quick {
+        n = n.min(16);
+    }
+    let m = a.get_usize("system-prompts").unwrap();
+    anyhow::ensure!(n >= 4 * m, "need at least two waves plus a burst");
+
+    let w = synth_workload(n, m, a.get_u64("seed").unwrap(), 512);
+    println!(
+        "{n} requests over {m} hot system prompts of {SYS_LEN} tokens \
+         ({} blocks of {BLOCK}), fleet of {ENGINES} engines\n",
+        SYS_LEN / BLOCK
+    );
+
+    let off = run_fleet(&w, false)?;
+    println!(
+        "[affinity only] prefill {} tok, prefix hits {} tok, {} ticks",
+        off.prefill_tokens, off.prefix_hit_tokens, off.ticks
+    );
+    let on = run_fleet(&w, true)?;
+    println!(
+        "[+replication]  prefill {} tok, prefix hits {} tok, {} ticks, \
+         {} replication passes, {} replica hits",
+        on.prefill_tokens, on.prefix_hit_tokens, on.ticks, on.replications, on.replication_hits
+    );
+    println!();
+
+    // 1. Fleet = pure placement: streams bit-identical to the solo
+    //    oracle, replication on or off.
+    for i in 0..n {
+        let want = solo_stream(&w.prompts[i], w.budgets[i])?;
+        anyhow::ensure!(
+            off.streams[i] == want && on.streams[i] == want,
+            "request {i}: fleet stream diverged from the solo oracle"
+        );
+    }
+    println!("✓ all {n} token streams bit-identical to the solo oracle (both runs)");
+
+    // 2. Hot prefixes replicated across engines.
+    anyhow::ensure!(
+        on.replications >= 1,
+        "expected at least one replication pass to adopt blocks"
+    );
+    println!(
+        "✓ {} replication passes adopted blocks on non-donor engines",
+        on.replications
+    );
+
+    // 3. Replication pays: spilled requests hit replicas instead of
+    //    re-prefilling the shared head.
+    anyhow::ensure!(
+        on.prefill_tokens < off.prefill_tokens,
+        "replication did not reduce prefill work ({} vs {})",
+        on.prefill_tokens,
+        off.prefill_tokens
+    );
+    println!(
+        "✓ prefill tokens {} → {} ({} saved by replicas)",
+        off.prefill_tokens,
+        on.prefill_tokens,
+        off.prefill_tokens - on.prefill_tokens
+    );
+
+    // 4. Overload sheds with Backpressure, survivors still serve.
+    let mut tight = fleet_cfg(false);
+    tight.max_queue_per_engine = 1;
+    let mut fleet = FleetExecutor::reference(model(), tight)?;
+    for i in 0..3 * ENGINES {
+        let idx = i % n;
+        fleet.submit_for(
+            w.tenants[idx],
+            GenerationRequest::new(w.prompts[idx].clone(), w.budgets[idx]),
+        )?;
+    }
+    let shed = fleet.shed();
+    anyhow::ensure!(shed >= 1, "burst past the queue bound must shed");
+    let backpressure = fleet
+        .poll_events()
+        .iter()
+        .filter(|e| {
+            matches!(
+                e.event,
+                StepEvent::Rejected {
+                    reason: RejectReason::Backpressure,
+                    ..
+                }
+            )
+        })
+        .count() as u64;
+    anyhow::ensure!(backpressure == shed, "every shed surfaces as Backpressure");
+    fleet.run_until_idle()?;
+    let served = fleet
+        .take_finished()
+        .iter()
+        .filter(|f| !f.tokens.is_empty())
+        .count() as u64;
+    anyhow::ensure!(served == 3 * ENGINES as u64 - shed, "survivors all serve");
+    println!(
+        "✓ overload burst: {shed} of {} submissions shed with Backpressure, {served} served",
+        3 * ENGINES
+    );
+    Ok(())
+}

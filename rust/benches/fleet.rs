@@ -1,0 +1,69 @@
+//! Bench: fleet serving — engine-count × replication sweep over the
+//! `fleet_tenants` scenario.
+//!
+//! Each cell replays the same multi-tenant shared-prefix trace through
+//! [`run_setup_fleet`] on a fleet of 1, 2, or 4 engines, with hot-prefix
+//! replication off (pure affinity routing) and on.  Per cell it records:
+//!
+//! * a timed case (`fleet <cell>`) — wall time of one full replay;
+//! * the deterministic stat columns from `ScenarioStats::metric_pairs`,
+//!   prefixed with the cell name (`fleet_tenants_e4_repl.…`) so
+//!   `bench_compare` aligns them across runs;
+//! * the fleet counters that tell the placement story: sheds,
+//!   replication passes, replica hits.
+//!
+//! `serving_metrics` carries every cell's engines merged through
+//! `ServingMetrics::merge` — the cross-engine totals the fleet API
+//! exposes as `merged_metrics()`.
+//!
+//! Emits `BENCH_fleet.json` (to `$FLASHMLA_BENCH_OUT` or `.`).
+//!
+//!     FLASHMLA_BENCH_QUICK=1 cargo bench --bench fleet
+
+use flashmla_etap::bench::Bencher;
+use flashmla_etap::coordinator::ServingMetrics;
+use flashmla_etap::fleet::FleetConfig;
+use flashmla_etap::workload::{find, run_setup_fleet, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    let scale = Scale::from_env();
+    let scenario = find("fleet_tenants").expect("fleet_tenants is registered");
+    let setup = scenario.build(scale);
+
+    let mut merged = ServingMetrics::default();
+    for engines in [1usize, 2, 4] {
+        for replication in [false, true] {
+            let cell = format!(
+                "fleet_tenants_e{engines}_{}",
+                if replication { "repl" } else { "affinity" }
+            );
+            let cfg = FleetConfig {
+                engines,
+                replication,
+                ..FleetConfig::default()
+            };
+            b.bench(&format!("fleet {cell}"), || {
+                run_setup_fleet(&cell, &setup, &cfg)
+                    .expect("fleet scenario must run")
+                    .stats
+                    .tokens
+            });
+            // One more (untimed) replay for the stat columns — same
+            // trace, same numbers as every timed iteration.
+            let outcome = run_setup_fleet(&cell, &setup, &cfg)?;
+            for (key, value) in outcome.stats.metric_pairs() {
+                b.record_metric(&key, value);
+            }
+            merged.merge(&outcome.metrics);
+        }
+    }
+    for (key, value) in &setup.config {
+        b.record_config(&format!("fleet_tenants.{key}"), value.clone());
+    }
+    b.record_serving_metrics(&merged);
+
+    let path = b.emit_json("fleet")?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}

@@ -211,7 +211,10 @@ pub struct Engine {
     timelines: HashMap<RequestId, RequestTimeline>,
     /// Requests whose prompt prefix is already in the tree.
     inserted: HashSet<RequestId>,
-    runners: HashMap<(usize, usize), Box<dyn StepRunner>>,
+    // `+ Send` so a whole `Engine` moves across threads — the fleet
+    // executor ticks N engines concurrently via `ThreadPool::map`, moving
+    // each engine to a worker and back every tick.
+    runners: HashMap<(usize, usize), Box<dyn StepRunner + Send>>,
     live: Option<LiveBatch>,
     metrics: ServingMetrics,
     outputs: HashMap<RequestId, Vec<i32>>,
@@ -1355,7 +1358,7 @@ impl Engine {
 
         // (c) Load (cached) the runner for this bucket pair.
         if !self.runners.contains_key(&(batch_bucket, kv_bucket)) {
-            let runner: Box<dyn StepRunner> = match &self.backend {
+            let runner: Box<dyn StepRunner + Send> = match &self.backend {
                 EngineBackend::Pjrt(rt) => Box::new(DecodeRunner::best(
                     rt,
                     &self.cfg.kernel,
@@ -1539,5 +1542,78 @@ impl Engine {
     /// still resolve.
     pub fn timeline(&self, h: RequestHandle) -> Option<&RequestTimeline> {
         self.timelines.get(&h.id())
+    }
+
+    /// Requests waiting in the admission queue (the fleet executor's
+    /// per-engine load gauge and backpressure signal).
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.queued()
+    }
+
+    /// Requests currently holding batch slots.
+    pub fn active_requests(&self) -> usize {
+        self.batcher.active().len()
+    }
+
+    /// Tokens per paged KV block (routing fingerprints and replication
+    /// alignment use the same granularity as the tree).
+    pub fn block_size(&self) -> usize {
+        self.cfg.block_size
+    }
+
+    /// Longest block-aligned prefix of `prompt` this engine's tree already
+    /// caches, capped the same way admission caps it (at least one prefill
+    /// step always remains).  Read-only: no LRU bump, no stats — fleet
+    /// admission charges hit-heavy requests only their unshared suffix
+    /// without perturbing the engine's own hit accounting.  0 when the
+    /// prefix cache is disabled.
+    pub fn peek_prefix_tokens(&self, prompt: &[i32]) -> usize {
+        match &self.prefix {
+            Some(tree) => {
+                let cap = tree.usable_prefix_len(prompt.len());
+                tree.peek_match(&prompt[..cap])
+            }
+            None => 0,
+        }
+    }
+
+    /// Donor side of fleet prefix replication: the block-aligned tokens of
+    /// `prompt`'s cached prefix plus the latents backing them, flattened
+    /// position by position (`tokens × n_layers·latent_dim` values).
+    ///
+    /// Block ids are store-local, so replication ships *data*: the chain
+    /// is viewed through a temporary refcounted adoption
+    /// (`adopt_chain`/`free_seq` — net zero refcounts) and copied out.
+    /// Read-only with respect to the tree (no LRU bump, no stats).
+    /// `None` when the tree is disabled or holds no prefix of `prompt`.
+    pub fn export_prefix_latents(&mut self, prompt: &[i32]) -> Option<(Vec<i32>, Vec<f32>)> {
+        let m = {
+            let tree = self.prefix.as_ref()?;
+            let cap = tree.usable_prefix_len(prompt.len());
+            tree.peek_chain(&prompt[..cap])
+        };
+        if m.tokens == 0 {
+            return None;
+        }
+        let seq = self.store.adopt_chain(&m.blocks, m.tokens);
+        let mut latents = Vec::with_capacity(m.tokens * self.n_layers * self.latent_dim);
+        for pos in 0..m.tokens {
+            latents.extend_from_slice(self.store.token_latent(seq, pos));
+        }
+        self.store.free_seq(seq);
+        Some((prompt[..m.tokens].to_vec(), latents))
+    }
+
+    /// Target side of fleet prefix replication: materialize a chain
+    /// exported from another engine (`export_prefix_latents`) into this
+    /// engine's paged store and radix tree.  Best-effort — returns the
+    /// number of blocks newly adopted, 0 when the tree is disabled, the
+    /// prefix is already cached, or the pool has no room for the copy
+    /// (replication never starves admission).
+    pub fn adopt_replicated_prefix(&mut self, tokens: &[i32], latents: &[f32]) -> usize {
+        let Some(tree) = self.prefix.as_mut() else {
+            return 0;
+        };
+        crate::prefixcache::replicate_chain(tree, &mut self.store, tokens, latents)
     }
 }

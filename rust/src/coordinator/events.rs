@@ -32,6 +32,11 @@ pub enum RejectReason {
     KvCapacity,
     /// Queue drained server-side (`Engine::abort_queued`).
     Shutdown,
+    /// Fleet-level load shedding: admission would exceed the target
+    /// engine's bounded queue or the tenant's in-flight token budget.
+    /// Overload surfaces here, as an event at submit time, instead of as
+    /// unbounded queue growth.
+    Backpressure,
 }
 
 impl fmt::Display for RejectReason {
@@ -39,6 +44,7 @@ impl fmt::Display for RejectReason {
         match self {
             RejectReason::KvCapacity => write!(f, "kv-capacity"),
             RejectReason::Shutdown => write!(f, "shutdown"),
+            RejectReason::Backpressure => write!(f, "backpressure"),
         }
     }
 }
@@ -79,6 +85,27 @@ pub struct FinishedRequest {
     pub reason: FinishReason,
 }
 
+/// An engine-stamped event from a multi-engine fleet: the same
+/// [`StepEvent`] stream the solo engine emits, tagged with the index of
+/// the engine that produced it.  Ids are fleet-level — the
+/// `FleetExecutor` translates each engine's local ids before stamping —
+/// so one consumer loop can drive any number of engines with the solo
+/// `match` arms unchanged (`docs/fleet-serving.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FleetEvent {
+    /// Index of the engine that emitted (or, for door rejections, would
+    /// have served) the request; stable for the executor's lifetime.
+    pub engine: usize,
+    pub event: StepEvent,
+}
+
+impl FleetEvent {
+    /// The fleet-level request id this event belongs to.
+    pub fn id(&self) -> RequestId {
+        self.event.id()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,5 +136,16 @@ mod tests {
     fn reject_reason_renders() {
         assert_eq!(RejectReason::KvCapacity.to_string(), "kv-capacity");
         assert_eq!(RejectReason::Shutdown.to_string(), "shutdown");
+        assert_eq!(RejectReason::Backpressure.to_string(), "backpressure");
+    }
+
+    #[test]
+    fn fleet_event_stamps_engine_and_forwards_id() {
+        let ev = FleetEvent {
+            engine: 2,
+            event: StepEvent::Token { id: 41, token: 7 },
+        };
+        assert_eq!(ev.engine, 2);
+        assert_eq!(ev.id(), 41);
     }
 }

@@ -18,14 +18,16 @@
 //! * [`engine`] — the event-driven decode loop over the PJRT artifacts
 //!   (chunked prefill, per-request sampling, cancellation, KV bookkeeping
 //!   via the paged latent store);
-//! * [`cluster`] — the simulated 8-GPU head-split topology driving the
-//!   `sim` kernel models at paper scale (64K contexts the CPU cannot run);
 //! * [`metrics`] — TTFT/TPOT/throughput accounting.
+//!
+//! The analytical 8-GPU head-split topology (`ClusterSim`) lives in
+//! [`crate::sim::cluster`] next to the rest of the step-time math; it is
+//! re-exported here for compatibility.  The *real* multi-engine executor
+//! is [`crate::fleet::FleetExecutor`].
 //!
 //! Python never appears here; the engine executes AOT artifacts only.
 
 pub mod batcher;
-pub mod cluster;
 pub mod engine;
 pub mod events;
 pub mod metrics;
@@ -33,14 +35,14 @@ pub mod request;
 pub mod router;
 pub mod sampler;
 
+pub use crate::sim::cluster::{ClusterConfig, ClusterSim, StepBreakdown, TraceReport, TraceRequest};
 pub use batcher::{Batcher, BatcherConfig};
-pub use cluster::{ClusterConfig, ClusterSim, StepBreakdown, TraceReport, TraceRequest};
 pub use engine::{Engine, EngineConfig, EngineReport};
-pub use events::{FinishedRequest, RejectReason, StepEvent};
+pub use events::{FinishedRequest, FleetEvent, RejectReason, StepEvent};
 pub use metrics::ServingMetrics;
 pub use request::{
     FinishReason, GenerationRequest, Request, RequestHandle, RequestId, RequestState,
     SamplingParams, VerifyOutcome,
 };
-pub use router::{AdmitError, PrefixAffinityRouter, Router};
+pub use router::{validate_request, AdmitError, PrefixAffinityRouter, Router};
 pub use sampler::Sampler;

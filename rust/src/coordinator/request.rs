@@ -165,6 +165,18 @@ impl GenerationRequest {
         self
     }
 
+    /// The prompt tokens (read-only).  The fleet executor routes and
+    /// validates against the prompt before the request ever reaches an
+    /// engine, so the builder exposes it.
+    pub fn prompt(&self) -> &[i32] {
+        &self.prompt
+    }
+
+    /// The generation budget (read-only), used for admission charging.
+    pub fn max_new_tokens(&self) -> usize {
+        self.max_new_tokens
+    }
+
     /// Materialize the engine-internal request.
     pub(crate) fn into_request(self, id: RequestId) -> Request {
         let mut r = Request::new(id, self.prompt, self.max_new_tokens);

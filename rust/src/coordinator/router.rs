@@ -1,6 +1,14 @@
 //! Admission router: validates requests against artifact buckets and cache
 //! capacity before they reach the batcher; plus the prefix-affinity
-//! placement policy for the cluster path.
+//! placement policy the fleet executor routes through.
+//!
+//! There is exactly **one** static validation path — [`validate_request`]
+//! — shared by the legacy [`Router::admit`] front door and the fleet
+//! executor's admission (`fleet::FleetExecutor::submit`), so solo and
+//! fleet admission cannot drift apart.  `GenerationRequest`'s builder
+//! asserts the same non-empty/positive invariants as a developer-error
+//! backstop (panics at the call site); the serving paths report them as
+//! [`AdmitError`]s instead.
 
 use std::collections::HashMap;
 
@@ -34,6 +42,37 @@ impl std::fmt::Display for AdmitError {
 
 impl std::error::Error for AdmitError {}
 
+/// Validate a raw `(prompt, max_new_tokens)` pair against the model's
+/// static limits.  Check order (first violation wins): empty prompt,
+/// zero budget, oversize context, out-of-vocab token.  Queue capacity is
+/// a dynamic property of whichever queue the request is headed for, so
+/// the callers ([`Router::admit`], fleet admission) check it after the
+/// static checks pass.
+pub fn validate_request(
+    prompt: &[i32],
+    max_new_tokens: usize,
+    max_context: usize,
+    vocab: usize,
+) -> Result<(), AdmitError> {
+    if prompt.is_empty() {
+        return Err(AdmitError::EmptyPrompt);
+    }
+    if max_new_tokens == 0 {
+        return Err(AdmitError::ZeroBudget);
+    }
+    let needed = prompt.len() + max_new_tokens;
+    if needed > max_context {
+        return Err(AdmitError::ContextTooLong {
+            needed,
+            limit: max_context,
+        });
+    }
+    if let Some(&tok) = prompt.iter().find(|&&t| t < 0 || t as usize >= vocab) {
+        return Err(AdmitError::BadToken { tok, vocab });
+    }
+    Ok(())
+}
+
 /// Stateless admission validator + id allocator.
 pub struct Router {
     max_context: usize,
@@ -56,44 +95,23 @@ impl Router {
         }
     }
 
-    /// Validate and wrap a raw request.
+    /// Validate and wrap a raw request: the shared [`validate_request`]
+    /// checks first, then this queue's capacity.
     pub fn admit(
         &mut self,
         prompt: Vec<i32>,
         max_new_tokens: usize,
         queued_now: usize,
     ) -> Result<Request, AdmitError> {
-        let reject = |e: AdmitError, me: &mut Self| {
-            me.rejected += 1;
-            Err(e)
-        };
-        if prompt.is_empty() {
-            return reject(AdmitError::EmptyPrompt, self);
-        }
-        if max_new_tokens == 0 {
-            return reject(AdmitError::ZeroBudget, self);
+        if let Err(e) = validate_request(&prompt, max_new_tokens, self.max_context, self.vocab) {
+            self.rejected += 1;
+            return Err(e);
         }
         if queued_now >= self.max_queue {
-            return reject(AdmitError::QueueFull { limit: self.max_queue }, self);
-        }
-        let needed = prompt.len() + max_new_tokens;
-        if needed > self.max_context {
-            return reject(
-                AdmitError::ContextTooLong {
-                    needed,
-                    limit: self.max_context,
-                },
-                self,
-            );
-        }
-        if let Some(&tok) = prompt.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
-            return reject(
-                AdmitError::BadToken {
-                    tok,
-                    vocab: self.vocab,
-                },
-                self,
-            );
+            self.rejected += 1;
+            return Err(AdmitError::QueueFull {
+                limit: self.max_queue,
+            });
         }
         let id = self.next_id;
         self.next_id += 1;
@@ -102,7 +120,7 @@ impl Router {
     }
 }
 
-/// Prefix-affinity placement for the cluster path: route a request to the
+/// Prefix-affinity placement for the fleet path: route a request to the
 /// engine instance most likely to already hold its prompt prefix.
 ///
 /// Each engine's prefix cache is local, so cross-instance placement decides
@@ -111,6 +129,14 @@ impl Router {
 /// block boundary) of the prompts it has served.  `route` scores workers by
 /// the longest fingerprint match — the blocks a hit would reuse — and
 /// tie-breaks on least outstanding load, so cold prefixes still spread.
+///
+/// With a spill threshold set ([`with_spill`](Self::with_spill)), affinity
+/// stops being absolute: when the affinity winner's outstanding load
+/// exceeds the least-loaded worker's by at least the threshold, the
+/// request spills to the least-loaded worker instead.  Combined with
+/// fleet-level prefix replication (which makes the hot chain matchable on
+/// every engine), this is what turns a hot template from a single-engine
+/// hotspot into fleet-wide load spreading.
 pub struct PrefixAffinityRouter {
     block_size: usize,
     /// Per-worker: fingerprint → (last-use tick, block depth).  Depth is
@@ -122,6 +148,8 @@ pub struct PrefixAffinityRouter {
     load: Vec<usize>,
     /// Fingerprints retained per worker.
     max_tracked: usize,
+    /// Load-imbalance spill threshold; `None` = pure affinity.
+    spill_threshold: Option<usize>,
     clock: u64,
 }
 
@@ -133,8 +161,19 @@ impl PrefixAffinityRouter {
             seen: vec![HashMap::new(); workers],
             load: vec![0; workers],
             max_tracked,
+            spill_threshold: None,
             clock: 0,
         }
+    }
+
+    /// Enable load spilling: when the affinity winner carries at least
+    /// `threshold` more outstanding requests than the least-loaded
+    /// worker, route there instead.  `threshold` must be ≥ 1 (0 would
+    /// make affinity a no-op).
+    pub fn with_spill(mut self, threshold: usize) -> Self {
+        assert!(threshold > 0, "spill threshold must be ≥ 1");
+        self.spill_threshold = Some(threshold);
+        self
     }
 
     pub fn workers(&self) -> usize {
@@ -164,6 +203,10 @@ impl PrefixAffinityRouter {
     /// Pick the worker for a prompt and record its prefix there.  Returns
     /// the worker index; call [`finish`](Self::finish) when the request
     /// completes to release the load it added.
+    ///
+    /// Fully deterministic: ties on (matched, load) resolve to the lowest
+    /// worker index, and the spill target is the lowest least-loaded
+    /// index, so a fixed submit order always produces the same placement.
     pub fn route(&mut self, prompt: &[i32]) -> usize {
         self.clock += 1;
         let fps = self.fingerprints(prompt);
@@ -181,6 +224,14 @@ impl PrefixAffinityRouter {
                 best = w;
             }
         }
+        if let Some(threshold) = self.spill_threshold {
+            let least = (0..self.load.len())
+                .min_by_key(|&w| self.load[w])
+                .expect("workers > 0");
+            if self.load[best] >= self.load[least] + threshold {
+                best = least;
+            }
+        }
         self.load[best] += 1;
         let clock = self.clock;
         let seen = &mut self.seen[best];
@@ -188,8 +239,10 @@ impl PrefixAffinityRouter {
             seen.insert(fp, (clock, depth as u32));
         }
         // Bound memory: drop the oldest prompt's deepest fingerprints
-        // first (ascending tick, descending depth), so a surviving
-        // fingerprint always has its whole leading chain present.
+        // first (ascending tick, descending depth, fingerprint value as
+        // the final total-order tiebreak), so a surviving fingerprint
+        // always has its whole leading chain present and the survivor set
+        // never depends on hash-map iteration order.
         if seen.len() > self.max_tracked {
             let mut ages: Vec<(u64, std::cmp::Reverse<u32>, u64)> = seen
                 .iter()
@@ -204,10 +257,12 @@ impl PrefixAffinityRouter {
         best
     }
 
-    /// Release the load recorded by [`route`](Self::route).
+    /// Release the load recorded by [`route`](Self::route).  Saturates at
+    /// zero: a double-finish (or a finish for a request that was rejected
+    /// after routing) must not underflow or poison the router — the
+    /// worker simply stays at zero outstanding load.
     pub fn finish(&mut self, worker: usize) {
-        assert!(self.load[worker] > 0, "finish without a routed request");
-        self.load[worker] -= 1;
+        self.load[worker] = self.load[worker].saturating_sub(1);
     }
 }
 
@@ -273,6 +328,22 @@ mod tests {
         assert!(r.admit(vec![1], 1, 7).is_ok());
     }
 
+    #[test]
+    fn validate_matches_legacy_admit() {
+        // One validation path: the standalone validator returns exactly
+        // the errors (and thus messages) the legacy front door reports.
+        let cases: Vec<(Vec<i32>, usize)> =
+            vec![(vec![], 5), (vec![1], 0), (vec![0; 200], 100), (vec![1, 512], 1)];
+        for (prompt, budget) in cases {
+            let mut r = router();
+            let legacy = r.admit(prompt.clone(), budget, 0).unwrap_err();
+            let shared = validate_request(&prompt, budget, 255, 512).unwrap_err();
+            assert_eq!(legacy, shared);
+            assert_eq!(legacy.to_string(), shared.to_string());
+        }
+        assert!(validate_request(&[1, 2], 10, 255, 512).is_ok());
+    }
+
     fn prompt(system: i32, user: i32) -> Vec<i32> {
         let mut p = vec![system; 8];
         p.extend(vec![user; 4]);
@@ -312,6 +383,26 @@ mod tests {
     }
 
     #[test]
+    fn finish_on_idle_worker_saturates() {
+        // Regression: double-finish (or finish after a post-route
+        // rejection) used to panic on the zero-load assert; it must
+        // saturate and leave the router usable.
+        let mut r = PrefixAffinityRouter::new(2, 4, 64);
+        r.finish(0);
+        r.finish(1);
+        assert_eq!(r.load(0), 0);
+        assert_eq!(r.load(1), 0);
+        let w = r.route(&prompt(1, 2));
+        r.finish(w);
+        r.finish(w); // double-finish
+        assert_eq!(r.load(w), 0);
+        // The router still routes and accounts normally afterwards.
+        let w2 = r.route(&prompt(1, 3));
+        assert_eq!(w2, w, "affinity state survived the saturating finishes");
+        assert_eq!(r.load(w2), 1);
+    }
+
+    #[test]
     fn affinity_prefers_longer_match() {
         let mut r = PrefixAffinityRouter::new(2, 4, 64);
         // Worker 0 has seen [1;8]+[2;4]; worker 1 a disjoint prompt.
@@ -335,5 +426,66 @@ mod tests {
             r.route(&vec![s; 16]);
         }
         assert!(r.seen[0].len() <= 8);
+    }
+
+    #[test]
+    fn fingerprint_eviction_is_deterministic() {
+        // Two routers fed the identical route sequence keep the identical
+        // fingerprint survivor sets — eviction sorts on the total order
+        // (tick, depth desc, fingerprint), never on hash-map iteration
+        // order.
+        let feed = |r: &mut PrefixAffinityRouter| {
+            for s in 0..50 {
+                r.route(&vec![s; 16]); // 4 fingerprints each, cap 8
+            }
+        };
+        let mut a = PrefixAffinityRouter::new(1, 4, 8);
+        let mut b = PrefixAffinityRouter::new(1, 4, 8);
+        feed(&mut a);
+        feed(&mut b);
+        let mut fa: Vec<u64> = a.seen[0].keys().copied().collect();
+        let mut fb: Vec<u64> = b.seen[0].keys().copied().collect();
+        fa.sort_unstable();
+        fb.sort_unstable();
+        assert_eq!(fa, fb);
+        assert_eq!(fa.len(), 8, "trimmed exactly to the cap");
+        // Survivors are the newest prompts' fingerprints, leading chains
+        // intact: the last two prompts (4 fingerprints each).
+        let mut expect: Vec<u64> = Vec::new();
+        let probe = PrefixAffinityRouter::new(1, 4, 8);
+        for s in 48..50 {
+            expect.extend(probe.fingerprints(&vec![s; 16]));
+        }
+        expect.sort_unstable();
+        assert_eq!(fa, expect);
+    }
+
+    #[test]
+    fn spill_overrides_affinity_under_imbalance() {
+        let mut r = PrefixAffinityRouter::new(3, 4, 64).with_spill(2);
+        let home = r.route(&prompt(1, 0));
+        // Same prefix keeps routing home while the imbalance stays under
+        // the threshold...
+        assert_eq!(r.route(&prompt(1, 1)), home);
+        // ...but once home is 2 ahead of an idle worker, the hot template
+        // spills to the least-loaded worker instead of hotspotting.
+        let spilled = r.route(&prompt(1, 2));
+        assert_ne!(spilled, home);
+        assert_eq!(spilled, (0..3).find(|&w| w != home).unwrap(), "lowest idle index");
+        // The spilled worker recorded the prefix, so with balanced load it
+        // now competes on affinity too (replication makes its tree match).
+        r.finish(home);
+        r.finish(home);
+        let next = r.route(&prompt(1, 3));
+        assert_eq!(next, home, "equal match, least load wins deterministically");
+    }
+
+    #[test]
+    fn spill_disabled_by_default_keeps_pure_affinity() {
+        let mut r = PrefixAffinityRouter::new(2, 4, 64);
+        let home = r.route(&prompt(7, 0));
+        for u in 1..20 {
+            assert_eq!(r.route(&prompt(7, u)), home, "no spill without opt-in");
+        }
     }
 }

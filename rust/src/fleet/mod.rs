@@ -1,0 +1,831 @@
+//! Multi-engine serving fleet: N [`Engine`] instances behind one
+//! prefix-affinity router, driven concurrently and fronted by a
+//! `submit -> FleetHandle` / `poll_events` API that is a drop-in superset
+//! of the solo serving API (`docs/fleet-serving.md`).
+//!
+//! The hardware-centric MLA analysis (arXiv:2506.02523) shows MLA decode
+//! is memory-bound per instance, so fleet-level wins come from
+//! *placement*, not FLOPs: route each request to the engine that already
+//! holds its prefix blocks, and when a prefix is hot enough that affinity
+//! would hotspot one engine, **replicate** its chain to the others
+//! (`PrefixTree` + [`crate::prefixcache::replicate_chain`]) so the
+//! affinity constraint dissolves instead of serializing the fleet.
+//!
+//! Three ideas, one executor:
+//!
+//! * **Routing** — [`PrefixAffinityRouter`]: block-granularity prefix
+//!   fingerprints, least-loaded tiebreak, and a load-imbalance spill
+//!   threshold so a hot template spreads once its home engine saturates.
+//! * **Replication** — a prefix observed [`FleetConfig::replicate_hot_after`]
+//!   times is exported from whichever engine caches it
+//!   ([`Engine::export_prefix_latents`]) and adopted, best-effort, by
+//!   every other engine ([`Engine::adopt_replicated_prefix`]).  Block ids
+//!   are store-local, so replication ships latent *data*; each tree ends
+//!   up owning an independent refcounted chain and donor-side eviction
+//!   never invalidates a replica.
+//! * **QoS admission** — one shared [`validate_request`] path with the
+//!   solo front door, then prefix-aware charging (a hit-heavy request is
+//!   charged only its unshared suffix plus its budget), a per-tenant
+//!   in-flight token budget, and a bounded per-engine queue.  Overload
+//!   surfaces as [`RejectReason::Backpressure`] events at submit time —
+//!   never as unbounded queue growth.
+//!
+//! Determinism contract: with a fixed seed and engine count, routing and
+//! outputs are reproducible, and every request's token stream is
+//! bit-identical to the same request served by a solo engine with the
+//! same config.  Engines step concurrently on the panic-propagating
+//! [`ThreadPool`], but [`ThreadPool::map`] preserves input order and the
+//! executor drains events engine-by-engine in index order on the
+//! coordinator thread, so concurrency never reorders the observable
+//! stream.  The fleet-vs-solo oracle is pinned by `tests/fleet_e2e.rs`.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::mem;
+
+use crate::coordinator::{
+    validate_request, AdmitError, Engine, EngineConfig, FinishReason, FinishedRequest, FleetEvent,
+    GenerationRequest, PrefixAffinityRouter, RejectReason, RequestId, ServingMetrics, StepEvent,
+};
+use crate::obs::MetricsRegistry;
+use crate::runtime::ReferenceModelConfig;
+use crate::util::threadpool::ThreadPool;
+
+/// Fleet topology + policy knobs.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Engine instances (≥ 1; 1 degenerates to a solo engine behind the
+    /// fleet API, which the bit-identity oracle exploits).
+    pub engines: usize,
+    /// Per-engine configuration, applied identically to every instance —
+    /// identical configs are what make cross-engine bit-identity hold.
+    pub engine: EngineConfig,
+    /// Worker threads for the concurrent tick drive (0 = one per engine).
+    pub threads: usize,
+    /// Queued requests an engine may hold before submissions targeting it
+    /// shed with `Rejected{Backpressure}`.
+    pub max_queue_per_engine: usize,
+    /// Enable cross-engine replication of hot prefixes.
+    pub replication: bool,
+    /// Submissions sharing a first-block prefix before that prefix counts
+    /// as hot and replication kicks in.
+    pub replicate_hot_after: u64,
+    /// Per-tenant in-flight charged-token budget (`None` = no limit).
+    /// Charged tokens = unshared prompt suffix + generation budget, so a
+    /// tenant riding a replicated prefix fits more requests in the same
+    /// budget — prefix-aware fairness, not raw token counting.
+    pub tenant_token_budget: Option<u64>,
+    /// Prefix fingerprints the router retains per engine.
+    pub max_tracked_prefixes: usize,
+    /// Router load-imbalance spill threshold (`None` = pure affinity).
+    pub spill_threshold: Option<usize>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            engines: 2,
+            engine: EngineConfig::default(),
+            threads: 0,
+            max_queue_per_engine: 64,
+            replication: true,
+            replicate_hot_after: 2,
+            tenant_token_budget: None,
+            max_tracked_prefixes: 256,
+            spill_threshold: Some(4),
+        }
+    }
+}
+
+/// Handle for a fleet-submitted request: the fleet-level id (what every
+/// [`FleetEvent`] carries) plus the engine the router placed it on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FleetHandle {
+    id: RequestId,
+    engine: usize,
+}
+
+impl FleetHandle {
+    pub fn id(self) -> RequestId {
+        self.id
+    }
+
+    /// Engine index the request was routed to (for a shed request: the
+    /// engine it *would* have landed on).
+    pub fn engine(self) -> usize {
+        self.engine
+    }
+}
+
+/// Heat tracking for one first-block prefix key.
+#[derive(Debug)]
+struct HotPrefix {
+    /// Submissions observed with this key.
+    count: u64,
+    /// Longest common block-aligned prefix across those submissions — the
+    /// shared template, discovered rather than declared.
+    shared: Vec<i32>,
+    /// A replication pass ran for this key (export succeeded; adopters
+    /// took what they could).
+    replicated: bool,
+    /// Engine the first submission routed to.
+    home: Option<usize>,
+}
+
+/// FNV-1a over a token slice (same constants as the router's rolling
+/// block fingerprints; used here only as a map key for heat tracking).
+fn fnv(tokens: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        for byte in t.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// Rebuild a [`StepEvent`] with a translated (fleet-level) id.
+fn remap(ev: StepEvent, fid: RequestId) -> StepEvent {
+    match ev {
+        StepEvent::Admitted { .. } => StepEvent::Admitted { id: fid },
+        StepEvent::Token { token, .. } => StepEvent::Token { id: fid, token },
+        StepEvent::Finished { reason, .. } => StepEvent::Finished { id: fid, reason },
+        StepEvent::Rejected { reason, .. } => StepEvent::Rejected { id: fid, reason },
+    }
+}
+
+/// The multi-engine executor.  See the module docs for the policy design;
+/// the API mirrors the solo [`Engine`]: `submit`, `step`, `poll_events`,
+/// `take_finished`, `cancel`, `has_work`, plus fleet-level metrics.
+pub struct FleetExecutor {
+    cfg: FleetConfig,
+    engines: Vec<Engine>,
+    pool: ThreadPool,
+    router: PrefixAffinityRouter,
+    /// Static admission limits, captured at construction so the door
+    /// check ([`validate_request`]) needs no engine access.
+    vocab: usize,
+    max_context: usize,
+    block_size: usize,
+    next_id: RequestId,
+    /// Per-engine: engine-local id → fleet id.
+    local2fleet: Vec<HashMap<RequestId, RequestId>>,
+    /// Fleet id → (engine, engine-local id); absent for shed requests.
+    placement: HashMap<RequestId, (usize, RequestId)>,
+    /// Fleet id → (tenant, charged tokens), released on terminal events.
+    charges: HashMap<RequestId, (String, u64)>,
+    /// In-flight charged tokens per tenant (BTreeMap: deterministic
+    /// iteration for debugging/metrics).
+    tenant_inflight: BTreeMap<String, u64>,
+    /// Heat per first-block prefix key (BTreeMap: the replication retry
+    /// scan must be deterministic).
+    hot: BTreeMap<u64, HotPrefix>,
+    events: VecDeque<FleetEvent>,
+    finished: Vec<FinishedRequest>,
+    submitted: u64,
+    shed: u64,
+    replications: u64,
+    replicated_blocks: u64,
+    replication_hits: u64,
+    ticks: u64,
+}
+
+impl FleetExecutor {
+    /// Build a fleet of identical reference-model engines (the same
+    /// deterministic backend [`Engine::reference`] uses — identical seeds
+    /// on every instance are what make replication and the bit-identity
+    /// oracle sound).
+    pub fn reference(model: ReferenceModelConfig, cfg: FleetConfig) -> anyhow::Result<Self> {
+        anyhow::ensure!(cfg.engines > 0, "fleet needs at least one engine");
+        anyhow::ensure!(
+            cfg.max_queue_per_engine > 0,
+            "per-engine queue bound must be ≥ 1"
+        );
+        let mut engines = Vec::with_capacity(cfg.engines);
+        for _ in 0..cfg.engines {
+            engines.push(Engine::reference(model.clone(), cfg.engine.clone())?);
+        }
+        let max_context = engines[0].max_context();
+        let block_size = cfg.engine.block_size;
+        let mut router =
+            PrefixAffinityRouter::new(cfg.engines, block_size, cfg.max_tracked_prefixes);
+        if let Some(t) = cfg.spill_threshold {
+            router = router.with_spill(t);
+        }
+        let threads = if cfg.threads == 0 {
+            cfg.engines
+        } else {
+            cfg.threads
+        };
+        let local2fleet = (0..cfg.engines).map(|_| HashMap::new()).collect();
+        Ok(FleetExecutor {
+            engines,
+            pool: ThreadPool::new(threads),
+            router,
+            vocab: model.vocab,
+            max_context,
+            block_size,
+            next_id: 1,
+            local2fleet,
+            placement: HashMap::new(),
+            charges: HashMap::new(),
+            tenant_inflight: BTreeMap::new(),
+            hot: BTreeMap::new(),
+            events: VecDeque::new(),
+            finished: Vec::new(),
+            submitted: 0,
+            shed: 0,
+            replications: 0,
+            replicated_blocks: 0,
+            replication_hits: 0,
+            ticks: 0,
+            cfg,
+        })
+    }
+
+    /// Submit under the default tenant.  Drop-in superset of
+    /// [`Engine::submit`]: same builder in, a handle out — but the fleet
+    /// validates at the door (shared [`validate_request`] path) instead of
+    /// panicking, and overload surfaces as a `Rejected{Backpressure}`
+    /// event on the returned handle's id rather than unbounded queueing.
+    pub fn submit(&mut self, req: GenerationRequest) -> Result<FleetHandle, AdmitError> {
+        self.submit_for("default", req)
+    }
+
+    /// Submit on behalf of a tenant (the unit of token-rate fairness).
+    ///
+    /// Static validation errors return `Err` synchronously — no id is
+    /// allocated, nothing is routed.  QoS rejections (queue bound, tenant
+    /// budget) *do* allocate an id and return `Ok`: the rejection is
+    /// delivered as a [`FleetEvent`] `Rejected{Backpressure}` plus an
+    /// empty [`FinishedRequest`], exactly how the solo engine reports
+    /// `KvCapacity` rejections — one consumer loop handles both.
+    pub fn submit_for(
+        &mut self,
+        tenant: &str,
+        req: GenerationRequest,
+    ) -> Result<FleetHandle, AdmitError> {
+        validate_request(
+            req.prompt(),
+            req.max_new_tokens(),
+            self.max_context,
+            self.vocab,
+        )?;
+        let w = self.router.route(req.prompt());
+        let fid = self.next_id;
+        self.next_id += 1;
+        self.submitted += 1;
+
+        // Heat tracking: shed traffic still heats its prefix — overload is
+        // precisely when replication should be relieving the hotspot.
+        let bs = self.block_size;
+        let aligned = req.prompt().len() / bs * bs;
+        if self.cfg.replication && aligned >= bs {
+            let key = fnv(&req.prompt()[..bs]);
+            let hp = self.hot.entry(key).or_insert_with(|| HotPrefix {
+                count: 0,
+                shared: req.prompt()[..aligned].to_vec(),
+                replicated: false,
+                home: None,
+            });
+            hp.count += 1;
+            if hp.home.is_none() {
+                hp.home = Some(w);
+            }
+            // Shrink the template to the common block-aligned prefix of
+            // everything observed under this key.
+            let common = hp
+                .shared
+                .iter()
+                .zip(req.prompt())
+                .take_while(|(a, b)| a == b)
+                .count();
+            hp.shared.truncate(common / bs * bs);
+            if hp.replicated && hp.home != Some(w) && self.engines[w].peek_prefix_tokens(req.prompt()) > 0
+            {
+                self.replication_hits += 1;
+            }
+        }
+
+        // QoS: charge only the unshared suffix (prefix-aware admission),
+        // check the tenant budget and the target queue bound.
+        let hit = self.engines[w].peek_prefix_tokens(req.prompt());
+        let charge = (req.prompt().len() - hit + req.max_new_tokens()) as u64;
+        let over_queue = self.engines[w].queue_depth() >= self.cfg.max_queue_per_engine;
+        let over_budget = match self.cfg.tenant_token_budget {
+            Some(b) => self.tenant_inflight.get(tenant).copied().unwrap_or(0) + charge > b,
+            None => false,
+        };
+        if over_queue || over_budget {
+            self.router.finish(w); // release the load `route` recorded
+            self.shed += 1;
+            self.events.push_back(FleetEvent {
+                engine: w,
+                event: StepEvent::Rejected {
+                    id: fid,
+                    reason: RejectReason::Backpressure,
+                },
+            });
+            self.finished.push(FinishedRequest {
+                id: fid,
+                tokens: Vec::new(),
+                reason: FinishReason::Aborted,
+            });
+            return Ok(FleetHandle { id: fid, engine: w });
+        }
+
+        *self.tenant_inflight.entry(tenant.to_string()).or_insert(0) += charge;
+        self.charges.insert(fid, (tenant.to_string(), charge));
+        let local = self.engines[w].submit(req);
+        self.local2fleet[w].insert(local.id(), fid);
+        self.placement.insert(fid, (w, local.id()));
+        Ok(FleetHandle { id: fid, engine: w })
+    }
+
+    /// Drive one tick on every engine concurrently, then drain and
+    /// translate their event streams.  Returns `true` while any engine
+    /// made progress.
+    ///
+    /// The engines are moved onto the pool ([`ThreadPool::map`] is
+    /// order-preserving and re-raises worker panics), restored *first*,
+    /// and only then is the first step error propagated — an engine
+    /// failure never strands its siblings outside the executor.  Event
+    /// drains run on the coordinator thread in engine-index order, which
+    /// is what keeps the observable stream deterministic.
+    pub fn step(&mut self) -> anyhow::Result<bool> {
+        self.ticks += 1;
+        let engines = mem::take(&mut self.engines);
+        let results = self.pool.map(engines, |mut e: Engine| {
+            let r = e.step();
+            (e, r)
+        });
+        let mut progressed = false;
+        let mut first_err = None;
+        for (e, r) in results {
+            self.engines.push(e);
+            match r {
+                Ok(p) => progressed |= p,
+                Err(err) => {
+                    if first_err.is_none() {
+                        first_err = Some(err);
+                    }
+                }
+            }
+        }
+        if let Some(err) = first_err {
+            return Err(err);
+        }
+
+        for w in 0..self.engines.len() {
+            let mut terminal: Vec<RequestId> = Vec::new();
+            for ev in self.engines[w].poll_events() {
+                let lid = ev.id();
+                let Some(&fid) = self.local2fleet[w].get(&lid) else {
+                    continue;
+                };
+                if matches!(ev, StepEvent::Finished { .. } | StepEvent::Rejected { .. }) {
+                    terminal.push(lid);
+                    self.router.finish(w);
+                    if let Some((tenant, charge)) = self.charges.remove(&fid) {
+                        if let Some(v) = self.tenant_inflight.get_mut(&tenant) {
+                            *v = v.saturating_sub(charge);
+                        }
+                    }
+                }
+                self.events.push_back(FleetEvent {
+                    engine: w,
+                    event: remap(ev, fid),
+                });
+            }
+            for mut f in self.engines[w].take_finished() {
+                if let Some(&fid) = self.local2fleet[w].get(&f.id) {
+                    f.id = fid;
+                    self.finished.push(f);
+                }
+            }
+            for lid in terminal {
+                if let Some(fid) = self.local2fleet[w].remove(&lid) {
+                    self.placement.remove(&fid);
+                }
+            }
+        }
+
+        self.drive_replication();
+        Ok(progressed)
+    }
+
+    /// Retry pass for hot prefixes not yet replicated: a donor only holds
+    /// the chain once prefill has actually run, so replication triggers at
+    /// submit time but *lands* here, a tick or two later.  Deterministic:
+    /// keys scan in `BTreeMap` order, donors in engine-index order.
+    fn drive_replication(&mut self) {
+        if !self.cfg.replication || self.engines.len() < 2 {
+            return;
+        }
+        let pending: Vec<(u64, Vec<i32>)> = self
+            .hot
+            .iter()
+            .filter(|(_, hp)| {
+                hp.count >= self.cfg.replicate_hot_after
+                    && !hp.replicated
+                    && hp.shared.len() >= self.block_size
+            })
+            .map(|(&k, hp)| (k, hp.shared.clone()))
+            .collect();
+        for (key, shared) in pending {
+            // Probe one token past the template: `peek`/`export` cap
+            // matches below the probe length (admission semantics), so the
+            // extended probe lets the *full* template chain export.
+            let mut probe = shared.clone();
+            probe.push(shared[0]);
+            let donor = (0..self.engines.len())
+                .find(|&w| self.engines[w].peek_prefix_tokens(&probe) >= shared.len());
+            let Some(d) = donor else { continue };
+            let Some((tokens, latents)) = self.engines[d].export_prefix_latents(&probe) else {
+                continue;
+            };
+            let mut adopted = 0usize;
+            for w in 0..self.engines.len() {
+                if w != d {
+                    adopted += self.engines[w].adopt_replicated_prefix(&tokens, &latents);
+                }
+            }
+            let hp = self.hot.get_mut(&key).expect("pending key exists");
+            hp.replicated = true;
+            if adopted > 0 {
+                self.replications += 1;
+                self.replicated_blocks += adopted as u64;
+            }
+        }
+    }
+
+    /// Cancel by fleet handle — forwarded to the owning engine; identical
+    /// queued/running semantics to [`Engine::cancel`].  `false` for
+    /// unknown, shed, or already-terminal requests.
+    pub fn cancel(&mut self, h: FleetHandle) -> bool {
+        match self.placement.get(&h.id) {
+            Some(&(w, lid)) => self.engines[w].cancel(lid),
+            None => false,
+        }
+    }
+
+    /// Drain the engine-stamped, fleet-id-translated event stream
+    /// accumulated since the last call (submit-time backpressure
+    /// rejections included).
+    pub fn poll_events(&mut self) -> Vec<FleetEvent> {
+        self.events.drain(..).collect()
+    }
+
+    /// Drain terminal results (fleet ids), the solo-API complement.
+    pub fn take_finished(&mut self) -> Vec<FinishedRequest> {
+        mem::take(&mut self.finished)
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.engines.iter().any(|e| e.has_work())
+    }
+
+    /// Step until every engine drains; returns ticks driven.
+    pub fn run_until_idle(&mut self) -> anyhow::Result<u64> {
+        let mut n = 0u64;
+        while self.has_work() {
+            self.step()?;
+            n += 1;
+            anyhow::ensure!(n < 10_000_000, "fleet run did not converge");
+        }
+        Ok(n)
+    }
+
+    pub fn engines(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Read access to one engine (tests, leak audits, per-engine gauges).
+    pub fn engine(&self, w: usize) -> &Engine {
+        &self.engines[w]
+    }
+
+    /// Requests shed with `Rejected{Backpressure}`.
+    pub fn shed(&self) -> u64 {
+        self.shed
+    }
+
+    /// Replication passes that adopted at least one block somewhere.
+    pub fn replications(&self) -> u64 {
+        self.replications
+    }
+
+    /// Off-home submissions that found their prefix already cached via a
+    /// replica.
+    pub fn replication_hits(&self) -> u64 {
+        self.replication_hits
+    }
+
+    /// All engines' serving metrics folded through
+    /// [`ServingMetrics::merge`] — rates recompute from merged totals.
+    pub fn merged_metrics(&self) -> ServingMetrics {
+        let mut m = ServingMetrics::new();
+        for e in &self.engines {
+            m.merge(e.metrics());
+        }
+        m
+    }
+
+    /// Fleet-level registry (`flashmla_fleet_*`), kept separate from the
+    /// per-engine [`ServingMetrics::registry`] so the merge-parity
+    /// invariant (merged registry ≡ recomputed-from-totals registry)
+    /// stays intact.
+    pub fn fleet_registry(&self) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        r.gauge(
+            "flashmla_fleet_engines",
+            "Engine instances behind the fleet router.",
+            self.engines.len() as f64,
+        );
+        r.counter(
+            "flashmla_fleet_ticks_total",
+            "Fleet ticks driven (each tick steps every engine once).",
+            self.ticks,
+        );
+        r.counter(
+            "flashmla_fleet_submitted_total",
+            "Requests entering the fleet door (sheds included).",
+            self.submitted,
+        );
+        r.counter(
+            "flashmla_fleet_shed_total",
+            "Requests rejected with Backpressure (queue bound or tenant budget).",
+            self.shed,
+        );
+        r.counter(
+            "flashmla_fleet_replications_total",
+            "Hot-prefix replication passes that adopted ≥ 1 block.",
+            self.replications,
+        );
+        r.counter(
+            "flashmla_fleet_replicated_blocks_total",
+            "KV blocks materialized on non-donor engines by replication.",
+            self.replicated_blocks,
+        );
+        r.counter(
+            "flashmla_fleet_replication_hits_total",
+            "Off-home submissions whose prefix was already cached via a replica.",
+            self.replication_hits,
+        );
+        let load: BTreeMap<usize, u64> = (0..self.engines.len())
+            .map(|w| {
+                (
+                    w,
+                    (self.engines[w].queue_depth() + self.engines[w].active_requests()) as u64,
+                )
+            })
+            .collect();
+        r.series(
+            "flashmla_fleet_engine_load",
+            "Queued + active requests per engine.",
+            "engine",
+            &load,
+        );
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RejectReason;
+
+    fn model() -> ReferenceModelConfig {
+        ReferenceModelConfig {
+            vocab: 64,
+            n_layers: 2,
+            latent_dim: 8,
+            seed: 0xF1EE_7001,
+            batch_buckets: vec![1, 2, 4],
+            kv_buckets: vec![32, 64, 128],
+        }
+    }
+
+    fn engine_cfg() -> EngineConfig {
+        EngineConfig {
+            max_slots: 4,
+            kv_blocks: 64,
+            block_size: 4,
+            ..EngineConfig::default()
+        }
+    }
+
+    fn fleet_cfg(engines: usize) -> FleetConfig {
+        FleetConfig {
+            engines,
+            engine: engine_cfg(),
+            max_queue_per_engine: 64,
+            replicate_hot_after: 2,
+            spill_threshold: Some(1),
+            ..FleetConfig::default()
+        }
+    }
+
+    /// Token stream of `prompt` on a fresh solo engine — the oracle.
+    fn solo_stream(prompt: &[i32], budget: usize) -> Vec<i32> {
+        let mut e = Engine::reference(model(), engine_cfg()).unwrap();
+        let h = e.submit(GenerationRequest::new(prompt.to_vec(), budget));
+        let mut out = Vec::new();
+        let mut guard = 0;
+        while e.has_work() {
+            e.step().unwrap();
+            for ev in e.poll_events() {
+                if let StepEvent::Token { id, token } = ev {
+                    if id == h.id() {
+                        out.push(token);
+                    }
+                }
+            }
+            guard += 1;
+            assert!(guard < 10_000, "solo oracle did not converge");
+        }
+        out
+    }
+
+    fn prompt(system: i32, user: i32) -> Vec<i32> {
+        let mut p = vec![system; 8];
+        p.extend(vec![user; 4]);
+        p
+    }
+
+    #[test]
+    fn fleet_streams_match_solo_oracle() {
+        let mut fleet = FleetExecutor::reference(model(), fleet_cfg(2)).unwrap();
+        let mut want: HashMap<RequestId, Vec<i32>> = HashMap::new();
+        for (s, u) in [(1, 10), (2, 20), (1, 11), (3, 30), (2, 21), (1, 12)] {
+            let p = prompt(s, u);
+            let h = fleet.submit(GenerationRequest::new(p.clone(), 6)).unwrap();
+            want.insert(h.id(), solo_stream(&p, 6));
+        }
+        fleet.run_until_idle().unwrap();
+        let mut got: HashMap<RequestId, Vec<i32>> = HashMap::new();
+        for ev in fleet.poll_events() {
+            if let StepEvent::Token { id, token } = ev.event {
+                got.entry(id).or_default().push(token);
+            }
+        }
+        assert_eq!(got, want, "fleet streams must be bit-identical to solo");
+        // take_finished carries the same vectors under fleet ids.
+        for f in fleet.take_finished() {
+            assert_eq!(&f.tokens, want.get(&f.id).unwrap());
+        }
+    }
+
+    #[test]
+    fn door_validation_is_the_shared_path() {
+        let mut fleet = FleetExecutor::reference(model(), fleet_cfg(2)).unwrap();
+        assert_eq!(
+            fleet
+                .submit_for("t", GenerationRequest::new(vec![1, 99], 2))
+                .unwrap_err(),
+            AdmitError::BadToken { tok: 99, vocab: 64 }
+        );
+        assert!(matches!(
+            fleet
+                .submit_for("t", GenerationRequest::new(vec![1; 120], 100))
+                .unwrap_err(),
+            AdmitError::ContextTooLong { .. }
+        ));
+        // Static rejections allocate nothing.
+        assert_eq!(fleet.poll_events().len(), 0);
+        let ok = fleet.submit(GenerationRequest::new(vec![1, 2], 2)).unwrap();
+        assert_eq!(ok.id(), 1, "failed validations never burned an id");
+    }
+
+    #[test]
+    fn queue_bound_sheds_with_backpressure_event() {
+        let mut cfg = fleet_cfg(1);
+        cfg.max_queue_per_engine = 1;
+        let mut fleet = FleetExecutor::reference(model(), cfg).unwrap();
+        let a = fleet.submit(GenerationRequest::new(prompt(1, 1), 2)).unwrap();
+        let b = fleet.submit(GenerationRequest::new(prompt(2, 2), 2)).unwrap();
+        assert_eq!(fleet.shed(), 1);
+        let evs = fleet.poll_events();
+        assert!(evs.contains(&FleetEvent {
+            engine: b.engine(),
+            event: StepEvent::Rejected {
+                id: b.id(),
+                reason: RejectReason::Backpressure,
+            },
+        }));
+        let fin = fleet.take_finished();
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].id, b.id());
+        assert!(fin[0].tokens.is_empty());
+        assert_eq!(fin[0].reason, FinishReason::Aborted);
+        // Shed requests cannot be cancelled (they never held anything)...
+        assert!(!fleet.cancel(b));
+        // ...and the survivor still serves to completion.
+        fleet.run_until_idle().unwrap();
+        let done: Vec<_> = fleet.take_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, a.id());
+        assert!(!done[0].tokens.is_empty());
+    }
+
+    #[test]
+    fn tenant_budget_enforces_fairness() {
+        let mut cfg = fleet_cfg(1);
+        // prompt(·,·) is 12 tokens; charge = 12 - hit + 4.  Budget fits one
+        // cold request (16) but not two.
+        cfg.tenant_token_budget = Some(20);
+        cfg.replication = false;
+        let mut fleet = FleetExecutor::reference(model(), cfg).unwrap();
+        let _a = fleet
+            .submit_for("alice", GenerationRequest::new(prompt(1, 1), 4))
+            .unwrap();
+        fleet
+            .submit_for("alice", GenerationRequest::new(prompt(2, 2), 4))
+            .unwrap();
+        assert_eq!(fleet.shed(), 1, "alice's second request exceeds her budget");
+        // A different tenant is unaffected by alice's spend.
+        fleet
+            .submit_for("bob", GenerationRequest::new(prompt(3, 3), 4))
+            .unwrap();
+        assert_eq!(fleet.shed(), 1);
+        // Once alice's request terminates, her budget frees up.
+        fleet.run_until_idle().unwrap();
+        fleet
+            .submit_for("alice", GenerationRequest::new(prompt(4, 4), 4))
+            .unwrap();
+        assert_eq!(fleet.shed(), 1);
+    }
+
+    #[test]
+    fn hot_prefix_replicates_across_engines() {
+        let mut fleet = FleetExecutor::reference(model(), fleet_cfg(2)).unwrap();
+        // Two requests sharing an 8-token system prompt: the second marks
+        // the prefix hot; the chain lands on the donor during its prefill
+        // and the retry pass in step() copies it to the other engine.
+        fleet.submit(GenerationRequest::new(prompt(7, 1), 4)).unwrap();
+        fleet.run_until_idle().unwrap();
+        fleet.submit(GenerationRequest::new(prompt(7, 2), 4)).unwrap();
+        fleet.run_until_idle().unwrap();
+        assert_eq!(fleet.replications(), 1, "one replication pass adopted blocks");
+        // Both engines now cache the shared head: 8 tokens = 2 blocks at
+        // block_size 4, visible to a peek through either engine.
+        let probe = prompt(7, 3);
+        for w in 0..fleet.engines() {
+            assert!(
+                fleet.engine(w).peek_prefix_tokens(&probe) >= 8,
+                "engine {w} should cache the replicated head"
+            );
+        }
+        // Replicated chains stay tree-pinned, not leaked: every block is
+        // free or prefix-cached on both engines.
+        for w in 0..fleet.engines() {
+            let e = fleet.engine(w);
+            assert_eq!(e.free_kv_blocks() + e.prefix_cached_blocks(), 64);
+        }
+        let reg = fleet.fleet_registry();
+        assert!(reg.get("flashmla_fleet_replications_total").is_some());
+    }
+
+    #[test]
+    fn fleet_is_deterministic_across_identical_runs() {
+        let drive = || -> (Vec<(usize, StepEvent)>, Vec<usize>) {
+            let mut fleet = FleetExecutor::reference(model(), fleet_cfg(2)).unwrap();
+            let mut placed = Vec::new();
+            let mut evs = Vec::new();
+            for (i, (s, u)) in [(1, 1), (2, 2), (1, 3), (2, 4), (1, 5)].iter().enumerate() {
+                let h = fleet
+                    .submit(GenerationRequest::new(prompt(*s, *u), 3 + i % 2))
+                    .unwrap();
+                placed.push(h.engine());
+                fleet.step().unwrap();
+            }
+            fleet.run_until_idle().unwrap();
+            for ev in fleet.poll_events() {
+                evs.push((ev.engine, ev.event));
+            }
+            (evs, placed)
+        };
+        let (ev_a, place_a) = drive();
+        let (ev_b, place_b) = drive();
+        assert_eq!(place_a, place_b, "routing is reproducible");
+        assert_eq!(ev_a, ev_b, "event streams are reproducible");
+    }
+
+    #[test]
+    fn merged_metrics_sum_engine_totals() {
+        let mut fleet = FleetExecutor::reference(model(), fleet_cfg(2)).unwrap();
+        for s in 0..4 {
+            fleet
+                .submit(GenerationRequest::new(prompt(s, s), 3))
+                .unwrap();
+        }
+        fleet.run_until_idle().unwrap();
+        let merged = fleet.merged_metrics();
+        let per_engine: u64 = (0..fleet.engines())
+            .map(|w| fleet.engine(w).metrics().requests_finished)
+            .sum();
+        assert_eq!(merged.requests_finished, per_engine);
+        assert_eq!(merged.requests_finished, 4);
+        assert!(merged.tokens_generated >= 4 * 3);
+    }
+}

@@ -29,6 +29,7 @@ pub mod attention;
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+pub mod fleet;
 pub mod hardware;
 pub mod kernels;
 pub mod kvcache;

@@ -564,6 +564,74 @@ impl PrefixTree {
         }
         ((len - 1) / self.block_size) * self.block_size
     }
+
+    /// Cross-tree replication read: the longest cached block-aligned
+    /// prefix of `tokens` together with its block chain, **without**
+    /// touching LRU recency or hit statistics — a fleet replication read
+    /// is bookkeeping, not a request lookup.  The chain stays owned by
+    /// the tree; callers that need the latent data adopt it into a
+    /// temporary sequence (`PagedLatentCache::adopt_chain`) for the
+    /// duration of the copy.
+    pub fn peek_chain(&self, tokens: &[i32]) -> PrefixMatch {
+        let w = self.walk(tokens);
+        PrefixMatch {
+            tokens: w.matched_tokens,
+            blocks: w.blocks,
+        }
+    }
+}
+
+/// Cross-tree replication entry point (fleet serving): materialize a
+/// prefix chain exported from another engine's tree into `cache` and
+/// insert it into `tree`.
+///
+/// `latents` is the donor's flat per-token latent data —
+/// `tokens.len() × latent_dim` values, exactly what
+/// `PagedLatentCache::token_latent` yields position by position.  Block
+/// ids are store-local, so replication copies data rather than sharing
+/// refcounts: the target tree ends up owning an independent refcounted
+/// chain, and donor-side eviction can never invalidate it (the
+/// `replicated_chain_survives_*` tests pin this).
+///
+/// Best-effort by design — returns the number of blocks newly adopted,
+/// and 0 (without touching the pool) when the prefix is unaligned or
+/// empty, already fully cached, or the pool lacks free blocks for the
+/// copy: replication must never starve admission.
+pub fn replicate_chain(
+    tree: &mut PrefixTree,
+    cache: &mut PagedLatentCache,
+    tokens: &[i32],
+    latents: &[f32],
+) -> usize {
+    let bs = tree.block_size();
+    let ld = cache.config().latent_dim;
+    if tokens.is_empty() || tokens.len() % bs != 0 {
+        return 0;
+    }
+    assert_eq!(
+        latents.len(),
+        tokens.len() * ld,
+        "replicated latents must cover every token exactly"
+    );
+    // Dedup before paying for the copy: a fully-cached prefix would adopt
+    // nothing, so don't burn pool blocks appending one.
+    if tree.peek_match(tokens) == tokens.len() {
+        return 0;
+    }
+    if cache.free_blocks() * bs < tokens.len() {
+        return 0;
+    }
+    let seq = cache.new_seq();
+    for latent in latents.chunks(ld) {
+        if cache.append(seq, latent).is_err() {
+            cache.free_seq(seq);
+            return 0;
+        }
+    }
+    let chain = cache.blocks_of(seq).to_vec();
+    let adopted = tree.insert(tokens, &chain, cache);
+    cache.free_seq(seq);
+    adopted
 }
 
 #[cfg(test)]
@@ -1002,6 +1070,154 @@ mod tests {
             prop_assert!(freed == held, "freed {freed} of {held}");
             prop_assert!(c.free_blocks() == 256);
             prop_assert!(tree.node_count() == 0);
+            Ok(())
+        });
+    }
+
+    /// Donor-side export for the replication tests: peek the chain and
+    /// copy its latents out through a temporary adoption, exactly the
+    /// engine's `export_prefix_latents` idiom.
+    fn export_latents(tree: &PrefixTree, c: &mut PagedLatentCache, tokens: &[i32]) -> Vec<f32> {
+        let m = tree.peek_chain(tokens);
+        assert_eq!(m.tokens, tokens.len(), "export expects a full match");
+        let s = c.adopt_chain(&m.blocks, m.tokens);
+        let mut out = Vec::new();
+        for pos in 0..m.tokens {
+            out.extend_from_slice(c.token_latent(s, pos));
+        }
+        c.free_seq(s);
+        out
+    }
+
+    #[test]
+    fn peek_chain_matches_without_lru_or_stats() {
+        let mut c = cache(16);
+        let mut tree = PrefixTree::new(BS, None);
+        let prompt = toks(&[(7, 8)]);
+        insert_prompt(&mut tree, &mut c, &prompt);
+        let lookups_before = tree.stats().lookups;
+        let m = tree.peek_chain(&prompt);
+        assert_eq!(m.tokens, 8);
+        assert_eq!(m.blocks.len(), 2);
+        assert_eq!(tree.stats().lookups, lookups_before, "not a request lookup");
+        assert_eq!(tree.stats().hits, 0);
+    }
+
+    #[test]
+    fn replicate_chain_copies_into_second_tree() {
+        let mut c_a = cache(16);
+        let mut tree_a = PrefixTree::new(BS, None);
+        let mut c_b = cache(16);
+        let mut tree_b = PrefixTree::new(BS, None);
+        let prompt: Vec<i32> = (100..108).collect();
+        insert_prompt(&mut tree_a, &mut c_a, &prompt);
+
+        let latents = export_latents(&tree_a, &mut c_a, &prompt);
+        let adopted = replicate_chain(&mut tree_b, &mut c_b, &prompt, &latents);
+        assert_eq!(adopted, 2);
+        assert_eq!(tree_b.cached_blocks(), 2);
+
+        // The replica serves the same latent data through B's own store.
+        let m = tree_b.match_prefix(&prompt);
+        assert_eq!(m.tokens, 8);
+        let s = c_b.adopt_chain(&m.blocks, m.tokens);
+        for (t, &tok) in prompt.iter().enumerate() {
+            assert_eq!(c_b.token_latent(s, t), [tok as f32, 0.5]);
+        }
+        c_b.free_seq(s);
+        // Donor state untouched by the export (no stats, same blocks).
+        assert_eq!(tree_a.cached_blocks(), 2);
+        assert_eq!(16 - c_a.free_blocks(), 2);
+    }
+
+    #[test]
+    fn replicate_chain_is_best_effort() {
+        let mut c_a = cache(16);
+        let mut tree_a = PrefixTree::new(BS, None);
+        let prompt: Vec<i32> = (50..58).collect();
+        insert_prompt(&mut tree_a, &mut c_a, &prompt);
+        let latents = export_latents(&tree_a, &mut c_a, &prompt);
+
+        // Unaligned prefix: refused outright.
+        let mut c_b = cache(16);
+        let mut tree_b = PrefixTree::new(BS, None);
+        assert_eq!(
+            replicate_chain(&mut tree_b, &mut c_b, &prompt[..6], &latents[..12]),
+            0
+        );
+        // Pool too small for the copy: refused without touching it.
+        let mut c_tiny = cache(1);
+        let free_before = c_tiny.free_blocks();
+        assert_eq!(replicate_chain(&mut tree_b, &mut c_tiny, &prompt, &latents), 0);
+        assert_eq!(c_tiny.free_blocks(), free_before);
+        // Happy path, then dedup: the second replication adopts nothing
+        // and releases its temporary copy.
+        assert_eq!(replicate_chain(&mut tree_b, &mut c_b, &prompt, &latents), 2);
+        let free_after_first = c_b.free_blocks();
+        assert_eq!(replicate_chain(&mut tree_b, &mut c_b, &prompt, &latents), 0);
+        assert_eq!(c_b.free_blocks(), free_after_first, "dedup leaks nothing");
+    }
+
+    #[test]
+    fn property_replicated_chain_survives_donor_eviction() {
+        // The replication refcount property: replicating a chain from tree
+        // A to tree B creates fully independent refcounts, so evicting the
+        // chain on either side leaves the other side's copy intact and
+        // still serving the exact latents — and dropping both returns both
+        // pools to fully free.
+        forall(Config::default().cases(40), |g| {
+            let mut c_a = cache(64);
+            let mut tree_a = PrefixTree::new(BS, None);
+            let mut c_b = cache(64);
+            let mut tree_b = PrefixTree::new(BS, None);
+            let mut replicated: Vec<Vec<i32>> = Vec::new();
+            for _ in 0..g.usize(1..6) {
+                let prompt = g.tokens(BS..8 * BS, 4);
+                let aligned = (prompt.len() / BS) * BS;
+                if aligned == 0 {
+                    continue;
+                }
+                insert_prompt(&mut tree_a, &mut c_a, &prompt);
+                let head = prompt[..aligned].to_vec();
+                // The tree may have matched a shorter aligned head if an
+                // earlier prompt shares blocks; export what it holds.
+                let held = tree_a.peek_chain(&head).tokens;
+                if held == 0 {
+                    continue;
+                }
+                let latents = export_latents(&tree_a, &mut c_a, &head[..held]);
+                replicate_chain(&mut tree_b, &mut c_b, &head[..held], &latents);
+                replicated.push(head[..held].to_vec());
+            }
+            let evict_a_first = g.bool();
+            let (first_tree, first_cache, survivor_tree, survivor_cache) = if evict_a_first {
+                (&mut tree_a, &mut c_a, &mut tree_b, &mut c_b)
+            } else {
+                (&mut tree_b, &mut c_b, &mut tree_a, &mut c_a)
+            };
+            first_tree.evict(usize::MAX, first_cache, true);
+            prop_assert!(first_tree.cached_blocks() == 0, "evicted side drained");
+            prop_assert!(first_cache.free_blocks() == 64, "evicted pool fully free");
+            for p in &replicated {
+                let m = survivor_tree.peek_chain(p);
+                prop_assert!(
+                    m.tokens == p.len(),
+                    "survivor lost a replicated chain ({} of {} tokens)",
+                    m.tokens,
+                    p.len()
+                );
+                let s = survivor_cache.adopt_chain(&m.blocks, m.tokens);
+                for (t, &tok) in p.iter().enumerate() {
+                    let got = survivor_cache.token_latent(s, t);
+                    prop_assert!(
+                        got == [tok as f32, 0.5],
+                        "latent diverged at {t}: {got:?}"
+                    );
+                }
+                survivor_cache.free_seq(s);
+            }
+            survivor_tree.evict(usize::MAX, survivor_cache, true);
+            prop_assert!(survivor_cache.free_blocks() == 64, "no leaked refcounts");
             Ok(())
         });
     }

@@ -3,18 +3,20 @@
 //! kernel models — this is how the repo exercises paper-scale contexts
 //! (16K–64K) that the CPU-PJRT path cannot execute.
 //!
-//! The leader (this struct) fans each simulated decode step out to one
-//! worker thread per GPU; each worker costs its head shard with the
-//! selected kernel model; the leader takes the max (tensor-parallel
-//! barrier), adds the allreduce and the non-attention layer time, and
-//! advances the simulated clock.  Serving behaviour (continuous batching
-//! over a decode trace) then yields throughput/latency at paper scale.
+//! Lives in `sim/` next to `gemm.rs`/`roofline.rs` because it *is* the
+//! analytical step-time model: each simulated decode step costs every
+//! GPU's head shard with the selected kernel model, takes the max
+//! (tensor-parallel barrier), adds the allreduce and the non-attention
+//! layer time, and advances the simulated clock.  Serving behaviour
+//! (continuous batching over a decode trace) then yields
+//! throughput/latency at paper scale.  The *real* multi-engine executor
+//! is `fleet::FleetExecutor`; this module is its modeled counterpart,
+//! kept single-sourced here so the step-time math cannot drift.
 
 use crate::hardware::GpuSpec;
 use crate::sim::kernels::{model_by_name, KernelModel};
 use crate::sim::DecodeWorkload;
 use crate::util::stats::{percentile, Welford};
-use crate::util::threadpool::ThreadPool;
 
 /// Cluster topology + calibration.
 #[derive(Clone, Debug)]
@@ -110,7 +112,6 @@ pub struct ClusterSim {
     cfg: ClusterConfig,
     gpu: GpuSpec,
     model: Box<dyn KernelModel>,
-    pool: ThreadPool,
 }
 
 impl ClusterSim {
@@ -123,13 +124,7 @@ impl ClusterSim {
         );
         let model = model_by_name(&cfg.kernel)
             .ok_or_else(|| anyhow::anyhow!("unknown kernel model `{}`", cfg.kernel))?;
-        let pool = ThreadPool::new(cfg.gpus);
-        Ok(ClusterSim {
-            cfg,
-            gpu,
-            model,
-            pool,
-        })
+        Ok(ClusterSim { cfg, gpu, model })
     }
 
     pub fn config(&self) -> &ClusterConfig {
@@ -155,19 +150,11 @@ impl ClusterSim {
             kv_len: kv,
             dtype_bytes: 2,
         };
-        // Fan out one estimate per GPU (identical shards — heterogeneous
-        // shards would differ; the barrier takes the max regardless).
-        let gpu = self.gpu.clone();
-        let estimates: Vec<f64> = {
-            let w = w;
-            let model = &self.model;
-            // ThreadPool::map requires 'static; compute per-GPU here via
-            // the pool with cloned inputs.
-            let _ = &self.pool;
-            (0..self.cfg.gpus)
-                .map(|_| model.estimate(&w, &gpu).total_us)
-                .collect()
-        };
+        // One estimate per GPU (identical shards — heterogeneous shards
+        // would differ; the barrier takes the max regardless).
+        let estimates: Vec<f64> = (0..self.cfg.gpus)
+            .map(|_| self.model.estimate(&w, &self.gpu).total_us)
+            .collect();
         let attn_per_layer = estimates.iter().cloned().fold(0.0, f64::max);
 
         let allreduce_mb =

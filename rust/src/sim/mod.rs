@@ -9,6 +9,7 @@
 //! efficiency constants is calibrated against the paper's published bar
 //! heights (see `kernels/` and EXPERIMENTS.md for paper-vs-model tables).
 
+pub mod cluster;
 pub mod engine;
 pub mod figures;
 pub mod gemm;

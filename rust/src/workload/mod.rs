@@ -25,6 +25,6 @@ pub mod runner;
 pub mod scenario;
 pub mod trace;
 
-pub use runner::{run, run_setup, RunOptions, ScenarioOutcome, ScenarioStats};
+pub use runner::{run, run_setup, run_setup_fleet, RunOptions, ScenarioOutcome, ScenarioStats};
 pub use scenario::{find, registry, Scale, Scenario, ScenarioSetup};
 pub use trace::{bursty_poisson_arrivals, random_prompt, TraceRequest, WorkloadTrace};

@@ -26,6 +26,7 @@ use std::time::Instant;
 use crate::coordinator::{
     Engine, FinishedRequest, GenerationRequest, RequestHandle, ServingMetrics, StepEvent,
 };
+use crate::fleet::{FleetConfig, FleetExecutor, FleetHandle};
 use crate::prefill::PrefillConfig;
 use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
@@ -318,6 +319,206 @@ pub fn run_setup(
     })
 }
 
+/// Replay a setup against a [`FleetExecutor`] instead of a solo engine.
+///
+/// Same time model as [`run_setup`] — `arrive_tick` counts *fleet* ticks
+/// (one fleet tick steps every engine once) and the clock fast-forwards
+/// over idle gaps.  Per-request latency stats are derived from the
+/// fleet's translated event stream rather than engine timelines, so they
+/// are denominated in fleet ticks; `rejected` counts engine-side
+/// rejections *plus* submit-time backpressure sheds.  The scenario's
+/// engine shape overrides `fleet.engine` so a registered scenario runs on
+/// the hardware it declared.
+pub fn run_setup_fleet(
+    name: &str,
+    setup: &ScenarioSetup,
+    fleet: &FleetConfig,
+) -> anyhow::Result<ScenarioOutcome> {
+    let mut cfg = fleet.clone();
+    cfg.engine = setup.engine.clone();
+    let _ledger = crate::obs::ledger::LedgerGuard::new();
+    let mut exec = FleetExecutor::reference(setup.model.clone(), cfg)?;
+
+    let t0 = Instant::now();
+    let mut pending = setup.trace.requests.clone();
+    pending.reverse();
+    let mut handles: Vec<FleetHandle> = Vec::with_capacity(pending.len());
+    let mut by_id: BTreeMap<u64, FleetHandle> = BTreeMap::new();
+    let mut cancel_at: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut streamed: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut outputs: Vec<FinishedRequest> = Vec::new();
+    // Fleet-tick timestamps per request id, for the latency stats.
+    let mut submit_tick: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut admit_tick: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut first_token_tick: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut done_tick: BTreeMap<u64, u64> = BTreeMap::new();
+
+    let mut tick: u64 = 0;
+    let mut fleet_ticks: u64 = 0;
+    #[allow(clippy::too_many_arguments)]
+    fn drain(
+        exec: &mut FleetExecutor,
+        tick: u64,
+        outputs: &mut Vec<FinishedRequest>,
+        admit_tick: &mut BTreeMap<u64, u64>,
+        first_token_tick: &mut BTreeMap<u64, u64>,
+        done_tick: &mut BTreeMap<u64, u64>,
+        streamed: &mut BTreeMap<u64, usize>,
+        cancel_at: &BTreeMap<u64, usize>,
+        by_id: &BTreeMap<u64, FleetHandle>,
+    ) {
+        for ev in exec.poll_events() {
+            match ev.event {
+                StepEvent::Admitted { id } => {
+                    admit_tick.entry(id).or_insert(tick);
+                }
+                StepEvent::Token { id, .. } => {
+                    first_token_tick.entry(id).or_insert(tick);
+                    let n = streamed.entry(id).or_insert(0);
+                    *n += 1;
+                    if cancel_at.get(&id) == Some(&*n) {
+                        if let Some(&h) = by_id.get(&id) {
+                            exec.cancel(h);
+                        }
+                    }
+                }
+                StepEvent::Finished { id, .. } | StepEvent::Rejected { id, .. } => {
+                    done_tick.entry(id).or_insert(tick);
+                }
+            }
+        }
+        outputs.extend(exec.take_finished());
+    }
+
+    let mut guard: u64 = 0;
+    loop {
+        while pending.last().is_some_and(|r| r.arrive_tick <= tick) {
+            let r = pending.pop().unwrap();
+            let mut req = GenerationRequest::new(r.prompt, r.max_new_tokens);
+            if !r.stop_tokens.is_empty() {
+                req = req.stop_tokens(&r.stop_tokens);
+            }
+            if let Some(params) = r.sampling {
+                req = req.sampling(params);
+            }
+            let tenant = r.tenant.as_deref().unwrap_or("default");
+            let h = exec
+                .submit_for(tenant, req)
+                .map_err(|e| anyhow::anyhow!("scenario `{name}`: {e}"))?;
+            handles.push(h);
+            by_id.insert(h.id(), h);
+            submit_tick.insert(h.id(), tick);
+            match r.cancel_after_tokens {
+                Some(0) => {
+                    exec.cancel(h);
+                }
+                Some(n) => {
+                    cancel_at.insert(h.id(), n);
+                }
+                None => {}
+            }
+        }
+
+        if !exec.has_work() {
+            // Flush submit-time sheds before fast-forwarding or exiting.
+            drain(
+                &mut exec,
+                tick,
+                &mut outputs,
+                &mut admit_tick,
+                &mut first_token_tick,
+                &mut done_tick,
+                &mut streamed,
+                &cancel_at,
+                &by_id,
+            );
+            match pending.last() {
+                Some(r) => {
+                    tick = r.arrive_tick;
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        exec.step()?;
+        tick += 1;
+        fleet_ticks += 1;
+        guard += 1;
+        anyhow::ensure!(
+            guard < 10_000_000,
+            "fleet scenario `{name}` did not drain (runaway loop)"
+        );
+        drain(
+            &mut exec,
+            tick,
+            &mut outputs,
+            &mut admit_tick,
+            &mut first_token_tick,
+            &mut done_tick,
+            &mut streamed,
+            &cancel_at,
+            &by_id,
+        );
+    }
+    let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    let mut ttft: Vec<f64> = Vec::new();
+    let mut e2e: Vec<f64> = Vec::new();
+    let mut queue: Vec<f64> = Vec::new();
+    for (&id, &s) in &submit_tick {
+        if let Some(&t) = first_token_tick.get(&id) {
+            ttft.push(t.saturating_sub(s) as f64);
+        }
+        if let Some(&t) = done_tick.get(&id) {
+            e2e.push(t.saturating_sub(s) as f64);
+        }
+        if let Some(&t) = admit_tick.get(&id) {
+            queue.push(t.saturating_sub(s) as f64);
+        }
+    }
+
+    outputs.sort_by_key(|f| f.id);
+    let m = exec.merged_metrics();
+    let stats = ScenarioStats {
+        scenario: name.to_string(),
+        requests: handles.len(),
+        finished: m.requests_finished,
+        cancelled: m.requests_cancelled,
+        rejected: m.requests_rejected + exec.shed(),
+        steps: fleet_ticks,
+        tokens: m.tokens_generated,
+        tokens_per_step: if fleet_ticks == 0 {
+            0.0
+        } else {
+            m.tokens_generated as f64 / fleet_ticks as f64
+        },
+        ttft_steps_mean: mean(&ttft),
+        ttft_steps_p99: percentile(&ttft, 99.0),
+        e2e_steps_mean: mean(&e2e),
+        e2e_steps_p99: percentile(&e2e, 99.0),
+        queue_steps_mean: mean(&queue),
+        kv_slots_per_token: m.kv_slots_per_token(),
+        prefill_tokens: m.prefill_tokens,
+        prefill_chunks: m.prefill_chunks,
+        prefix_hit_tokens: m.prefix.hit_tokens,
+        spec_drafted: m.spec_drafted,
+        spec_accepted: m.spec_accepted,
+        effective_gflops_per_tick: if fleet_ticks == 0 {
+            0.0
+        } else {
+            m.compute.useful_flops / fleet_ticks as f64 / 1e9
+        },
+        waste_fraction: m.compute.waste_fraction(),
+        wall_us,
+    };
+    Ok(ScenarioOutcome {
+        stats,
+        outputs,
+        metrics: m,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -386,6 +587,62 @@ mod tests {
             out.stats.prefix_hit_tokens > 0,
             "tenant mix must re-hit its system prefixes"
         );
+    }
+
+    #[test]
+    fn fleet_tenants_runs_on_a_fleet() {
+        let s = scenario::find("fleet_tenants").unwrap();
+        let setup = s.build(Scale::quick());
+        let fleet = FleetConfig {
+            engines: 2,
+            ..FleetConfig::default()
+        };
+        let out = run_setup_fleet(s.name, &setup, &fleet).unwrap();
+        assert_eq!(
+            out.stats.finished + out.stats.cancelled + out.stats.rejected,
+            out.stats.requests as u64,
+            "every request accounted for across the fleet"
+        );
+        assert_eq!(out.outputs.len(), out.stats.requests);
+        assert!(out.stats.tokens > 0);
+        assert!(out.stats.steps > 0);
+        assert!(
+            out.stats.prefix_hit_tokens > 0,
+            "tenant prefixes must re-hit the caches"
+        );
+        assert!(out.stats.effective_gflops_per_tick > 0.0);
+        // Same trace, same fleet shape ⇒ byte-identical deterministic stats.
+        let again = run_setup_fleet(s.name, &setup, &fleet).unwrap();
+        assert_eq!(
+            out.stats.deterministic_json().dump(),
+            again.stats.deterministic_json().dump()
+        );
+    }
+
+    #[test]
+    fn fleet_of_one_matches_solo_runner_streams() {
+        // The drop-in-superset claim, at workload scale: a 1-engine fleet
+        // with QoS headroom serves the same trace with bit-identical
+        // token streams to the solo runner.
+        let s = scenario::find("shared_prefix_tenants").unwrap();
+        let setup = s.build(Scale::quick());
+        let solo = run_setup(s.name, &setup, &RunOptions::default()).unwrap();
+        let fleet = FleetConfig {
+            engines: 1,
+            ..FleetConfig::default()
+        };
+        let f = run_setup_fleet(s.name, &setup, &fleet).unwrap();
+        let solo_streams: Vec<(Vec<i32>, _)> = solo
+            .outputs
+            .iter()
+            .map(|o| (o.tokens.clone(), o.reason))
+            .collect();
+        let fleet_streams: Vec<(Vec<i32>, _)> = f
+            .outputs
+            .iter()
+            .map(|o| (o.tokens.clone(), o.reason))
+            .collect();
+        assert_eq!(solo_streams, fleet_streams);
     }
 
     #[test]

@@ -133,6 +133,12 @@ pub fn registry() -> Vec<Scenario> {
             seed: 0xB0_0005,
             build: build_stop_tokens,
         },
+        Scenario {
+            name: "fleet_tenants",
+            about: "multi-tenant shared-prefix traffic for the fleet executor (QoS + replication)",
+            seed: 0xB0_0006,
+            build: build_fleet_tenants,
+        },
     ]
 }
 
@@ -374,6 +380,50 @@ fn build_stop_tokens(scale: Scale, seed: u64) -> ScenarioSetup {
             ("requests".into(), n.to_string()),
             ("stop_tokens_per_request".into(), "8".into()),
             ("max_new".into(), "32".into()),
+        ],
+    }
+}
+
+fn build_fleet_tenants(scale: Scale, seed: u64) -> ScenarioSetup {
+    const TENANTS: usize = 3;
+    const BLOCK: usize = 8;
+    let per_tenant = scale.n(4, 10);
+    let mut rng = Rng::new(seed);
+    // One fixed two-block system prefix per tenant: hot enough that the
+    // fleet replicates it, shared enough that prefix-aware admission
+    // charges most requests only their one-block suffix.
+    let prefixes: Vec<Vec<i32>> = (0..TENANTS)
+        .map(|_| random_prompt(&mut rng, 2 * BLOCK, VOCAB))
+        .collect();
+    let arrivals =
+        bursty_poisson_arrivals(&mut rng, TENANTS * per_tenant, 0.4, 0.4, 1_000_000);
+    let requests = arrivals
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let tenant = i % TENANTS;
+            let mut prompt = prefixes[tenant].clone();
+            prompt.extend(random_prompt(&mut rng, BLOCK, VOCAB));
+            let mut req = TraceRequest::new(t, prompt, 8);
+            req.tenant = Some(format!("tenant{tenant}"));
+            req
+        })
+        .collect();
+    ScenarioSetup {
+        model: small_model(47),
+        engine: EngineConfig {
+            max_slots: 4,
+            kv_blocks: 128,
+            block_size: BLOCK,
+            prefix_cache: true,
+            ..EngineConfig::default()
+        },
+        trace: WorkloadTrace { requests }.sorted(),
+        config: vec![
+            ("tenants".into(), TENANTS.to_string()),
+            ("per_tenant".into(), per_tenant.to_string()),
+            ("prefix_tokens".into(), (2 * BLOCK).to_string()),
+            ("max_new".into(), "8".into()),
         ],
     }
 }

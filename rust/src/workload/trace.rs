@@ -28,6 +28,10 @@ pub struct TraceRequest {
     /// Cancel once this many tokens have streamed (`Some(0)` cancels
     /// right after submission — the queued-cancel path).
     pub cancel_after_tokens: Option<usize>,
+    /// Tenant the request bills to (`None` = the default tenant).  Only
+    /// the fleet runner's QoS admission reads this; the solo runner
+    /// ignores it.
+    pub tenant: Option<String>,
 }
 
 impl TraceRequest {
@@ -40,6 +44,7 @@ impl TraceRequest {
             stop_tokens: Vec::new(),
             sampling: None,
             cancel_after_tokens: None,
+            tenant: None,
         }
     }
 
@@ -77,6 +82,13 @@ impl TraceRequest {
                 "cancel_after_tokens",
                 self.cancel_after_tokens
                     .map(|n| Json::num(n as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "tenant",
+                self.tenant
+                    .as_ref()
+                    .map(|t| Json::str(t.as_str()))
                     .unwrap_or(Json::Null),
             ),
         ])

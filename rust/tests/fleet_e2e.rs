@@ -1,0 +1,283 @@
+//! Fleet end-to-end properties: the fleet-vs-solo bit-identity oracle.
+//!
+//! The contract under test (`docs/fleet-serving.md`): a request served by
+//! the fleet — whatever engine it routes to, whatever else is in flight,
+//! replication on or off, cancelled mid-decode or not — streams tokens
+//! bit-identical to the same request served alone on a solo engine with
+//! the same config.  Plus the invariants that make the fleet honest:
+//! every submission reaches exactly one terminal state, and no KV block
+//! leaks on any engine once the fleet drains.
+
+use std::collections::BTreeMap;
+
+use flashmla_etap::coordinator::{
+    Engine, EngineConfig, FinishReason, GenerationRequest, RejectReason, StepEvent,
+};
+use flashmla_etap::fleet::{FleetConfig, FleetExecutor, FleetHandle};
+use flashmla_etap::prop_assert;
+use flashmla_etap::runtime::ReferenceModelConfig;
+use flashmla_etap::testing::{forall, Config};
+
+fn model() -> ReferenceModelConfig {
+    ReferenceModelConfig {
+        vocab: 64,
+        n_layers: 2,
+        latent_dim: 8,
+        seed: 0xF1EE_2E2E,
+        batch_buckets: vec![1, 2, 4],
+        kv_buckets: vec![32, 64, 128],
+    }
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        max_slots: 4,
+        kv_blocks: 64,
+        block_size: 4,
+        ..EngineConfig::default()
+    }
+}
+
+/// Serve one request alone on a fresh solo engine, applying the same
+/// cancel-after-`n`-tokens policy the fleet driver uses.  This is the
+/// oracle: ground truth for the stream and the finish reason.
+fn solo_serve(
+    prompt: &[i32],
+    budget: usize,
+    cancel_at: Option<usize>,
+) -> (Vec<i32>, FinishReason) {
+    let mut e = Engine::reference(model(), engine_cfg()).unwrap();
+    let h = e.submit(GenerationRequest::new(prompt.to_vec(), budget));
+    if cancel_at == Some(0) {
+        e.cancel(h.id());
+    }
+    let mut out = Vec::new();
+    let mut reason = None;
+    let mut guard = 0;
+    // A queued cancel emits its terminal event synchronously, so poll
+    // once more after the work loop ends.
+    loop {
+        let had_work = e.has_work();
+        if had_work {
+            e.step().unwrap();
+        }
+        for ev in e.poll_events() {
+            match ev {
+                StepEvent::Token { token, .. } => {
+                    out.push(token);
+                    if cancel_at == Some(out.len()) {
+                        e.cancel(h.id());
+                    }
+                }
+                StepEvent::Finished { reason: r, .. } => reason = Some(r),
+                _ => {}
+            }
+        }
+        if !had_work {
+            break;
+        }
+        guard += 1;
+        assert!(guard < 10_000, "solo oracle did not converge");
+    }
+    (out, reason.expect("request terminates"))
+}
+
+/// One generated request: prompt = shared template head + random suffix.
+struct Case {
+    prompt: Vec<i32>,
+    budget: usize,
+    tenant: &'static str,
+    cancel_at: Option<usize>,
+}
+
+#[test]
+fn fleet_streams_are_bit_identical_to_solo_across_mixes() {
+    forall(Config::default().cases(20).seed(0xF1EE_0010), |g| {
+        let engines = *g.choose(&[1usize, 2, 4]);
+        let replication = g.bool();
+        // A few hot templates (2 blocks each at block_size 4) shared
+        // across tenants — the traffic shape replication exists for.
+        let n_templates = g.usize(1..4);
+        let templates: Vec<Vec<i32>> = (0..n_templates)
+            .map(|_| g.tokens(8..9, 48).iter().map(|t| t + 1).collect())
+            .collect();
+        let n_requests = g.usize(1..11);
+        let cases: Vec<Case> = (0..n_requests)
+            .map(|_| {
+                let mut prompt = g.choose(&templates).clone();
+                prompt.extend(g.tokens(2..7, 48).iter().map(|t| t + 1));
+                let budget = g.usize(1..7);
+                let cancel_at = if g.bool() {
+                    None
+                } else {
+                    Some(g.usize(0..budget + 1))
+                };
+                Case {
+                    prompt,
+                    budget,
+                    tenant: g.choose(&["acme", "globex", "initech"]),
+                    cancel_at,
+                }
+            })
+            .collect();
+
+        let cfg = FleetConfig {
+            engines,
+            engine: engine_cfg(),
+            replication,
+            replicate_hot_after: 2,
+            // Headroom on purpose: this property pins stream identity,
+            // not shedding (overload has its own test below).
+            max_queue_per_engine: 64,
+            tenant_token_budget: None,
+            ..FleetConfig::default()
+        };
+        let mut fleet = FleetExecutor::reference(model(), cfg).unwrap();
+
+        let mut handles: BTreeMap<u64, FleetHandle> = BTreeMap::new();
+        let mut cancel_at: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut want: BTreeMap<u64, (Vec<i32>, FinishReason)> = BTreeMap::new();
+        for c in &cases {
+            let h = fleet
+                .submit_for(c.tenant, GenerationRequest::new(c.prompt.clone(), c.budget))
+                .map_err(|e| format!("unexpected admit error: {e}"))?;
+            handles.insert(h.id(), h);
+            want.insert(h.id(), solo_serve(&c.prompt, c.budget, c.cancel_at));
+            match c.cancel_at {
+                Some(0) => {
+                    fleet.cancel(h);
+                }
+                Some(n) => {
+                    cancel_at.insert(h.id(), n);
+                }
+                None => {}
+            }
+        }
+        prop_assert!(fleet.shed() == 0, "headroom config must not shed");
+
+        let mut got: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+        let mut reasons: BTreeMap<u64, FinishReason> = BTreeMap::new();
+        let mut guard = 0;
+        // Engine event buffers only reach the fleet during step(), so run
+        // one flush tick after the fleet drains (queued cancels emit
+        // their terminal events without ever being stepped).
+        loop {
+            let had_work = fleet.has_work();
+            fleet.step().map_err(|e| format!("step failed: {e}"))?;
+            for ev in fleet.poll_events() {
+                match ev.event {
+                    StepEvent::Token { id, token } => {
+                        let s = got.entry(id).or_default();
+                        s.push(token);
+                        if cancel_at.get(&id) == Some(&s.len()) {
+                            fleet.cancel(handles[&id]);
+                        }
+                    }
+                    StepEvent::Finished { id, reason } => {
+                        reasons.insert(id, reason);
+                    }
+                    _ => {}
+                }
+            }
+            if !had_work {
+                break;
+            }
+            guard += 1;
+            prop_assert!(guard < 100_000, "fleet did not converge");
+        }
+
+        // Stream + reason bit-identity, request by request.
+        for (id, (tokens, reason)) in &want {
+            let stream = got.get(id).cloned().unwrap_or_default();
+            prop_assert!(
+                &stream == tokens,
+                "stream mismatch for request {id}: fleet {stream:?} vs solo {tokens:?}"
+            );
+            prop_assert!(
+                reasons.get(id) == Some(reason),
+                "finish reason mismatch for request {id}: {:?} vs {reason:?}",
+                reasons.get(id)
+            );
+        }
+        // take_finished carries the same vectors under fleet ids.
+        let fin = fleet.take_finished();
+        prop_assert!(
+            fin.len() == want.len(),
+            "every submission terminates exactly once ({} vs {})",
+            fin.len(),
+            want.len()
+        );
+        for f in &fin {
+            let (tokens, reason) = &want[&f.id];
+            prop_assert!(&f.tokens == tokens, "finished tokens drift for {}", f.id);
+            prop_assert!(&f.reason == reason, "finished reason drift for {}", f.id);
+        }
+        // No KV leak: once drained, every block on every engine is free
+        // or pinned by the prefix tree — replicas included.
+        for w in 0..fleet.engines() {
+            let e = fleet.engine(w);
+            prop_assert!(
+                e.free_kv_blocks() + e.prefix_cached_blocks() == 64,
+                "engine {w} leaks KV blocks: {} free + {} cached != 64",
+                e.free_kv_blocks(),
+                e.prefix_cached_blocks()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sustained_overload_sheds_with_backpressure() {
+    let cfg = FleetConfig {
+        engines: 2,
+        engine: engine_cfg(),
+        max_queue_per_engine: 2,
+        replication: false,
+        ..FleetConfig::default()
+    };
+    let mut fleet = FleetExecutor::reference(model(), cfg).unwrap();
+    // Burst 24 submissions without stepping — queues fill, then every
+    // further submission targeting a full engine sheds.
+    let total = 24u64;
+    for i in 0..total {
+        let p: Vec<i32> = vec![(i % 8 + 1) as i32; 12];
+        fleet.submit(GenerationRequest::new(p, 4)).unwrap();
+    }
+    assert!(fleet.shed() > 0, "sustained burst must shed");
+    let backpressure = fleet
+        .poll_events()
+        .iter()
+        .filter(|e| {
+            matches!(
+                e.event,
+                StepEvent::Rejected {
+                    reason: RejectReason::Backpressure,
+                    ..
+                }
+            )
+        })
+        .count() as u64;
+    assert_eq!(
+        backpressure,
+        fleet.shed(),
+        "every shed surfaces as a Backpressure event"
+    );
+    fleet.run_until_idle().unwrap();
+    fleet.step().unwrap(); // flush terminal records
+    let fin = fleet.take_finished();
+    assert_eq!(fin.len() as u64, total, "all submissions reach a terminal record");
+    let served = fin
+        .iter()
+        .filter(|f| f.reason == FinishReason::Length)
+        .count() as u64;
+    assert_eq!(served, total - fleet.shed(), "admitted requests all serve");
+    for w in 0..fleet.engines() {
+        let e = fleet.engine(w);
+        assert_eq!(
+            e.free_kv_blocks() + e.prefix_cached_blocks(),
+            64,
+            "engine {w} leaks KV blocks under overload"
+        );
+    }
+}
